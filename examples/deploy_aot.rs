@@ -1,0 +1,77 @@
+//! Deploy a tuned configuration as an AOT-compiled XLA executable.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example deploy_aot
+//! ```
+//!
+//! The three-layer path: the L2 JAX SAP model (whose sketch-apply and
+//! matvec hot-spots are L1 Pallas kernels) was lowered at build time to
+//! HLO text; this example loads it through the PJRT C API, feeds it a
+//! problem plus a sketch plan sampled in Rust, and cross-checks the
+//! result against the native Rust solver and the direct QR solver.
+
+use ranntune::data::{generate_synthetic, SyntheticKind};
+use ranntune::linalg::lstsq_qr;
+use ranntune::rng::Rng;
+use ranntune::runtime::{default_artifacts_dir, SapEngine};
+use ranntune::sap::{arfe, solve_sap, SapAlgorithm, SapConfig};
+use ranntune::sketch::{LessUniform, SketchKind};
+use std::time::Instant;
+
+fn main() {
+    let engine = match SapEngine::load(&default_artifacts_dir(), "sap_small") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("artifact load failed: {e:#}\nrun `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    let meta = engine.meta.clone();
+    println!(
+        "artifact sap_small: m≤{} n≤{} sketch=({}, {}) iters={}",
+        meta.m, meta.n, meta.d, meta.k, meta.iters
+    );
+
+    // Problem inside the artifact envelope.
+    let (m, n) = (meta.m - 124, meta.n - 28);
+    let mut rng = Rng::new(3);
+    let problem = generate_synthetic(SyntheticKind::GA, m, n, &mut rng);
+
+    // A "tuned" configuration exported at artifact shape: LessUniform with
+    // k = artifact k, d = artifact d.
+    let op = LessUniform::sample(meta.d, m, meta.k, &mut rng);
+    let plan = op.row_plan(meta.k).expect("plan fits artifact");
+
+    // --- AOT solve (PJRT)
+    let t = Instant::now();
+    let (x_aot, phibar) = engine.solve(&problem.a, &problem.b, &plan).expect("AOT solve");
+    let aot_secs = t.elapsed().as_secs_f64();
+
+    // --- Native Rust solve with an equivalent configuration
+    let cfg = SapConfig {
+        algorithm: SapAlgorithm::QrLsqr,
+        sketch: SketchKind::LessUniform,
+        sampling_factor: meta.d as f64 / n as f64,
+        vec_nnz: meta.k,
+        safety_factor: 0,
+    };
+    let t = Instant::now();
+    let native = solve_sap(&problem.a, &problem.b, &cfg, &mut Rng::new(3));
+    let native_secs = t.elapsed().as_secs_f64();
+
+    // --- Direct baseline
+    let t = Instant::now();
+    let x_star = lstsq_qr(&problem.a, &problem.b);
+    let direct_secs = t.elapsed().as_secs_f64();
+
+    let err_aot = arfe(&problem.a, &problem.b, &x_aot, &x_star);
+    let err_native = arfe(&problem.a, &problem.b, &native.x, &x_star);
+    println!("\n{:<28} {:>10} {:>12}", "solver", "time", "ARFE");
+    println!("{:<28} {:>9.4}s {:>12.2e}", "AOT (JAX+Pallas via PJRT)", aot_secs, err_aot);
+    println!("{:<28} {:>9.4}s {:>12.2e}", "native Rust SAP", native_secs, err_native);
+    println!("{:<28} {:>9.4}s {:>12}", "direct QR", direct_secs, "-");
+    println!("\nLSQR residual estimate from the artifact (phibar): {phibar:.4}");
+    assert!(err_aot < 1e-3, "AOT accuracy");
+    assert!(err_native < 1e-3, "native accuracy");
+    println!("OK: all three solvers agree");
+}

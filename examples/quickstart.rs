@@ -1,0 +1,47 @@
+//! Quickstart: autotune a randomized least-squares solver on one matrix.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Generates a GA-family synthetic problem (§5.1 of the paper), runs the
+//! GP-surrogate tuner for 25 evaluations, and prints the best SAP
+//! configuration found together with its speedup over the paper's "safe"
+//! reference configuration.
+
+use ranntune::data::{generate_synthetic, SyntheticKind};
+use ranntune::objective::{Constants, Objective, ParamSpace, TuningTask};
+use ranntune::rng::Rng;
+use ranntune::tuners::{GpBoTuner, Tuner};
+
+fn main() {
+    // 1. A least-squares problem: rows ~ multivariate normal with AR(1)
+    //    covariance, b = A·x + noise.
+    let mut rng = Rng::new(0);
+    let problem = generate_synthetic(SyntheticKind::GA, 4000, 100, &mut rng);
+    println!("problem: {} ({}x{})", problem.name, problem.m(), problem.n());
+
+    // 2. The tuning task: paper search space (Table 4), 3 repeats per
+    //    configuration evaluation.
+    let task = TuningTask {
+        problem,
+        space: ParamSpace::paper(),
+        constants: Constants { num_repeats: 3, ..Constants::default() },
+    };
+    let mut objective = Objective::new(task, /*seed=*/ 42);
+    println!("direct solver reference: {:.4}s", objective.direct_secs);
+
+    // 3. Tune.
+    let mut tuner = GpBoTuner::new(10);
+    let history = tuner.run(&mut objective, 25, &mut Rng::new(1));
+
+    // 4. Report.
+    let reference = &history.trials()[0];
+    let best = history.best().expect("non-empty history");
+    println!("\nevaluated {} configurations", history.len());
+    println!("reference (safe) config: {}  -> {:.5}s", reference.config.label(), reference.wall_clock);
+    println!("best found:              {}  -> {:.5}s", best.config.label(), best.wall_clock);
+    println!("speedup vs reference:    {:.2}x", reference.wall_clock / best.wall_clock);
+    println!("solution accuracy ARFE:  {:.2e}", best.arfe);
+    assert!(!best.failed, "best configuration must satisfy the ARFE constraint");
+}

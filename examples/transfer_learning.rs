@@ -1,0 +1,87 @@
+//! Transfer learning (TLA): tune on a small matrix, transfer to a big one.
+//!
+//! ```bash
+//! cargo run --release --example transfer_learning
+//! ```
+//!
+//! Reproduces the paper's §1.3 envisioned use case: collect cheap random
+//! samples on a down-sampled problem, store them in the crowd history
+//! database, then tune the full-size problem with TLA (UCB bandit + LCM)
+//! and compare against random search at the same budget.
+
+use ranntune::cli::figures::collect_source;
+use ranntune::data::{generate_realworld, RealWorldKind};
+use ranntune::db::HistoryDb;
+use ranntune::objective::{Constants, Objective, ParamSpace, TuningTask};
+use ranntune::rng::Rng;
+use ranntune::tuners::{LhsmduTuner, TlaTuner, Tuner};
+
+fn main() {
+    let constants = Constants { num_repeats: 3, ..Constants::default() };
+    let budget = 25;
+
+    // --- Source phase: cheap random samples on the down-sampled problem.
+    let mut rng = Rng::new(9);
+    let small = generate_realworld(RealWorldKind::Localization, 1000, 80, &mut rng);
+    println!("source problem: {} ({}x{})", small.name, small.m(), small.n());
+    let source = collect_source(small, constants.clone(), 50, 7);
+    println!("collected {} source samples", source.len());
+
+    // Persist through the crowd DB (round-trip demonstrates the sharing
+    // workflow of §4.3 / [16]).
+    let db_path = std::env::temp_dir().join("ranntune_example_db.json");
+    {
+        let mut db = HistoryDb::new();
+        let mut h = ranntune::objective::History::new();
+        for s in &source {
+            h.push(ranntune::objective::Trial {
+                config: s.config,
+                wall_clock: s.value,
+                arfe: 0.0,
+                value: s.value,
+                failed: false,
+                is_reference: s.value == s.ref_value,
+            });
+        }
+        db.record("Localization-sim", 1000, 80, &h);
+        db.save(&db_path).expect("db save");
+        println!("saved source history to {}", db_path.display());
+    }
+    let db = HistoryDb::load(&db_path).expect("db load");
+    let source = db.source_samples("Localization-sim", 1000, 80);
+
+    // --- Target phase: the full-size problem.
+    let make_target = || {
+        let mut rng = Rng::new(100);
+        generate_realworld(RealWorldKind::Localization, 6000, 80, &mut rng)
+    };
+
+    let mut tla = TlaTuner::new(source);
+    let mut obj_tla = Objective::new(
+        TuningTask { problem: make_target(), space: ParamSpace::paper(), constants: constants.clone() },
+        1,
+    );
+    let h_tla = tla.run(&mut obj_tla, budget, &mut Rng::new(2));
+
+    let mut random = LhsmduTuner::new();
+    let mut obj_rnd = Objective::new(
+        TuningTask { problem: make_target(), space: ParamSpace::paper(), constants },
+        1,
+    );
+    let h_rnd = random.run(&mut obj_rnd, budget, &mut Rng::new(2));
+
+    // --- Compare: evaluations needed by TLA to beat random search's final.
+    let rnd_final = *h_rnd.best_so_far().last().unwrap();
+    let tla_final = *h_tla.best_so_far().last().unwrap();
+    let evals = h_tla.evals_to_reach(rnd_final);
+    println!("\nrandom search (LHSMDU) best after {budget} evals: {rnd_final:.5}s");
+    println!("TLA best after {budget} evals:                  {tla_final:.5}s");
+    match evals {
+        Some(e) => println!(
+            "TLA reached random-search-final quality after only {e} evaluations ({:.1}x fewer)",
+            budget as f64 / e as f64
+        ),
+        None => println!("TLA did not reach random search's final value (unusual — try more budget)"),
+    }
+    let _ = std::fs::remove_file(&db_path);
+}

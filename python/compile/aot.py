@@ -1,0 +1,103 @@
+"""AOT export: lower the L2 SAP model to HLO text artifacts for the Rust
+PJRT runtime.
+
+Interchange format is HLO TEXT, not a serialized HloModuleProto: jax >=
+0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Each artifact fixes (m, n, d, k, iters) — HLO is static-shape — and the
+manifest.json records the mapping so the Rust runtime can pick the right
+executable for a tuned configuration. `make artifacts` re-runs this only
+when the Python sources change.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import sap_qr_lsqr
+
+# Default artifact variants: (name, m, n, d, k, iters). Shapes are
+# tile-aligned (m % 128 == 0, n % 128 == 0, d % 8 == 0). The small variant
+# drives tests and the quickstart; the larger one the deploy example and
+# the AOT bench.
+VARIANTS = [
+    ("sap_small", 1024, 128, 512, 8, 30),
+    ("sap_medium", 4096, 128, 512, 8, 30),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(m, n, d, k, iters):
+    """Lower sap_qr_lsqr at the given static shapes."""
+    a = jax.ShapeDtypeStruct((m, n), jnp.float32)
+    b = jax.ShapeDtypeStruct((m,), jnp.float32)
+    idx = jax.ShapeDtypeStruct((d, k), jnp.int32)
+    vals = jax.ShapeDtypeStruct((d, k), jnp.float32)
+
+    def fn(a, b, idx, vals):
+        x, phibar = sap_qr_lsqr(a, b, idx, vals, iters=iters, interpret=True)
+        return x, phibar
+
+    return jax.jit(fn).lower(a, b, idx, vals)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--variants",
+        default="all",
+        help="comma-separated variant names, or 'all'",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    wanted = None if args.variants == "all" else set(args.variants.split(","))
+    manifest = {"format": "ranntune-artifacts-v1", "variants": []}
+    for name, m, n, d, k, iters in VARIANTS:
+        if wanted is not None and name not in wanted:
+            continue
+        lowered = lower_variant(m, n, d, k, iters)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["variants"].append(
+            {
+                "name": name,
+                "file": fname,
+                "m": m,
+                "n": n,
+                "d": d,
+                "k": k,
+                "iters": iters,
+                "inputs": ["a(m,n) f32", "b(m) f32", "row_idx(d,k) i32",
+                           "row_vals(d,k) f32"],
+                "outputs": ["x(n) f32", "phibar() f32"],
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

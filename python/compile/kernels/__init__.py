@@ -1,0 +1,8 @@
+"""Layer 1: Pallas kernels for the SAP compute hot-spots.
+
+- sketch_apply: sparse sketch-apply (row-gather plan) for S.A and S.b
+- lsqr_step: MXU-tiled matvec / transposed matvec for the LSQR loop
+- ref: pure-jnp oracles used by pytest
+"""
+
+from . import lsqr_step, ref, sketch_apply  # noqa: F401

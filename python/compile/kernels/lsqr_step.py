@@ -1,0 +1,86 @@
+"""Layer 1: Pallas matvec kernels for the LSQR inner loop.
+
+Each LSQR iteration on the preconditioned system costs one A·v and one
+Aᵀ·u — the per-iteration hot-spot. On TPU these map naturally onto the
+MXU: a (BM × BN) tile of A multiplies a BN-slice of v per grid step
+(f32 here for accuracy parity with the Rust/NumPy references; bf16 is the
+production TPU layout).
+
+The transpose product deliberately streams A row-major (same layout as the
+forward product) and accumulates partial column sums per tile, mirroring
+the cache argument the paper makes for row-major data in §5.2.
+
+interpret=True ALWAYS (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_BM = 128
+_BN = 128
+
+
+def _matvec_kernel(a_ref, v_ref, o_ref):
+    """o[block] += A[block, kblock] @ v[kblock], accumulated over grid dim 1."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += a_ref[...] @ v_ref[...]
+
+
+def matvec(a, v, *, interpret=True):
+    """A @ v with (BM, BN) MXU-shaped tiles.
+
+    Shapes must tile evenly (model.py pads); result is (m,).
+    """
+    m, n = a.shape
+    bm = min(_BM, m)
+    bn = min(_BN, n)
+    assert m % bm == 0 and n % bn == 0, f"({m},{n}) not tiled by ({bm},{bn})"
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), a.dtype),
+        interpret=interpret,
+    )(a, v)
+
+
+def _matvec_t_kernel(a_ref, u_ref, o_ref):
+    """o[block] += A[kblock, block]ᵀ @ u[kblock], accumulated over grid dim 1."""
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += a_ref[...].T @ u_ref[...]
+
+
+def matvec_t(a, u, *, interpret=True):
+    """Aᵀ @ u streaming A row-major; result is (n,)."""
+    m, n = a.shape
+    bm = min(_BM, m)
+    bn = min(_BN, n)
+    assert m % bm == 0 and n % bn == 0
+    grid = (n // bn, m // bm)  # output-major grid; inner dim accumulates
+    return pl.pallas_call(
+        _matvec_t_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda j, i: (i, j)),
+            pl.BlockSpec((bm,), lambda j, i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda j, i: (j,)),
+        out_shape=jax.ShapeDtypeStruct((n,), a.dtype),
+        interpret=interpret,
+    )(a, u)

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here, written
+with plain dense jax.numpy operations. pytest (and hypothesis sweeps)
+assert allclose between kernel and oracle across shapes/dtypes/seeds --
+this is the core correctness signal for Layer 1.
+"""
+
+import jax.numpy as jnp
+
+
+def gather_rows_apply_ref(a, row_idx, row_vals):
+    """Reference sparse sketch-apply: out[i, :] = sum_k vals[i,k] * A[idx[i,k], :].
+
+    This is the row-gather form shared by LessUniform (naturally row-sparse)
+    and SJLT (converted to a padded row plan at build time; padding entries
+    carry val = 0 so they contribute nothing regardless of index).
+
+    Args:
+      a: (m, n) input matrix.
+      row_idx: (d, k) int32 row indices into a.
+      row_vals: (d, k) values (0.0 marks padding).
+
+    Returns:
+      (d, n) sketch S.A.
+    """
+    gathered = a[row_idx]            # (d, k, n)
+    return jnp.einsum("dk,dkn->dn", row_vals, gathered)
+
+
+def gather_vec_apply_ref(b, row_idx, row_vals):
+    """Reference sketch-vector apply: out[i] = sum_k vals[i,k] * b[idx[i,k]]."""
+    return jnp.einsum("dk,dk->d", row_vals, b[row_idx])
+
+
+def matvec_ref(a, v):
+    """Reference A @ v."""
+    return a @ v
+
+
+def matvec_t_ref(a, u):
+    """Reference A.T @ u."""
+    return a.T @ u
+
+
+def dense_sketch_from_plan(row_idx, row_vals, m):
+    """Materialize the dense (d, m) sketching matrix from a row plan.
+
+    Test-only helper: lets tests compare the sparse plan against an
+    explicit dense S.A product.
+    """
+    d, k = row_idx.shape
+    s = jnp.zeros((d, m), dtype=row_vals.dtype)
+    rows = jnp.repeat(jnp.arange(d), k)
+    return s.at[rows, row_idx.reshape(-1)].add(row_vals.reshape(-1))

@@ -1,0 +1,139 @@
+"""Layer 1: Pallas kernel for the sparse sketch-apply hot-spot.
+
+The SAP pipeline's dominant non-factorization cost is computing the sketch
+Â = S·A (§5.2 of the paper analyzes exactly this cost asymmetry between
+SJLT and LessUniform). Both operators reduce, at build time, to a padded
+*row-gather plan*: for each sketch row i, a list of k source-row indices
+and signed values (padding entries have value 0). The kernel streams row
+blocks of the plan and gathers/accumulates rows of A.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the paper's CPU sparse
+kernels become a VMEM-tiled gather: BlockSpec partitions the output (d×n)
+into (BD × BN) tiles; each grid step holds one tile plus its (BD × K)
+index/value slabs in VMEM and walks the K gather terms with dynamic-slice
+loads from A (resident in ANY/HBM memory space). VMEM residency per step
+is BD·BN + BD·K + K·BN floats — a few hundred KiB at paper scale, well
+under the ~16 MiB budget; see EXPERIMENTS.md §Perf for the estimate table.
+
+interpret=True ALWAYS: real-TPU lowering emits a Mosaic custom-call the
+CPU PJRT client cannot execute (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Output tile: BD sketch rows × BN columns per grid step.
+_BD = 8
+_BN = 128
+
+
+def _gather_rows_kernel(a_ref, idx_ref, val_ref, o_ref):
+    """One (BD, BN) output tile: o[i, :] = Σ_k val[i, k] · A[idx[i, k], block]."""
+    bd = o_ref.shape[0]
+    bn = o_ref.shape[1]
+    k = idx_ref.shape[1]
+
+    def row_body(i, acc):
+        def term_body(t, row_acc):
+            src = idx_ref[i, t]
+            val = val_ref[i, t]
+            # Dynamic-slice load of one source row's column block.
+            arow = pl.load(a_ref, (pl.dslice(src, 1), pl.dslice(0, bn)))
+            return row_acc + val * arow[0, :]
+
+        row = jax.lax.fori_loop(
+            jnp.int32(0), jnp.int32(k), term_body, jnp.zeros((bn,), a_ref.dtype)
+        )
+        return acc.at[i, :].set(row)
+
+    out = jax.lax.fori_loop(
+        jnp.int32(0), jnp.int32(bd), row_body, jnp.zeros((bd, bn), a_ref.dtype)
+    )
+    o_ref[...] = out
+
+
+def gather_rows_apply(a, row_idx, row_vals, *, interpret=True):
+    """Sparse sketch-apply Â = S·A from a row-gather plan.
+
+    Args:
+      a: (m, n) matrix; n must be a multiple of the column tile (pad
+         upstream if needed — `model.py` handles this).
+      row_idx: (d, k) int32 indices into rows of `a`.
+      row_vals: (d, k) values, 0.0 on padding entries.
+      interpret: must stay True for CPU-PJRT execution.
+
+    Returns:
+      (d, n) sketch.
+    """
+    m, n = a.shape
+    d, k = row_idx.shape
+    assert row_vals.shape == (d, k)
+    bd = min(_BD, d)
+    bn = min(_BN, n)
+    assert d % bd == 0, f"d={d} must divide by row tile {bd}"
+    assert n % bn == 0, f"n={n} must divide by column tile {bn}"
+
+    grid = (d // bd, n // bn)
+    return pl.pallas_call(
+        _gather_rows_kernel,
+        grid=grid,
+        in_specs=[
+            # A: full rows available; block only over columns (the gather
+            # index is dynamic in the row dimension).
+            pl.BlockSpec((m, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bd, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bd, k), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bd, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d, n), a.dtype),
+        interpret=interpret,
+    )(a, row_idx, row_vals)
+
+
+def _gather_vec_kernel(b_ref, idx_ref, val_ref, o_ref):
+    """Sketch-vector tile: o[i] = Σ_k val[i, k] · b[idx[i, k]]."""
+    bd = o_ref.shape[0]
+    k = idx_ref.shape[1]
+
+    def row_body(i, acc):
+        def term_body(t, s):
+            src = idx_ref[i, t]
+            bv = pl.load(b_ref, (pl.dslice(src, 1),))
+            return s + val_ref[i, t] * bv[0]
+
+        s = jax.lax.fori_loop(jnp.int32(0), jnp.int32(k), term_body,
+                              jnp.zeros((), b_ref.dtype))
+        return acc.at[i].set(s)
+
+    o_ref[...] = jax.lax.fori_loop(
+        jnp.int32(0), jnp.int32(bd), row_body, jnp.zeros((bd,), b_ref.dtype)
+    )
+
+
+def gather_vec_apply(b, row_idx, row_vals, *, interpret=True):
+    """Sparse sketch-vector apply S·b from a row-gather plan."""
+    (m,) = b.shape
+    d, k = row_idx.shape
+    bd = min(_BD, d)
+    assert d % bd == 0
+    return pl.pallas_call(
+        _gather_vec_kernel,
+        grid=(d // bd,),
+        in_specs=[
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((bd, k), lambda i: (i, 0)),
+            pl.BlockSpec((bd, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bd,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d,), b.dtype),
+        interpret=interpret,
+    )(b, row_idx, row_vals)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sketch_apply_jit(a, row_idx, row_vals, interpret=True):
+    """Jitted convenience wrapper (tests and micro-benchmarks)."""
+    return gather_rows_apply(a, row_idx, row_vals, interpret=interpret)

@@ -1,0 +1,218 @@
+"""Layer 2: the SAP least-squares solve as a single JAX computation.
+
+This is the deployment path for a *tuned* configuration: once the Rust
+coordinator has found a good (d, vec_nnz, ...) on a task family, `aot.py`
+lowers this function at those static shapes to HLO text, and the Rust
+runtime executes it via PJRT with Python entirely out of the loop.
+
+Pipeline (Algorithm 3.1 with the Appendix A presolve):
+  1. sketch      Â = S·A, Sb = S·b      -> Pallas gather kernels (L1)
+  2. precond     Â = QR, M = R^-1       -> jnp.linalg.qr (fused into HLO)
+  3. presolve    z0 = Qᵀ·Sb (adopted when it beats the origin)
+  4. iterate     T fixed LSQR steps on min ‖A·M·z − b‖ via lax.scan,
+                 with the A·v / Aᵀ·u hot products as Pallas kernels
+  5. un-precondition x = M·z (triangular solve)
+
+AOT note: HLO has static control flow, so the artifact runs a FIXED
+iteration count T chosen at export time from the tuned configuration's
+typical iteration budget (the Rust native solver, which owns the tuning
+loop, uses the adaptive criterion (3.2); integration tests check the two
+agree at matched iteration counts).
+
+The sketch plan (row_idx, row_vals) is a runtime INPUT, not a constant:
+the Rust side samples the sketching operator per solve, preserving the
+per-run randomness of the paper's protocol.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.lsqr_step import matvec, matvec_t
+from .kernels.sketch_apply import gather_rows_apply, gather_vec_apply
+
+
+# --- pure-HLO linear algebra -------------------------------------------
+# jax 0.8 lowers jnp.linalg.qr / solve_triangular to typed-FFI LAPACK
+# custom-calls (API_VERSION_TYPED_FFI) that the runtime's xla_extension
+# 0.5.1 rejects. The artifact must be pure HLO, so QR and the triangular
+# solves are written in jax primitives (fori_loop + dot products): they
+# lower to plain While/Dot HLO ops that any PJRT backend can run.
+
+
+def _cgs2_qr(a_hat):
+    """Thin QR of (d, n) via classical Gram-Schmidt with reorthogonalization.
+
+    CGS2 ("twice is enough") delivers Householder-grade orthogonality for
+    our use: sketches are randomized and well-conditioned when d >= 2n.
+    Zero columns (tile padding) get R[j,j] = 1 and a zero Q column, which
+    keeps downstream triangular solves well-defined without changing the
+    solution on live coordinates.
+    """
+    d, n = a_hat.shape
+
+    def body(j, carry):
+        q, r = carry
+        v = a_hat[:, j]
+        c1 = q.T @ v
+        v = v - q @ c1
+        c2 = q.T @ v          # second pass: kills CGS's instability
+        v = v - q @ c2
+        rjj = jnp.linalg.norm(v)
+        dead = rjj < 1e-10
+        rjj_safe = jnp.where(dead, 1.0, rjj)
+        qj = jnp.where(dead, jnp.zeros_like(v), v / rjj_safe)
+        q = q.at[:, j].set(qj)
+        r = r.at[:, j].set(c1 + c2)
+        r = r.at[j, j].set(jnp.where(dead, 1.0, rjj))
+        return (q, r)
+
+    q0 = jnp.zeros_like(a_hat)
+    r0 = jnp.zeros((n, n), a_hat.dtype)
+    return jax.lax.fori_loop(0, n, body, (q0, r0))
+
+
+def _solve_upper(r, y):
+    """R x = y by back-substitution (pure fori_loop, no LAPACK)."""
+    n = y.shape[0]
+
+    def body(i, x):
+        j = n - 1 - i
+        # x[k] for k > j already filled; x[j] is still 0 so the r[j,j]
+        # term contributes nothing to the dot product.
+        s = y[j] - r[j, :] @ x
+        return x.at[j].set(s / r[j, j])
+
+    return jax.lax.fori_loop(0, n, body, jnp.zeros_like(y))
+
+
+def _upper_inverse(r):
+    """Explicit R^-1 via blocked back-substitution against the identity.
+
+    Perf (EXPERIMENTS.md §Perf, L2): the LSQR scan body originally ran two
+    sequential triangular-solve fori_loops per iteration — 2·n dependent
+    HLO while steps that XLA cannot vectorize. Precomputing R^-1 once
+    (n steps, all columns at a time) turns the per-iteration preconditioner
+    application into two dense matvecs that fuse cleanly into the loop.
+    The preconditioner quality is unchanged: M = R^-1 explicitly is exactly
+    the paper's SVD-style "form M and apply as a dense product" trade-off
+    (§3.3) applied to the QR path.
+    """
+    n = r.shape[0]
+
+    def body(i, x):
+        j = n - 1 - i
+        e_j = jax.nn.one_hot(j, n, dtype=r.dtype)
+        s = e_j - r[j, :] @ x
+        return x.at[j, :].set(s / r[j, j])
+
+    return jax.lax.fori_loop(0, n, body, jnp.zeros_like(r))
+
+
+def sap_qr_lsqr(a, b, row_idx, row_vals, *, iters, interpret=True):
+    """QR-LSQR (Blendenpik-style) SAP solve with a fixed iteration count.
+
+    Args:
+      a: (m, n) data matrix (tile-aligned; pad upstream).
+      b: (m,) right-hand side.
+      row_idx: (d, k) int32 sketch row-gather plan.
+      row_vals: (d, k) plan values.
+      iters: static LSQR iteration count T.
+      interpret: Pallas interpret mode (must stay True off-TPU).
+
+    Returns:
+      (x, rnorm_estimate): the solution (n,) and LSQR's final φ̄ residual
+      estimate (useful for validation on the Rust side).
+    """
+    m, n = a.shape
+    d = row_idx.shape[0]
+    assert d >= n, (
+        f"SAP requires sketch dim d >= n (got d={d}, n={n}); note n is the "
+        "PADDED column count — size the plan against pad_to_tiles output")
+
+    # --- 1. sketch (L1 kernels)
+    a_hat = gather_rows_apply(a, row_idx, row_vals, interpret=interpret)
+    sb = gather_vec_apply(b, row_idx, row_vals, interpret=interpret)
+
+    # --- 2. preconditioner M = R^-1 from Â = QR (pure-HLO CGS2; padding
+    #        columns are neutralized inside the factorization).
+    q, r = _cgs2_qr(a_hat)
+
+    # Precompute M = R^-1 once; per-iteration applications become dense
+    # matvecs (see _upper_inverse docstring for the perf rationale).
+    r_inv = _upper_inverse(r)
+
+    # --- 3. presolve z0 = Qᵀ Sb, adopted iff it improves on zero init
+    z_sk = q.T @ sb
+    ax_sk = matvec(a, r_inv @ z_sk, interpret=interpret)
+    use_presolve = jnp.linalg.norm(ax_sk - b) < jnp.linalg.norm(b)
+    z0 = jnp.where(use_presolve, z_sk, jnp.zeros_like(z_sk))
+
+    # --- 4. preconditioned LSQR, T fixed steps (lax.scan keeps one HLO loop
+    #        body instead of T unrolled copies).
+    def op(v):
+        return matvec(a, r_inv @ v, interpret=interpret)
+
+    def op_t(u):
+        return r_inv.T @ matvec_t(a, u, interpret=interpret)
+
+    u0 = b - op(z0)
+    beta0 = jnp.linalg.norm(u0)
+    u0 = jnp.where(beta0 > 0, u0 / beta0, u0)
+    v0 = op_t(u0)
+    alpha0 = jnp.linalg.norm(v0)
+    v0 = jnp.where(alpha0 > 0, v0 / alpha0, v0)
+
+    def step(carry, _):
+        z, u, v, w, alpha, beta, phibar, rhobar = carry
+        u_new = op(v) - alpha * u
+        beta_new = jnp.linalg.norm(u_new)
+        u_new = jnp.where(beta_new > 0, u_new / beta_new, u_new)
+        v_new = op_t(u_new) - beta_new * v
+        alpha_new = jnp.linalg.norm(v_new)
+        v_new = jnp.where(alpha_new > 0, v_new / alpha_new, v_new)
+
+        rho = jnp.sqrt(rhobar * rhobar + beta_new * beta_new)
+        c = rhobar / rho
+        s = beta_new / rho
+        theta = s * alpha_new
+        rhobar_new = -c * alpha_new
+        phi = c * phibar
+        phibar_new = s * phibar
+
+        z_new = z + (phi / rho) * w
+        w_new = v_new - (theta / rho) * w
+        carry = (z_new, u_new, v_new, w_new, alpha_new, beta_new,
+                 phibar_new, rhobar_new)
+        return carry, ()
+
+    w0 = v0
+    carry0 = (z0, u0, v0, w0, alpha0, beta0, beta0, alpha0)
+    (z, *_rest, phibar, _rhobar), _ = jax.lax.scan(
+        step, carry0, None, length=iters)
+
+    # --- 5. un-precondition
+    x = r_inv @ z
+    return x, phibar
+
+
+def pad_to_tiles(a, b, bm=128, bn=128):
+    """Zero-pad (A, b) so shapes tile evenly; returns (a_pad, b_pad, m, n).
+
+    Zero rows do not change the least-squares solution; zero columns add
+    zero coordinates at the tail of x (callers slice them off).
+    """
+    m, n = a.shape
+    mp = (m + bm - 1) // bm * bm
+    np_ = (n + bn - 1) // bn * bn
+    a_pad = jnp.zeros((mp, np_), a.dtype).at[:m, :n].set(a)
+    b_pad = jnp.zeros((mp,), b.dtype).at[:m].set(b)
+    return a_pad, b_pad, m, n
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "interpret"))
+def sap_qr_lsqr_jit(a, b, row_idx, row_vals, iters=30, interpret=True):
+    """Jitted wrapper for tests/benches."""
+    return sap_qr_lsqr(a, b, row_idx, row_vals, iters=iters,
+                       interpret=interpret)

@@ -1,0 +1,89 @@
+"""L2 correctness: the SAP JAX model vs numpy's direct solver."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.model import pad_to_tiles, sap_qr_lsqr_jit
+
+
+def build_problem(rng, m, n, noise=0.05):
+    a = rng.normal(size=(m, n))
+    x = rng.normal(size=n)
+    b = a @ x + noise * rng.normal(size=m)
+    return a, b
+
+
+def build_plan(rng, m, d, k):
+    scale = np.sqrt(m / (k * d))
+    idx = np.stack([rng.choice(m, size=k, replace=False) for _ in range(d)])
+    vals = scale * rng.choice([-1.0, 1.0], size=(d, k))
+    return jnp.asarray(idx, jnp.int32), jnp.asarray(vals, jnp.float32)
+
+
+def arfe(a, b, x, x_star):
+    return np.linalg.norm(a @ (x - x_star)) / np.linalg.norm(a @ x - b)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    m=st.sampled_from([300, 600]),
+    n=st.sampled_from([20, 40]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_sap_model_reaches_f32_accuracy(m, n, seed):
+    rng = np.random.default_rng(seed)
+    a, b = build_problem(rng, m, n)
+    ap, bp, _, n0 = pad_to_tiles(jnp.asarray(a, jnp.float32),
+                                 jnp.asarray(b, jnp.float32))
+    # d is sized against the PADDED column count (d >= n_pad required).
+    n_pad = ap.shape[1]
+    d, k = 2 * n_pad, 8
+    idx, vals = build_plan(rng, m, d, k)
+    x, _ = sap_qr_lsqr_jit(ap, bp, idx, vals, iters=50)
+    x = np.array(x)[:n0]
+    x_star, *_ = np.linalg.lstsq(a, b, rcond=None)
+    err = arfe(a, b, x, x_star)
+    assert err < 1e-3, f"ARFE {err}"
+
+
+def test_padding_does_not_change_solution():
+    """Solving at (600, 40) padded == solving the unpadded geometry."""
+    rng = np.random.default_rng(7)
+    m, n = 512, 128  # already tile-aligned: no padding branch
+    a, b = build_problem(rng, m, n)
+    idx, vals = build_plan(rng, m, 512, 8)
+    a32 = jnp.asarray(a, jnp.float32)
+    b32 = jnp.asarray(b, jnp.float32)
+    ap, bp, _, _ = pad_to_tiles(a32, b32)
+    np.testing.assert_array_equal(np.array(ap), np.array(a32))
+    x_direct, _ = sap_qr_lsqr_jit(a32, b32, idx, vals, iters=40)
+    x_padded, _ = sap_qr_lsqr_jit(ap, bp, idx, vals, iters=40)
+    np.testing.assert_allclose(np.array(x_direct), np.array(x_padded),
+                               atol=1e-6)
+
+
+def test_phibar_tracks_residual():
+    """LSQR's φ̄ estimate ≈ the true preconditioned residual norm."""
+    rng = np.random.default_rng(9)
+    m, n = 600, 40
+    a, b = build_problem(rng, m, n)
+    idx, vals = build_plan(rng, m, 160, 8)
+    ap, bp, _, n0 = pad_to_tiles(jnp.asarray(a, jnp.float32),
+                                 jnp.asarray(b, jnp.float32))
+    x, phibar = sap_qr_lsqr_jit(ap, bp, idx, vals, iters=50)
+    x = np.array(x)[:n0]
+    resid = np.linalg.norm(a @ x - b)
+    assert abs(float(phibar) - resid) / resid < 0.05, (float(phibar), resid)
+
+
+def test_deterministic_given_plan():
+    rng = np.random.default_rng(11)
+    a, b = build_problem(rng, 300, 20)
+    ap, bp, _, _ = pad_to_tiles(jnp.asarray(a, jnp.float32),
+                                jnp.asarray(b, jnp.float32))
+    idx, vals = build_plan(rng, 300, ap.shape[1], 4)
+    x1, p1 = sap_qr_lsqr_jit(ap, bp, idx, vals, iters=20)
+    x2, p2 = sap_qr_lsqr_jit(ap, bp, idx, vals, iters=20)
+    np.testing.assert_array_equal(np.array(x1), np.array(x2))
+    assert float(p1) == float(p2)

@@ -1,0 +1,64 @@
+//! Ablation: sketching-operator families — the paper's §3.2 claim that
+//! "an SRHT-based approach would not improve upon sparse sketching
+//! operators". Compares apply cost, preconditioner quality (LSQR
+//! iterations), and end-to-end solve time for LessUniform, SJLT, SRHT,
+//! and dense Gaussian at equal sketch size d = 4n.
+
+mod common;
+
+use ranntune::bench_harness::{fmt_secs, markdown_table, time_fn};
+use ranntune::data::{generate_synthetic, SyntheticKind};
+use ranntune::linalg::Mat;
+use ranntune::rng::Rng;
+use ranntune::sap::{lsqr_preconditioned, Preconditioner};
+use ranntune::sketch::{GaussianSketch, LessUniform, SketchOp, Sjlt, Srht};
+
+fn main() {
+    let scale = common::bench_scale();
+    let (m, n) = (scale.m.max(2000), scale.n.max(64));
+    let d = 4 * n;
+    let mut rng = Rng::new(11);
+    let problem = generate_synthetic(SyntheticKind::T3, m, n, &mut rng);
+    let a: &Mat = &problem.a;
+    println!("== sketch-operator ablation (T3, m={m}, n={n}, d={d}) ==\n");
+
+    let ops: Vec<(&str, Box<dyn SketchOp>)> = vec![
+        ("LessUniform k=8", Box::new(LessUniform::sample(d, m, 8, &mut rng))),
+        ("SJLT k=8", Box::new(Sjlt::sample(d, m, 8, &mut rng))),
+        ("SRHT", Box::new(Srht::sample(d, m, &mut rng))),
+        ("Gaussian", Box::new(GaussianSketch::sample(d, m, &mut rng))),
+    ];
+
+    let mut rows = Vec::new();
+    for (name, op) in &ops {
+        let apply_stats = time_fn(1, 5, || {
+            std::hint::black_box(op.apply(a));
+        });
+        let sketch = op.apply(a);
+        let p = Preconditioner::from_qr(&sketch);
+        let z0 = vec![0.0; p.rank()];
+        let res = lsqr_preconditioned(a, &problem.b, &p, &z0, 1e-8, 400);
+        let total_stats = time_fn(1, 3, || {
+            let sk = op.apply(a);
+            let p = Preconditioner::from_qr(&sk);
+            let z0 = vec![0.0; p.rank()];
+            std::hint::black_box(lsqr_preconditioned(a, &problem.b, &p, &z0, 1e-8, 400));
+        });
+        rows.push(vec![
+            name.to_string(),
+            format!("{}", op.nnz()),
+            fmt_secs(apply_stats.median),
+            format!("{}{}", res.iterations, if res.converged { "" } else { " (limit)" }),
+            fmt_secs(total_stats.median),
+        ]);
+    }
+    let headers = ["operator", "nnz", "S·A apply", "LSQR iters (1e-8)", "sketch+QR+LSQR"];
+    println!("{}", markdown_table(&headers, &rows));
+    let _ = ranntune::bench_harness::write_result(
+        &common::results_dir(),
+        "ablation_sketches",
+        "Sketching-operator ablation (§3.2: sparse vs SRHT vs Gaussian)",
+        &headers,
+        &rows,
+    );
+}

@@ -1,0 +1,75 @@
+//! Ablation: iterative-method variants on the same preconditioner —
+//! LSQR vs PGD vs PGD+momentum vs Chebyshev semi-iteration (the
+//! Appendix A.2/A.3 design space). Reports iterations and wall-clock to
+//! reach ρ = 1e-8 for strong and weak sketches.
+
+mod common;
+
+use ranntune::bench_harness::{fmt_secs, markdown_table, time_fn};
+use ranntune::data::{generate_synthetic, SyntheticKind};
+use ranntune::rng::Rng;
+use ranntune::sap::{
+    chebyshev_preconditioned, default_spectrum_bounds, lsqr_preconditioned,
+    pgd_momentum_preconditioned, pgd_preconditioned, Preconditioner,
+};
+use ranntune::sketch::{make_sketch, SketchKind};
+
+fn main() {
+    let scale = common::bench_scale();
+    let (m, n) = (scale.m.max(2000), scale.n.max(64));
+    let mut rng = Rng::new(3);
+    let problem = generate_synthetic(SyntheticKind::GA, m, n, &mut rng);
+    println!("== solver ablation (m={m}, n={n}) ==\n");
+
+    let mut rows = Vec::new();
+    for (regime, d) in [("strong sketch (d=4n)", 4 * n), ("weak sketch (d=3n/2)", 3 * n / 2)] {
+        let op = make_sketch(SketchKind::Sjlt, d, m, 8, &mut rng);
+        let sketch = op.apply(&problem.a);
+        let p = Preconditioner::from_svd(&sketch);
+        let z0 = vec![0.0; p.rank()];
+        let bounds = default_spectrum_bounds(d, n);
+        let tol = 1e-8;
+        let iters = 3000;
+
+        type Runner<'a> = Box<dyn Fn() -> (usize, bool) + 'a>;
+        let variants: Vec<(&str, Runner)> = vec![
+            ("LSQR", Box::new(|| {
+                let r = lsqr_preconditioned(&problem.a, &problem.b, &p, &z0, tol, iters);
+                (r.iterations, r.converged)
+            })),
+            ("PGD", Box::new(|| {
+                let r = pgd_preconditioned(&problem.a, &problem.b, &p, &z0, tol, iters);
+                (r.iterations, r.converged)
+            })),
+            ("PGD+momentum", Box::new(|| {
+                let r = pgd_momentum_preconditioned(&problem.a, &problem.b, &p, &z0, bounds, tol, iters);
+                (r.iterations, r.converged)
+            })),
+            ("Chebyshev", Box::new(|| {
+                let r = chebyshev_preconditioned(&problem.a, &problem.b, &p, &z0, bounds, tol, iters);
+                (r.iterations, r.converged)
+            })),
+        ];
+        for (name, run) in &variants {
+            let (its, conv) = run();
+            let stats = time_fn(1, 3, || {
+                std::hint::black_box(run());
+            });
+            rows.push(vec![
+                regime.to_string(),
+                name.to_string(),
+                format!("{its}{}", if conv { "" } else { " (limit)" }),
+                fmt_secs(stats.median),
+            ]);
+        }
+    }
+    let headers = ["regime", "method", "iterations to 1e-8", "median time"];
+    println!("{}", markdown_table(&headers, &rows));
+    let _ = ranntune::bench_harness::write_result(
+        &common::results_dir(),
+        "ablation_solvers",
+        "Iterative-method ablation (Appendix A design space)",
+        &headers,
+        &rows,
+    );
+}

@@ -1,0 +1,64 @@
+//! Bench: AOT (JAX+Pallas via PJRT) solve latency vs the native Rust
+//! solver vs the direct QR solver — the deployment-path numbers.
+
+mod common;
+
+use ranntune::bench_harness::{fmt_secs, markdown_table, time_fn};
+use ranntune::data::{generate_synthetic, SyntheticKind};
+use ranntune::linalg::lstsq_qr;
+use ranntune::rng::Rng;
+use ranntune::runtime::{default_artifacts_dir, SapEngine};
+use ranntune::sap::{solve_sap, SapAlgorithm, SapConfig};
+use ranntune::sketch::{LessUniform, SketchKind};
+
+fn main() {
+    let engine = match SapEngine::load(&default_artifacts_dir(), "sap_small") {
+        Ok(e) => e,
+        Err(e) => {
+            println!("SKIP aot_runtime bench: {e:#}");
+            return;
+        }
+    };
+    let meta = engine.meta.clone();
+    let (m, n) = (meta.m - 124, meta.n - 28);
+    let mut rng = Rng::new(5);
+    let problem = generate_synthetic(SyntheticKind::GA, m, n, &mut rng);
+    let op = LessUniform::sample(meta.d, m, meta.k, &mut rng);
+    let plan = op.row_plan(meta.k).unwrap();
+    println!("== AOT runtime bench (m={m}, n={n}, artifact {}) ==\n", meta.name);
+
+    let mut rows = Vec::new();
+
+    let stats = time_fn(2, 8, || {
+        std::hint::black_box(engine.solve(&problem.a, &problem.b, &plan).unwrap());
+    });
+    rows.push(vec!["AOT PJRT (fixed 30 iters, f32)".into(), fmt_secs(stats.median), fmt_secs(stats.min)]);
+
+    let cfg = SapConfig {
+        algorithm: SapAlgorithm::QrLsqr,
+        sketch: SketchKind::LessUniform,
+        sampling_factor: meta.d as f64 / n as f64,
+        vec_nnz: meta.k,
+        safety_factor: 0,
+    };
+    let stats = time_fn(2, 8, || {
+        let mut r = Rng::new(9);
+        std::hint::black_box(solve_sap(&problem.a, &problem.b, &cfg, &mut r));
+    });
+    rows.push(vec!["native Rust SAP (adaptive, f64)".into(), fmt_secs(stats.median), fmt_secs(stats.min)]);
+
+    let stats = time_fn(1, 5, || {
+        std::hint::black_box(lstsq_qr(&problem.a, &problem.b));
+    });
+    rows.push(vec!["direct QR (f64)".into(), fmt_secs(stats.median), fmt_secs(stats.min)]);
+
+    let table = markdown_table(&["solver", "median", "min"], &rows);
+    println!("{table}");
+    let _ = ranntune::bench_harness::write_result(
+        &common::results_dir(),
+        "aot_runtime",
+        "AOT vs native vs direct solve latency",
+        &["solver", "median", "min"],
+        &rows,
+    );
+}

@@ -1,0 +1,19 @@
+//! Shared bench scaffolding: scale selection via RANNTUNE_SCALE
+//! (small | default | paper; benches default to small so `cargo bench`
+//! finishes in minutes).
+
+use ranntune::cli::figures::FigScale;
+
+pub fn bench_scale() -> FigScale {
+    match std::env::var("RANNTUNE_SCALE").as_deref() {
+        Ok("paper") => FigScale::paper(),
+        Ok("default") => FigScale::default_(),
+        _ => FigScale::small(),
+    }
+}
+
+pub fn results_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(
+        std::env::var("RANNTUNE_RESULTS").unwrap_or_else(|_| "results".into()),
+    )
+}

@@ -1,0 +1,8 @@
+//! Bench: regenerate Figure 10 (allowance/penalty-factor ablation).
+mod common;
+
+fn main() {
+    let scale = common::bench_scale();
+    println!("== Figure 10 (scale: {}) ==", scale.label);
+    println!("{}", ranntune::cli::figures::fig10(&scale, &common::results_dir()));
+}

@@ -1,0 +1,9 @@
+//! Bench: regenerate Figure 1 (SAP performance vs sketching matrix).
+mod common;
+
+fn main() {
+    let scale = common::bench_scale();
+    println!("== Figure 1 (scale: {}) ==", scale.label);
+    let report = ranntune::cli::figures::fig1(&scale, &common::results_dir());
+    println!("{report}");
+}

@@ -1,0 +1,14 @@
+//! Bench: regenerate Figure 4 (grid landscape on GA/T5/T3/T1).
+mod common;
+
+fn main() {
+    let scale = common::bench_scale();
+    println!("== Figure 4 (scale: {}) ==", scale.label);
+    let report = ranntune::cli::figures::grid_figure(
+        &scale,
+        &["GA", "T5", "T3", "T1"],
+        "fig4",
+        &common::results_dir(),
+    );
+    println!("{report}");
+}

@@ -1,0 +1,14 @@
+//! Bench: regenerate Figure 5 (tuner comparison on synthetic matrices).
+mod common;
+
+fn main() {
+    let scale = common::bench_scale();
+    println!("== Figure 5 (scale: {}) ==", scale.label);
+    let report = ranntune::cli::figures::tuner_figure(
+        &scale,
+        &["GA", "T5", "T3", "T1"],
+        "fig5",
+        &common::results_dir(),
+    );
+    println!("{report}");
+}

@@ -1,0 +1,10 @@
+//! Bench: regenerate Figures 6 & 7 (TLA source / bandit-constant ablations).
+mod common;
+
+fn main() {
+    let scale = common::bench_scale();
+    println!("== Figure 6 (scale: {}) ==", scale.label);
+    println!("{}", ranntune::cli::figures::fig6(&scale, &common::results_dir()));
+    println!("== Figure 7 ==");
+    println!("{}", ranntune::cli::figures::fig7(&scale, &common::results_dir()));
+}

@@ -1,0 +1,27 @@
+//! Bench: regenerate Figures 8 & 9 (real-world landscape + tuner comparison).
+mod common;
+
+fn main() {
+    let scale = common::bench_scale();
+    let out = common::results_dir();
+    println!("== Figure 8 (scale: {}) ==", scale.label);
+    println!(
+        "{}",
+        ranntune::cli::figures::grid_figure(
+            &scale,
+            &["Musk", "CIFAR10", "Localization"],
+            "fig8",
+            &out
+        )
+    );
+    println!("== Figure 9 ==");
+    println!(
+        "{}",
+        ranntune::cli::figures::tuner_figure(
+            &scale,
+            &["Musk", "CIFAR10", "Localization"],
+            "fig9",
+            &out
+        )
+    );
+}

@@ -1,0 +1,149 @@
+//! Micro-benchmarks of the L3 hot paths: sketch-apply (both operators),
+//! preconditioner factorizations, LSQR/PGD iterations, the full SAP solve,
+//! and GP fit/propose. These are the §Perf before/after numbers in
+//! EXPERIMENTS.md.
+
+mod common;
+
+use ranntune::bench_harness::{fmt_secs, markdown_table, time_fn};
+use ranntune::data::{generate_synthetic, SyntheticKind};
+use ranntune::gp::GpModel;
+use ranntune::linalg::{gemm, Mat};
+use ranntune::rng::Rng;
+use ranntune::sap::{solve_sap, Preconditioner, SapConfig};
+use ranntune::sketch::{make_sketch, SketchKind, SketchOp};
+
+fn main() {
+    let scale = common::bench_scale();
+    let (m, n) = (scale.m.max(2000), scale.n.max(64));
+    let d = 4 * n;
+    let mut rng = Rng::new(1);
+    println!("== hot-path micro benches (m={m}, n={n}, d={d}) ==\n");
+
+    let problem = generate_synthetic(SyntheticKind::GA, m, n, &mut rng);
+    let a = &problem.a;
+    let mut rows = Vec::new();
+    let mut add = |name: &str, stats: ranntune::bench_harness::TimingStats, flops: f64| {
+        rows.push(vec![
+            name.to_string(),
+            fmt_secs(stats.median),
+            fmt_secs(stats.min),
+            if flops > 0.0 {
+                format!("{:.2}", flops / stats.median / 1e9)
+            } else {
+                "-".into()
+            },
+        ]);
+    };
+
+    // Sketch applies: LessUniform (d·k·n flops) vs SJLT (m·k·n flops).
+    for (kind, k) in [(SketchKind::LessUniform, 8usize), (SketchKind::Sjlt, 8)] {
+        let op = make_sketch(kind, d, m, k, &mut rng);
+        let flops = 2.0 * op.nnz() as f64 * n as f64;
+        let stats = time_fn(2, 8, || {
+            std::hint::black_box(op.apply(a));
+        });
+        add(&format!("sketch_apply {} k={k}", kind.name()), stats, flops);
+    }
+
+    // Preconditioner generation.
+    let op = make_sketch(SketchKind::LessUniform, d, m, 8, &mut rng);
+    let sketch = op.apply(a);
+    let qr_flops = 2.0 * d as f64 * (n * n) as f64;
+    add(
+        "precond QR (d×n)",
+        time_fn(1, 5, || {
+            std::hint::black_box(Preconditioner::from_qr(&sketch));
+        }),
+        qr_flops,
+    );
+    add(
+        "precond SVD (d×n)",
+        time_fn(1, 3, || {
+            std::hint::black_box(Preconditioner::from_svd(&sketch));
+        }),
+        qr_flops, // same order; reported as effective QR-equivalent rate
+    );
+
+    // One LSQR iteration ≈ one A·v + one Aᵀ·u (4mn flops) + O(n) vector ops.
+    let precond = Preconditioner::from_qr(&sketch);
+    let z0 = vec![0.0; precond.rank()];
+    let iter_flops = 4.0 * (m * n) as f64;
+    let stats = time_fn(1, 5, || {
+        std::hint::black_box(ranntune::sap::lsqr_preconditioned(
+            a,
+            &problem.b,
+            &precond,
+            &z0,
+            0.0,
+            10,
+        ));
+    });
+    add(
+        "LSQR 10 iters (per-iter rate)",
+        ranntune::bench_harness::TimingStats {
+            mean: stats.mean / 10.0,
+            median: stats.median / 10.0,
+            stddev: stats.stddev / 10.0,
+            min: stats.min / 10.0,
+            max: stats.max / 10.0,
+            iters: stats.iters,
+        },
+        iter_flops,
+    );
+
+    // Full SAP solve at the reference config and at a tuned-style config.
+    for (label, cfg) in [
+        ("SAP solve (reference)", SapConfig::reference()),
+        (
+            "SAP solve (tuned-style)",
+            SapConfig {
+                algorithm: ranntune::sap::SapAlgorithm::QrLsqr,
+                sketch: SketchKind::LessUniform,
+                sampling_factor: 4.0,
+                vec_nnz: 4,
+                safety_factor: 0,
+            },
+        ),
+    ] {
+        let stats = time_fn(1, 5, || {
+            let mut r = Rng::new(9);
+            std::hint::black_box(solve_sap(a, &problem.b, &cfg, &mut r));
+        });
+        add(label, stats, 0.0);
+    }
+
+    // Dense GEMM rate (roofline context for the QR/SVD numbers).
+    let g1 = Mat::from_fn(256, 256, |_, _| rng.normal());
+    let g2 = Mat::from_fn(256, 256, |_, _| rng.normal());
+    add(
+        "gemm 256³",
+        time_fn(2, 10, || {
+            std::hint::black_box(gemm(&g1, &g2));
+        }),
+        2.0 * 256f64.powi(3),
+    );
+
+    // GP fit + EI propose at tuning-loop size (40 samples, 5 dims).
+    let xs: Vec<Vec<f64>> = (0..40).map(|_| (0..5).map(|_| rng.uniform()).collect()).collect();
+    let ys: Vec<f64> = xs.iter().map(|x| x.iter().sum::<f64>()).collect();
+    add(
+        "GP fit (40×5) + propose",
+        time_fn(0, 3, || {
+            let mut r = Rng::new(3);
+            let gp = GpModel::fit(&xs, &ys, 3, &mut r);
+            std::hint::black_box(ranntune::gp::propose_ei(&gp, 5, 1.0, None, 512, 0, &mut r));
+        }),
+        0.0,
+    );
+
+    let table = markdown_table(&["path", "median", "min", "GFLOP/s"], &rows);
+    println!("{table}");
+    let _ = ranntune::bench_harness::write_result(
+        &common::results_dir(),
+        "hotpath_micro",
+        "Hot-path micro benchmarks",
+        &["path", "median", "min", "GFLOP/s"],
+        &rows,
+    );
+}

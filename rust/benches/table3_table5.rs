@@ -1,0 +1,12 @@
+//! Bench: regenerate Table 3 (matrix properties) and Table 5 (Sobol
+//! sensitivity).
+mod common;
+
+fn main() {
+    let scale = common::bench_scale();
+    let out = common::results_dir();
+    println!("== Table 3 (scale: {}) ==", scale.label);
+    println!("{}", ranntune::cli::figures::table3(&scale, &out));
+    println!("== Table 5 ==");
+    println!("{}", ranntune::cli::figures::table5(&scale, &out));
+}

@@ -1,0 +1,169 @@
+//! Benchmark harness: timing utilities and table rendering.
+//!
+//! The vendored crate set has no `criterion`, so the `benches/` targets
+//! are `harness = false` binaries built on these helpers: warmup +
+//! repeated timing with mean/median/stddev/min, and markdown/CSV table
+//! renderers used by both the benches and the `ranntune figures` command.
+
+use std::time::Instant;
+
+/// Summary statistics of repeated timings (seconds).
+#[derive(Clone, Debug)]
+pub struct TimingStats {
+    pub mean: f64,
+    pub median: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub max: f64,
+    pub iters: usize,
+}
+
+impl TimingStats {
+    pub fn from_samples(samples: &[f64]) -> TimingStats {
+        use crate::gp::stats::{median, stddev};
+        TimingStats {
+            mean: crate::gp::stats::mean(samples),
+            median: median(samples),
+            stddev: stddev(samples),
+            min: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+            max: samples.iter().cloned().fold(0.0, f64::max),
+            iters: samples.len(),
+        }
+    }
+}
+
+/// Time `f` with `warmup` discarded runs and `iters` measured runs.
+pub fn time_fn(warmup: usize, iters: usize, mut f: impl FnMut()) -> TimingStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let samples: Vec<f64> = (0..iters.max(1))
+        .map(|_| {
+            let t = Instant::now();
+            f();
+            t.elapsed().as_secs_f64()
+        })
+        .collect();
+    TimingStats::from_samples(&samples)
+}
+
+/// Render rows as a github-style markdown table.
+pub fn markdown_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        let padded: Vec<String> = cells
+            .iter()
+            .zip(widths.iter())
+            .map(|(c, w)| format!("{c:<w$}"))
+            .collect();
+        format!("| {} |\n", padded.join(" | "))
+    };
+    out.push_str(&fmt_row(
+        &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+        &widths,
+    ));
+    let dashes: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+    out.push_str(&fmt_row(&dashes, &widths));
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+    }
+    out
+}
+
+/// Render rows as CSV (no quoting needed for our numeric/label content).
+pub fn csv_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    out.push_str(&headers.join(","));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&row.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+/// Write a figure/table artifact pair (markdown + CSV) into `results/`.
+pub fn write_result(
+    results_dir: &std::path::Path,
+    name: &str,
+    title: &str,
+    headers: &[&str],
+    rows: &[Vec<String>],
+) -> std::io::Result<()> {
+    std::fs::create_dir_all(results_dir)?;
+    let md = format!("# {title}\n\n{}", markdown_table(headers, rows));
+    std::fs::write(results_dir.join(format!("{name}.md")), md)?;
+    std::fs::write(
+        results_dir.join(format!("{name}.csv")),
+        csv_table(headers, rows),
+    )?;
+    Ok(())
+}
+
+/// Format seconds compactly (µs/ms/s).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_stats_sane() {
+        let stats = time_fn(1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(stats.iters, 5);
+        assert!(stats.min <= stats.median && stats.median <= stats.max);
+        assert!(stats.mean > 0.0);
+    }
+
+    #[test]
+    fn markdown_table_shape() {
+        let t = markdown_table(
+            &["a", "long_header"],
+            &[vec!["1".into(), "2".into()], vec!["333".into(), "4".into()]],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("long_header"));
+        assert!(lines[1].contains("---"));
+    }
+
+    #[test]
+    fn csv_round_trip_lines() {
+        let c = csv_table(&["x", "y"], &[vec!["1".into(), "2".into()]]);
+        assert_eq!(c, "x,y\n1,2\n");
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert!(fmt_secs(5e-7).ends_with("µs"));
+        assert!(fmt_secs(5e-3).ends_with("ms"));
+        assert!(fmt_secs(2.5).ends_with('s'));
+    }
+
+    #[test]
+    fn write_result_creates_files() {
+        let dir = std::env::temp_dir().join("ranntune_bench_test");
+        write_result(&dir, "t1", "Test", &["c"], &[vec!["v".into()]]).unwrap();
+        assert!(dir.join("t1.md").exists());
+        assert!(dir.join("t1.csv").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

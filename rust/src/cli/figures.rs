@@ -1,0 +1,638 @@
+//! Regeneration of every table and figure in the paper's evaluation
+//! (DESIGN.md's experiment index). Each `fig*`/`table*` function runs the
+//! actual experiment at the requested scale and writes markdown + CSV
+//! into `results/`; the `benches/` binaries and the `ranntune figures`
+//! subcommand are both thin wrappers over these.
+
+use crate::bench_harness::write_result;
+use crate::data::{coherence, condition_number, Problem, RealWorldKind, SyntheticKind};
+use crate::objective::{
+    category_index, category_label, Constants, Objective, ParamSpace, TuningTask, N_CATEGORIES,
+};
+use crate::rng::Rng;
+use crate::sap::{SapAlgorithm, SapConfig};
+use crate::sensitivity::{analyze_trials, PARAM_NAMES};
+use crate::sketch::SketchKind;
+use crate::tuners::{
+    GpBoTuner, GridTuner, LhsmduTuner, SourceSample, TlaMode, TlaTuner, TpeTuner, Tuner,
+};
+use std::path::Path;
+
+
+/// Experiment scale: problem sizes, tuning budgets, repetition counts.
+#[derive(Clone, Debug)]
+pub struct FigScale {
+    /// Synthetic matrix shape (paper: 50,000 × 1,000).
+    pub m: usize,
+    pub n: usize,
+    /// Transfer-learning source shape (paper: 10,000 × 1,000).
+    pub source_m: usize,
+    /// Function-evaluation budget per tuner run (paper: 50).
+    pub budget: usize,
+    /// Tuner repetitions with different seeds (paper: 5).
+    pub seeds: usize,
+    /// num_repeats per configuration evaluation (paper: 5).
+    pub repeats: usize,
+    /// Source samples pre-collected for TLA (paper: 100).
+    pub source_samples: usize,
+    /// Use the full 3,420-point grid (paper) or a coarse 864-point one.
+    pub full_grid: bool,
+    /// Saltelli base samples for Table 5 (paper: 512).
+    pub saltelli: usize,
+    pub label: &'static str,
+}
+
+impl FigScale {
+    /// Fast scale for CI/tests: minutes for the full figure set.
+    pub fn small() -> FigScale {
+        FigScale {
+            m: 1200,
+            n: 40,
+            source_m: 400,
+            budget: 20,
+            seeds: 2,
+            repeats: 2,
+            source_samples: 30,
+            full_grid: false,
+            saltelli: 128,
+            label: "small",
+        }
+    }
+
+    /// Default scale: preserves the paper's qualitative shape in tens of
+    /// minutes on an 8-core box.
+    pub fn default_() -> FigScale {
+        FigScale {
+            m: 4000,
+            n: 100,
+            source_m: 1000,
+            budget: 50,
+            seeds: 3,
+            repeats: 3,
+            source_samples: 60,
+            full_grid: false,
+            saltelli: 512,
+            label: "default",
+        }
+    }
+
+    /// Paper scale (hours of compute).
+    pub fn paper() -> FigScale {
+        FigScale {
+            m: 50_000,
+            n: 1_000,
+            source_m: 10_000,
+            budget: 50,
+            seeds: 5,
+            repeats: 5,
+            source_samples: 100,
+            full_grid: true,
+            saltelli: 512,
+            label: "paper",
+        }
+    }
+
+    pub fn parse(s: &str) -> FigScale {
+        match s {
+            "small" => FigScale::small(),
+            "paper" => FigScale::paper(),
+            _ => FigScale::default_(),
+        }
+    }
+
+    fn constants(&self) -> Constants {
+        Constants { num_repeats: self.repeats, ..Constants::default() }
+    }
+
+    fn problem(&self, name: &str, seed: u64) -> Problem {
+        super::make_problem(name, self.m, self.n, seed).expect("known dataset")
+    }
+
+    fn source_problem(&self, name: &str, seed: u64) -> Problem {
+        super::make_problem(name, self.source_m, self.n, seed).expect("known dataset")
+    }
+}
+
+fn objective_for(problem: Problem, constants: Constants, seed: u64) -> Objective {
+    let task = TuningTask { problem, space: ParamSpace::paper(), constants };
+    Objective::new(task, seed)
+}
+
+/// Pre-collect `n_samples` random-search samples on a (smaller) source
+/// problem — the paper's TLA source protocol (§5.3.1/§5.4).
+pub fn collect_source(
+    problem: Problem,
+    constants: Constants,
+    n_samples: usize,
+    seed: u64,
+) -> Vec<SourceSample> {
+    let mut obj = objective_for(problem, constants, seed);
+    let mut tuner = LhsmduTuner::new();
+    let h = tuner.run(&mut obj, n_samples, &mut Rng::new(seed ^ 0xabcd));
+    let ref_value = h.trials()[0].value.max(1e-12);
+    h.trials()
+        .iter()
+        .map(|t| SourceSample { config: t.config, value: t.value, ref_value })
+        .collect()
+}
+
+// ====================================================================
+// Figure 1: SAP performance vs sketching configuration
+// ====================================================================
+
+/// Fig. 1: QR-LSQR wall-clock and ARFE across LessUniform configurations
+/// (d sweep × nnz ∈ {1, 10, 100}) for two input matrices of different
+/// coherence.
+pub fn fig1(scale: &FigScale, out: &Path) -> String {
+    let mut rows = Vec::new();
+    for dataset in ["GA", "T3"] {
+        let problem = scale.problem(dataset, 100);
+        let mut obj = objective_for(problem, scale.constants(), 7);
+        obj.evaluate_reference();
+        for nnz in [1usize, 10, 100] {
+            for sf in [1.0f64, 2.0, 4.0, 6.0, 8.0, 10.0] {
+                let cfg = SapConfig {
+                    algorithm: SapAlgorithm::QrLsqr,
+                    sketch: SketchKind::LessUniform,
+                    sampling_factor: sf,
+                    vec_nnz: nnz,
+                    safety_factor: 0,
+                };
+                let t = obj.evaluate(&cfg);
+                rows.push(vec![
+                    dataset.to_string(),
+                    format!("{nnz}"),
+                    format!("{sf}"),
+                    format!("{:.5}", t.wall_clock),
+                    format!("{:.3e}", t.arfe),
+                    format!("{}", t.failed),
+                ]);
+            }
+        }
+    }
+    let headers = ["matrix", "vec_nnz", "sampling_factor", "wall_clock_s", "ARFE", "failed"];
+    write_result(out, "fig1_sketch_config", "Figure 1: SAP performance vs sketching matrix (QR-LSQR, LessUniform)", &headers, &rows).unwrap();
+    crate::bench_harness::markdown_table(&headers, &rows)
+}
+
+// ====================================================================
+// Table 3: input-matrix properties
+// ====================================================================
+
+/// Table 3: coherence and condition number of the synthetic families.
+pub fn table3(scale: &FigScale, out: &Path) -> String {
+    let mut rows = Vec::new();
+    for kind in SyntheticKind::ALL {
+        let mut rng = Rng::new(3);
+        let a = crate::data::generate_matrix(kind, scale.m, scale.n, &mut rng);
+        rows.push(vec![
+            kind.name().to_string(),
+            format!("{:.3}", coherence(&a)),
+            format!("{:.3}", condition_number(&a)),
+        ]);
+    }
+    let headers = ["Matrix", "Coherence", "Condition number"];
+    write_result(out, "table3_matrix_props", "Table 3: properties of input matrices", &headers, &rows).unwrap();
+    crate::bench_harness::markdown_table(&headers, &rows)
+}
+
+// ====================================================================
+// Figures 4 & 8: grid-search landscape
+// ====================================================================
+
+/// Coarse grid (864 points) used below paper scale.
+fn coarse_grid() -> Vec<SapConfig> {
+    let mut grid = Vec::new();
+    for alg in SapAlgorithm::ALL {
+        for sketch in SketchKind::ALL {
+            for sf in [1.0f64, 2.0, 4.0, 6.0, 8.0, 10.0] {
+                for nnz in [1usize, 2, 4, 8, 16, 32, 64, 100] {
+                    for safety in [0u32, 2, 4] {
+                        grid.push(SapConfig {
+                            algorithm: alg,
+                            sketch,
+                            sampling_factor: sf,
+                            vec_nnz: nnz,
+                            safety_factor: safety,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    grid
+}
+
+/// Run the grid landscape on one dataset; returns (per-category best rows,
+/// full trial dump, best overall value).
+fn grid_landscape(
+    scale: &FigScale,
+    dataset: &str,
+) -> (Vec<Vec<String>>, Vec<Vec<String>>, f64, f64) {
+    let problem = scale.problem(dataset, 100);
+    let grid =
+        if scale.full_grid { crate::tuners::paper_grid() } else { coarse_grid() };
+    let budget = grid.len() + 1;
+    let mut obj = objective_for(problem, scale.constants(), 9);
+    let mut tuner = GridTuner::new(grid);
+    let h = tuner.run(&mut obj, budget, &mut Rng::new(1));
+
+    // Reference wall-clock (trial 0) for the "safe config is k× slower"
+    // headline.
+    let ref_time = h.trials()[0].wall_clock;
+
+    // Per-category optimum + failure count.
+    let mut best: Vec<Option<&crate::objective::Trial>> = vec![None; N_CATEGORIES];
+    let mut fails = vec![0usize; N_CATEGORIES];
+    let mut counts = vec![0usize; N_CATEGORIES];
+    for t in &h.trials()[1..] {
+        let c = category_index(&t.config);
+        counts[c] += 1;
+        if t.failed {
+            fails[c] += 1;
+        } else if best[c].map_or(true, |b| t.wall_clock < b.wall_clock) {
+            best[c] = Some(t);
+        }
+    }
+    let mut summary = Vec::new();
+    let mut best_overall = f64::INFINITY;
+    for c in 0..N_CATEGORIES {
+        let label = category_label(c);
+        match best[c] {
+            Some(t) => {
+                best_overall = best_overall.min(t.wall_clock);
+                summary.push(vec![
+                    dataset.to_string(),
+                    label,
+                    format!("{:.5}", t.wall_clock),
+                    format!("sf={:.0} nnz={} s={}", t.config.sampling_factor, t.config.vec_nnz, t.config.safety_factor),
+                    format!("{}/{}", fails[c], counts[c]),
+                ]);
+            }
+            None => summary.push(vec![
+                dataset.to_string(),
+                label,
+                "all-failed".into(),
+                "-".into(),
+                format!("{}/{}", fails[c], counts[c]),
+            ]),
+        }
+    }
+    let dump: Vec<Vec<String>> = h.trials()[1..]
+        .iter()
+        .map(|t| {
+            vec![
+                dataset.to_string(),
+                t.config.algorithm.name().to_string(),
+                t.config.sketch.name().to_string(),
+                format!("{:.1}", t.config.sampling_factor),
+                format!("{}", t.config.vec_nnz),
+                format!("{}", t.config.safety_factor),
+                format!("{:.5}", t.wall_clock),
+                format!("{:.3e}", t.arfe),
+                format!("{}", t.failed),
+            ]
+        })
+        .collect();
+    (summary, dump, best_overall, ref_time)
+}
+
+/// Fig. 4 (synthetic) / Fig. 8 (real-world): landscape tables. Returns
+/// markdown; writes full dumps as CSV.
+pub fn grid_figure(scale: &FigScale, datasets: &[&str], name: &str, out: &Path) -> String {
+    let mut summary_rows = Vec::new();
+    let mut dump_rows = Vec::new();
+    let mut headline_rows = Vec::new();
+    for ds in datasets {
+        let (summary, dump, best, ref_time) = grid_landscape(scale, ds);
+        summary_rows.extend(summary);
+        dump_rows.extend(dump);
+        headline_rows.push(vec![
+            ds.to_string(),
+            format!("{:.5}", ref_time),
+            format!("{best:.5}"),
+            format!("{:.2}x", ref_time / best),
+        ]);
+    }
+    let sum_headers = ["matrix", "category", "best_wall_clock_s", "best_config", "failures"];
+    write_result(out, &format!("{name}_summary"), &format!("{name}: per-category grid optimum"), &sum_headers, &summary_rows).unwrap();
+    let dump_headers =
+        ["matrix", "alg", "sketch", "sf", "nnz", "safety", "wall_clock_s", "ARFE", "failed"];
+    write_result(out, &format!("{name}_landscape"), &format!("{name}: full landscape"), &dump_headers, &dump_rows).unwrap();
+    let head_headers = ["matrix", "ref_config_s", "grid_best_s", "speedup"];
+    write_result(out, &format!("{name}_speedup"), &format!("{name}: optimal vs safe reference (paper §5.2: 3.9x–6.4x)"), &head_headers, &headline_rows).unwrap();
+    format!(
+        "{}\n{}",
+        crate::bench_harness::markdown_table(&sum_headers, &summary_rows),
+        crate::bench_harness::markdown_table(&head_headers, &headline_rows)
+    )
+}
+
+// ====================================================================
+// Figures 5 & 9: tuner comparison
+// ====================================================================
+
+/// One tuner run identified by (tuner name, seed) with its history.
+pub struct SuiteRun {
+    pub tuner: String,
+    pub seed: u64,
+    pub history: crate::objective::History,
+}
+
+/// Run the full tuner suite (LHSMDU, TPE, GPTune, TLA) on one dataset.
+pub fn tuner_suite(scale: &FigScale, dataset: &str) -> Vec<SuiteRun> {
+    // Source data for TLA: random samples on the down-scaled problem of
+    // the same generation scheme.
+    let source = collect_source(
+        scale.source_problem(dataset, 500),
+        scale.constants(),
+        scale.source_samples,
+        500,
+    );
+    let mut runs = Vec::new();
+    for seed in 0..scale.seeds as u64 {
+        let tuners: Vec<Box<dyn Tuner>> = vec![
+            Box::new(LhsmduTuner::new()),
+            Box::new(TpeTuner::new(Constants::default().num_pilots)),
+            Box::new(GpBoTuner::new(Constants::default().num_pilots)),
+            Box::new(TlaTuner::new(source.clone())),
+        ];
+        for mut tuner in tuners {
+            let problem = scale.problem(dataset, 100); // same task every run
+            let mut obj = objective_for(problem, scale.constants(), seed);
+            let h = tuner.run(&mut obj, scale.budget, &mut Rng::new(seed * 7919 + 13));
+            runs.push(SuiteRun { tuner: tuner.name().to_string(), seed, history: h });
+        }
+    }
+    runs
+}
+
+/// Summarize suite runs into Figure 5/9-style rows and write the
+/// best-so-far series CSV.
+pub fn tuner_figure(scale: &FigScale, datasets: &[&str], name: &str, out: &Path) -> String {
+    let mut summary = Vec::new();
+    let mut series_rows = Vec::new();
+    for ds in datasets {
+        let runs = tuner_suite(scale, ds);
+        // Target: best LHSMDU final value (mean over seeds) — the paper's
+        // "to obtain the same or better wall-clock time" comparison.
+        let lhs_final: Vec<f64> = runs
+            .iter()
+            .filter(|r| r.tuner == "LHSMDU")
+            .map(|r| *r.history.best_so_far().last().unwrap())
+            .collect();
+        let target = crate::gp::stats::mean(&lhs_final);
+
+        for tuner_name in ["LHSMDU", "TPE", "GPTune", "TLA"] {
+            let sel: Vec<&SuiteRun> =
+                runs.iter().filter(|r| r.tuner == tuner_name).collect();
+            let finals: Vec<f64> = sel
+                .iter()
+                .map(|r| *r.history.best_so_far().last().unwrap())
+                .collect();
+            let evals_to_target: Vec<f64> = sel
+                .iter()
+                .map(|r| {
+                    r.history
+                        .evals_to_reach(target)
+                        .map(|e| e as f64)
+                        .unwrap_or(scale.budget as f64)
+                })
+                .collect();
+            let acc_times: Vec<f64> = sel
+                .iter()
+                .map(|r| r.history.total_eval_time(scale.repeats))
+                .collect();
+            summary.push(vec![
+                ds.to_string(),
+                tuner_name.to_string(),
+                format!("{:.5}", crate::gp::stats::mean(&finals)),
+                format!("{:.5}", crate::gp::stats::stddev(&finals)),
+                format!("{:.1}", crate::gp::stats::mean(&evals_to_target)),
+                format!("{:.2}", crate::gp::stats::mean(&acc_times)),
+            ]);
+            for r in sel {
+                for (i, v) in r.history.best_so_far().iter().enumerate() {
+                    series_rows.push(vec![
+                        ds.to_string(),
+                        tuner_name.to_string(),
+                        format!("{}", r.seed),
+                        format!("{}", i + 1),
+                        format!("{v:.6}"),
+                    ]);
+                }
+            }
+        }
+    }
+    let headers = [
+        "matrix",
+        "tuner",
+        "final_best_s(mean)",
+        "final_best_s(std)",
+        "evals_to_LHSMDU_final",
+        "accumulated_eval_time_s",
+    ];
+    write_result(out, &format!("{name}_summary"), &format!("{name}: tuner comparison"), &headers, &summary).unwrap();
+    let series_headers = ["matrix", "tuner", "seed", "evaluation", "best_so_far_s"];
+    write_result(out, &format!("{name}_series"), &format!("{name}: best-so-far series"), &series_headers, &series_rows).unwrap();
+    crate::bench_harness::markdown_table(&headers, &summary)
+}
+
+// ====================================================================
+// Figure 6: TLA source ablation
+// ====================================================================
+
+/// Fig. 6: TLA tuning quality when the source data comes from each
+/// synthetic family (source ↔ target cross product).
+pub fn fig6(scale: &FigScale, out: &Path) -> String {
+    let targets = ["GA", "T3", "T1"];
+    let sources = ["GA", "T5", "T3", "T1"];
+    let mut rows = Vec::new();
+    for target in targets {
+        for source_name in sources {
+            let source = collect_source(
+                scale.source_problem(source_name, 500),
+                scale.constants(),
+                scale.source_samples,
+                500,
+            );
+            let mut finals = Vec::new();
+            for seed in 0..scale.seeds as u64 {
+                let mut tuner = TlaTuner::new(source.clone());
+                let problem = scale.problem(target, 100);
+                let mut obj = objective_for(problem, scale.constants(), seed);
+                let h = tuner.run(&mut obj, scale.budget, &mut Rng::new(seed + 31));
+                finals.push(*h.best_so_far().last().unwrap());
+            }
+            rows.push(vec![
+                target.to_string(),
+                source_name.to_string(),
+                format!("{:.5}", crate::gp::stats::mean(&finals)),
+                format!("{:.5}", crate::gp::stats::stddev(&finals)),
+            ]);
+        }
+    }
+    let headers = ["target", "source", "final_best_s(mean)", "final_best_s(std)"];
+    write_result(out, "fig6_tla_sources", "Figure 6: effect of source data on TLA", &headers, &rows).unwrap();
+    crate::bench_harness::markdown_table(&headers, &rows)
+}
+
+// ====================================================================
+// Figure 7: bandit-constant ablation
+// ====================================================================
+
+/// Fig. 7: TLA with UCB constant c ∈ {1,2,4,8} vs GPTune's original
+/// LCM-only transfer.
+pub fn fig7(scale: &FigScale, out: &Path) -> String {
+    let datasets = ["GA", "T3"];
+    let mut rows = Vec::new();
+    for ds in datasets {
+        let source = collect_source(
+            scale.source_problem(ds, 500),
+            scale.constants(),
+            scale.source_samples,
+            500,
+        );
+        let variants: Vec<(String, TlaMode)> = vec![
+            ("HUCB (c=1)".into(), TlaMode::Hybrid { c: 1.0 }),
+            ("HUCB (c=2)".into(), TlaMode::Hybrid { c: 2.0 }),
+            ("HUCB (c=4)".into(), TlaMode::Hybrid { c: 4.0 }),
+            ("HUCB (c=8)".into(), TlaMode::Hybrid { c: 8.0 }),
+            ("Original (LCM)".into(), TlaMode::OriginalLcm),
+        ];
+        for (label, mode) in variants {
+            let mut finals = Vec::new();
+            let mut acc = Vec::new();
+            for seed in 0..scale.seeds as u64 {
+                let mut tuner = TlaTuner::with_mode(source.clone(), mode);
+                let problem = scale.problem(ds, 100);
+                let mut obj = objective_for(problem, scale.constants(), seed);
+                let h = tuner.run(&mut obj, scale.budget, &mut Rng::new(seed + 77));
+                finals.push(*h.best_so_far().last().unwrap());
+                acc.push(h.total_eval_time(scale.repeats));
+            }
+            rows.push(vec![
+                ds.to_string(),
+                label,
+                format!("{:.5}", crate::gp::stats::mean(&finals)),
+                format!("{:.2}", crate::gp::stats::mean(&acc)),
+            ]);
+        }
+    }
+    let headers = ["matrix", "transfer variant", "final_best_s(mean)", "accumulated_time_s"];
+    write_result(out, "fig7_bandit_constant", "Figure 7: transfer-learning variants (UCB constant / original LCM)", &headers, &rows).unwrap();
+    crate::bench_harness::markdown_table(&headers, &rows)
+}
+
+// ====================================================================
+// Table 5: sensitivity analysis
+// ====================================================================
+
+/// Table 5: Sobol S1/ST per tuning parameter on the three real-world
+/// simulated datasets, via the GP-surrogate pipeline.
+pub fn table5(scale: &FigScale, out: &Path) -> String {
+    let mut rows = Vec::new();
+    for kind in RealWorldKind::ALL {
+        let problem = scale.problem(kind.name(), 100);
+        let mut obj = objective_for(problem, scale.constants(), 21);
+        let mut tuner = LhsmduTuner::new();
+        let h = tuner.run(&mut obj, scale.source_samples.max(30), &mut Rng::new(5));
+        let mut rng = Rng::new(99);
+        let res = analyze_trials(h.trials(), &ParamSpace::paper(), scale.saltelli, &mut rng);
+        for (i, idx) in res.indices.iter().enumerate() {
+            rows.push(vec![
+                kind.name().to_string(),
+                PARAM_NAMES[i].to_string(),
+                format!("{:.2} ({:.2})", idx.s1, idx.s1_conf),
+                format!("{:.2} ({:.2})", idx.st, idx.st_conf),
+            ]);
+        }
+    }
+    let headers = ["dataset", "parameter", "S1 (conf)", "ST (conf)"];
+    write_result(out, "table5_sensitivity", "Table 5: Sobol sensitivity (GP surrogate + Saltelli)", &headers, &rows).unwrap();
+    crate::bench_harness::markdown_table(&headers, &rows)
+}
+
+// ====================================================================
+// Figure 10: penalty/allowance ablation
+// ====================================================================
+
+/// Fig. 10: tuner quality under strict / default / soft ARFE constraints.
+pub fn fig10(scale: &FigScale, out: &Path) -> String {
+    let settings = [
+        ("strict (af=2)", 2.0, 2.0),
+        ("default (af=10)", 10.0, 2.0),
+        ("soft (af=100)", 100.0, 2.0),
+    ];
+    let ds = "Localization";
+    let mut rows = Vec::new();
+    for (label, allowance, penalty) in settings {
+        let constants = Constants {
+            num_repeats: scale.repeats,
+            allowance_factor: allowance,
+            penalty_factor: penalty,
+            ..Constants::default()
+        };
+        let source = collect_source(
+            scale.source_problem(ds, 500),
+            constants.clone(),
+            scale.source_samples,
+            500,
+        );
+        let tuner_makers: Vec<(&str, Box<dyn Fn() -> Box<dyn Tuner>>)> = vec![
+            ("LHSMDU", Box::new(|| Box::new(LhsmduTuner::new()) as Box<dyn Tuner>)),
+            ("GPTune", Box::new(|| Box::new(GpBoTuner::new(10)) as Box<dyn Tuner>)),
+            ("TLA", {
+                let src = source.clone();
+                Box::new(move || Box::new(TlaTuner::new(src.clone())) as Box<dyn Tuner>)
+            }),
+        ];
+        for (tname, make) in &tuner_makers {
+            let mut finals = Vec::new();
+            let mut failure_rates = Vec::new();
+            for seed in 0..scale.seeds as u64 {
+                let mut tuner = make();
+                let problem = scale.problem(ds, 100);
+                let mut obj = objective_for(problem, constants.clone(), seed);
+                let h = tuner.run(&mut obj, scale.budget, &mut Rng::new(seed + 4));
+                finals.push(*h.best_so_far().last().unwrap());
+                failure_rates.push(h.failure_rate());
+            }
+            rows.push(vec![
+                label.to_string(),
+                tname.to_string(),
+                format!("{:.5}", crate::gp::stats::mean(&finals)),
+                format!("{:.2}", crate::gp::stats::mean(&failure_rates)),
+            ]);
+        }
+    }
+    let headers = ["constraint", "tuner", "final_best_s(mean)", "failure_rate"];
+    write_result(out, "fig10_penalty_allowance", "Figure 10: effect of allowance/penalty factors", &headers, &rows).unwrap();
+    crate::bench_harness::markdown_table(&headers, &rows)
+}
+
+/// Run everything (the `--all` path). Returns a combined report.
+pub fn all_figures(scale: &FigScale, out: &Path) -> String {
+    let mut report = String::new();
+    let mut add = |title: &str, body: String| {
+        report.push_str(&format!("\n## {title}\n\n{body}\n"));
+    };
+    add("Table 3", table3(scale, out));
+    add("Figure 1", fig1(scale, out));
+    add("Figure 4", grid_figure(scale, &["GA", "T5", "T3", "T1"], "fig4", out));
+    add("Figure 5", tuner_figure(scale, &["GA", "T5", "T3", "T1"], "fig5", out));
+    add("Figure 6", fig6(scale, out));
+    add("Figure 7", fig7(scale, out));
+    add(
+        "Figure 8",
+        grid_figure(scale, &["Musk", "CIFAR10", "Localization"], "fig8", out),
+    );
+    add(
+        "Figure 9",
+        tuner_figure(scale, &["Musk", "CIFAR10", "Localization"], "fig9", out),
+    );
+    add("Table 5", table5(scale, out));
+    add("Figure 10", fig10(scale, out));
+    std::fs::write(out.join("report.md"), &report).ok();
+    report
+}

@@ -1,0 +1,156 @@
+//! Command-line interface of the `ranntune` binary.
+//!
+//! Subcommands (hand-rolled parsing — no clap in the offline vendor set):
+//!
+//! ```text
+//! ranntune tune        --data GA --tuner gptune --budget 50 [--m 4000 --n 100]
+//! ranntune grid        --data T1 [--coarse] [--m ... --n ...]
+//! ranntune tla         --data Localization --source-db db.json --budget 50
+//! ranntune sensitivity --data Musk [--samples 100]
+//! ranntune deploy      --variant sap_small [--m 900 --n 100]
+//! ranntune figures     --fig 5 | --table 3 | --all [--scale small|default|paper]
+//! ranntune props       --data GA            # Table 3 style diagnostics
+//! ```
+
+pub mod figures;
+
+use crate::data::{generate_realworld, generate_synthetic, Problem, RealWorldKind, SyntheticKind};
+use crate::rng::Rng;
+use std::collections::BTreeMap;
+
+/// Parsed CLI arguments: positional subcommand + `--key value` flags
+/// (`--flag` alone stores "true").
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let value = if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    i += 1;
+                    argv[i].clone()
+                } else {
+                    "true".to_string()
+                };
+                args.flags.insert(key.to_string(), value);
+            } else if args.command.is_empty() {
+                args.command = a.clone();
+            }
+            i += 1;
+        }
+        args
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+/// Build a problem from a dataset name (synthetic family or simulated
+/// real-world dataset), at the given shape.
+pub fn make_problem(name: &str, m: usize, n: usize, seed: u64) -> Result<Problem, String> {
+    let mut rng = Rng::new(seed);
+    if let Some(kind) = SyntheticKind::parse(name) {
+        return Ok(generate_synthetic(kind, m, n, &mut rng));
+    }
+    if let Some(kind) = RealWorldKind::parse(name) {
+        return Ok(generate_realworld(kind, m, n, &mut rng));
+    }
+    Err(format!(
+        "unknown dataset {name:?}; expected GA|T5|T3|T1|Musk|CIFAR10|Localization"
+    ))
+}
+
+pub const USAGE: &str = "\
+ranntune — surrogate-based autotuning for randomized sketching (SAP least squares)
+
+USAGE: ranntune <command> [--flags]
+
+COMMANDS
+  tune         run one tuner on one dataset
+               --data GA|T5|T3|T1|Musk|CIFAR10|Localization
+               --tuner lhsmdu|tpe|gptune|tla   --budget N   --m M --n N
+               --seed S  --repeats R  --db results/db.json (record history)
+               --source-db path (tla: load source samples)
+  grid         semi-exhaustive grid landscape (Fig. 4/8 ground truth)
+               --data ... --m --n [--coarse] [--repeats R]
+  sensitivity  Sobol analysis via GP surrogate (Table 5)
+               --data ... --m --n [--samples 100] [--saltelli 512]
+  deploy       run the AOT (JAX+Pallas→PJRT) artifact vs the native solver
+               --variant sap_small [--m 900 --n 100]
+  props        dataset diagnostics: coherence, condition number (Table 3)
+               --data ... --m --n
+  figures      regenerate paper tables/figures into results/
+               --fig 1|4|5|6|7|8|9|10 | --table 3|5 | --all
+               [--scale small|default|paper]  [--out results]
+  help         this text
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn parses_command_and_flags() {
+        let a = Args::parse(&argv("tune --data GA --budget 50 --coarse --m 4000"));
+        assert_eq!(a.command, "tune");
+        assert_eq!(a.get("data"), Some("GA"));
+        assert_eq!(a.get_usize("budget", 0), 50);
+        assert_eq!(a.get_usize("m", 0), 4000);
+        assert!(a.has("coarse"));
+        assert!(!a.has("missing"));
+        assert_eq!(a.get_f64("penalty", 2.0), 2.0);
+    }
+
+    #[test]
+    fn bare_flag_before_flagged_value() {
+        let a = Args::parse(&argv("figures --all --scale paper"));
+        assert_eq!(a.command, "figures");
+        assert!(a.has("all"));
+        assert_eq!(a.get("scale"), Some("paper"));
+    }
+
+    #[test]
+    fn make_problem_accepts_all_datasets() {
+        for name in ["GA", "T5", "T3", "T1", "Musk", "CIFAR10", "Localization"] {
+            let p = make_problem(name, 200, 10, 1).unwrap();
+            assert_eq!(p.m(), 200);
+            assert_eq!(p.n(), 10);
+        }
+        assert!(make_problem("nope", 10, 2, 1).is_err());
+    }
+
+    #[test]
+    fn malformed_numbers_fall_back_to_default() {
+        let a = Args::parse(&argv("tune --budget abc"));
+        assert_eq!(a.get_usize("budget", 7), 7);
+        assert_eq!(a.get_u64("seed", 3), 3);
+    }
+}

@@ -1,0 +1,90 @@
+//! Matrix diagnostics for Table 3: coherence and condition number.
+
+use crate::linalg::{qr_thin, svd_thin, Mat};
+
+/// Coherence of a tall matrix, reported in Table 3's normalization:
+/// maxᵢ ‖U₍ᵢ₎‖₂² ∈ [n/m, 1], where U is any orthonormal basis of
+/// range(A). (The paper's §5.1 formula multiplies by m; its Table 3
+/// values — GA 0.024 ≈ n/m, T1 1.0 — are plainly in the max-leverage
+/// normalization, which is what we report.)
+///
+/// The row norms of U equal the diagonal of the range projector and are
+/// therefore basis-independent; we use the thin-QR Q instead of the SVD's
+/// U for speed.
+pub fn coherence(a: &Mat) -> f64 {
+    let q = qr_thin(a).q;
+    let mut best = 0.0f64;
+    for i in 0..q.rows() {
+        let r = q.row(i);
+        best = best.max(crate::linalg::dot(r, r));
+    }
+    best
+}
+
+/// Condition number σ_max/σ_min of a tall matrix, computed from the SVD of
+/// the (small) R factor: cond(A) = cond(R) since Q is orthonormal.
+pub fn condition_number(a: &Mat) -> f64 {
+    let r = qr_thin(a).r;
+    let f = svd_thin(&r);
+    let smax = f.s[0];
+    let smin = *f.s.last().unwrap();
+    if smin <= 0.0 {
+        f64::INFINITY
+    } else {
+        smax / smin
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::rng::Rng;
+
+    #[test]
+    fn coherence_bounds() {
+        let mut rng = Rng::new(1);
+        let (m, n) = (400, 10);
+        let a = Mat::from_fn(m, n, |_, _| rng.normal());
+        let mu = coherence(&a);
+        assert!(mu >= n as f64 / m as f64 - 1e-12);
+        assert!(mu <= 1.0 + 1e-12);
+    }
+
+    #[test]
+    fn spiked_row_maximizes_coherence() {
+        let mut rng = Rng::new(2);
+        let mut a = Mat::from_fn(300, 5, |_, _| rng.normal());
+        // Make row 0 enormous: its leverage → 1.
+        for j in 0..5 {
+            a[(0, j)] *= 1e6;
+        }
+        let mu = coherence(&a);
+        assert!(mu > 0.999, "coherence {mu}");
+    }
+
+    #[test]
+    fn condition_number_of_scaled_orthonormal() {
+        let mut rng = Rng::new(3);
+        let g = Mat::from_fn(100, 4, |_, _| rng.normal());
+        let q = crate::linalg::qr_thin(&g).q;
+        // Columns scaled by 1..4 → cond exactly 4.
+        let mut a = q.clone();
+        for i in 0..100 {
+            for j in 0..4 {
+                a[(i, j)] *= (j + 1) as f64;
+            }
+        }
+        let c = condition_number(&a);
+        assert!((c - 4.0).abs() < 1e-8, "cond {c}");
+    }
+
+    #[test]
+    fn condition_number_matches_full_svd() {
+        let mut rng = Rng::new(4);
+        let a = Mat::from_fn(150, 12, |_, _| rng.normal());
+        let via_r = condition_number(&a);
+        let via_svd = crate::linalg::cond(&a);
+        assert!((via_r - via_svd).abs() / via_svd < 1e-8);
+    }
+}

@@ -1,0 +1,201 @@
+//! Synthetic least-squares problems (§5.1).
+//!
+//! Rows of A follow an AR(1)-correlated multivariate distribution with
+//! covariance Σᵢⱼ = 2·0.5^{|i−j|}. A stationary AR(1) recurrence
+//!   y₀ = z₀,   yⱼ = ρ·yⱼ₋₁ + √(1−ρ²)·zⱼ,   zⱼ ~ N(0,1)
+//! has Corr(yᵢ, yⱼ) = ρ^{|i−j|}, so a row is √2·y — O(n) per row instead
+//! of an O(n²) covariance factor multiply.
+//!
+//! The t-variants divide each normal row by an independent √(w/ν),
+//! w ~ χ²(ν): heavier tails → occasional huge-leverage rows → higher
+//! coherence (Table 3: GA 0.024 → T1 1.0 at paper scale), which is the
+//! knob the paper uses to stress sketch quality.
+
+use super::Problem;
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// The paper's four synthetic families.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SyntheticKind {
+    /// Multivariate normal rows.
+    GA,
+    /// Multivariate t, ν = 5.
+    T5,
+    /// Multivariate t, ν = 3.
+    T3,
+    /// Multivariate t, ν = 1 (Cauchy — maximal coherence).
+    T1,
+}
+
+impl SyntheticKind {
+    pub const ALL: [SyntheticKind; 4] =
+        [SyntheticKind::GA, SyntheticKind::T5, SyntheticKind::T3, SyntheticKind::T1];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SyntheticKind::GA => "GA",
+            SyntheticKind::T5 => "T5",
+            SyntheticKind::T3 => "T3",
+            SyntheticKind::T1 => "T1",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SyntheticKind> {
+        match s.to_ascii_uppercase().as_str() {
+            "GA" => Some(SyntheticKind::GA),
+            "T5" => Some(SyntheticKind::T5),
+            "T3" => Some(SyntheticKind::T3),
+            "T1" => Some(SyntheticKind::T1),
+            _ => None,
+        }
+    }
+
+    /// Degrees of freedom of the row distribution (None = Gaussian).
+    fn dof(&self) -> Option<f64> {
+        match self {
+            SyntheticKind::GA => None,
+            SyntheticKind::T5 => Some(5.0),
+            SyntheticKind::T3 => Some(3.0),
+            SyntheticKind::T1 => Some(1.0),
+        }
+    }
+}
+
+/// AR(1) correlation of the paper's covariance Σᵢⱼ = 2·0.5^{|i−j|}.
+const AR_RHO: f64 = 0.5;
+/// Marginal variance (the leading factor 2).
+const VAR: f64 = 2.0;
+/// Noise std of ε in b = A·x + ε.
+const NOISE_STD: f64 = 0.09;
+
+/// Generate an m×n matrix whose rows follow the requested family.
+pub fn generate_matrix(kind: SyntheticKind, m: usize, n: usize, rng: &mut Rng) -> Mat {
+    let mut a = Mat::zeros(m, n);
+    let sd = VAR.sqrt();
+    let innov = (1.0 - AR_RHO * AR_RHO).sqrt();
+    for i in 0..m {
+        // AR(1) Gaussian row.
+        let row = a.row_mut(i);
+        let mut prev = rng.normal();
+        row[0] = prev;
+        for j in 1..n {
+            prev = AR_RHO * prev + innov * rng.normal();
+            row[j] = prev;
+        }
+        // Scale to variance 2, then t-mix if requested.
+        let mix = match kind.dof() {
+            None => sd,
+            Some(nu) => {
+                let w = rng.chi_square(nu).max(f64::MIN_POSITIVE);
+                sd / (w / nu).sqrt()
+            }
+        };
+        for v in row.iter_mut() {
+            *v *= mix;
+        }
+    }
+    a
+}
+
+/// The paper's planted coefficient vector: 1 on the first and last 10
+/// entries, 0.1 in between (clamped sensibly for very small n).
+pub fn planted_x(n: usize) -> Vec<f64> {
+    let edge = 10.min(n / 2);
+    (0..n)
+        .map(|j| if j < edge || j >= n - edge { 1.0 } else { 0.1 })
+        .collect()
+}
+
+/// Generate a full synthetic problem: A from the family, b = A·x + ε.
+pub fn generate_synthetic(kind: SyntheticKind, m: usize, n: usize, rng: &mut Rng) -> Problem {
+    let a = generate_matrix(kind, m, n, rng);
+    let x = planted_x(n);
+    let mut b = crate::linalg::gemv(&a, &x);
+    for v in b.iter_mut() {
+        *v += NOISE_STD * rng.normal();
+    }
+    Problem { a, b, name: kind.name().to_string() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::coherence;
+
+    #[test]
+    fn row_covariance_matches_ar1() {
+        let mut rng = Rng::new(1);
+        let a = generate_matrix(SyntheticKind::GA, 20_000, 6, &mut rng);
+        // Empirical covariance of columns j, k ≈ 2·0.5^{|j−k|}.
+        for j in 0..6 {
+            for k in 0..6 {
+                let cj = a.col(j);
+                let ck = a.col(k);
+                let cov = crate::linalg::dot(&cj, &ck) / 20_000.0;
+                let expect = 2.0 * 0.5f64.powi((j as i32 - k as i32).abs());
+                assert!(
+                    (cov - expect).abs() < 0.1,
+                    "cov({j},{k}) = {cov}, expected {expect}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn coherence_increases_with_tail_weight() {
+        // Table 3 ordering: μ(GA) < μ(T5) < μ(T3) < μ(T1) → 1.
+        let mut rng = Rng::new(2);
+        let (m, n) = (3000, 40);
+        let mu: Vec<f64> = SyntheticKind::ALL
+            .iter()
+            .map(|&k| coherence(&generate_matrix(k, m, n, &mut rng)))
+            .collect();
+        assert!(mu[0] < mu[1], "GA {} !< T5 {}", mu[0], mu[1]);
+        assert!(mu[1] < mu[2], "T5 {} !< T3 {}", mu[1], mu[2]);
+        assert!(mu[2] < mu[3], "T3 {} !< T1 {}", mu[2], mu[3]);
+        // T1 saturates near the maximum coherence 1 (normalized; see
+        // diagnostics::coherence which reports μ/m ∈ (0, 1]).
+        assert!(mu[3] > 0.8, "T1 coherence {}", mu[3]);
+        assert!(mu[0] < 0.1, "GA coherence {}", mu[0]);
+    }
+
+    #[test]
+    fn planted_x_shape() {
+        let x = planted_x(50);
+        assert_eq!(x.len(), 50);
+        assert_eq!(x[0], 1.0);
+        assert_eq!(x[9], 1.0);
+        assert_eq!(x[10], 0.1);
+        assert_eq!(x[39], 0.1);
+        assert_eq!(x[40], 1.0);
+        assert_eq!(x[49], 1.0);
+        // tiny n does not panic
+        assert_eq!(planted_x(3), vec![1.0, 0.1, 1.0]);
+    }
+
+    #[test]
+    fn problem_b_is_near_planted_prediction() {
+        let mut rng = Rng::new(3);
+        let p = generate_synthetic(SyntheticKind::GA, 500, 30, &mut rng);
+        let pred = crate::linalg::gemv(&p.a, &planted_x(30));
+        let mut resid = p.b.clone();
+        for i in 0..resid.len() {
+            resid[i] -= pred[i];
+        }
+        // Residual is the ε noise: std 0.09.
+        let std = (crate::linalg::dot(&resid, &resid) / 500.0).sqrt();
+        assert!((std - 0.09).abs() < 0.02, "noise std {std}");
+    }
+
+    #[test]
+    fn downsample_preserves_prefix() {
+        let mut rng = Rng::new(4);
+        let p = generate_synthetic(SyntheticKind::T3, 200, 10, &mut rng);
+        let q = p.downsample(50);
+        assert_eq!(q.m(), 50);
+        assert_eq!(q.n(), 10);
+        assert_eq!(q.a.row(7), p.a.row(7));
+        assert_eq!(q.b[7], p.b[7]);
+    }
+}

@@ -1,0 +1,355 @@
+//! Crowd-style history database (§1.2 / §4.3: "GPTune's crowd-sourcing
+//! database which can facilitate such a transfer learning approach, by
+//! allowing multiple users ... to share their data").
+//!
+//! A [`HistoryDb`] is a JSON file of per-task tuning records. Tuner runs
+//! append their evaluations; TLA queries records from *source* tasks
+//! (matching by task name and/or shape) and converts them into
+//! [`SourceSample`]s. The format is deliberately simple and diffable —
+//! one object per task with its trial list.
+
+use crate::json::Json;
+use crate::objective::{History, ParamSpace};
+use crate::sap::{SapAlgorithm, SapConfig};
+use crate::sketch::SketchKind;
+use crate::tuners::SourceSample;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A stored task: identity + its evaluation records.
+#[derive(Clone, Debug)]
+pub struct TaskRecord {
+    pub task_name: String,
+    pub m: usize,
+    pub n: usize,
+    pub trials: Vec<TrialRecord>,
+}
+
+/// One stored evaluation.
+#[derive(Clone, Debug)]
+pub struct TrialRecord {
+    pub config: SapConfig,
+    pub wall_clock: f64,
+    pub arfe: f64,
+    pub value: f64,
+    pub failed: bool,
+    pub is_reference: bool,
+}
+
+/// In-memory DB, loadable/savable as JSON.
+#[derive(Clone, Debug, Default)]
+pub struct HistoryDb {
+    /// keyed by "name@mxn"
+    tasks: BTreeMap<String, TaskRecord>,
+}
+
+fn task_key(name: &str, m: usize, n: usize) -> String {
+    format!("{name}@{m}x{n}")
+}
+
+impl HistoryDb {
+    pub fn new() -> HistoryDb {
+        HistoryDb::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Append a tuning history for a task (merges with any existing record
+    /// for the same task key — the crowd-sourcing behaviour).
+    pub fn record(&mut self, task_name: &str, m: usize, n: usize, history: &History) {
+        let key = task_key(task_name, m, n);
+        let entry = self.tasks.entry(key).or_insert_with(|| TaskRecord {
+            task_name: task_name.to_string(),
+            m,
+            n,
+            trials: Vec::new(),
+        });
+        for t in history.trials() {
+            entry.trials.push(TrialRecord {
+                config: t.config,
+                wall_clock: t.wall_clock,
+                arfe: t.arfe,
+                value: t.value,
+                failed: t.failed,
+                is_reference: t.is_reference,
+            });
+        }
+    }
+
+    /// All records for tasks with the given name (any shape), e.g. every
+    /// stored "GA" run.
+    pub fn tasks_named(&self, name: &str) -> Vec<&TaskRecord> {
+        self.tasks.values().filter(|t| t.task_name == name).collect()
+    }
+
+    pub fn all_tasks(&self) -> Vec<&TaskRecord> {
+        self.tasks.values().collect()
+    }
+
+    /// Convert one task's records into TLA source samples. The reference
+    /// value is the task's reference trial (or the median value as a
+    /// fallback) so rewards are normalized per-task.
+    pub fn source_samples(&self, task_name: &str, m: usize, n: usize) -> Vec<SourceSample> {
+        let Some(rec) = self.tasks.get(&task_key(task_name, m, n)) else {
+            return Vec::new();
+        };
+        let ref_value = rec
+            .trials
+            .iter()
+            .find(|t| t.is_reference)
+            .map(|t| t.value)
+            .unwrap_or_else(|| {
+                let vals: Vec<f64> = rec.trials.iter().map(|t| t.value).collect();
+                crate::gp::stats::median(&vals)
+            })
+            .max(1e-12);
+        rec.trials
+            .iter()
+            .map(|t| SourceSample { config: t.config, value: t.value, ref_value })
+            .collect()
+    }
+
+    // ---- persistence ----
+
+    pub fn to_json(&self) -> Json {
+        let tasks: Vec<Json> = self
+            .tasks
+            .values()
+            .map(|t| {
+                Json::obj(vec![
+                    ("task", Json::Str(t.task_name.clone())),
+                    ("m", Json::Num(t.m as f64)),
+                    ("n", Json::Num(t.n as f64)),
+                    (
+                        "trials",
+                        Json::Arr(t.trials.iter().map(trial_to_json).collect()),
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("format", Json::Str("ranntune-db-v1".into())),
+            ("tasks", Json::Arr(tasks)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<HistoryDb, String> {
+        let mut db = HistoryDb::new();
+        let tasks = v
+            .get("tasks")
+            .and_then(|t| t.as_arr())
+            .ok_or("missing 'tasks' array")?;
+        for t in tasks {
+            let name = t.get("task").and_then(|x| x.as_str()).ok_or("missing task name")?;
+            let m = t.get("m").and_then(|x| x.as_usize()).ok_or("missing m")?;
+            let n = t.get("n").and_then(|x| x.as_usize()).ok_or("missing n")?;
+            let trials = t
+                .get("trials")
+                .and_then(|x| x.as_arr())
+                .ok_or("missing trials")?
+                .iter()
+                .map(trial_from_json)
+                .collect::<Result<Vec<_>, _>>()?;
+            db.tasks.insert(
+                task_key(name, m, n),
+                TaskRecord { task_name: name.to_string(), m, n, trials },
+            );
+        }
+        Ok(db)
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())
+    }
+
+    pub fn load(path: &Path) -> Result<HistoryDb, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        HistoryDb::from_json(&Json::parse(&text)?)
+    }
+
+    /// Load if the file exists, otherwise an empty DB.
+    pub fn load_or_default(path: &Path) -> HistoryDb {
+        if path.exists() {
+            HistoryDb::load(path).unwrap_or_default()
+        } else {
+            HistoryDb::new()
+        }
+    }
+}
+
+fn trial_to_json(t: &TrialRecord) -> Json {
+    Json::obj(vec![
+        ("alg", Json::Str(t.config.algorithm.name().into())),
+        ("sketch", Json::Str(t.config.sketch.name().into())),
+        ("sf", Json::Num(t.config.sampling_factor)),
+        ("nnz", Json::Num(t.config.vec_nnz as f64)),
+        ("safety", Json::Num(t.config.safety_factor as f64)),
+        ("wall_clock", Json::Num(t.wall_clock)),
+        ("arfe", Json::Num(t.arfe)),
+        ("value", Json::Num(t.value)),
+        ("failed", Json::Bool(t.failed)),
+        ("ref", Json::Bool(t.is_reference)),
+    ])
+}
+
+fn trial_from_json(v: &Json) -> Result<TrialRecord, String> {
+    let alg = v
+        .get("alg")
+        .and_then(|x| x.as_str())
+        .and_then(SapAlgorithm::parse)
+        .ok_or("bad alg")?;
+    let sketch = v
+        .get("sketch")
+        .and_then(|x| x.as_str())
+        .and_then(SketchKind::parse)
+        .ok_or("bad sketch")?;
+    let f = |k: &str| v.get(k).and_then(|x| x.as_f64()).ok_or(format!("bad {k}"));
+    let config = SapConfig {
+        algorithm: alg,
+        sketch,
+        sampling_factor: f("sf")?,
+        vec_nnz: f("nnz")? as usize,
+        safety_factor: f("safety")? as u32,
+    };
+    Ok(TrialRecord {
+        config,
+        wall_clock: f("wall_clock")?,
+        arfe: f("arfe")?,
+        value: f("value")?,
+        failed: v.get("failed").and_then(|x| x.as_bool()).unwrap_or(false),
+        is_reference: v.get("ref").and_then(|x| x.as_bool()).unwrap_or(false),
+    })
+}
+
+/// Validate that every stored config is inside a space (DB hygiene check
+/// used when importing crowd data).
+pub fn validate_against_space(db: &HistoryDb, space: &ParamSpace) -> Vec<String> {
+    let mut problems = Vec::new();
+    for task in db.all_tasks() {
+        for (i, t) in task.trials.iter().enumerate() {
+            let c = &t.config;
+            if !(space.sf.0..=space.sf.1).contains(&c.sampling_factor)
+                || !(space.nnz.0..=space.nnz.1).contains(&c.vec_nnz)
+                || !(space.safety.0..=space.safety.1).contains(&c.safety_factor)
+            {
+                problems.push(format!(
+                    "{}@{}x{} trial {i}: {} out of bounds",
+                    task.task_name,
+                    task.m,
+                    task.n,
+                    c.label()
+                ));
+            }
+        }
+    }
+    problems
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objective::Trial;
+
+    fn fake_history(n: usize) -> History {
+        let mut h = History::new();
+        for i in 0..n {
+            h.push(Trial {
+                config: SapConfig {
+                    sampling_factor: 1.0 + i as f64 % 9.0,
+                    vec_nnz: 1 + i % 100,
+                    ..SapConfig::reference()
+                },
+                wall_clock: 0.1 * (i + 1) as f64,
+                arfe: 1e-8,
+                value: 0.1 * (i + 1) as f64,
+                failed: false,
+                is_reference: i == 0,
+            });
+        }
+        h
+    }
+
+    #[test]
+    fn record_and_query() {
+        let mut db = HistoryDb::new();
+        db.record("GA", 1000, 50, &fake_history(5));
+        db.record("GA", 5000, 50, &fake_history(3));
+        db.record("T1", 1000, 50, &fake_history(2));
+        assert_eq!(db.len(), 3);
+        assert_eq!(db.tasks_named("GA").len(), 2);
+        let src = db.source_samples("GA", 1000, 50);
+        assert_eq!(src.len(), 5);
+        // Reference trial defines ref_value = 0.1 ⇒ reward of trial 0 is 1.
+        assert!((src[0].reward() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_appends_to_same_task() {
+        let mut db = HistoryDb::new();
+        db.record("GA", 1000, 50, &fake_history(2));
+        db.record("GA", 1000, 50, &fake_history(3));
+        assert_eq!(db.len(), 1);
+        assert_eq!(db.source_samples("GA", 1000, 50).len(), 5);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let mut db = HistoryDb::new();
+        db.record("Localization-sim", 10_000, 386, &fake_history(4));
+        let j = db.to_json();
+        let back = HistoryDb::from_json(&j).unwrap();
+        let a = db.source_samples("Localization-sim", 10_000, 386);
+        let b = back.source_samples("Localization-sim", 10_000, 386);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.config, y.config);
+            assert!((x.value - y.value).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let dir = std::env::temp_dir().join("ranntune_db_test");
+        let path = dir.join("db.json");
+        let mut db = HistoryDb::new();
+        db.record("GA", 500, 20, &fake_history(3));
+        db.save(&path).unwrap();
+        let back = HistoryDb::load(&path).unwrap();
+        assert_eq!(back.source_samples("GA", 500, 20).len(), 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_task_gives_empty_samples() {
+        let db = HistoryDb::new();
+        assert!(db.source_samples("nope", 1, 1).is_empty());
+        assert!(HistoryDb::load(Path::new("/definitely/not/here.json")).is_err());
+    }
+
+    #[test]
+    fn validation_flags_out_of_bounds() {
+        let mut db = HistoryDb::new();
+        let mut h = History::new();
+        h.push(Trial {
+            config: SapConfig { sampling_factor: 99.0, ..SapConfig::reference() },
+            wall_clock: 1.0,
+            arfe: 1e-9,
+            value: 1.0,
+            failed: false,
+            is_reference: false,
+        });
+        db.record("GA", 100, 10, &h);
+        let problems = validate_against_space(&db, &ParamSpace::paper());
+        assert_eq!(problems.len(), 1);
+        assert!(problems[0].contains("out of bounds"));
+    }
+}

@@ -1,0 +1,123 @@
+//! ARD squared-exponential kernel (§4.3's k_q with per-dimension
+//! lengthscales I_j^q).
+
+use crate::linalg::Mat;
+
+/// Anisotropic Gaussian kernel
+///   k(x, x') = σ_f² · exp(−Σⱼ (xⱼ − x'ⱼ)² / lⱼ)
+/// over points in [0,1]^β, matching the paper's covariance definition
+/// (lengthscales divide the *squared* distance, one per dimension).
+#[derive(Clone, Debug)]
+pub struct ArdKernel {
+    /// Signal variance σ_f².
+    pub sigma_f2: f64,
+    /// Per-dimension lengthscales lⱼ (the paper's I_j^q).
+    pub lengthscales: Vec<f64>,
+}
+
+impl ArdKernel {
+    pub fn new(sigma_f2: f64, lengthscales: Vec<f64>) -> ArdKernel {
+        assert!(sigma_f2 > 0.0);
+        assert!(lengthscales.iter().all(|&l| l > 0.0));
+        ArdKernel { sigma_f2, lengthscales }
+    }
+
+    /// Isotropic convenience constructor.
+    pub fn isotropic(sigma_f2: f64, l: f64, dims: usize) -> ArdKernel {
+        ArdKernel::new(sigma_f2, vec![l; dims])
+    }
+
+    pub fn dims(&self) -> usize {
+        self.lengthscales.len()
+    }
+
+    /// k(x, x').
+    #[inline]
+    pub fn eval(&self, x: &[f64], y: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), self.dims());
+        debug_assert_eq!(y.len(), self.dims());
+        let mut s = 0.0;
+        for ((&a, &b), &l) in x.iter().zip(y.iter()).zip(self.lengthscales.iter()) {
+            let d = a - b;
+            s += d * d / l;
+        }
+        self.sigma_f2 * (-s).exp()
+    }
+
+    /// Gram matrix K(X, X) with optional diagonal noise σ_n².
+    pub fn gram(&self, xs: &[Vec<f64>], noise: f64) -> Mat {
+        let n = xs.len();
+        let mut k = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let v = self.eval(&xs[i], &xs[j]);
+                k[(i, j)] = v;
+                k[(j, i)] = v;
+            }
+            k[(i, i)] += noise;
+        }
+        k
+    }
+
+    /// Cross-covariance vector k(X, x*).
+    pub fn cross(&self, xs: &[Vec<f64>], x_star: &[f64]) -> Vec<f64> {
+        xs.iter().map(|x| self.eval(x, x_star)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_basics() {
+        let k = ArdKernel::isotropic(2.0, 0.5, 3);
+        let x = [0.1, 0.2, 0.3];
+        // k(x,x) = σ_f²
+        assert!((k.eval(&x, &x) - 2.0).abs() < 1e-15);
+        // symmetry
+        let y = [0.9, 0.0, 0.4];
+        assert_eq!(k.eval(&x, &y), k.eval(&y, &x));
+        // decays with distance
+        let z = [0.95, 0.05, 0.5];
+        assert!(k.eval(&x, &y) > k.eval(&x, &z) || k.eval(&x, &y) > 0.0);
+        assert!(k.eval(&x, &y) < 2.0);
+    }
+
+    #[test]
+    fn ard_lengthscales_weight_dimensions() {
+        // Long lengthscale in dim 0 → differences there matter less.
+        let k = ArdKernel::new(1.0, vec![100.0, 0.01]);
+        let a = [0.0, 0.0];
+        let move_dim0 = [0.5, 0.0];
+        let move_dim1 = [0.0, 0.5];
+        assert!(k.eval(&a, &move_dim0) > 0.99);
+        assert!(k.eval(&a, &move_dim1) < 1e-6);
+    }
+
+    #[test]
+    fn gram_is_psd() {
+        // Cholesky with jitter must succeed on any Gram matrix.
+        let k = ArdKernel::isotropic(1.0, 0.3, 2);
+        let xs: Vec<Vec<f64>> = (0..15)
+            .map(|i| vec![(i % 5) as f64 / 5.0, (i / 5) as f64 / 3.0])
+            .collect();
+        let g = k.gram(&xs, 1e-8);
+        assert!(crate::linalg::cholesky_jittered(&g).is_some());
+        // symmetric
+        for i in 0..15 {
+            for j in 0..15 {
+                assert_eq!(g[(i, j)], g[(j, i)]);
+            }
+        }
+    }
+
+    #[test]
+    fn cross_matches_eval() {
+        let k = ArdKernel::isotropic(1.5, 0.7, 2);
+        let xs = vec![vec![0.0, 0.0], vec![0.5, 0.5]];
+        let c = k.cross(&xs, &[0.25, 0.25]);
+        assert_eq!(c.len(), 2);
+        assert!((c[0] - k.eval(&xs[0], &[0.25, 0.25])).abs() < 1e-15);
+    }
+}

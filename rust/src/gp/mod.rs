@@ -1,0 +1,20 @@
+//! Gaussian-process regression — the surrogate model at the heart of the
+//! paper's autotuning pipeline (§2, §4.2).
+//!
+//! GPTune's default modeling choices are reproduced: inputs normalized to
+//! [0,1]^β, an anisotropic (ARD) Gaussian kernel
+//!   k(x, x') = σ_f² · exp(−Σⱼ (xⱼ−x'ⱼ)²/lⱼ)  + σ_n²·δ,
+//! hyperparameters (σ_f, l₁..l_β, σ_n) fit by maximizing the log marginal
+//! likelihood with a multi-start Nelder–Mead search in log-space, and
+//! posterior mean/variance served to an Expected-Improvement acquisition.
+
+mod acquisition;
+mod kernel;
+mod model;
+mod opt;
+pub mod stats;
+
+pub use acquisition::*;
+pub use kernel::*;
+pub use model::*;
+pub use opt::*;

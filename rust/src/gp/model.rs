@@ -1,0 +1,212 @@
+//! GP regression model: fit (LML maximization) and posterior prediction.
+
+use super::{nelder_mead, ArdKernel};
+use crate::linalg::{chol_logdet, chol_solve, cholesky_jittered, dot, solve_lower, Mat};
+use crate::rng::Rng;
+
+/// A fitted Gaussian-process regression model over [0,1]^β inputs.
+///
+/// The target is internally centered/scaled (ŷ = (y − μ)/s), so callers
+/// can feed raw objective values (e.g. log wall-clock seconds).
+pub struct GpModel {
+    kernel: ArdKernel,
+    noise: f64,
+    xs: Vec<Vec<f64>>,
+    /// Cholesky factor of K + σ_n²I.
+    chol: Mat,
+    /// α = (K + σ_n²I)⁻¹·ŷ.
+    alpha: Vec<f64>,
+    y_mean: f64,
+    y_scale: f64,
+}
+
+/// Hyperparameter bounds in log-space (log σ_f², log lⱼ, log σ_n²).
+const LOG_BOUNDS: (f64, f64) = (-9.0, 6.0);
+
+impl GpModel {
+    /// Fit a GP to `(xs, ys)` by maximizing the log marginal likelihood
+    /// with `n_starts` Nelder–Mead restarts (multi-start is essential: LML
+    /// surfaces are multi-modal in lengthscales).
+    pub fn fit(xs: &[Vec<f64>], ys: &[f64], n_starts: usize, rng: &mut Rng) -> GpModel {
+        assert_eq!(xs.len(), ys.len());
+        assert!(!xs.is_empty(), "cannot fit GP to zero samples");
+        let dims = xs[0].len();
+
+        let y_mean = super::stats::mean(ys);
+        let y_scale = super::stats::stddev(ys).max(1e-12);
+        let yhat: Vec<f64> = ys.iter().map(|y| (y - y_mean) / y_scale).collect();
+
+        // θ = [log σ_f², log l₁.. log l_β, log σ_n²]
+        let mut lml = |theta: &[f64]| -> f64 {
+            if theta.iter().any(|t| !(LOG_BOUNDS.0..=LOG_BOUNDS.1).contains(t)) {
+                return f64::INFINITY;
+            }
+            let kernel = ArdKernel::new(
+                theta[0].exp(),
+                theta[1..=dims].iter().map(|t| t.exp()).collect(),
+            );
+            let noise = theta[dims + 1].exp();
+            neg_log_marginal_likelihood(&kernel, noise, xs, &yhat)
+        };
+
+        let mut best_theta: Option<Vec<f64>> = None;
+        let mut best_val = f64::INFINITY;
+        for s in 0..n_starts.max(1) {
+            // Start 0: sensible defaults; others: random in log-bounds.
+            let x0: Vec<f64> = if s == 0 {
+                let mut v = vec![0.0; dims + 2]; // σ_f²=1, l=1, σ_n²=e⁻⁴
+                v[dims + 1] = -4.0;
+                v
+            } else {
+                (0..dims + 2).map(|_| rng.uniform_in(-4.0, 2.0)).collect()
+            };
+            let (theta, val) = nelder_mead(&mut lml, &x0, 0.7, 300);
+            if val < best_val {
+                best_val = val;
+                best_theta = Some(theta);
+            }
+        }
+        let theta = best_theta.expect("at least one NM start");
+        let kernel = ArdKernel::new(
+            theta[0].exp(),
+            theta[1..=dims].iter().map(|t| t.exp()).collect(),
+        );
+        let noise = theta[dims + 1].exp();
+
+        let gram = kernel.gram(xs, noise);
+        let (chol, _) = cholesky_jittered(&gram).expect("gram not PSD even with jitter");
+        let alpha = chol_solve(&chol, &yhat);
+        GpModel { kernel, noise, xs: xs.to_vec(), chol, alpha, y_mean, y_scale }
+    }
+
+    /// Posterior mean and variance at a query point (both in the original
+    /// y units).
+    pub fn predict(&self, x: &[f64]) -> (f64, f64) {
+        let kx = self.kernel.cross(&self.xs, x);
+        let mean_hat = dot(&kx, &self.alpha);
+        // var = k(x,x) + σ_n² − kxᵀ(K+σ_n²I)⁻¹kx, via v = L⁻¹kx.
+        let v = solve_lower(&self.chol, &kx);
+        let var_hat = (self.kernel.eval(x, x) + self.noise - dot(&v, &v)).max(1e-12);
+        (
+            self.y_mean + self.y_scale * mean_hat,
+            self.y_scale * self.y_scale * var_hat,
+        )
+    }
+
+    /// Fitted kernel (for tests / sensitivity reuse).
+    pub fn kernel(&self) -> &ArdKernel {
+        &self.kernel
+    }
+
+    pub fn noise(&self) -> f64 {
+        self.noise
+    }
+
+    pub fn training_size(&self) -> usize {
+        self.xs.len()
+    }
+}
+
+/// −log p(y | X, θ) = ½ŷᵀα + ½log|K+σ_n²I| + (n/2)·log 2π.
+fn neg_log_marginal_likelihood(
+    kernel: &ArdKernel,
+    noise: f64,
+    xs: &[Vec<f64>],
+    yhat: &[f64],
+) -> f64 {
+    let gram = kernel.gram(xs, noise);
+    let Some((chol, _)) = cholesky_jittered(&gram) else {
+        return f64::INFINITY;
+    };
+    let alpha = chol_solve(&chol, yhat);
+    let n = xs.len() as f64;
+    0.5 * dot(yhat, &alpha)
+        + 0.5 * chol_logdet(&chol)
+        + 0.5 * n * (2.0 * std::f64::consts::PI).ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid_1d(n: usize) -> Vec<Vec<f64>> {
+        (0..n).map(|i| vec![i as f64 / (n - 1) as f64]).collect()
+    }
+
+    #[test]
+    fn interpolates_smooth_function() {
+        let xs = grid_1d(12);
+        let ys: Vec<f64> = xs.iter().map(|x| (3.0 * x[0]).sin()).collect();
+        let mut rng = Rng::new(1);
+        let gp = GpModel::fit(&xs, &ys, 3, &mut rng);
+        // Predict off-grid.
+        for &t in &[0.13, 0.41, 0.77] {
+            let (mu, var) = gp.predict(&[t]);
+            assert!((mu - (3.0 * t).sin()).abs() < 0.05, "t={t}: mu={mu}");
+            assert!(var >= 0.0);
+        }
+    }
+
+    #[test]
+    fn variance_grows_away_from_data() {
+        let xs: Vec<Vec<f64>> = vec![vec![0.4], vec![0.45], vec![0.5]];
+        let ys = vec![1.0, 1.1, 0.9];
+        let mut rng = Rng::new(2);
+        let gp = GpModel::fit(&xs, &ys, 3, &mut rng);
+        let (_, var_near) = gp.predict(&[0.45]);
+        let (_, var_far) = gp.predict(&[0.0]);
+        assert!(var_far > var_near, "far {var_far} !> near {var_near}");
+    }
+
+    #[test]
+    fn mean_reverts_to_prior_far_away() {
+        // Standardized GP: far from data the mean reverts to the sample mean.
+        let xs: Vec<Vec<f64>> = vec![vec![0.5, 0.5]];
+        let ys = vec![7.0];
+        let mut rng = Rng::new(3);
+        let gp = GpModel::fit(&xs, &ys, 2, &mut rng);
+        // One observation: y_scale degenerate, prediction = mean at data.
+        let (mu, _) = gp.predict(&[0.5, 0.5]);
+        assert!((mu - 7.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn handles_noisy_observations() {
+        let mut rng = Rng::new(4);
+        let xs = grid_1d(30);
+        let ys: Vec<f64> =
+            xs.iter().map(|x| 2.0 * x[0] + 0.05 * rng.normal()).collect();
+        let gp = GpModel::fit(&xs, &ys, 3, &mut rng);
+        let (mu, _) = gp.predict(&[0.5]);
+        assert!((mu - 1.0).abs() < 0.1, "mu {mu}");
+    }
+
+    #[test]
+    fn duplicate_inputs_do_not_crash() {
+        // Identical x with different y (randomized objective!) must fit via
+        // the noise term.
+        let xs = vec![vec![0.3], vec![0.3], vec![0.3], vec![0.7]];
+        let ys = vec![1.0, 1.2, 0.8, 2.0];
+        let mut rng = Rng::new(5);
+        let gp = GpModel::fit(&xs, &ys, 3, &mut rng);
+        let (mu, _) = gp.predict(&[0.3]);
+        assert!((mu - 1.0).abs() < 0.3, "mu {mu}");
+        assert!(gp.noise() > 0.0);
+    }
+
+    #[test]
+    fn ard_detects_irrelevant_dimension() {
+        // y depends only on dim 0; fitted lengthscale for dim 1 should be
+        // much longer (dimension effectively ignored).
+        let mut rng = Rng::new(6);
+        let xs: Vec<Vec<f64>> =
+            (0..40).map(|_| vec![rng.uniform(), rng.uniform()]).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| (6.0 * x[0]).sin()).collect();
+        let gp = GpModel::fit(&xs, &ys, 5, &mut rng);
+        let ls = &gp.kernel().lengthscales;
+        assert!(
+            ls[1] > 3.0 * ls[0],
+            "lengthscales {ls:?} should show dim1 ≫ dim0"
+        );
+    }
+}

@@ -1,0 +1,165 @@
+//! Nelder–Mead simplex minimizer.
+//!
+//! Used to maximize the GP / LCM log marginal likelihood over log-space
+//! hyperparameters. Gradient-free is the right tool here: the LML surface
+//! has cheap evaluations (our sample counts are ≤ a few hundred) and we
+//! avoid hand-deriving kernel gradients for every model variant.
+
+/// Minimize `f` from `x0` with the Nelder–Mead simplex method.
+/// Returns (x_best, f_best).
+pub fn nelder_mead(
+    f: &mut dyn FnMut(&[f64]) -> f64,
+    x0: &[f64],
+    initial_step: f64,
+    max_iters: usize,
+) -> (Vec<f64>, f64) {
+    let n = x0.len();
+    assert!(n > 0);
+    let (alpha, gamma, rho, sigma) = (1.0, 2.0, 0.5, 0.5);
+
+    // Initial simplex: x0 plus a step along each axis.
+    let mut simplex: Vec<Vec<f64>> = Vec::with_capacity(n + 1);
+    simplex.push(x0.to_vec());
+    for i in 0..n {
+        let mut xi = x0.to_vec();
+        xi[i] += initial_step;
+        simplex.push(xi);
+    }
+    let mut values: Vec<f64> = simplex.iter().map(|x| clamp_eval(f, x)).collect();
+
+    for _ in 0..max_iters {
+        // Order ascending by value.
+        let mut order: Vec<usize> = (0..=n).collect();
+        order.sort_by(|&a, &b| values[a].partial_cmp(&values[b]).unwrap());
+        let simplex2: Vec<Vec<f64>> = order.iter().map(|&i| simplex[i].clone()).collect();
+        let values2: Vec<f64> = order.iter().map(|&i| values[i]).collect();
+        simplex = simplex2;
+        values = values2;
+
+        // Convergence: value spread.
+        if (values[n] - values[0]).abs() < 1e-10 * (1.0 + values[0].abs()) {
+            break;
+        }
+
+        // Centroid of best n points.
+        let mut centroid = vec![0.0; n];
+        for s in simplex.iter().take(n) {
+            for (c, v) in centroid.iter_mut().zip(s.iter()) {
+                *c += v / n as f64;
+            }
+        }
+
+        // Reflection.
+        let xr: Vec<f64> = centroid
+            .iter()
+            .zip(simplex[n].iter())
+            .map(|(c, w)| c + alpha * (c - w))
+            .collect();
+        let fr = clamp_eval(f, &xr);
+
+        if fr < values[0] {
+            // Expansion.
+            let xe: Vec<f64> = centroid
+                .iter()
+                .zip(simplex[n].iter())
+                .map(|(c, w)| c + gamma * (c - w))
+                .collect();
+            let fe = clamp_eval(f, &xe);
+            if fe < fr {
+                simplex[n] = xe;
+                values[n] = fe;
+            } else {
+                simplex[n] = xr;
+                values[n] = fr;
+            }
+        } else if fr < values[n - 1] {
+            simplex[n] = xr;
+            values[n] = fr;
+        } else {
+            // Contraction.
+            let xc: Vec<f64> = centroid
+                .iter()
+                .zip(simplex[n].iter())
+                .map(|(c, w)| c + rho * (w - c))
+                .collect();
+            let fc = clamp_eval(f, &xc);
+            if fc < values[n] {
+                simplex[n] = xc;
+                values[n] = fc;
+            } else {
+                // Shrink toward best.
+                let best = simplex[0].clone();
+                for i in 1..=n {
+                    for j in 0..n {
+                        simplex[i][j] = best[j] + sigma * (simplex[i][j] - best[j]);
+                    }
+                    values[i] = clamp_eval(f, &simplex[i]);
+                }
+            }
+        }
+    }
+
+    let mut best = 0;
+    for i in 1..=n {
+        if values[i] < values[best] {
+            best = i;
+        }
+    }
+    (simplex[best].clone(), values[best])
+}
+
+/// Evaluate, mapping non-finite results to +inf so NaN objectives (e.g.
+/// Cholesky failures deep in an LML) never poison the simplex ordering.
+fn clamp_eval(f: &mut dyn FnMut(&[f64]) -> f64, x: &[f64]) -> f64 {
+    let v = f(x);
+    if v.is_finite() {
+        v
+    } else {
+        f64::INFINITY
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimizes_quadratic() {
+        let mut f = |x: &[f64]| (x[0] - 2.0).powi(2) + 3.0 * (x[1] + 1.0).powi(2);
+        let (x, v) = nelder_mead(&mut f, &[0.0, 0.0], 0.5, 500);
+        assert!((x[0] - 2.0).abs() < 1e-4, "{x:?}");
+        assert!((x[1] + 1.0).abs() < 1e-4);
+        assert!(v < 1e-7);
+    }
+
+    #[test]
+    fn minimizes_rosenbrock_2d() {
+        let mut f =
+            |x: &[f64]| (1.0 - x[0]).powi(2) + 100.0 * (x[1] - x[0] * x[0]).powi(2);
+        let (x, _) = nelder_mead(&mut f, &[-1.2, 1.0], 0.5, 5000);
+        assert!((x[0] - 1.0).abs() < 1e-3, "{x:?}");
+        assert!((x[1] - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn survives_nan_regions() {
+        // f undefined (NaN) for x<0; minimum at x=1.
+        let mut f = |x: &[f64]| {
+            if x[0] < 0.0 {
+                f64::NAN
+            } else {
+                (x[0] - 1.0).powi(2)
+            }
+        };
+        let (x, v) = nelder_mead(&mut f, &[0.5], 0.3, 200);
+        assert!((x[0] - 1.0).abs() < 1e-4);
+        assert!(v.is_finite());
+    }
+
+    #[test]
+    fn one_dimensional() {
+        let mut f = |x: &[f64]| (x[0].sin() - 0.7).powi(2);
+        let (x, _) = nelder_mead(&mut f, &[0.0], 0.2, 300);
+        assert!((x[0].sin() - 0.7).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,295 @@
+//! Linear Coregionalization Model (LCM) — GP-based multitask learning for
+//! transfer autotuning (§4.3, following GPTune's formulation in [48]).
+//!
+//! For δ tasks the model assumes each task's performance function is a
+//! linear mix of Q independent latent GPs:
+//!   f_i(x) = Σ_q a_{i,q} · u_q(x),  u_q ~ GP(0, k_q),
+//! giving the cross-task covariance
+//!   Cov(f_i(x), f_j(x')) = Σ_q a_{i,q}·a_{j,q}·k_q(x, x') + δ_{ij}·σ_i².
+//! Each latent kernel k_q is a unit-variance ARD Gaussian with its own
+//! per-dimension lengthscales I_j^q (the σ_q² scale is absorbed into the
+//! mixing coefficients a_{·,q}).
+//!
+//! Hyperparameters (mixing matrix A ∈ R^{δ×Q}, lengthscales, per-task
+//! noise) are fit by maximizing the joint log marginal likelihood over all
+//! samples of all tasks, with the same multi-start Nelder–Mead used by the
+//! single-task GP.
+
+use crate::gp::{nelder_mead, stats, ArdKernel};
+use crate::linalg::{chol_logdet, chol_solve, cholesky_jittered, dot, solve_lower, Mat};
+use crate::rng::Rng;
+
+/// A multitask training sample.
+#[derive(Clone, Debug)]
+pub struct TaskSample {
+    /// Task index in 0..n_tasks (convention: the *target* task is the
+    /// highest index).
+    pub task: usize,
+    /// Input point in [0,1]^β.
+    pub x: Vec<f64>,
+    /// Observed objective.
+    pub y: f64,
+}
+
+/// A fitted LCM.
+pub struct LcmModel {
+    n_tasks: usize,
+    q: usize,
+    /// Mixing coefficients a[i][q].
+    a: Vec<Vec<f64>>,
+    kernels: Vec<ArdKernel>,
+    /// Per-task noise variances.
+    noise: Vec<f64>,
+    samples: Vec<TaskSample>,
+    chol: Mat,
+    alpha: Vec<f64>,
+    y_mean: f64,
+    y_scale: f64,
+}
+
+impl LcmModel {
+    /// Fit an LCM with `q_latent` latent GPs to multitask samples.
+    pub fn fit(
+        samples: &[TaskSample],
+        n_tasks: usize,
+        q_latent: usize,
+        n_starts: usize,
+        rng: &mut Rng,
+    ) -> LcmModel {
+        assert!(!samples.is_empty());
+        assert!(samples.iter().all(|s| s.task < n_tasks));
+        let dims = samples[0].x.len();
+        let q = q_latent.max(1);
+
+        let ys: Vec<f64> = samples.iter().map(|s| s.y).collect();
+        let y_mean = stats::mean(&ys);
+        let y_scale = stats::stddev(&ys).max(1e-12);
+        let yhat: Vec<f64> = ys.iter().map(|y| (y - y_mean) / y_scale).collect();
+
+        // θ layout: [a(δ·Q) | log-lengthscales(Q·β) | log-noise(δ)]
+        let n_params = n_tasks * q + q * dims + n_tasks;
+        let unpack = |theta: &[f64]| -> (Vec<Vec<f64>>, Vec<ArdKernel>, Vec<f64>) {
+            let mut a = vec![vec![0.0; q]; n_tasks];
+            for i in 0..n_tasks {
+                for j in 0..q {
+                    a[i][j] = theta[i * q + j];
+                }
+            }
+            let mut kernels = Vec::with_capacity(q);
+            for qq in 0..q {
+                let base = n_tasks * q + qq * dims;
+                let ls: Vec<f64> =
+                    (0..dims).map(|d| theta[base + d].clamp(-9.0, 6.0).exp()).collect();
+                kernels.push(ArdKernel::new(1.0, ls));
+            }
+            let noise: Vec<f64> = (0..n_tasks)
+                .map(|i| theta[n_tasks * q + q * dims + i].clamp(-12.0, 2.0).exp())
+                .collect();
+            (a, kernels, noise)
+        };
+
+        let mut nll = |theta: &[f64]| -> f64 {
+            let (a, kernels, noise) = unpack(theta);
+            let gram = lcm_gram(samples, &a, &kernels, &noise);
+            let Some((chol, _)) = cholesky_jittered(&gram) else {
+                return f64::INFINITY;
+            };
+            let alpha = chol_solve(&chol, &yhat);
+            0.5 * dot(&yhat, &alpha)
+                + 0.5 * chol_logdet(&chol)
+                + 0.5 * samples.len() as f64 * (2.0 * std::f64::consts::PI).ln()
+        };
+
+        let mut best: Option<(Vec<f64>, f64)> = None;
+        for s in 0..n_starts.max(1) {
+            let x0: Vec<f64> = if s == 0 {
+                // identity-ish mixing, unit lengthscales, small noise
+                let mut v = vec![0.0; n_params];
+                for i in 0..n_tasks {
+                    for j in 0..q {
+                        v[i * q + j] = if j == i % q { 1.0 } else { 0.3 };
+                    }
+                }
+                for i in 0..n_tasks {
+                    v[n_tasks * q + q * dims + i] = -3.0;
+                }
+                v
+            } else {
+                (0..n_params).map(|_| rng.uniform_in(-1.5, 1.5)).collect()
+            };
+            let (theta, val) = nelder_mead(&mut nll, &x0, 0.5, 250);
+            if best.as_ref().map_or(true, |(_, v)| val < *v) {
+                best = Some((theta, val));
+            }
+        }
+        let (theta, _) = best.unwrap();
+        let (a, kernels, noise) = unpack(&theta);
+        let gram = lcm_gram(samples, &a, &kernels, &noise);
+        let (chol, _) = cholesky_jittered(&gram).expect("LCM gram not PSD with jitter");
+        let alpha = chol_solve(&chol, &yhat);
+
+        LcmModel {
+            n_tasks,
+            q,
+            a,
+            kernels,
+            noise,
+            samples: samples.to_vec(),
+            chol,
+            alpha,
+            y_mean,
+            y_scale,
+        }
+    }
+
+    /// Posterior mean/variance of task `task`'s function at `x`.
+    pub fn predict(&self, task: usize, x: &[f64]) -> (f64, f64) {
+        assert!(task < self.n_tasks);
+        let kx: Vec<f64> = self
+            .samples
+            .iter()
+            .map(|s| self.cross_cov(task, s.task, x, &s.x))
+            .collect();
+        let mean_hat = dot(&kx, &self.alpha);
+        let v = solve_lower(&self.chol, &kx);
+        let prior = self.cross_cov(task, task, x, x) + self.noise[task];
+        let var_hat = (prior - dot(&v, &v)).max(1e-12);
+        (
+            self.y_mean + self.y_scale * mean_hat,
+            self.y_scale * self.y_scale * var_hat,
+        )
+    }
+
+    fn cross_cov(&self, ti: usize, tj: usize, x: &[f64], y: &[f64]) -> f64 {
+        (0..self.q)
+            .map(|q| self.a[ti][q] * self.a[tj][q] * self.kernels[q].eval(x, y))
+            .sum()
+    }
+
+    /// Inter-task correlation implied by the mixing matrix (for tests and
+    /// diagnostics): corr(i, j) = Σq a_iq a_jq / √(Σ a_iq² · Σ a_jq²).
+    pub fn task_correlation(&self, i: usize, j: usize) -> f64 {
+        let num: f64 = (0..self.q).map(|q| self.a[i][q] * self.a[j][q]).sum();
+        let di: f64 = (0..self.q).map(|q| self.a[i][q] * self.a[i][q]).sum();
+        let dj: f64 = (0..self.q).map(|q| self.a[j][q] * self.a[j][q]).sum();
+        if di <= 0.0 || dj <= 0.0 {
+            return 0.0;
+        }
+        num / (di * dj).sqrt()
+    }
+}
+
+/// Joint Gram over all samples with per-task noise on the diagonal.
+fn lcm_gram(
+    samples: &[TaskSample],
+    a: &[Vec<f64>],
+    kernels: &[ArdKernel],
+    noise: &[f64],
+) -> Mat {
+    let n = samples.len();
+    let q = kernels.len();
+    let mut g = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut v = 0.0;
+            for qq in 0..q {
+                v += a[samples[i].task][qq]
+                    * a[samples[j].task][qq]
+                    * kernels[qq].eval(&samples[i].x, &samples[j].x);
+            }
+            g[(i, j)] = v;
+            g[(j, i)] = v;
+        }
+        g[(i, i)] += noise[samples[i].task];
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two strongly correlated tasks: source densely sampled, target
+    /// sparsely — the LCM should predict the target well where only the
+    /// source has data. This is the §4.3 transfer mechanism in miniature.
+    #[test]
+    fn transfers_from_correlated_source() {
+        let f_source = |x: f64| (4.0 * x).sin();
+        let f_target = |x: f64| 1.1 * (4.0 * x).sin() + 0.2;
+        let mut samples = Vec::new();
+        for i in 0..20 {
+            let x = i as f64 / 19.0;
+            samples.push(TaskSample { task: 0, x: vec![x], y: f_source(x) });
+        }
+        // Target observed only on the left half.
+        for i in 0..5 {
+            let x = i as f64 / 10.0;
+            samples.push(TaskSample { task: 1, x: vec![x], y: f_target(x) });
+        }
+        let mut rng = Rng::new(1);
+        let lcm = LcmModel::fit(&samples, 2, 2, 3, &mut rng);
+        // Predict target on the unobserved right half.
+        let mut max_err = 0.0f64;
+        for &x in &[0.6, 0.75, 0.9] {
+            let (mu, _) = lcm.predict(1, &[x]);
+            max_err = max_err.max((mu - f_target(x)).abs());
+        }
+        assert!(max_err < 0.35, "transfer error {max_err}");
+        // And the learned correlation should be high.
+        assert!(
+            lcm.task_correlation(0, 1).abs() > 0.5,
+            "correlation {}",
+            lcm.task_correlation(0, 1)
+        );
+    }
+
+    #[test]
+    fn independent_tasks_do_not_contaminate() {
+        // Source is anti-correlated noise; target has its own clear trend
+        // observed densely — target predictions should follow the target
+        // data, not the source.
+        let mut rng = Rng::new(2);
+        let mut samples = Vec::new();
+        for i in 0..15 {
+            let x = i as f64 / 14.0;
+            samples.push(TaskSample { task: 0, x: vec![x], y: rng.normal() });
+            samples.push(TaskSample { task: 1, x: vec![x], y: 2.0 * x });
+        }
+        let lcm = LcmModel::fit(&samples, 2, 2, 3, &mut rng);
+        let (mu, _) = lcm.predict(1, &[0.5]);
+        assert!((mu - 1.0).abs() < 0.4, "target prediction {mu}");
+    }
+
+    #[test]
+    fn variance_positive_and_grows_off_data() {
+        let samples: Vec<TaskSample> = (0..8)
+            .map(|i| TaskSample {
+                task: 0,
+                x: vec![0.3 + 0.05 * i as f64, 0.5],
+                y: i as f64,
+            })
+            .collect();
+        let mut rng = Rng::new(3);
+        let lcm = LcmModel::fit(&samples, 1, 1, 2, &mut rng);
+        let (_, v_near) = lcm.predict(0, &[0.45, 0.5]);
+        let (_, v_far) = lcm.predict(0, &[0.0, 0.0]);
+        assert!(v_near > 0.0 && v_far > 0.0);
+        assert!(v_far > v_near);
+    }
+
+    #[test]
+    fn single_task_lcm_behaves_like_gp() {
+        // Sanity: with one task the LCM is just a GP with a product scale.
+        let xs: Vec<f64> = (0..12).map(|i| i as f64 / 11.0).collect();
+        let samples: Vec<TaskSample> = xs
+            .iter()
+            .map(|&x| TaskSample { task: 0, x: vec![x], y: (3.0 * x).cos() })
+            .collect();
+        let mut rng = Rng::new(4);
+        let lcm = LcmModel::fit(&samples, 1, 1, 3, &mut rng);
+        for &t in &[0.2, 0.5, 0.8] {
+            let (mu, _) = lcm.predict(0, &[t]);
+            assert!((mu - (3.0 * t).cos()).abs() < 0.15, "t={t} mu={mu}");
+        }
+    }
+}

@@ -1,0 +1,40 @@
+//! # ranntune — surrogate-based autotuning for randomized sketching algorithms
+//!
+//! A production-shaped reproduction of *"Surrogate-based Autotuning for
+//! Randomized Sketching Algorithms in Regression Problems"* (Cho et al.,
+//! 2023): sketch-and-precondition (SAP) randomized least-squares solvers
+//! plus the full autotuning pipeline the paper builds around them —
+//! Gaussian-process Bayesian optimization, TPE, LHSMDU random search, grid
+//! search, a UCB-bandit + LCM transfer-learning tuner, ARFE-based output
+//! validation with penalty handling, a shareable history database, and
+//! Sobol sensitivity analysis.
+//!
+//! ## Layering
+//!
+//! * This crate is **Layer 3**: the Rust coordinator that owns the tuning
+//!   loop, the natively-implemented SAP solvers it measures, and every
+//!   substrate (dense/sparse linear algebra, PRNG, data generation, GP
+//!   machinery).
+//! * **Layer 2/1** live in `python/compile/`: a JAX model of the SAP solve
+//!   whose sketch-apply hot-spot is a Pallas kernel, AOT-lowered to HLO
+//!   text artifacts at chosen configurations.
+//! * [`runtime`] loads those artifacts through the PJRT C API (`xla`
+//!   crate) so a *tuned* configuration can be deployed as a self-contained
+//!   compiled executable — Python never runs on the solve path.
+
+pub mod bench_harness;
+pub mod cli;
+pub mod data;
+pub mod db;
+pub mod gp;
+pub mod json;
+pub mod lcm;
+pub mod linalg;
+pub mod objective;
+pub mod proptest_lite;
+pub mod rng;
+pub mod runtime;
+pub mod sap;
+pub mod sensitivity;
+pub mod sketch;
+pub mod tuners;

@@ -1,0 +1,144 @@
+//! Cholesky factorization with adaptive jitter.
+//!
+//! The GP and LCM surrogate models (§4.2–4.3) solve SPD systems
+//! (K + σ²I)⁻¹y at every log-marginal-likelihood evaluation. Gram matrices
+//! from clustered tuning samples are routinely near-singular, so we follow
+//! the standard GP practice of retrying with geometrically growing jitter.
+
+use super::Mat;
+
+/// Lower-triangular Cholesky factor L with L·Lᵀ = A (A symmetric positive
+/// definite). Returns `None` if A is not numerically SPD.
+pub fn cholesky(a: &Mat) -> Option<Mat> {
+    let n = a.rows();
+    assert_eq!(a.cols(), n, "cholesky needs square input");
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[(i, j)];
+            for k in 0..j {
+                s -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if s <= 0.0 || !s.is_finite() {
+                    return None;
+                }
+                l[(i, j)] = s.sqrt();
+            } else {
+                l[(i, j)] = s / l[(j, j)];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Cholesky with jitter escalation: tries A, then A + jitter·mean(diag)·I
+/// with jitter ∈ {1e-10, 1e-8, ..., 1e-2}. Returns the factor and the
+/// jitter actually applied.
+pub fn cholesky_jittered(a: &Mat) -> Option<(Mat, f64)> {
+    if let Some(l) = cholesky(a) {
+        return Some((l, 0.0));
+    }
+    let n = a.rows();
+    let mean_diag = (0..n).map(|i| a[(i, i)]).sum::<f64>() / n as f64;
+    let scale = if mean_diag > 0.0 { mean_diag } else { 1.0 };
+    let mut jitter = 1e-10;
+    while jitter <= 1e-2 {
+        let mut aj = a.clone();
+        for i in 0..n {
+            aj[(i, i)] += jitter * scale;
+        }
+        if let Some(l) = cholesky(&aj) {
+            return Some((l, jitter * scale));
+        }
+        jitter *= 100.0;
+    }
+    None
+}
+
+/// Solve A x = b given the Cholesky factor L (A = L·Lᵀ): two triangular
+/// solves.
+pub fn chol_solve(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let y = super::solve_lower(l, b);
+    super::solve_lower_t(l, &y)
+}
+
+/// log det(A) = 2·Σ log L_ii from the Cholesky factor.
+pub fn chol_logdet(l: &Mat) -> f64 {
+    (0..l.rows()).map(|i| l[(i, i)].ln()).sum::<f64>() * 2.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{gemm, gemv, norm2, Mat};
+    use crate::rng::Rng;
+
+    fn random_spd(n: usize, r: &mut Rng) -> Mat {
+        let g = Mat::from_fn(n + 5, n, |_, _| r.normal());
+        let mut a = gemm(&g.transpose(), &g);
+        for i in 0..n {
+            a[(i, i)] += 0.5;
+        }
+        a
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let mut r = Rng::new(1);
+        let a = random_spd(15, &mut r);
+        let l = cholesky(&a).unwrap();
+        let rec = gemm(&l, &l.transpose());
+        let mut d = rec.clone();
+        d.axpy(-1.0, &a);
+        assert!(d.max_abs() < 1e-10);
+        // strictly lower triangular
+        for i in 0..15 {
+            for j in i + 1..15 {
+                assert_eq!(l[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn non_spd_rejected() {
+        let mut a = Mat::eye(3);
+        a[(2, 2)] = -1.0;
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn jitter_rescues_singular_gram() {
+        // Rank-deficient PSD matrix: plain Cholesky fails, jitter succeeds.
+        let mut r = Rng::new(2);
+        let g = Mat::from_fn(2, 6, |_, _| r.normal());
+        let a = gemm(&g.transpose(), &g); // 6×6 rank 2
+        assert!(cholesky(&a).is_none());
+        let (l, jit) = cholesky_jittered(&a).expect("jitter should rescue");
+        assert!(jit > 0.0);
+        let rec = gemm(&l, &l.transpose());
+        let mut d = rec.clone();
+        d.axpy(-1.0, &a);
+        // Reconstruction differs by about the jitter on the diagonal.
+        assert!(d.max_abs() < jit * 10.0 + 1e-8);
+    }
+
+    #[test]
+    fn solve_and_logdet() {
+        let mut r = Rng::new(3);
+        let a = random_spd(10, &mut r);
+        let l = cholesky(&a).unwrap();
+        let b: Vec<f64> = (0..10).map(|_| r.normal()).collect();
+        let x = chol_solve(&l, &b);
+        let mut res = gemv(&a, &x);
+        for i in 0..10 {
+            res[i] -= b[i];
+        }
+        assert!(norm2(&res) < 1e-9);
+
+        // logdet check against product of eigen/singular values via SVD.
+        let f = crate::linalg::svd_thin(&a);
+        let ld_svd: f64 = f.s.iter().map(|s| s.ln()).sum();
+        assert!((chol_logdet(&l) - ld_svd).abs() < 1e-7);
+    }
+}

@@ -1,0 +1,241 @@
+//! Blocked, multi-threaded GEMM / GEMV.
+//!
+//! This is the dense-compute workhorse: `SA` for dense comparisons, `Q·R`
+//! checks, `AM` products in tests, GP covariance assembly. The kernel is a
+//! cache-blocked i-k-j loop (row-major friendly: innermost loop streams a
+//! row of B and a row of C), parallelized over row blocks of A with scoped
+//! threads. No unsafe, no SIMD intrinsics — autovectorization of the
+//! innermost FMA loop gets within a small factor of peak, which is all we
+//! need (§Perf in EXPERIMENTS.md has measurements).
+
+use super::Mat;
+
+/// Number of worker threads for the dense kernels. Initialized once from
+/// `RANNTUNE_THREADS` or available parallelism.
+pub fn num_threads() -> usize {
+    use std::sync::OnceLock;
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        std::env::var("RANNTUNE_THREADS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
+    })
+}
+
+/// C = A · B.
+pub fn gemm(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.rows(), "gemm shape mismatch {:?}x{:?}", a.shape(), b.shape());
+    let m = a.rows();
+    let n = b.cols();
+    let mut c = Mat::zeros(m, n);
+    gemm_into(a, b, &mut c);
+    c
+}
+
+/// C += A · B (C must be pre-shaped). Exposed separately so hot loops can
+/// reuse allocations.
+pub fn gemm_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    let (m, kk) = a.shape();
+    let n = b.cols();
+    assert_eq!(b.rows(), kk);
+    assert_eq!(c.shape(), (m, n));
+
+    let nt = num_threads().min(m.max(1));
+    // Serial cutoff: thread spawn ~10µs each; tiny products are common in
+    // the GP inner loops.
+    if nt <= 1 || m * n * kk < 64 * 64 * 64 {
+        gemm_block(a, b, c, 0, m);
+        return;
+    }
+    let rows_per = m.div_ceil(nt);
+    // Split C into disjoint row bands; each thread owns one band.
+    let bands: Vec<(usize, &mut [f64])> =
+        c.as_mut_slice().chunks_mut(rows_per * n).enumerate().collect();
+    std::thread::scope(|s| {
+        for (t, band) in bands {
+            let lo = t * rows_per;
+            s.spawn(move || {
+                let hi = lo + band.len() / n;
+                gemm_rows(a, b, band, lo, hi);
+            });
+        }
+    });
+}
+
+fn gemm_block(a: &Mat, b: &Mat, c: &mut Mat, row_lo: usize, row_hi: usize) {
+    let n = b.cols();
+    let c_band = &mut c.as_mut_slice()[row_lo * n..row_hi * n];
+    gemm_rows(a, b, c_band, row_lo, row_hi);
+}
+
+/// Compute rows [row_lo, row_hi) of C += A·B into the band slice.
+fn gemm_rows(a: &Mat, b: &Mat, c_band: &mut [f64], row_lo: usize, row_hi: usize) {
+    let k = a.cols();
+    let n = b.cols();
+    const KB: usize = 256; // k-blocking keeps the B panel in L2
+    for kb in (0..k).step_by(KB) {
+        let kmax = (kb + KB).min(k);
+        for i in row_lo..row_hi {
+            let arow = a.row(i);
+            let crow = &mut c_band[(i - row_lo) * n..(i - row_lo + 1) * n];
+            for kk in kb..kmax {
+                let aik = arow[kk];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = b.row(kk);
+                // innermost: c[i,:] += a[i,k] * b[k,:]  (contiguous, FMA-friendly)
+                for (cj, bj) in crow.iter_mut().zip(brow.iter()) {
+                    *cj += aik * bj;
+                }
+            }
+        }
+    }
+}
+
+/// y = A · x (threaded over row bands for tall A).
+pub fn gemv(a: &Mat, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.cols(), x.len());
+    let m = a.rows();
+    let mut y = vec![0.0; m];
+    gemv_into(a, x, &mut y);
+    y
+}
+
+/// y = A · x into a preallocated buffer.
+pub fn gemv_into(a: &Mat, x: &[f64], y: &mut [f64]) {
+    let m = a.rows();
+    assert_eq!(y.len(), m);
+    let nt = num_threads();
+    // Serial below ~1M madds: scoped-thread spawn (~tens of µs) would
+    // dominate the small gemv calls that LSQR makes at bench scale.
+    if nt <= 1 || m * a.cols() < 1 << 20 {
+        for i in 0..m {
+            y[i] = super::dot(a.row(i), x);
+        }
+        return;
+    }
+    let rows_per = m.div_ceil(nt);
+    let chunks: Vec<&mut [f64]> = y.chunks_mut(rows_per).collect();
+    std::thread::scope(|s| {
+        for (t, band) in chunks.into_iter().enumerate() {
+            let lo = t * rows_per;
+            s.spawn(move || {
+                for (r, yo) in band.iter_mut().enumerate() {
+                    *yo = super::dot(a.row(lo + r), x);
+                }
+            });
+        }
+    });
+}
+
+/// y = Aᵀ · x without materializing Aᵀ (row-major A streamed once, threaded
+/// with per-thread accumulators).
+pub fn gemv_t(a: &Mat, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.rows(), x.len());
+    let n = a.cols();
+    let m = a.rows();
+    let nt = num_threads();
+    if nt <= 1 || m * n < 1 << 20 {
+        let mut y = vec![0.0; n];
+        for i in 0..m {
+            super::axpy(x[i], a.row(i), &mut y);
+        }
+        return y;
+    }
+    let rows_per = m.div_ceil(nt);
+    let partials: Vec<Vec<f64>> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for t in 0..nt {
+            let lo = t * rows_per;
+            let hi = ((t + 1) * rows_per).min(m);
+            if lo >= hi {
+                break;
+            }
+            handles.push(s.spawn(move || {
+                let mut acc = vec![0.0; n];
+                for i in lo..hi {
+                    super::axpy(x[i], a.row(i), &mut acc);
+                }
+                acc
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let mut y = vec![0.0; n];
+    for p in partials {
+        super::axpy(1.0, &p, &mut y);
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn naive_gemm(a: &Mat, b: &Mat) -> Mat {
+        let (m, k) = a.shape();
+        let n = b.cols();
+        Mat::from_fn(m, n, |i, j| (0..k).map(|p| a[(i, p)] * b[(p, j)]).sum())
+    }
+
+    #[test]
+    fn gemm_matches_naive() {
+        let mut r = Rng::new(1);
+        for &(m, k, n) in &[(3usize, 4usize, 5usize), (65, 70, 33), (130, 257, 64), (1, 1, 1)] {
+            let a = Mat::from_fn(m, k, |_, _| r.normal());
+            let b = Mat::from_fn(k, n, |_, _| r.normal());
+            let c = gemm(&a, &b);
+            let c0 = naive_gemm(&a, &b);
+            let mut diff = c.clone();
+            diff.axpy(-1.0, &c0);
+            assert!(diff.max_abs() < 1e-10, "m={m} k={k} n={n}: {}", diff.max_abs());
+        }
+    }
+
+    #[test]
+    fn gemm_threaded_path_matches() {
+        // Big enough to cross the threading cutoff.
+        let mut r = Rng::new(2);
+        let a = Mat::from_fn(200, 100, |_, _| r.normal());
+        let b = Mat::from_fn(100, 120, |_, _| r.normal());
+        let c = gemm(&a, &b);
+        let c0 = naive_gemm(&a, &b);
+        let mut diff = c.clone();
+        diff.axpy(-1.0, &c0);
+        assert!(diff.max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn gemv_and_gemv_t_match_gemm() {
+        let mut r = Rng::new(3);
+        let a = Mat::from_fn(300, 40, |_, _| r.normal());
+        let x: Vec<f64> = (0..40).map(|_| r.normal()).collect();
+        let y = gemv(&a, &x);
+        let y0 = gemm(&a, &Mat::col_vec(&x));
+        for i in 0..300 {
+            assert!((y[i] - y0[(i, 0)]).abs() < 1e-10);
+        }
+        let u: Vec<f64> = (0..300).map(|_| r.normal()).collect();
+        let z = gemv_t(&a, &u);
+        let z0 = gemm(&a.transpose(), &Mat::col_vec(&u));
+        for j in 0..40 {
+            assert!((z[j] - z0[(j, 0)]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut r = Rng::new(4);
+        let a = Mat::from_fn(20, 20, |_, _| r.normal());
+        let c = gemm(&a, &Mat::eye(20));
+        let mut diff = c.clone();
+        diff.axpy(-1.0, &a);
+        assert!(diff.max_abs() < 1e-14);
+    }
+}

@@ -1,0 +1,308 @@
+//! Row-major dense matrix type.
+
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+/// A dense, row-major, heap-allocated `f64` matrix.
+///
+/// Row-major layout matters for this reproduction: the paper explicitly
+/// notes (§5.2) that LessUniform sketch-apply "lends itself to better cache
+/// efficiency than applying an SJLT when A and M are stored in row-major
+/// order (which is the standard for Python)". We keep the same layout so
+/// the same cache argument — and hence the same performance shape — holds.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    /// Zero matrix of the given shape.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a row-major data vector.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Build from a closure `f(i, j)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Column vector (n×1) from a slice.
+    pub fn col_vec(v: &[f64]) -> Self {
+        Mat { rows: v.len(), cols: 1, data: v.to_vec() }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Borrow row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy of column `j`.
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        debug_assert!(j < self.cols);
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    /// Full backing slice (row-major).
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on tall matrices.
+        const B: usize = 64;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        t[(j, i)] = self[(i, j)];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Copy of the leading `r`×`c` submatrix starting at (`i0`, `j0`).
+    pub fn submatrix(&self, i0: usize, j0: usize, r: usize, c: usize) -> Mat {
+        assert!(i0 + r <= self.rows && j0 + c <= self.cols);
+        Mat::from_fn(r, c, |i, j| self[(i0 + i, j0 + j)])
+    }
+
+    /// Keep only the first `r` rows (used to down-sample a task matrix for
+    /// the paper's transfer-learning "smaller source problem").
+    pub fn head_rows(&self, r: usize) -> Mat {
+        self.submatrix(0, 0, r.min(self.rows), self.cols)
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Max |entry|.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |a, &x| a.max(x.abs()))
+    }
+
+    /// self += alpha * other (same shape).
+    pub fn axpy(&mut self, alpha: f64, other: &Mat) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Scale every entry in place.
+    pub fn scale(&mut self, alpha: f64) {
+        for a in self.data.iter_mut() {
+            *a *= alpha;
+        }
+    }
+}
+
+impl Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline(always)]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Mat {
+    #[inline(always)]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        let show_r = self.rows.min(6);
+        let show_c = self.cols.min(8);
+        for i in 0..show_r {
+            write!(f, "  ")?;
+            for j in 0..show_c {
+                write!(f, "{:>10.4} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if self.cols > show_c { "..." } else { "" })?;
+        }
+        if self.rows > show_r {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+// ---- free-standing vector helpers (used throughout the solvers) ----
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulation: keeps the FP pipes busy and gives a
+    // deterministic summation order.
+    let n = a.len();
+    let mut s0 = 0.0;
+    let mut s1 = 0.0;
+    let mut s2 = 0.0;
+    let mut s3 = 0.0;
+    let chunks = n / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    for i in chunks * 4..n {
+        s0 += a[i] * b[i];
+    }
+    (s0 + s1) + (s2 + s3)
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// y += alpha * x.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * xi;
+    }
+}
+
+/// x *= alpha.
+#[inline]
+pub fn scal(alpha: f64, x: &mut [f64]) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_and_shape() {
+        let mut m = Mat::zeros(3, 2);
+        m[(2, 1)] = 5.0;
+        assert_eq!(m.shape(), (3, 2));
+        assert_eq!(m[(2, 1)], 5.0);
+        assert_eq!(m.row(2), &[0.0, 5.0]);
+        assert_eq!(m.col(1), vec![0.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let m = Mat::from_fn(70, 33, |i, j| (i * 100 + j) as f64);
+        let t = m.transpose();
+        assert_eq!(t.shape(), (33, 70));
+        assert_eq!(t.transpose(), m);
+        assert_eq!(m[(5, 7)], t[(7, 5)]);
+    }
+
+    #[test]
+    fn eye_and_fro() {
+        let i = Mat::eye(4);
+        assert_eq!(i.fro_norm(), 2.0);
+        assert_eq!(i[(2, 2)], 1.0);
+        assert_eq!(i[(2, 3)], 0.0);
+    }
+
+    #[test]
+    fn submatrix_and_head_rows() {
+        let m = Mat::from_fn(5, 4, |i, j| (i * 4 + j) as f64);
+        let s = m.submatrix(1, 1, 2, 2);
+        assert_eq!(s.as_slice(), &[5.0, 6.0, 9.0, 10.0]);
+        let h = m.head_rows(2);
+        assert_eq!(h.shape(), (2, 4));
+        assert_eq!(h[(1, 3)], 7.0);
+    }
+
+    #[test]
+    fn vector_ops() {
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let b = [5.0, 4.0, 3.0, 2.0, 1.0];
+        assert_eq!(dot(&a, &b), 35.0);
+        assert!((norm2(&a) - (55f64).sqrt()).abs() < 1e-12);
+        let mut y = b;
+        axpy(2.0, &a, &mut y);
+        assert_eq!(y, [7.0, 8.0, 9.0, 10.0, 11.0]);
+        let mut x = a;
+        scal(0.5, &mut x);
+        assert_eq!(x, [0.5, 1.0, 1.5, 2.0, 2.5]);
+    }
+
+    #[test]
+    fn axpy_mat_and_scale() {
+        let mut a = Mat::eye(3);
+        let b = Mat::eye(3);
+        a.axpy(2.0, &b);
+        assert_eq!(a[(1, 1)], 3.0);
+        a.scale(1.0 / 3.0);
+        assert!((a[(1, 1)] - 1.0).abs() < 1e-15);
+    }
+}

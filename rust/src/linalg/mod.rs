@@ -1,0 +1,30 @@
+//! Dense linear-algebra substrate.
+//!
+//! The paper's solvers are built on LAPACK via numpy/MKL; offline we build
+//! the needed kernels ourselves:
+//!
+//! * [`Mat`] — row-major dense matrix with slicing helpers.
+//! * [`gemm`] — blocked, multi-threaded matrix multiply (plus `gemv`,
+//!   `gemv_t`), the workhorse behind sketching, preconditioning, and GP fits.
+//! * [`qr`] — Householder QR (thin), used for the QR-LSQR preconditioner,
+//!   the direct reference solver, and coherence computation.
+//! * [`svd`] — one-sided Jacobi SVD (thin), used for the SVD-based
+//!   preconditioners and condition numbers. Jacobi is chosen for its
+//!   simplicity and high relative accuracy; our sketches are small
+//!   (d×n with d ≈ a few·n), where Jacobi is perfectly adequate.
+//! * [`chol`] — Cholesky with jitter, for GP/LCM covariance solves.
+//! * [`solve`] — triangular solves (vector and multiple-RHS).
+
+mod chol;
+mod gemm;
+mod mat;
+mod qr;
+mod solve;
+mod svd;
+
+pub use chol::*;
+pub use gemm::*;
+pub use mat::*;
+pub use qr::*;
+pub use solve::*;
+pub use svd::*;

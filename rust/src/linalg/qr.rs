@@ -1,0 +1,199 @@
+//! Householder QR factorization (thin).
+//!
+//! Used for: the QR-LSQR preconditioner (M = R⁻¹ from QR of the d×n sketch
+//! Â), the dense direct least-squares reference solver that defines x*
+//! and hence ARFE (§4.1.2), the presolve step z_sk = Qᵀ(S b) (Appendix A),
+//! and coherence μ(A) = m·maxᵢ‖U₍ᵢ₎‖² via an orthonormal basis.
+
+use super::{dot, norm2, Mat};
+
+/// Thin QR of an m×n matrix with m ≥ n: A = Q·R with Q m×n column-
+/// orthonormal and R n×n upper-triangular (non-negative diagonal).
+pub struct QrFactors {
+    pub q: Mat,
+    pub r: Mat,
+}
+
+/// Compute the thin Householder QR of `a` (m ≥ n required).
+pub fn qr_thin(a: &Mat) -> QrFactors {
+    let (m, n) = a.shape();
+    assert!(m >= n, "qr_thin requires tall input, got {m}x{n}");
+    let mut work = a.clone(); // becomes R in the upper triangle, reflectors below
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n); // Householder vectors
+    let mut betas = Vec::with_capacity(n);
+
+    for k in 0..n {
+        // Build the reflector from column k, rows k..m.
+        let mut v: Vec<f64> = (k..m).map(|i| work[(i, k)]).collect();
+        let alpha = norm2(&v);
+        let mut beta = 0.0;
+        if alpha > 0.0 {
+            // v = x + sign(x0)·‖x‖·e1, normalized so v[0] = 1.
+            let sign = if v[0] >= 0.0 { 1.0 } else { -1.0 };
+            v[0] += sign * alpha;
+            let v0 = v[0];
+            if v0 != 0.0 {
+                // Normalize so v[0] = 1; then H = I − beta·v·vᵀ with
+                // beta = 2 / (vᵀv).
+                for vi in v.iter_mut() {
+                    *vi /= v0;
+                }
+                beta = 2.0 / dot(&v, &v);
+            }
+        }
+        // Apply (I − beta·v·vᵀ) to work[k.., k..] in two ROW-MAJOR passes
+        // (perf: the naive column-at-a-time form strides by `n` on every
+        // access and ran ~8× slower; see EXPERIMENTS.md §Perf):
+        //   s = beta · Wᵀv   (accumulate row-scaled rows)
+        //   W −= v·sᵀ        (axpy per row)
+        if beta != 0.0 {
+            let ncols = n - k;
+            let mut s = vec![0.0f64; ncols];
+            for (r, vi) in v.iter().enumerate() {
+                let row = &work.row(k + r)[k..n];
+                super::axpy(*vi, row, &mut s);
+            }
+            super::scal(beta, &mut s);
+            for (r, vi) in v.iter().enumerate() {
+                let row = &mut work.row_mut(k + r)[k..n];
+                super::axpy(-*vi, &s, row);
+            }
+        }
+        vs.push(v);
+        betas.push(beta);
+    }
+
+    // Extract R (force exact zeros below the diagonal).
+    let mut r = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            r[(i, j)] = work[(i, j)];
+        }
+    }
+
+    // Accumulate thin Q by applying reflectors to the first n columns of I,
+    // in reverse order: Q = H_0 H_1 ... H_{n-1} · [I_n; 0].
+    let mut q = Mat::zeros(m, n);
+    for j in 0..n {
+        q[(j, j)] = 1.0;
+    }
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        let beta = betas[k];
+        if beta == 0.0 {
+            continue;
+        }
+        // Same row-major two-pass application as above, over all n columns.
+        let mut s = vec![0.0f64; n];
+        for (r_i, vi) in v.iter().enumerate() {
+            super::axpy(*vi, q.row(k + r_i), &mut s);
+        }
+        super::scal(beta, &mut s);
+        for (r_i, vi) in v.iter().enumerate() {
+            super::axpy(-*vi, &s, q.row_mut(k + r_i));
+        }
+    }
+
+    // Normalize sign so diag(R) >= 0 (convention; makes tests deterministic).
+    for k in 0..n {
+        if r[(k, k)] < 0.0 {
+            for j in k..n {
+                r[(k, j)] = -r[(k, j)];
+            }
+            for i in 0..m {
+                q[(i, k)] = -q[(i, k)];
+            }
+        }
+    }
+
+    QrFactors { q, r }
+}
+
+/// Solve the full-rank least-squares problem min ‖Ax − b‖₂ via thin QR:
+/// x = R⁻¹ Qᵀ b. This is the paper's "direct least squares solver" that
+/// produces the reference solution x* used in ARFE.
+pub fn lstsq_qr(a: &Mat, b: &[f64]) -> Vec<f64> {
+    let f = qr_thin(a);
+    let qtb = super::gemv_t(&f.q, b);
+    super::solve_upper(&f.r, &qtb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm;
+    use crate::rng::Rng;
+
+    fn check_qr(a: &Mat, tol: f64) {
+        let f = qr_thin(a);
+        let (m, n) = a.shape();
+        assert_eq!(f.q.shape(), (m, n));
+        assert_eq!(f.r.shape(), (n, n));
+        // QR = A
+        let qr = gemm(&f.q, &f.r);
+        let mut d = qr.clone();
+        d.axpy(-1.0, a);
+        assert!(d.max_abs() < tol, "reconstruction error {}", d.max_abs());
+        // QᵀQ = I
+        let qtq = gemm(&f.q.transpose(), &f.q);
+        let mut e = qtq.clone();
+        e.axpy(-1.0, &Mat::eye(n));
+        assert!(e.max_abs() < tol, "orthogonality error {}", e.max_abs());
+        // R upper-triangular with non-negative diagonal
+        for i in 0..n {
+            assert!(f.r[(i, i)] >= 0.0);
+            for j in 0..i {
+                assert_eq!(f.r[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn qr_random_shapes() {
+        let mut r = Rng::new(1);
+        for &(m, n) in &[(5usize, 3usize), (50, 50), (200, 17), (1, 1), (64, 1)] {
+            let a = Mat::from_fn(m, n, |_, _| r.normal());
+            check_qr(&a, 1e-10);
+        }
+    }
+
+    #[test]
+    fn qr_rank_deficient_does_not_crash() {
+        // Duplicate columns: reflector with zero norm must be handled.
+        let mut r = Rng::new(2);
+        let col: Vec<f64> = (0..30).map(|_| r.normal()).collect();
+        let a = Mat::from_fn(30, 3, |i, j| if j == 2 { col[i] } else { col[i] * (j + 1) as f64 });
+        let f = qr_thin(&a);
+        let qr = gemm(&f.q, &f.r);
+        let mut d = qr.clone();
+        d.axpy(-1.0, &a);
+        assert!(d.max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn lstsq_recovers_planted_solution() {
+        let mut r = Rng::new(3);
+        let a = Mat::from_fn(100, 8, |_, _| r.normal());
+        let x_true: Vec<f64> = (0..8).map(|i| i as f64 - 3.5).collect();
+        let b = crate::linalg::gemv(&a, &x_true);
+        let x = lstsq_qr(&a, &b);
+        for i in 0..8 {
+            assert!((x[i] - x_true[i]).abs() < 1e-9, "{:?}", x);
+        }
+    }
+
+    #[test]
+    fn lstsq_residual_is_orthogonal_to_range() {
+        // Overdetermined noisy system: Aᵀ(Ax−b) ≈ 0 characterizes the LS solution.
+        let mut r = Rng::new(4);
+        let a = Mat::from_fn(60, 5, |_, _| r.normal());
+        let b: Vec<f64> = (0..60).map(|_| r.normal()).collect();
+        let x = lstsq_qr(&a, &b);
+        let mut res = crate::linalg::gemv(&a, &x);
+        for i in 0..60 {
+            res[i] -= b[i];
+        }
+        let g = crate::linalg::gemv_t(&a, &res);
+        assert!(crate::linalg::norm2(&g) < 1e-9, "gradient {:?}", g);
+    }
+}

@@ -1,0 +1,186 @@
+//! Triangular solves.
+//!
+//! The QR-LSQR preconditioner is *applied* (never inverted explicitly,
+//! following §3.3: "while there would be numerical issues with inverting R,
+//! using it as a preconditioner would not have many numerical issues"):
+//! M·z = R⁻¹z is a back-substitution, Mᵀ·r = R⁻ᵀr a forward one.
+
+use super::Mat;
+
+/// Solve U x = b with U upper-triangular (back substitution).
+pub fn solve_upper(u: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = u.rows();
+    assert_eq!(u.cols(), n);
+    assert_eq!(b.len(), n);
+    let mut x = b.to_vec();
+    for i in (0..n).rev() {
+        let urow = u.row(i);
+        let mut s = x[i];
+        // x[i] = (b[i] - Σ_{j>i} u[i,j]·x[j]) / u[i,i]
+        for j in i + 1..n {
+            s -= urow[j] * x[j];
+        }
+        let d = urow[i];
+        assert!(d != 0.0, "singular triangular factor at {i}");
+        x[i] = s / d;
+    }
+    x
+}
+
+/// Solve Uᵀ x = b with U upper-triangular (forward substitution on Uᵀ,
+/// i.e. a lower-triangular solve without materializing the transpose).
+pub fn solve_upper_t(u: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = u.rows();
+    assert_eq!(u.cols(), n);
+    assert_eq!(b.len(), n);
+    let mut x = b.to_vec();
+    for i in 0..n {
+        let d = u[(i, i)];
+        assert!(d != 0.0, "singular triangular factor at {i}");
+        x[i] /= d;
+        let xi = x[i];
+        // eliminate from the remaining equations: row i of Uᵀ-view
+        let urow = u.row(i);
+        for j in i + 1..n {
+            x[j] -= urow[j] * xi;
+        }
+    }
+    x
+}
+
+/// Solve L x = b with L lower-triangular.
+pub fn solve_lower(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    assert_eq!(l.cols(), n);
+    assert_eq!(b.len(), n);
+    let mut x = b.to_vec();
+    for i in 0..n {
+        let lrow = l.row(i);
+        let mut s = x[i];
+        for j in 0..i {
+            s -= lrow[j] * x[j];
+        }
+        let d = lrow[i];
+        assert!(d != 0.0, "singular triangular factor at {i}");
+        x[i] = s / d;
+    }
+    x
+}
+
+/// Solve Lᵀ x = b with L lower-triangular.
+pub fn solve_lower_t(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    let mut x = b.to_vec();
+    for i in (0..n).rev() {
+        let mut s = x[i];
+        for j in i + 1..n {
+            s -= l[(j, i)] * x[j];
+        }
+        let d = l[(i, i)];
+        assert!(d != 0.0, "singular triangular factor at {i}");
+        x[i] = s / d;
+    }
+    x
+}
+
+/// Solve L X = B column-by-column (multiple RHS), B is n×k.
+pub fn solve_lower_multi(l: &Mat, b: &Mat) -> Mat {
+    let n = l.rows();
+    assert_eq!(b.rows(), n);
+    let k = b.cols();
+    let mut x = b.clone();
+    for i in 0..n {
+        let d = l[(i, i)];
+        assert!(d != 0.0, "singular triangular factor at {i}");
+        for c in 0..k {
+            let mut s = x[(i, c)];
+            for j in 0..i {
+                s -= l[(i, j)] * x[(j, c)];
+            }
+            x[(i, c)] = s / d;
+        }
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{gemv, norm2, Mat};
+    use crate::rng::Rng;
+
+    fn rand_upper(n: usize, r: &mut Rng) -> Mat {
+        Mat::from_fn(n, n, |i, j| {
+            if j > i {
+                r.normal()
+            } else if j == i {
+                2.0 + r.uniform() // well away from zero
+            } else {
+                0.0
+            }
+        })
+    }
+
+    #[test]
+    fn upper_and_transpose_solves() {
+        let mut rng = Rng::new(1);
+        let u = rand_upper(12, &mut rng);
+        let b: Vec<f64> = (0..12).map(|_| rng.normal()).collect();
+        let x = solve_upper(&u, &b);
+        let mut res = gemv(&u, &x);
+        for i in 0..12 {
+            res[i] -= b[i];
+        }
+        assert!(norm2(&res) < 1e-12);
+
+        let xt = solve_upper_t(&u, &b);
+        let mut res = gemv(&u.transpose(), &xt);
+        for i in 0..12 {
+            res[i] -= b[i];
+        }
+        assert!(norm2(&res) < 1e-12);
+    }
+
+    #[test]
+    fn lower_and_transpose_solves() {
+        let mut rng = Rng::new(2);
+        let l = rand_upper(9, &mut rng).transpose();
+        let b: Vec<f64> = (0..9).map(|_| rng.normal()).collect();
+        let x = solve_lower(&l, &b);
+        let mut res = gemv(&l, &x);
+        for i in 0..9 {
+            res[i] -= b[i];
+        }
+        assert!(norm2(&res) < 1e-12);
+
+        let xt = solve_lower_t(&l, &b);
+        let mut res = gemv(&l.transpose(), &xt);
+        for i in 0..9 {
+            res[i] -= b[i];
+        }
+        assert!(norm2(&res) < 1e-12);
+    }
+
+    #[test]
+    fn multi_rhs_matches_single() {
+        let mut rng = Rng::new(3);
+        let l = rand_upper(7, &mut rng).transpose();
+        let b = Mat::from_fn(7, 3, |_, _| rng.normal());
+        let x = solve_lower_multi(&l, &b);
+        for c in 0..3 {
+            let bc = b.col(c);
+            let xc = solve_lower(&l, &bc);
+            for i in 0..7 {
+                assert!((x[(i, c)] - xc[i]).abs() < 1e-13);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "singular")]
+    fn singular_panics() {
+        let mut u = Mat::eye(3);
+        u[(1, 1)] = 0.0;
+        let _ = solve_upper(&u, &[1.0, 1.0, 1.0]);
+    }
+}

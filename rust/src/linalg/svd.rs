@@ -1,0 +1,239 @@
+//! Thin SVD via one-sided Jacobi rotations.
+//!
+//! Used for the SVD-based preconditioners (M = V·Σ⁻¹, §3.3, following
+//! LSRN/NewtonSketch) and for exact condition numbers in the data module
+//! (Table 3). One-sided Jacobi operates on columns of A directly, is
+//! unconditionally stable, achieves high relative accuracy, and is simple
+//! enough to implement dependably without LAPACK. Our SVDs are of d×n
+//! sketches with n ≤ a few hundred — well inside Jacobi's comfort zone.
+
+use super::{dot, norm2, Mat};
+
+/// Thin SVD A = U·diag(s)·Vᵀ with U m×n, s descending, V n×n.
+pub struct SvdFactors {
+    pub u: Mat,
+    pub s: Vec<f64>,
+    pub v: Mat,
+}
+
+/// Compute the thin SVD of a tall matrix (m ≥ n).
+///
+/// For genuinely tall inputs (m > 9n/8) this first reduces via QR and
+/// runs Jacobi on the small n×n factor R (A = QR = Q·(U_R Σ Vᵀ) ⇒
+/// U = Q·U_R) — each Jacobi sweep then costs O(n³) instead of O(m n²),
+/// a large win for the d×n sketches SAP produces (see EXPERIMENTS.md
+/// §Perf).
+pub fn svd_thin(a: &Mat) -> SvdFactors {
+    let (m, n) = a.shape();
+    assert!(m >= n, "svd_thin requires tall input, got {m}x{n}");
+    if m * 8 > n * 9 && n > 1 {
+        let f = super::qr_thin(a);
+        let inner = svd_jacobi(&f.r);
+        return SvdFactors { u: super::gemm(&f.q, &inner.u), s: inner.s, v: inner.v };
+    }
+    svd_jacobi(a)
+}
+
+/// One-sided Jacobi SVD: repeatedly rotate column pairs (i, j) of a
+/// working copy W (initially A) to orthogonalize them, accumulating
+/// rotations into V; at convergence W = U·diag(s) with s the column
+/// norms.
+fn svd_jacobi(a: &Mat) -> SvdFactors {
+    let (m, n) = a.shape();
+    // Work on columns: store W transposed (n×m) so each column of the
+    // original is a contiguous row — the rotation kernel is then two
+    // streaming row updates instead of strided column walks.
+    let mut wt = a.transpose();
+    let mut v = Mat::eye(n);
+
+    let eps = f64::EPSILON;
+    let tol = (m as f64).sqrt() * eps;
+    let max_sweeps = 60;
+
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64; // largest |cosine| seen this sweep
+        // Perf: cache the squared column norms per sweep and update them
+        // analytically after each rotation — only γ = w_iᵀw_j needs a
+        // fresh dot per pair, cutting the dot work by ~3× (§Perf).
+        let mut norms2: Vec<f64> = (0..n).map(|i| dot(wt.row(i), wt.row(i))).collect();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let alpha = norms2[i];
+                let beta = norms2[j];
+                if alpha == 0.0 || beta == 0.0 {
+                    continue;
+                }
+                let (wi, wj) = row_pair(&mut wt, i, j);
+                let gamma = dot(wi, wj);
+                let cosine = gamma.abs() / (alpha.sqrt() * beta.sqrt());
+                off = off.max(cosine);
+                if cosine <= tol {
+                    continue;
+                }
+                // Jacobi rotation zeroing gamma.
+                let zeta = (beta - alpha) / (2.0 * gamma);
+                let t = zeta.signum() / (zeta.abs() + (1.0 + zeta * zeta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for k in 0..m {
+                    let a_ = wi[k];
+                    let b_ = wj[k];
+                    wi[k] = c * a_ - s * b_;
+                    wj[k] = s * a_ + c * b_;
+                }
+                for k in 0..n {
+                    let a_ = v[(k, i)];
+                    let b_ = v[(k, j)];
+                    v[(k, i)] = c * a_ - s * b_;
+                    v[(k, j)] = s * a_ + c * b_;
+                }
+                // ‖w_i'‖² = c²α − 2csγ + s²β;  ‖w_j'‖² = s²α + 2csγ + c²β.
+                let (c2, s2, cs) = (c * c, s * s, c * s);
+                norms2[i] = c2 * alpha - 2.0 * cs * gamma + s2 * beta;
+                norms2[j] = s2 * alpha + 2.0 * cs * gamma + c2 * beta;
+            }
+        }
+        if off <= tol {
+            break;
+        }
+    }
+
+    // Singular values = column norms; U = W / s.
+    let mut s: Vec<f64> = (0..n).map(|i| norm2(wt.row(i))).collect();
+    // Sort descending, permuting U columns (rows of wt) and V columns.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| s[b].partial_cmp(&s[a]).unwrap());
+    let mut u = Mat::zeros(m, n);
+    let mut v_sorted = Mat::zeros(n, n);
+    let mut s_sorted = vec![0.0; n];
+    for (new_j, &old_j) in order.iter().enumerate() {
+        let sv = s[old_j];
+        s_sorted[new_j] = sv;
+        let w = wt.row(old_j);
+        if sv > 0.0 {
+            for i in 0..m {
+                u[(i, new_j)] = w[i] / sv;
+            }
+        }
+        for i in 0..n {
+            v_sorted[(i, new_j)] = v[(i, old_j)];
+        }
+    }
+    s = s_sorted;
+    SvdFactors { u, s, v: v_sorted }
+}
+
+/// Borrow two distinct rows of a matrix mutably.
+fn row_pair(m: &mut Mat, i: usize, j: usize) -> (&mut [f64], &mut [f64]) {
+    assert!(i < j);
+    let cols = m.cols();
+    let data = m.as_mut_slice();
+    let (head, tail) = data.split_at_mut(j * cols);
+    (&mut head[i * cols..(i + 1) * cols], &mut tail[..cols])
+}
+
+/// Condition number σ_max/σ_min from the thin SVD. Returns `f64::INFINITY`
+/// for numerically rank-deficient input.
+pub fn cond(a: &Mat) -> f64 {
+    let f = svd_thin(a);
+    let smax = f.s[0];
+    let smin = *f.s.last().unwrap();
+    if smin <= smax * f64::EPSILON * (a.rows().max(a.cols()) as f64) {
+        f64::INFINITY
+    } else {
+        smax / smin
+    }
+}
+
+/// Numerical rank with tolerance `rtol·σ_max` (default rtol like LAPACK).
+pub fn numerical_rank(s: &[f64], m: usize, n: usize) -> usize {
+    if s.is_empty() {
+        return 0;
+    }
+    let tol = s[0] * f64::EPSILON * (m.max(n) as f64);
+    s.iter().filter(|&&x| x > tol).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm;
+    use crate::rng::Rng;
+
+    fn check_svd(a: &Mat, tol: f64) {
+        let f = svd_thin(a);
+        let (m, n) = a.shape();
+        // U·diag(s)·Vᵀ = A
+        let mut us = f.u.clone();
+        for i in 0..m {
+            for j in 0..n {
+                us[(i, j)] *= f.s[j];
+            }
+        }
+        let rec = gemm(&us, &f.v.transpose());
+        let mut d = rec.clone();
+        d.axpy(-1.0, a);
+        assert!(d.max_abs() < tol, "reconstruction {}", d.max_abs());
+        // Orthogonality
+        let utu = gemm(&f.u.transpose(), &f.u);
+        let vtv = gemm(&f.v.transpose(), &f.v);
+        let mut e1 = utu.clone();
+        e1.axpy(-1.0, &Mat::eye(n));
+        let mut e2 = vtv.clone();
+        e2.axpy(-1.0, &Mat::eye(n));
+        assert!(e1.max_abs() < tol, "UᵀU {}", e1.max_abs());
+        assert!(e2.max_abs() < tol, "VᵀV {}", e2.max_abs());
+        // Descending singular values
+        for k in 1..n {
+            assert!(f.s[k - 1] >= f.s[k] - 1e-12);
+            assert!(f.s[k] >= 0.0);
+        }
+    }
+
+    #[test]
+    fn svd_random_shapes() {
+        let mut r = Rng::new(1);
+        for &(m, n) in &[(6usize, 4usize), (40, 40), (120, 15), (3, 1)] {
+            let a = Mat::from_fn(m, n, |_, _| r.normal());
+            check_svd(&a, 1e-9);
+        }
+    }
+
+    #[test]
+    fn svd_known_singular_values() {
+        // diag(3, 2, 1) embedded in a tall matrix via orthogonal Q.
+        let mut r = Rng::new(2);
+        let g = Mat::from_fn(30, 3, |_, _| r.normal());
+        let q = crate::linalg::qr_thin(&g).q;
+        let mut a = q.clone();
+        for i in 0..30 {
+            a[(i, 0)] *= 3.0;
+            a[(i, 1)] *= 2.0;
+            a[(i, 2)] *= 1.0;
+        }
+        let f = svd_thin(&a);
+        assert!((f.s[0] - 3.0).abs() < 1e-10, "{:?}", f.s);
+        assert!((f.s[1] - 2.0).abs() < 1e-10);
+        assert!((f.s[2] - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn cond_of_orthonormal_is_one() {
+        let mut r = Rng::new(3);
+        let g = Mat::from_fn(50, 8, |_, _| r.normal());
+        let q = crate::linalg::qr_thin(&g).q;
+        let c = cond(&q);
+        assert!((c - 1.0).abs() < 1e-8, "cond {c}");
+    }
+
+    #[test]
+    fn rank_deficient_detected() {
+        let mut r = Rng::new(4);
+        let b = Mat::from_fn(20, 2, |_, _| r.normal());
+        let c = Mat::from_fn(2, 5, |_, _| r.normal());
+        let a = gemm(&b, &c); // rank 2, shape 20×5
+        let f = svd_thin(&a);
+        assert_eq!(numerical_rank(&f.s, 20, 5), 2, "{:?}", f.s);
+        assert!(cond(&a).is_infinite());
+    }
+}

@@ -1,0 +1,294 @@
+//! `ranntune` — leader entrypoint and CLI.
+//!
+//! The Layer-3 coordinator binary: owns the tuning loop, the history
+//! database, the figure/bench drivers, and the PJRT deploy path. See
+//! `ranntune help` (or [`ranntune::cli::USAGE`]) for the command set.
+
+use ranntune::cli::{figures, make_problem, Args, USAGE};
+use ranntune::data::{coherence, condition_number};
+use ranntune::db::HistoryDb;
+use ranntune::objective::{Constants, Objective, ParamSpace, TuningTask};
+use ranntune::rng::Rng;
+use ranntune::runtime::{default_artifacts_dir, SapEngine};
+use ranntune::sensitivity::{analyze_trials, PARAM_NAMES};
+use ranntune::sketch::LessUniform;
+use ranntune::tuners::{GpBoTuner, GridTuner, LhsmduTuner, TlaTuner, TpeTuner, Tuner};
+use std::path::{Path, PathBuf};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let code = match args.command.as_str() {
+        "tune" => cmd_tune(&args),
+        "grid" => cmd_grid(&args),
+        "sensitivity" => cmd_sensitivity(&args),
+        "deploy" => cmd_deploy(&args),
+        "props" => cmd_props(&args),
+        "figures" => cmd_figures(&args),
+        "help" | "" => {
+            println!("{USAGE}");
+            0
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n\n{USAGE}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn problem_from_args(args: &Args) -> Result<ranntune::data::Problem, String> {
+    let data = args.get("data").ok_or("missing --data")?;
+    let m = args.get_usize("m", 4000);
+    let n = args.get_usize("n", 100);
+    let seed = args.get_u64("data-seed", 100);
+    make_problem(data, m, n, seed)
+}
+
+fn cmd_tune(args: &Args) -> i32 {
+    let problem = match problem_from_args(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let (name, m, n) = (problem.name.clone(), problem.m(), problem.n());
+    let budget = args.get_usize("budget", 50);
+    let seed = args.get_u64("seed", 0);
+    let constants = Constants {
+        num_repeats: args.get_usize("repeats", 5),
+        penalty_factor: args.get_f64("penalty", 2.0),
+        allowance_factor: args.get_f64("allowance", 10.0),
+        ..Constants::default()
+    };
+    let tuner_name = args.get("tuner").unwrap_or("gptune").to_lowercase();
+    let mut tuner: Box<dyn Tuner> = match tuner_name.as_str() {
+        "lhsmdu" | "random" => Box::new(LhsmduTuner::new()),
+        "tpe" => Box::new(TpeTuner::new(constants.num_pilots)),
+        "gptune" | "gp" => Box::new(GpBoTuner::new(constants.num_pilots)),
+        "grid" => Box::new(GridTuner::new(vec![])),
+        "tla" => {
+            let source = match args.get("source-db") {
+                Some(path) => {
+                    let db = HistoryDb::load_or_default(Path::new(path));
+                    // Use all samples from same-named smaller tasks.
+                    let mut all = Vec::new();
+                    for task in db.tasks_named(&name) {
+                        if task.m < m {
+                            all.extend(db.source_samples(&name, task.m, task.n));
+                        }
+                    }
+                    println!("loaded {} source samples from {path}", all.len());
+                    all
+                }
+                None => {
+                    // Collect fresh source data on a down-scaled problem.
+                    let src_m = args.get_usize("source-m", (m / 4).max(n + 50));
+                    println!("collecting source data at m={src_m} ...");
+                    let src_problem = make_problem(
+                        args.get("data").unwrap(),
+                        src_m,
+                        n,
+                        args.get_u64("data-seed", 100) + 400,
+                    )
+                    .unwrap();
+                    figures::collect_source(src_problem, constants.clone(), 60, 77)
+                }
+            };
+            Box::new(TlaTuner::new(source))
+        }
+        other => {
+            eprintln!("unknown tuner {other:?}");
+            return 2;
+        }
+    };
+
+    println!("tuning {name} ({m}x{n}) with {} for {budget} evaluations ...", tuner.name());
+    let task = TuningTask { problem, space: ParamSpace::paper(), constants: constants.clone() };
+    let mut obj = Objective::new(task, seed);
+    println!("direct solver: {:.4}s", obj.direct_secs);
+    let history = tuner.run(&mut obj, budget, &mut Rng::new(seed));
+
+    for (i, t) in history.trials().iter().enumerate() {
+        println!(
+            "  [{:>3}] {:<44} {:.5}s  ARFE={:.2e}{}{}",
+            i + 1,
+            t.config.label(),
+            t.wall_clock,
+            t.arfe,
+            if t.failed { "  FAILED" } else { "" },
+            if t.is_reference { "  (reference)" } else { "" },
+        );
+    }
+    let best = history.best().unwrap();
+    println!("\nbest: {}  {:.5}s (ARFE {:.2e})", best.config.label(), best.wall_clock, best.arfe);
+    println!(
+        "speedup vs reference: {:.2}x",
+        history.trials()[0].wall_clock / best.wall_clock
+    );
+
+    if let Some(db_path) = args.get("db") {
+        let mut db = HistoryDb::load_or_default(Path::new(db_path));
+        db.record(&name, m, n, &history);
+        if let Err(e) = db.save(Path::new(db_path)) {
+            eprintln!("db save failed: {e}");
+            return 1;
+        }
+        println!("recorded {} trials into {db_path}", history.len());
+    }
+    0
+}
+
+fn cmd_grid(args: &Args) -> i32 {
+    let data = args.get("data").unwrap_or("GA").to_string();
+    let mut scale = figures::FigScale::parse(args.get("scale").unwrap_or("default"));
+    if args.has("m") {
+        scale.m = args.get_usize("m", scale.m);
+    }
+    if args.has("n") {
+        scale.n = args.get_usize("n", scale.n);
+    }
+    scale.full_grid = !args.has("coarse") && scale.full_grid;
+    let out = PathBuf::from(args.get("out").unwrap_or("results"));
+    let report = figures::grid_figure(&scale, &[&data], &format!("grid_{data}"), &out);
+    println!("{report}");
+    0
+}
+
+fn cmd_sensitivity(args: &Args) -> i32 {
+    let problem = match problem_from_args(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let samples = args.get_usize("samples", 100);
+    let saltelli = args.get_usize("saltelli", 512);
+    let constants = Constants { num_repeats: args.get_usize("repeats", 3), ..Constants::default() };
+    println!("collecting {samples} random samples on {} ...", problem.name);
+    let task = TuningTask { problem, space: ParamSpace::paper(), constants };
+    let mut obj = Objective::new(task, 0);
+    let mut tuner = LhsmduTuner::new();
+    let h = tuner.run(&mut obj, samples, &mut Rng::new(3));
+    let mut rng = Rng::new(9);
+    let res = analyze_trials(h.trials(), &ParamSpace::paper(), saltelli, &mut rng);
+    println!("\n{:<18} {:>14} {:>14}", "parameter", "S1 (conf)", "ST (conf)");
+    for (i, idx) in res.indices.iter().enumerate() {
+        println!(
+            "{:<18} {:>6.2} ({:.2}) {:>6.2} ({:.2})",
+            PARAM_NAMES[i], idx.s1, idx.s1_conf, idx.st, idx.st_conf
+        );
+    }
+    0
+}
+
+fn cmd_deploy(args: &Args) -> i32 {
+    let variant = args.get("variant").unwrap_or("sap_small");
+    let engine = match SapEngine::load(&default_artifacts_dir(), variant) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("engine load failed: {e:#}");
+            return 1;
+        }
+    };
+    let meta = engine.meta.clone();
+    println!(
+        "loaded artifact {variant}: m={} n={} d={} k={} iters={}",
+        meta.m, meta.n, meta.d, meta.k, meta.iters
+    );
+    let m = args.get_usize("m", meta.m - 100).min(meta.m);
+    let n = args.get_usize("n", meta.n - 28).min(meta.n);
+    let data = args.get("data").unwrap_or("GA");
+    let problem = make_problem(data, m, n, args.get_u64("data-seed", 7)).unwrap();
+
+    let mut rng = Rng::new(42);
+    let op = LessUniform::sample(meta.d, m, meta.k, &mut rng);
+    let plan = op.row_plan(meta.k).unwrap();
+
+    let t = std::time::Instant::now();
+    let (x, phibar) = match engine.solve(&problem.a, &problem.b, &plan) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("solve failed: {e:#}");
+            return 1;
+        }
+    };
+    let aot_secs = t.elapsed().as_secs_f64();
+
+    let t = std::time::Instant::now();
+    let x_star = ranntune::linalg::lstsq_qr(&problem.a, &problem.b);
+    let direct_secs = t.elapsed().as_secs_f64();
+    let err = ranntune::sap::arfe(&problem.a, &problem.b, &x, &x_star);
+    println!("AOT solve:   {aot_secs:.4}s   residual estimate (phibar) {phibar:.4}");
+    println!("direct solve: {direct_secs:.4}s");
+    println!("ARFE vs direct: {err:.3e}");
+    if err < 1e-3 {
+        println!("OK: AOT pipeline (JAX+Pallas -> HLO -> PJRT) matches the direct solver");
+        0
+    } else {
+        eprintln!("FAIL: ARFE too high");
+        1
+    }
+}
+
+fn cmd_props(args: &Args) -> i32 {
+    let problem = match problem_from_args(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    println!("dataset {} ({}x{})", problem.name, problem.m(), problem.n());
+    println!("coherence:        {:.4}", coherence(&problem.a));
+    println!("condition number: {:.4}", condition_number(&problem.a));
+    0
+}
+
+fn cmd_figures(args: &Args) -> i32 {
+    let scale = figures::FigScale::parse(args.get("scale").unwrap_or("default"));
+    let out = PathBuf::from(args.get("out").unwrap_or("results"));
+    println!(
+        "scale: {} (m={} n={} budget={} seeds={})",
+        scale.label, scale.m, scale.n, scale.budget, scale.seeds
+    );
+    let report = if args.has("all") {
+        figures::all_figures(&scale, &out)
+    } else if let Some(f) = args.get("fig") {
+        match f {
+            "1" => figures::fig1(&scale, &out),
+            "4" => figures::grid_figure(&scale, &["GA", "T5", "T3", "T1"], "fig4", &out),
+            "5" => figures::tuner_figure(&scale, &["GA", "T5", "T3", "T1"], "fig5", &out),
+            "6" => figures::fig6(&scale, &out),
+            "7" => figures::fig7(&scale, &out),
+            "8" => {
+                figures::grid_figure(&scale, &["Musk", "CIFAR10", "Localization"], "fig8", &out)
+            }
+            "9" => {
+                figures::tuner_figure(&scale, &["Musk", "CIFAR10", "Localization"], "fig9", &out)
+            }
+            "10" => figures::fig10(&scale, &out),
+            other => {
+                eprintln!("unknown figure {other}");
+                return 2;
+            }
+        }
+    } else if let Some(t) = args.get("table") {
+        match t {
+            "3" => figures::table3(&scale, &out),
+            "5" => figures::table5(&scale, &out),
+            other => {
+                eprintln!("unknown table {other}");
+                return 2;
+            }
+        }
+    } else {
+        eprintln!("specify --fig N, --table N, or --all");
+        return 2;
+    };
+    println!("{report}");
+    println!("results written to {}", out.display());
+    0
+}

@@ -1,0 +1,176 @@
+//! Evaluation records and tuning histories — the unit of comparison in
+//! every Figure 5/6/7/9 panel (best-so-far vs number of evaluations and
+//! vs accumulated function-evaluation time).
+
+use crate::sap::SapConfig;
+
+/// One function evaluation of the objective.
+#[derive(Clone, Debug)]
+pub struct Trial {
+    pub config: SapConfig,
+    /// Mean wall-clock seconds over num_repeats solver runs.
+    pub wall_clock: f64,
+    /// Mean ARFE over the repeats.
+    pub arfe: f64,
+    /// Objective value: wall_clock, or penalty_factor × wall_clock on
+    /// failure.
+    pub value: f64,
+    /// ARFE > allowance_factor × ARFE_ref?
+    pub failed: bool,
+    /// Was this the ARFE_ref-defining reference evaluation?
+    pub is_reference: bool,
+}
+
+/// An ordered record of evaluations (one tuner run).
+#[derive(Clone, Debug, Default)]
+pub struct History {
+    trials: Vec<Trial>,
+}
+
+impl History {
+    pub fn new() -> History {
+        History { trials: Vec::new() }
+    }
+
+    pub fn push(&mut self, t: Trial) {
+        self.trials.push(t);
+    }
+
+    pub fn trials(&self) -> &[Trial] {
+        &self.trials
+    }
+
+    pub fn len(&self) -> usize {
+        self.trials.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.trials.is_empty()
+    }
+
+    /// Best (lowest-objective) trial so far.
+    pub fn best(&self) -> Option<&Trial> {
+        self.trials
+            .iter()
+            .min_by(|a, b| a.value.partial_cmp(&b.value).unwrap())
+    }
+
+    /// Best *non-failed* wall-clock time (the paper reports tuned results
+    /// as the best valid configuration's time).
+    pub fn best_valid_time(&self) -> Option<f64> {
+        self.trials
+            .iter()
+            .filter(|t| !t.failed)
+            .map(|t| t.wall_clock)
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// Series of best-so-far objective values indexed by evaluation count
+    /// (Figure 5a's y-axis).
+    pub fn best_so_far(&self) -> Vec<f64> {
+        let mut best = f64::INFINITY;
+        self.trials
+            .iter()
+            .map(|t| {
+                best = best.min(t.value);
+                best
+            })
+            .collect()
+    }
+
+    /// (accumulated evaluation seconds, best-so-far) pairs (Figure 5b).
+    /// Accumulated time sums *actual* wall-clock cost of evaluations
+    /// (repeats × mean), the paper's "accumulated function evaluation
+    /// time".
+    pub fn best_vs_time(&self, num_repeats: usize) -> Vec<(f64, f64)> {
+        let mut best = f64::INFINITY;
+        let mut acc = 0.0;
+        self.trials
+            .iter()
+            .map(|t| {
+                acc += t.wall_clock * num_repeats as f64;
+                best = best.min(t.value);
+                (acc, best)
+            })
+            .collect()
+    }
+
+    /// Total accumulated function-evaluation time (Figure 5c).
+    pub fn total_eval_time(&self, num_repeats: usize) -> f64 {
+        self.trials.iter().map(|t| t.wall_clock * num_repeats as f64).sum()
+    }
+
+    /// Number of evaluations needed to first reach `target` or better
+    /// (the paper's headline metric: "TLA needs only 6 parameter
+    /// configurations"). None if never reached.
+    pub fn evals_to_reach(&self, target: f64) -> Option<usize> {
+        self.trials.iter().position(|t| t.value <= target).map(|i| i + 1)
+    }
+
+    /// Fraction of failed trials (Appendix C analysis).
+    pub fn failure_rate(&self) -> f64 {
+        if self.trials.is_empty() {
+            return 0.0;
+        }
+        self.trials.iter().filter(|t| t.failed).count() as f64 / self.trials.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trial(value: f64, wall: f64, failed: bool) -> Trial {
+        Trial {
+            config: SapConfig::reference(),
+            wall_clock: wall,
+            arfe: 1e-9,
+            value,
+            failed,
+            is_reference: false,
+        }
+    }
+
+    #[test]
+    fn best_and_series() {
+        let mut h = History::new();
+        for (v, w) in [(3.0, 3.0), (1.0, 1.0), (2.0, 2.0)] {
+            h.push(trial(v, w, false));
+        }
+        assert_eq!(h.best().unwrap().value, 1.0);
+        assert_eq!(h.best_so_far(), vec![3.0, 1.0, 1.0]);
+        assert_eq!(h.evals_to_reach(1.5), Some(2));
+        assert_eq!(h.evals_to_reach(0.5), None);
+    }
+
+    #[test]
+    fn best_valid_excludes_failures() {
+        let mut h = History::new();
+        h.push(trial(0.2, 0.1, true)); // fast but failed
+        h.push(trial(0.5, 0.5, false));
+        assert_eq!(h.best_valid_time(), Some(0.5));
+        assert!((h.failure_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_accounting() {
+        let mut h = History::new();
+        h.push(trial(2.0, 2.0, false));
+        h.push(trial(1.0, 1.0, false));
+        let pairs = h.best_vs_time(5);
+        assert_eq!(pairs.len(), 2);
+        assert!((pairs[0].0 - 10.0).abs() < 1e-12);
+        assert!((pairs[1].0 - 15.0).abs() < 1e-12);
+        assert_eq!(pairs[1].1, 1.0);
+        assert!((h.total_eval_time(5) - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_history_is_safe() {
+        let h = History::new();
+        assert!(h.best().is_none());
+        assert!(h.best_valid_time().is_none());
+        assert_eq!(h.failure_rate(), 0.0);
+        assert!(h.best_so_far().is_empty());
+    }
+}

@@ -1,0 +1,276 @@
+//! The tuning objective pipeline (§4.1–4.2, Table 2, Figure 3).
+//!
+//! * [`ParamSpace`] — the five-dimensional search space of Table 4 with
+//!   [0,1]-normalized encode/decode (GPTune's convention) and the
+//!   categorical/ordinal split used by TLA.
+//! * [`TuningTask`] — a problem plus its space and constant parameters
+//!   (`num_pilots`, `num_repeats`, `ref_config`, `penalty_factor`,
+//!   `allowance_factor`).
+//! * [`Objective`] — the black-box function the tuners call: runs the SAP
+//!   solver `num_repeats` times, averages wall-clock time and ARFE,
+//!   validates against `allowance_factor × ARFE_ref`, and penalizes
+//!   failures by `penalty_factor × wall_clock_time` (§4.1.2).
+//! * [`History`]/[`Trial`] — the per-evaluation record every tuner
+//!   produces; also the unit stored in the crowd database.
+
+mod history;
+mod space;
+
+pub use history::*;
+pub use space::*;
+
+use crate::data::Problem;
+use crate::linalg::lstsq_qr;
+use crate::rng::Rng;
+use crate::sap::{arfe, solve_sap, SapConfig};
+use std::time::Instant;
+
+/// Constant parameters of the tuning pipeline (Table 2 bottom / Table 4).
+#[derive(Clone, Debug)]
+pub struct Constants {
+    /// Initial random samples before surrogate modeling starts.
+    pub num_pilots: usize,
+    /// Runs (distinct solver seeds) averaged per configuration.
+    pub num_repeats: usize,
+    /// The "safe" configuration that defines ARFE_ref.
+    pub ref_config: SapConfig,
+    /// Multiplier applied to failing configurations' wall-clock time.
+    pub penalty_factor: f64,
+    /// Failure threshold: ARFE > allowance_factor × ARFE_ref ⇒ failure.
+    pub allowance_factor: f64,
+}
+
+impl Default for Constants {
+    /// The paper's default experiment constants (Table 4).
+    fn default() -> Constants {
+        Constants {
+            num_pilots: 10,
+            num_repeats: 5,
+            ref_config: SapConfig::reference(),
+            penalty_factor: 2.0,
+            allowance_factor: 10.0,
+        }
+    }
+}
+
+/// A tuning task: the input problem (task parameters m, n) plus the search
+/// space and constants.
+pub struct TuningTask {
+    pub problem: Problem,
+    pub space: ParamSpace,
+    pub constants: Constants,
+}
+
+impl TuningTask {
+    /// Task with the paper's default space and constants.
+    pub fn default_for(problem: Problem) -> TuningTask {
+        TuningTask { problem, space: ParamSpace::paper(), constants: Constants::default() }
+    }
+}
+
+/// The black-box objective. Owns the direct-solver reference solution and
+/// the ARFE_ref state; accumulates every evaluation into a [`History`].
+pub struct Objective {
+    pub task: TuningTask,
+    /// Direct (QR) least-squares solution — the x* in ARFE.
+    x_star: Vec<f64>,
+    /// Wall-clock seconds of the direct solve (reported in benches).
+    pub direct_secs: f64,
+    /// ARFE of the reference configuration; set by the first reference
+    /// evaluation.
+    arfe_ref: Option<f64>,
+    history: History,
+    /// Root generator for solver randomness; each repeat forks a child.
+    rng: Rng,
+}
+
+impl Objective {
+    /// Create the objective: runs the direct solver once (Figure 3's first
+    /// step) to obtain x*.
+    pub fn new(task: TuningTask, seed: u64) -> Objective {
+        let t = Instant::now();
+        let x_star = lstsq_qr(&task.problem.a, &task.problem.b);
+        let direct_secs = t.elapsed().as_secs_f64();
+        Objective {
+            task,
+            x_star,
+            direct_secs,
+            arfe_ref: None,
+            history: History::new(),
+            rng: Rng::new(seed ^ OBJECTIVE_SEED_SALT),
+        }
+    }
+
+    /// ARFE_ref once established (None before the reference evaluation).
+    pub fn arfe_ref(&self) -> Option<f64> {
+        self.arfe_ref
+    }
+
+    pub fn history(&self) -> &History {
+        &self.history
+    }
+
+    pub fn evaluations(&self) -> usize {
+        self.history.len()
+    }
+
+    /// Evaluate the reference configuration, establishing ARFE_ref
+    /// (idempotent; every tuner calls this first, per Figure 3 /
+    /// Algorithm 4.1 line 1).
+    pub fn evaluate_reference(&mut self) -> Trial {
+        if self.arfe_ref.is_some() {
+            // Already established — return the recorded trial.
+            return self.history.trials()[0].clone();
+        }
+        let cfg = self.task.constants.ref_config;
+        let trial = self.run_config(&cfg, true);
+        self.history.push(trial.clone());
+        trial
+    }
+
+    /// Evaluate a configuration: `num_repeats` solver runs with distinct
+    /// seeds, averaged; validity check against ARFE_ref; penalty on
+    /// failure. Requires the reference to have been evaluated.
+    pub fn evaluate(&mut self, cfg: &SapConfig) -> Trial {
+        assert!(
+            self.arfe_ref.is_some(),
+            "evaluate_reference() must run before evaluate() — see Figure 3"
+        );
+        let trial = self.run_config(cfg, false);
+        self.history.push(trial.clone());
+        trial
+    }
+
+    fn run_config(&mut self, cfg: &SapConfig, is_reference: bool) -> Trial {
+        let repeats = self.task.constants.num_repeats.max(1);
+        let mut times = Vec::with_capacity(repeats);
+        let mut errors = Vec::with_capacity(repeats);
+        for r in 0..repeats {
+            let mut child = self.rng.fork(r as u64);
+            let sol = solve_sap(&self.task.problem.a, &self.task.problem.b, cfg, &mut child);
+            times.push(sol.stats.total_secs);
+            errors.push(arfe(&self.task.problem.a, &self.task.problem.b, &sol.x, &self.x_star));
+        }
+        let wall_clock = crate::gp::stats::mean(&times);
+        let mean_arfe = crate::gp::stats::mean(&errors);
+
+        if is_reference {
+            self.arfe_ref = Some(mean_arfe.max(f64::MIN_POSITIVE));
+        }
+        let arfe_ref = self.arfe_ref.expect("reference evaluated");
+        let failed = mean_arfe > self.task.constants.allowance_factor * arfe_ref;
+        let value = if failed {
+            self.task.constants.penalty_factor * wall_clock
+        } else {
+            wall_clock
+        };
+        Trial {
+            config: *cfg,
+            wall_clock,
+            arfe: mean_arfe,
+            value,
+            failed,
+            is_reference,
+        }
+    }
+}
+
+/// Salt mixed into the objective's solver-randomness stream so tuner seeds
+/// and solver seeds never collide even when callers reuse small integers.
+const OBJECTIVE_SEED_SALT: u64 = 0x5eed_0b1e_c701_u64;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate_synthetic, SyntheticKind};
+    use crate::sap::SapAlgorithm;
+    use crate::sketch::SketchKind;
+
+    fn small_task() -> TuningTask {
+        let mut rng = Rng::new(1);
+        let p = generate_synthetic(SyntheticKind::GA, 400, 20, &mut rng);
+        TuningTask {
+            problem: p,
+            space: ParamSpace::paper(),
+            constants: Constants { num_repeats: 2, ..Constants::default() },
+        }
+    }
+
+    #[test]
+    fn reference_establishes_arfe_ref() {
+        let mut obj = Objective::new(small_task(), 0);
+        assert!(obj.arfe_ref().is_none());
+        let t = obj.evaluate_reference();
+        assert!(t.is_reference);
+        assert!(obj.arfe_ref().unwrap() > 0.0);
+        assert!(!t.failed, "reference config must pass its own threshold");
+        // idempotent
+        let t2 = obj.evaluate_reference();
+        assert_eq!(obj.evaluations(), 1);
+        assert_eq!(t.wall_clock, t2.wall_clock);
+    }
+
+    #[test]
+    #[should_panic(expected = "evaluate_reference")]
+    fn evaluate_before_reference_panics() {
+        let mut obj = Objective::new(small_task(), 0);
+        let cfg = SapConfig::reference();
+        let _ = obj.evaluate(&cfg);
+    }
+
+    #[test]
+    fn good_config_passes_and_bad_config_penalized() {
+        let mut obj = Objective::new(small_task(), 0);
+        obj.evaluate_reference();
+        // A reasonable config: passes.
+        let good = SapConfig {
+            algorithm: SapAlgorithm::QrLsqr,
+            sketch: SketchKind::Sjlt,
+            sampling_factor: 4.0,
+            vec_nnz: 8,
+            safety_factor: 1,
+        };
+        let t = obj.evaluate(&good);
+        assert!(!t.failed, "ARFE {} vs ref {}", t.arfe, obj.arfe_ref().unwrap());
+        assert_eq!(t.value, t.wall_clock);
+        // Record count grows.
+        assert_eq!(obj.evaluations(), 2);
+    }
+
+    #[test]
+    fn penalty_multiplies_wall_clock() {
+        // Force failure by shrinking the allowance to (essentially) zero.
+        let mut task = small_task();
+        task.constants.allowance_factor = 1e-12;
+        task.constants.penalty_factor = 3.0;
+        let mut obj = Objective::new(task, 0);
+        obj.evaluate_reference();
+        let cfg = SapConfig {
+            algorithm: SapAlgorithm::SvdPgd,
+            sketch: SketchKind::LessUniform,
+            sampling_factor: 1.0,
+            vec_nnz: 1,
+            safety_factor: 0,
+        };
+        let t = obj.evaluate(&cfg);
+        assert!(t.failed);
+        assert!((t.value - 3.0 * t.wall_clock).abs() < 1e-15);
+    }
+
+    #[test]
+    fn history_tracks_best() {
+        let mut obj = Objective::new(small_task(), 0);
+        obj.evaluate_reference();
+        let cfgs = [
+            SapConfig { sampling_factor: 3.0, vec_nnz: 4, ..SapConfig::reference() },
+            SapConfig { sampling_factor: 2.0, vec_nnz: 2, ..SapConfig::reference() },
+        ];
+        for c in &cfgs {
+            obj.evaluate(c);
+        }
+        let best = obj.history().best().unwrap();
+        let min_val =
+            obj.history().trials().iter().map(|t| t.value).fold(f64::INFINITY, f64::min);
+        assert_eq!(best.value, min_val);
+    }
+}

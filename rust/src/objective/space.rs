@@ -1,0 +1,221 @@
+//! The five-dimensional parameter space (Table 2/4) with [0,1]
+//! normalization (GPTune's convention) and the categorical/ordinal split
+//! used by the transfer-learning tuner.
+
+use crate::sap::{SapAlgorithm, SapConfig};
+use crate::sketch::SketchKind;
+
+/// Search bounds for the SAP tuning space.
+#[derive(Clone, Debug)]
+pub struct ParamSpace {
+    /// sampling_factor range (real); paper: [1, 10].
+    pub sf: (f64, f64),
+    /// vec_nnz range (integer); paper: [1, 100].
+    pub nnz: (usize, usize),
+    /// safety_factor range (integer); paper: [0, 4].
+    pub safety: (u32, u32),
+}
+
+/// Number of encoded dimensions: alg, sketch, sf, nnz, safety.
+pub const DIMS: usize = 5;
+/// Number of ordinal dimensions (sf, nnz, safety) used by TLA's LCM stage.
+pub const ORDINAL_DIMS: usize = 3;
+/// Number of (SAP_algorithm × sketching_operator) categories.
+pub const N_CATEGORIES: usize = 6;
+
+impl ParamSpace {
+    /// The paper's Table 4 bounds.
+    pub fn paper() -> ParamSpace {
+        ParamSpace { sf: (1.0, 10.0), nnz: (1, 100), safety: (0, 4) }
+    }
+
+    /// Encode a configuration into [0,1]^5:
+    /// [alg, sketch, sampling_factor, vec_nnz, safety_factor].
+    /// Categoricals map to evenly spaced levels (GPTune's default
+    /// treatment, which §4.3 notes works poorly — exactly what TLA's
+    /// bandit stage fixes).
+    pub fn encode(&self, cfg: &SapConfig) -> [f64; DIMS] {
+        let alg = match cfg.algorithm {
+            SapAlgorithm::QrLsqr => 0.0,
+            SapAlgorithm::SvdLsqr => 0.5,
+            SapAlgorithm::SvdPgd => 1.0,
+        };
+        let sketch = match cfg.sketch {
+            SketchKind::Sjlt => 0.0,
+            SketchKind::LessUniform => 1.0,
+        };
+        [
+            alg,
+            sketch,
+            norm(cfg.sampling_factor, self.sf.0, self.sf.1),
+            norm(cfg.vec_nnz as f64, self.nnz.0 as f64, self.nnz.1 as f64),
+            norm(cfg.safety_factor as f64, self.safety.0 as f64, self.safety.1 as f64),
+        ]
+    }
+
+    /// Decode a [0,1]^5 point into the nearest valid configuration
+    /// (categoricals round to levels; integers round to the grid).
+    pub fn decode(&self, x: &[f64]) -> SapConfig {
+        assert_eq!(x.len(), DIMS);
+        let alg = match x[0] {
+            v if v < 0.25 => SapAlgorithm::QrLsqr,
+            v if v < 0.75 => SapAlgorithm::SvdLsqr,
+            _ => SapAlgorithm::SvdPgd,
+        };
+        let sketch = if x[1] < 0.5 { SketchKind::Sjlt } else { SketchKind::LessUniform };
+        SapConfig {
+            algorithm: alg,
+            sketch,
+            sampling_factor: denorm(x[2], self.sf.0, self.sf.1),
+            vec_nnz: denorm(x[3], self.nnz.0 as f64, self.nnz.1 as f64).round() as usize,
+            safety_factor: denorm(x[4], self.safety.0 as f64, self.safety.1 as f64).round()
+                as u32,
+        }
+    }
+
+    /// Encode only the ordinal part (sf, nnz, safety) into [0,1]^3 — the
+    /// space TLA's LCM stage models per category.
+    pub fn encode_ordinals(&self, cfg: &SapConfig) -> [f64; ORDINAL_DIMS] {
+        let e = self.encode(cfg);
+        [e[2], e[3], e[4]]
+    }
+
+    /// Decode ordinals into a configuration within the given category.
+    pub fn decode_ordinals(&self, cat: usize, x: &[f64]) -> SapConfig {
+        assert_eq!(x.len(), ORDINAL_DIMS);
+        let (algorithm, sketch) = category_parts(cat);
+        SapConfig {
+            algorithm,
+            sketch,
+            sampling_factor: denorm(x[0], self.sf.0, self.sf.1),
+            vec_nnz: denorm(x[1], self.nnz.0 as f64, self.nnz.1 as f64).round() as usize,
+            safety_factor: denorm(x[2], self.safety.0 as f64, self.safety.1 as f64).round()
+                as u32,
+        }
+    }
+
+    /// Uniformly random configuration.
+    pub fn sample(&self, rng: &mut crate::rng::Rng) -> SapConfig {
+        let x: Vec<f64> = (0..DIMS).map(|_| rng.uniform()).collect();
+        self.decode(&x)
+    }
+}
+
+fn norm(v: f64, lo: f64, hi: f64) -> f64 {
+    if hi <= lo {
+        return 0.0;
+    }
+    ((v - lo) / (hi - lo)).clamp(0.0, 1.0)
+}
+
+fn denorm(t: f64, lo: f64, hi: f64) -> f64 {
+    lo + t.clamp(0.0, 1.0) * (hi - lo)
+}
+
+/// Category index (0..6) of a configuration: 2·alg_index + sketch_index.
+pub fn category_index(cfg: &SapConfig) -> usize {
+    let a = match cfg.algorithm {
+        SapAlgorithm::QrLsqr => 0,
+        SapAlgorithm::SvdLsqr => 1,
+        SapAlgorithm::SvdPgd => 2,
+    };
+    let s = match cfg.sketch {
+        SketchKind::Sjlt => 0,
+        SketchKind::LessUniform => 1,
+    };
+    a * 2 + s
+}
+
+/// Inverse of [`category_index`].
+pub fn category_parts(cat: usize) -> (SapAlgorithm, SketchKind) {
+    assert!(cat < N_CATEGORIES);
+    let alg = match cat / 2 {
+        0 => SapAlgorithm::QrLsqr,
+        1 => SapAlgorithm::SvdLsqr,
+        _ => SapAlgorithm::SvdPgd,
+    };
+    let sketch = if cat % 2 == 0 { SketchKind::Sjlt } else { SketchKind::LessUniform };
+    (alg, sketch)
+}
+
+/// Human-readable category label, e.g. "QR-LSQR/LessUniform".
+pub fn category_label(cat: usize) -> String {
+    let (a, s) = category_parts(cat);
+    format!("{}/{}", a.name(), s.name())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn encode_decode_round_trip() {
+        let space = ParamSpace::paper();
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let cfg = space.sample(&mut rng);
+            let enc = space.encode(&cfg);
+            let back = space.decode(&enc);
+            assert_eq!(back.algorithm, cfg.algorithm);
+            assert_eq!(back.sketch, cfg.sketch);
+            assert!((back.sampling_factor - cfg.sampling_factor).abs() < 1e-12);
+            assert_eq!(back.vec_nnz, cfg.vec_nnz);
+            assert_eq!(back.safety_factor, cfg.safety_factor);
+        }
+    }
+
+    #[test]
+    fn sampled_configs_respect_bounds() {
+        let space = ParamSpace::paper();
+        let mut rng = Rng::new(2);
+        for _ in 0..500 {
+            let cfg = space.sample(&mut rng);
+            assert!((1.0..=10.0).contains(&cfg.sampling_factor));
+            assert!((1..=100).contains(&cfg.vec_nnz));
+            assert!(cfg.safety_factor <= 4);
+        }
+    }
+
+    #[test]
+    fn category_round_trip() {
+        for cat in 0..N_CATEGORIES {
+            let (a, s) = category_parts(cat);
+            let cfg = SapConfig {
+                algorithm: a,
+                sketch: s,
+                sampling_factor: 2.0,
+                vec_nnz: 5,
+                safety_factor: 1,
+            };
+            assert_eq!(category_index(&cfg), cat);
+            assert!(category_label(cat).contains('/'));
+        }
+    }
+
+    #[test]
+    fn ordinal_encode_decode() {
+        let space = ParamSpace::paper();
+        let cfg = SapConfig {
+            algorithm: crate::sap::SapAlgorithm::SvdLsqr,
+            sketch: crate::sketch::SketchKind::LessUniform,
+            sampling_factor: 5.5,
+            vec_nnz: 42,
+            safety_factor: 3,
+        };
+        let ord = space.encode_ordinals(&cfg);
+        let back = space.decode_ordinals(category_index(&cfg), &ord);
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn all_categories_reachable_by_sampling() {
+        let space = ParamSpace::paper();
+        let mut rng = Rng::new(3);
+        let mut seen = [false; N_CATEGORIES];
+        for _ in 0..500 {
+            seen[category_index(&space.sample(&mut rng))] = true;
+        }
+        assert!(seen.iter().all(|&x| x), "{seen:?}");
+    }
+}

@@ -1,0 +1,151 @@
+//! Continuous distributions on top of [`Rng`](super::Rng).
+//!
+//! The synthetic test matrices of the paper (§5.1) need multivariate normal
+//! and multivariate Student-t rows with an AR(1) covariance. A multivariate
+//! t with ν degrees of freedom is generated as `z / sqrt(w/ν)` where `z` is
+//! multivariate normal and `w ~ χ²(ν)`; the χ² itself comes from a gamma
+//! sampler (Marsaglia–Tsang) so ν can be any positive real (T1 needs ν=1).
+
+use super::Rng;
+
+impl Rng {
+    /// Standard normal via Box–Muller (polar form, no trig in hot loop).
+    #[inline]
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u = 2.0 * self.uniform() - 1.0;
+            let v = 2.0 * self.uniform() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                return u * (-2.0 * s.ln() / s).sqrt();
+            }
+        }
+    }
+
+    /// Normal with given mean/stddev.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Fill a slice with iid standard normals.
+    pub fn fill_normal(&mut self, out: &mut [f64]) {
+        for v in out.iter_mut() {
+            *v = self.normal();
+        }
+    }
+
+    /// Gamma(shape α, scale 1) via Marsaglia–Tsang squeeze. α > 0.
+    pub fn gamma(&mut self, alpha: f64) -> f64 {
+        debug_assert!(alpha > 0.0);
+        if alpha < 1.0 {
+            // Boost: Gamma(α) = Gamma(α+1) · U^{1/α}
+            let g = self.gamma(alpha + 1.0);
+            let u = self.uniform().max(f64::MIN_POSITIVE);
+            return g * u.powf(1.0 / alpha);
+        }
+        let d = alpha - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = self.uniform();
+            if u < 1.0 - 0.0331 * x.powi(4) {
+                return d * v3;
+            }
+            if u.ln() < 0.5 * x * x + d * (1.0 - v3 + v3.ln()) {
+                return d * v3;
+            }
+        }
+    }
+
+    /// Chi-square with ν degrees of freedom (ν > 0, need not be integral).
+    #[inline]
+    pub fn chi_square(&mut self, nu: f64) -> f64 {
+        2.0 * self.gamma(nu / 2.0)
+    }
+
+    /// Student-t with ν degrees of freedom.
+    #[inline]
+    pub fn student_t(&mut self, nu: f64) -> f64 {
+        let z = self.normal();
+        let w = self.chi_square(nu).max(f64::MIN_POSITIVE);
+        z / (w / nu).sqrt()
+    }
+
+    /// Exponential with rate λ.
+    #[inline]
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        -self.uniform().max(f64::MIN_POSITIVE).ln() / lambda
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::rng::Rng;
+
+    fn mean_var(xs: &[f64]) -> (f64, f64) {
+        let n = xs.len() as f64;
+        let m = xs.iter().sum::<f64>() / n;
+        let v = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1.0);
+        (m, v)
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(1);
+        let xs: Vec<f64> = (0..200_000).map(|_| r.normal()).collect();
+        let (m, v) = mean_var(&xs);
+        assert!(m.abs() < 0.01, "mean {m}");
+        assert!((v - 1.0).abs() < 0.02, "var {v}");
+    }
+
+    #[test]
+    fn gamma_moments() {
+        let mut r = Rng::new(2);
+        for &alpha in &[0.5, 1.0, 2.5, 7.0] {
+            let xs: Vec<f64> = (0..100_000).map(|_| r.gamma(alpha)).collect();
+            let (m, v) = mean_var(&xs);
+            assert!((m - alpha).abs() < 0.06 * alpha.max(1.0), "alpha={alpha} mean {m}");
+            assert!((v - alpha).abs() < 0.12 * alpha.max(1.0), "alpha={alpha} var {v}");
+        }
+    }
+
+    #[test]
+    fn chi_square_mean() {
+        let mut r = Rng::new(3);
+        let nu = 5.0;
+        let xs: Vec<f64> = (0..100_000).map(|_| r.chi_square(nu)).collect();
+        let (m, v) = mean_var(&xs);
+        assert!((m - nu).abs() < 0.1, "mean {m}");
+        assert!((v - 2.0 * nu).abs() < 0.5, "var {v}");
+    }
+
+    #[test]
+    fn student_t_symmetric_heavy_tails() {
+        let mut r = Rng::new(4);
+        // t(5) has variance ν/(ν-2) = 5/3.
+        let xs: Vec<f64> = (0..300_000).map(|_| r.student_t(5.0)).collect();
+        let (m, v) = mean_var(&xs);
+        assert!(m.abs() < 0.02, "mean {m}");
+        assert!((v - 5.0 / 3.0).abs() < 0.1, "var {v}");
+        // t(1) (Cauchy) must produce extreme values that a normal would not.
+        let big = (0..100_000)
+            .map(|_| r.student_t(1.0))
+            .filter(|x| x.abs() > 50.0)
+            .count();
+        assert!(big > 100, "Cauchy tail too thin: {big}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Rng::new(5);
+        let xs: Vec<f64> = (0..100_000).map(|_| r.exponential(2.0)).collect();
+        let (m, _) = mean_var(&xs);
+        assert!((m - 0.5).abs() < 0.01, "mean {m}");
+    }
+}

@@ -1,0 +1,218 @@
+//! Pseudo-random number generation substrate.
+//!
+//! Everything stochastic in this crate (sketching operators, synthetic data,
+//! tuner seeds, Saltelli sampling bootstrap) flows through [`Rng`], a
+//! xoshiro256++ generator. We implement our own PRNG because the build is
+//! fully offline (no `rand` crate in the vendored set) and because RandNLA
+//! reproducibility demands explicit, seedable streams: the paper repeats
+//! every tuner five times with different seeds and every function
+//! evaluation `num_repeats` times.
+//!
+//! The distributions implemented here are exactly the ones the paper's
+//! experiment section needs:
+//! * uniform / standard normal (Box–Muller) — GA matrix rows, Gaussian noise ε;
+//! * Student-t via normal/chi-square mixing — T5/T3/T1 matrix rows;
+//! * index sampling without replacement — SJLT column supports and
+//!   LessUniform row supports;
+//! * random signs — sketch values ±1/√k and ±√(m/(k·d)).
+
+mod distributions;
+mod sample;
+
+/// xoshiro256++ PRNG (Blackman & Vigna). Fast, 256-bit state, passes BigCrush;
+/// plenty for sketching and tuner seeding (not cryptographic).
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+#[inline(always)]
+fn rotl(x: u64, k: u32) -> u64 {
+    (x << k) | (x >> (64 - k))
+}
+
+/// SplitMix64, used to expand a 64-bit seed into the 256-bit xoshiro state.
+/// This is the canonical seeding procedure recommended by the xoshiro authors.
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed. Two generators with the same
+    /// seed produce identical streams on every platform.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        // All-zero state is the one forbidden state; splitmix64 cannot
+        // produce four zeros from any seed, but guard anyway.
+        if s == [0, 0, 0, 0] {
+            Self { s: [1, 2, 3, 4] }
+        } else {
+            Self { s }
+        }
+    }
+
+    /// Derive an independent child stream. Used to give each repeat /
+    /// worker thread its own generator without overlapping streams.
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        let a = self.next_u64();
+        let b = self.next_u64();
+        Rng::new(a ^ b.rotate_left(17) ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    /// Next raw 64-bit output (xoshiro256++ scrambler).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = rotl(self.s[0].wrapping_add(self.s[3]), 23).wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = rotl(self.s[3], 45);
+        result
+    }
+
+    /// Uniform in [0, 1). 53-bit mantissa construction.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Unbiased integer in [0, n) via Lemire's nearly-divisionless method.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        let n = n as u64;
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as usize
+    }
+
+    /// Integer in [lo, hi] inclusive.
+    #[inline]
+    pub fn int_in(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(hi >= lo);
+        lo + self.below((hi - lo + 1) as usize) as i64
+    }
+
+    /// Random sign: +1.0 or -1.0 with equal probability.
+    #[inline]
+    pub fn sign(&mut self) -> f64 {
+        if self.next_u64() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.uniform() < p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_same_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn uniform_bounds_and_mean() {
+        let mut r = Rng::new(7);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_roughly_uniform() {
+        let mut r = Rng::new(3);
+        let mut counts = [0usize; 10];
+        for _ in 0..100_000 {
+            counts[r.below(10)] += 1;
+        }
+        for &c in &counts {
+            assert!((8_500..11_500).contains(&c), "counts {counts:?}");
+        }
+    }
+
+    #[test]
+    fn int_in_inclusive_bounds() {
+        let mut r = Rng::new(11);
+        let mut saw_lo = false;
+        let mut saw_hi = false;
+        for _ in 0..10_000 {
+            let v = r.int_in(-3, 3);
+            assert!((-3..=3).contains(&v));
+            saw_lo |= v == -3;
+            saw_hi |= v == 3;
+        }
+        assert!(saw_lo && saw_hi);
+    }
+
+    #[test]
+    fn sign_is_balanced() {
+        let mut r = Rng::new(5);
+        let pos = (0..100_000).filter(|_| r.sign() > 0.0).count();
+        assert!((48_000..52_000).contains(&pos));
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let mut root = Rng::new(9);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+}

@@ -1,0 +1,131 @@
+//! Index sampling and shuffling.
+//!
+//! Sketching operators need `k` distinct indices per row/column, sampled
+//! uniformly without replacement (§3.2). For small `k` relative to the
+//! population we use Floyd's algorithm (O(k) expected); for large `k` a
+//! partial Fisher–Yates over a scratch permutation.
+
+use super::Rng;
+
+impl Rng {
+    /// Sample `k` distinct indices from `0..n` uniformly without
+    /// replacement. Output order is unspecified but deterministic per seed.
+    pub fn sample_without_replacement(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot sample {k} from {n} without replacement");
+        if k == 0 {
+            return Vec::new();
+        }
+        // Heuristic crossover: Floyd does k hash-set probes; Fisher–Yates
+        // allocates the whole population. Floyd wins when k << n.
+        if k * 8 <= n {
+            self.floyd_sample(n, k)
+        } else {
+            self.partial_fisher_yates(n, k)
+        }
+    }
+
+    /// Floyd's algorithm: for j in n-k..n, draw t in [0..=j]; insert t if
+    /// absent, else insert j. Produces a uniform k-subset.
+    fn floyd_sample(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut chosen: Vec<usize> = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.below(j + 1);
+            if chosen.contains(&t) {
+                chosen.push(j);
+            } else {
+                chosen.push(t);
+            }
+        }
+        chosen
+    }
+
+    fn partial_fisher_yates(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        let n = xs.len();
+        for i in (1..n).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// A random permutation of 0..n.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut p);
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::rng::Rng;
+    use std::collections::HashSet;
+
+    #[test]
+    fn sampling_is_distinct_and_in_range() {
+        let mut r = Rng::new(1);
+        for &(n, k) in &[(10usize, 3usize), (10, 10), (1000, 5), (1000, 900), (1, 1)] {
+            let s = r.sample_without_replacement(n, k);
+            assert_eq!(s.len(), k);
+            let set: HashSet<_> = s.iter().collect();
+            assert_eq!(set.len(), k, "duplicates for n={n} k={k}");
+            assert!(s.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn sampling_is_uniform_marginally() {
+        // Each index should appear with probability k/n.
+        let mut r = Rng::new(2);
+        let (n, k, trials) = (20usize, 5usize, 40_000usize);
+        let mut counts = vec![0usize; n];
+        for _ in 0..trials {
+            for i in r.sample_without_replacement(n, k) {
+                counts[i] += 1;
+            }
+        }
+        let expect = trials * k / n; // 10_000
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64 - expect as f64).abs() < 0.06 * expect as f64,
+                "index {i}: {c} vs {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn floyd_and_fisher_yates_both_uniform() {
+        // Exercise both code paths explicitly.
+        let mut r = Rng::new(3);
+        let s1 = r.floyd_sample(1000, 10);
+        assert_eq!(s1.iter().collect::<HashSet<_>>().len(), 10);
+        let s2 = r.partial_fisher_yates(100, 90);
+        assert_eq!(s2.iter().collect::<HashSet<_>>().len(), 90);
+    }
+
+    #[test]
+    fn permutation_is_a_permutation() {
+        let mut r = Rng::new(4);
+        let p = r.permutation(100);
+        let mut q = p.clone();
+        q.sort_unstable();
+        assert_eq!(q, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic]
+    fn oversampling_panics() {
+        let mut r = Rng::new(5);
+        let _ = r.sample_without_replacement(3, 4);
+    }
+}

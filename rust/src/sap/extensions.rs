@@ -1,0 +1,270 @@
+//! Extension solvers discussed (but not tuned) in the paper's appendices.
+//!
+//! * [`chebyshev_preconditioned`] — the **Chebyshev semi-iterative
+//!   method** (Golub & Varga 1961) that the original LSRN used in
+//!   distributed settings (Appendix A.2): with a Gaussian-quality sketch
+//!   the spectrum of A·M is confined to [1−ε, 1+ε], ε ≈ √(n/d), so a
+//!   Chebyshev recurrence needs *no inner products* — attractive when
+//!   reductions are expensive. We expose the spectral bounds as
+//!   parameters and derive the default from the sketch dimensions.
+//! * [`pgd_momentum_preconditioned`] — PGD with **heavy-ball momentum**
+//!   (Appendix A.3's pointer to Ozaslan et al. / Lacotte & Pilanci):
+//!   z_{t+1} = z_t + α·Mᵀ Aᵀ r_t + β·(z_t − z_{t−1}), with the optimal
+//!   stationary (α, β) for spectrum [a, b]:
+//!   α = (2/(√a+√b))², β = ((√b−√a)/(√b+√a))².
+//!
+//! Both are benchmarked against LSQR/PGD in `benches/` ablations; they
+//! are deliberately not part of the tuned search space (the paper's
+//! space has exactly three algorithms), demonstrating how a downstream
+//! user extends the solver zoo without touching the tuner.
+
+use crate::linalg::{axpy, gemv, gemv_t, norm2, Mat};
+use crate::sap::Preconditioner;
+
+/// Result of an extension-solver run.
+pub struct ExtensionResult {
+    pub x: Vec<f64>,
+    pub iterations: usize,
+    /// Final value of criterion (3.2) with ‖AM‖_EF = √n.
+    pub termination_value: f64,
+    pub converged: bool,
+}
+
+/// Default spectral interval for H = (AM)ᵀ(AM) given sketch dimensions.
+///
+/// By Proposition 3.1 the spectrum of AM equals that of (SU)†, and for a
+/// Gaussian-quality embedding σ(SU) ⊂ [1−ε, 1+ε] with ε ≈ √(n/d)
+/// (cf. LSRN §4). Hence σ²(AM) ⊂ [1/(1+ε)², 1/(1−ε)²]. A 1.25× safety
+/// margin on ε covers the looser constants of sparse embeddings — a
+/// too-narrow interval makes Chebyshev diverge, a slightly-wide one only
+/// costs a few iterations.
+pub fn default_spectrum_bounds(d: usize, n: usize) -> (f64, f64) {
+    let eps = (1.25 * (n as f64 / d as f64).sqrt()).min(0.95);
+    (1.0 / ((1.0 + eps) * (1.0 + eps)), 1.0 / ((1.0 - eps) * (1.0 - eps)))
+}
+
+/// Chebyshev semi-iteration on the normal equations of the
+/// preconditioned system: solves H·z = g₀ with H = (AM)ᵀ(AM),
+/// g₀ = (AM)ᵀb, spectrum(H) ⊂ [a, b] (squared singular-value bounds).
+///
+/// Recurrence follows Saad, *Iterative Methods for Sparse Linear
+/// Systems*, Alg. 12.1 (θ = (b+a)/2, δ = (b−a)/2, σ₁ = θ/δ):
+///   d₀ = g₀/θ;  z ← z + d;  g ← g − H·d;
+///   ρ_{k+1} = 1/(2σ₁ − ρ_k);  d ← ρ_{k+1}ρ_k·d + (2ρ_{k+1}/δ)·g.
+/// Note there are **no inner products** in the update — the property that
+/// made it attractive for LSRN's distributed setting (Appendix A.2).
+pub fn chebyshev_preconditioned(
+    a: &Mat,
+    b: &[f64],
+    precond: &Preconditioner,
+    z0: &[f64],
+    spectrum: (f64, f64),
+    rho_tol: f64,
+    max_iters: usize,
+) -> ExtensionResult {
+    let (lo, hi) = spectrum;
+    assert!(lo > 0.0 && hi > lo, "need 0 < a < b, got [{lo}, {hi}]");
+    let am_ef = (a.cols() as f64).sqrt();
+
+    let op = |v: &[f64]| -> Vec<f64> { gemv(a, &precond.apply(v)) };
+    let op_t = |u: &[f64]| -> Vec<f64> { precond.apply_t(&gemv_t(a, u)) };
+    // H·v without forming H.
+    let apply_h = |v: &[f64]| -> Vec<f64> { op_t(&op(v)) };
+
+    let theta = (hi + lo) / 2.0;
+    let delta = (hi - lo) / 2.0;
+    let sigma1 = theta / delta;
+    let mut rho = 1.0 / sigma1;
+
+    let mut z = z0.to_vec();
+    // Raw residual (for the termination criterion) and H-residual g.
+    let mut resid = {
+        let az = op(&z);
+        let mut r = b.to_vec();
+        axpy(-1.0, &az, &mut r);
+        r
+    };
+    let mut g = op_t(&resid);
+    let mut d: Vec<f64> = g.iter().map(|gi| gi / theta).collect();
+
+    let mut term_val = f64::INFINITY;
+    let mut iterations = 0;
+    let mut converged = false;
+    for it in 1..=max_iters {
+        // Termination (3.2): ‖(AM)ᵀr‖ = ‖g‖, ‖AM‖_EF = √n (as PGD).
+        let g_norm = norm2(&g);
+        let r_norm = norm2(&resid);
+        term_val = if r_norm > 0.0 { g_norm / (am_ef * r_norm) } else { 0.0 };
+        if term_val <= rho_tol {
+            converged = true;
+            break;
+        }
+        iterations = it;
+
+        axpy(1.0, &d, &mut z);
+        let hd = apply_h(&d);
+        axpy(-1.0, &hd, &mut g);
+        // Keep the raw residual in sync for the criterion: r ← r − AM·d.
+        let amd = op(&d);
+        axpy(-1.0, &amd, &mut resid);
+
+        let rho_next = 1.0 / (2.0 * sigma1 - rho);
+        let coeff_d = rho_next * rho;
+        let coeff_g = 2.0 * rho_next / delta;
+        for (di, gi) in d.iter_mut().zip(g.iter()) {
+            *di = coeff_d * *di + coeff_g * gi;
+        }
+        rho = rho_next;
+    }
+
+    ExtensionResult { x: precond.apply(&z), iterations, termination_value: term_val, converged }
+}
+
+/// PGD with heavy-ball momentum at the stationary optimum for spectrum
+/// [a, b] of (AM)ᵀ(AM).
+pub fn pgd_momentum_preconditioned(
+    a: &Mat,
+    b: &[f64],
+    precond: &Preconditioner,
+    z0: &[f64],
+    spectrum: (f64, f64),
+    rho_tol: f64,
+    max_iters: usize,
+) -> ExtensionResult {
+    let (lo, hi) = spectrum;
+    assert!(lo > 0.0 && hi > lo);
+    let alpha = (2.0 / (lo.sqrt() + hi.sqrt())).powi(2);
+    let beta = ((hi.sqrt() - lo.sqrt()) / (hi.sqrt() + lo.sqrt())).powi(2);
+    let r_dim = precond.rank();
+    let am_ef = (a.cols() as f64).sqrt();
+
+    let op = |v: &[f64]| -> Vec<f64> { gemv(a, &precond.apply(v)) };
+    let op_t = |u: &[f64]| -> Vec<f64> { precond.apply_t(&gemv_t(a, u)) };
+
+    let mut z = z0.to_vec();
+    let mut z_prev = z.clone();
+    let mut resid = {
+        let az = op(&z);
+        let mut r = b.to_vec();
+        axpy(-1.0, &az, &mut r);
+        r
+    };
+
+    let mut term_val = f64::INFINITY;
+    let mut iterations = 0;
+    let mut converged = false;
+    for it in 1..=max_iters {
+        let g = op_t(&resid);
+        let g_norm = norm2(&g);
+        let r_norm = norm2(&resid);
+        term_val = if r_norm > 0.0 { g_norm / (am_ef * r_norm) } else { 0.0 };
+        if term_val <= rho_tol {
+            converged = true;
+            break;
+        }
+        iterations = it;
+
+        let mut z_next = vec![0.0; r_dim];
+        for i in 0..r_dim {
+            z_next[i] = z[i] + alpha * g[i] + beta * (z[i] - z_prev[i]);
+        }
+        z_prev = std::mem::replace(&mut z, z_next);
+        // Recompute the residual (momentum steps are not residual-linear
+        // in the incremental sense PGD exploits).
+        let az = op(&z);
+        resid = b.to_vec();
+        axpy(-1.0, &az, &mut resid);
+    }
+
+    ExtensionResult { x: precond.apply(&z), iterations, termination_value: term_val, converged }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::lstsq_qr;
+    use crate::rng::Rng;
+    use crate::sap::arfe;
+    use crate::sketch::{make_sketch, SketchKind};
+
+    fn setup(
+        m: usize,
+        n: usize,
+        d: usize,
+        seed: u64,
+    ) -> (Mat, Vec<f64>, Preconditioner, (f64, f64)) {
+        let mut rng = Rng::new(seed);
+        let a = Mat::from_fn(m, n, |_, _| rng.normal());
+        let b: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let s = make_sketch(SketchKind::Sjlt, d, m, 8, &mut rng);
+        let sketch = s.apply(&a);
+        let p = Preconditioner::from_svd(&sketch);
+        let bounds = default_spectrum_bounds(d, n);
+        (a, b, p, bounds)
+    }
+
+    #[test]
+    fn spectrum_bounds_shrink_with_d() {
+        let (a1, b1) = default_spectrum_bounds(200, 50);
+        let (a2, b2) = default_spectrum_bounds(800, 50);
+        assert!(a2 > a1 && b2 < b1, "bigger sketch ⇒ tighter bounds");
+        assert!(a1 > 0.0 && b1 > 1.0);
+    }
+
+    #[test]
+    fn chebyshev_converges_to_direct_solution() {
+        let (a, b, p, bounds) = setup(500, 25, 200, 1);
+        let z0 = vec![0.0; p.rank()];
+        let res = chebyshev_preconditioned(&a, &b, &p, &z0, bounds, 1e-10, 500);
+        assert!(res.converged, "term {}", res.termination_value);
+        let x_star = lstsq_qr(&a, &b);
+        let err = arfe(&a, &b, &res.x, &x_star);
+        assert!(err < 1e-6, "ARFE {err}");
+    }
+
+    #[test]
+    fn momentum_converges_and_beats_plain_pgd_on_weak_precond() {
+        // Weak sketch (small d) ⇒ κ(AM) noticeably > 1 ⇒ momentum's
+        // √κ-vs-κ advantage shows.
+        let (a, b, p, bounds) = setup(600, 30, 45, 2);
+        let z0 = vec![0.0; p.rank()];
+        let mom = pgd_momentum_preconditioned(&a, &b, &p, &z0, bounds, 1e-8, 3000);
+        let pgd = crate::sap::pgd_preconditioned(&a, &b, &p, &z0, 1e-8, 3000);
+        assert!(mom.converged, "momentum did not converge");
+        let x_star = lstsq_qr(&a, &b);
+        assert!(arfe(&a, &b, &mom.x, &x_star) < 1e-5);
+        assert!(
+            mom.iterations <= pgd.iterations,
+            "momentum {} > plain {}",
+            mom.iterations,
+            pgd.iterations
+        );
+    }
+
+    #[test]
+    fn chebyshev_competitive_with_lsqr_iterations() {
+        // With correct spectral bounds Chebyshev's rate matches CG/LSQR
+        // asymptotically; check it is within a small factor.
+        let (a, b, p, bounds) = setup(500, 25, 200, 3);
+        let z0 = vec![0.0; p.rank()];
+        let cheb = chebyshev_preconditioned(&a, &b, &p, &z0, bounds, 1e-8, 500);
+        let lsqr = crate::sap::lsqr_preconditioned(&a, &b, &p, &z0, 1e-8, 500);
+        assert!(cheb.converged && lsqr.converged);
+        assert!(
+            cheb.iterations <= lsqr.iterations * 4,
+            "chebyshev {} vs lsqr {}",
+            cheb.iterations,
+            lsqr.iterations
+        );
+    }
+
+    #[test]
+    fn bad_spectrum_bounds_rejected() {
+        let (a, b, p, _) = setup(200, 10, 80, 4);
+        let z0 = vec![0.0; p.rank()];
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            chebyshev_preconditioned(&a, &b, &p, &z0, (0.0, 1.0), 1e-8, 10)
+        }));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,34 @@
+//! Sketch-and-precondition (SAP) least-squares solvers (§3, Appendix A/B).
+//!
+//! Implements Algorithm 3.1 with the paper's three concrete instantiations
+//! (Table 1):
+//!
+//! | name       | preconditioner (TO2) | iterative method (TO3) | based on     |
+//! |------------|----------------------|------------------------|--------------|
+//! | `QrLsqr`   | QR → M = R⁻¹         | LSQR                   | Blendenpik   |
+//! | `SvdLsqr`  | SVD → M = VΣ⁻¹       | LSQR                   | LSRN         |
+//! | `SvdPgd`   | SVD → M = VΣ⁻¹       | PGD                    | NewtonSketch |
+//!
+//! All three share the paper's implementation details:
+//! * sketch-and-solve **presolve** (Appendix A): initialize the iterative
+//!   solver at z_sk = argmin‖S(AMz − b)‖ (cheap given the factorization of
+//!   Â) when that initialization improves on zero;
+//! * the **inconsistent-system termination criterion** (3.2):
+//!   ‖(AM)ᵀr‖ / (‖AM‖_EF·‖r‖) ≤ ρ with ρ = 10^{−(6+safety_factor)}, where
+//!   ‖AM‖_EF is LSQR's running Frobenius-norm estimate, and √n for PGD
+//!   (Appendix B);
+//! * an iteration limit as backstop.
+
+mod extensions;
+mod lsqr;
+mod params;
+mod pgd;
+mod precond;
+mod solver;
+
+pub use extensions::*;
+pub use lsqr::{lsqr_preconditioned, LsqrResult};
+pub use params::*;
+pub use pgd::{pgd_preconditioned, PgdResult};
+pub use precond::*;
+pub use solver::*;

@@ -1,0 +1,132 @@
+//! SAP algorithm selection and parameter configuration (Table 2 / Table 4).
+
+use crate::sketch::SketchKind;
+
+/// The categorical `SAP_algorithm` tuning parameter (Table 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SapAlgorithm {
+    /// QR preconditioner + LSQR (Blendenpik-style).
+    QrLsqr,
+    /// SVD preconditioner + LSQR (LSRN-style).
+    SvdLsqr,
+    /// SVD preconditioner + preconditioned gradient descent
+    /// (NewtonSketch-style).
+    SvdPgd,
+}
+
+impl SapAlgorithm {
+    pub const ALL: [SapAlgorithm; 3] =
+        [SapAlgorithm::QrLsqr, SapAlgorithm::SvdLsqr, SapAlgorithm::SvdPgd];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SapAlgorithm::QrLsqr => "QR-LSQR",
+            SapAlgorithm::SvdLsqr => "SVD-LSQR",
+            SapAlgorithm::SvdPgd => "SVD-PGD",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SapAlgorithm> {
+        match s.to_ascii_lowercase().replace('_', "-").as_str() {
+            "qr-lsqr" | "qrlsqr" | "blendenpik" => Some(SapAlgorithm::QrLsqr),
+            "svd-lsqr" | "svdlsqr" | "lsrn" => Some(SapAlgorithm::SvdLsqr),
+            "svd-pgd" | "svdpgd" | "newtonsketch" => Some(SapAlgorithm::SvdPgd),
+            _ => None,
+        }
+    }
+}
+
+/// A full SAP parameter configuration — one point of the paper's
+/// five-dimensional tuning space (Table 2).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SapConfig {
+    /// Which SAP algorithm (categorical, TO2+TO3).
+    pub algorithm: SapAlgorithm,
+    /// Which sketching distribution (categorical, TO1).
+    pub sketch: SketchKind,
+    /// d = ceil(sampling_factor × n); real-valued in [1, 10] in the paper.
+    pub sampling_factor: f64,
+    /// Non-zeros per column (SJLT) / row (LessUniform); integer in [1, 100].
+    pub vec_nnz: usize,
+    /// Error-tolerance exponent: ρ = 10^{−(6+safety_factor)}; integer in
+    /// [0, 4].
+    pub safety_factor: u32,
+}
+
+impl SapConfig {
+    /// The paper's "safe" reference configuration (Table 4):
+    /// QR-LSQR + SJLT, sampling_factor 5, vec_nnz 50, safety_factor 0.
+    pub fn reference() -> SapConfig {
+        SapConfig {
+            algorithm: SapAlgorithm::QrLsqr,
+            sketch: SketchKind::Sjlt,
+            sampling_factor: 5.0,
+            vec_nnz: 50,
+            safety_factor: 0,
+        }
+    }
+
+    /// Sketch dimension d for an n-column problem: d = ⌈sf·n⌉, clamped to
+    /// at least n (d ≳ n is required by the SAP paradigm) and at most m.
+    pub fn sketch_dim(&self, m: usize, n: usize) -> usize {
+        let d = (self.sampling_factor * n as f64).ceil() as usize;
+        d.max(n).min(m)
+    }
+
+    /// Requested error tolerance ρ = 10^{−(6+safety_factor)} (§4.1.1).
+    pub fn tolerance(&self) -> f64 {
+        10f64.powi(-(6 + self.safety_factor as i32))
+    }
+
+    /// Compact human-readable label, e.g. `QR-LSQR/LessUniform sf=4 nnz=2 s=0`.
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{} sf={:.2} nnz={} s={}",
+            self.algorithm.name(),
+            self.sketch.name(),
+            self.sampling_factor,
+            self.vec_nnz,
+            self.safety_factor
+        )
+    }
+}
+
+/// Iteration limit for the inner solvers. The preconditioned systems
+/// converge in tens of iterations when healthy; a generous multiple of
+/// that catches pathological configurations without hanging the tuner.
+pub const MAX_ITERS: usize = 400;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trip() {
+        for alg in SapAlgorithm::ALL {
+            assert_eq!(SapAlgorithm::parse(alg.name()), Some(alg));
+        }
+        assert_eq!(SapAlgorithm::parse("blendenpik"), Some(SapAlgorithm::QrLsqr));
+        assert_eq!(SapAlgorithm::parse("junk"), None);
+    }
+
+    #[test]
+    fn sketch_dim_clamps() {
+        let mut c = SapConfig::reference();
+        c.sampling_factor = 3.0;
+        assert_eq!(c.sketch_dim(10_000, 100), 300);
+        // never below n
+        c.sampling_factor = 0.2;
+        assert_eq!(c.sketch_dim(10_000, 100), 100);
+        // never above m
+        c.sampling_factor = 9.0;
+        assert_eq!(c.sketch_dim(500, 100), 500);
+    }
+
+    #[test]
+    fn tolerance_follows_safety_factor() {
+        let mut c = SapConfig::reference();
+        assert_eq!(c.tolerance(), 1e-6);
+        c.safety_factor = 4;
+        assert_eq!(c.tolerance(), 1e-10);
+    }
+}

@@ -1,0 +1,181 @@
+//! Preconditioner generation from the sketch Â = S·A (TO2, §3.3).
+//!
+//! Two schemes:
+//! * **QR**: Â = QR, M = R⁻¹ applied implicitly through triangular solves
+//!   (R is never inverted; see §3.3's note on numerical behaviour).
+//! * **SVD**: Â = UΣVᵀ (compact, rank r), M = V·Σ⁻¹ formed explicitly as a
+//!   dense n×r matrix — the paper's point is that a dense GEMV
+//!   "parallelizes better than the triangular solve" and supports
+//!   rank-deficient sketches.
+//!
+//! Both expose the presolve ingredient of Appendix A: the orthonormal
+//! factor of Â·M (Q for QR, U for SVD) so z_sk = (ÂM)ᵀ(Sb) is one GEMV.
+
+use crate::linalg::{gemv, gemv_t, qr_thin, solve_upper, solve_upper_t, svd_thin, Mat};
+
+/// A realized preconditioner M (n×r) with its orthonormal sketch factor.
+pub enum Preconditioner {
+    /// M = R⁻¹ from Â = QR. Fields: R (n×n upper-tri), Q (d×n).
+    Qr { r: Mat, q: Mat },
+    /// M = V·Σ⁻¹ (dense n×rank) from Â = UΣVᵀ. Fields: M, U (d×rank).
+    Svd { m: Mat, u: Mat },
+}
+
+impl Preconditioner {
+    /// Build the QR preconditioner from the sketch.
+    pub fn from_qr(sketch: &Mat) -> Preconditioner {
+        let f = qr_thin(sketch);
+        Preconditioner::Qr { r: f.r, q: f.q }
+    }
+
+    /// Build the SVD preconditioner from the sketch, truncating to the
+    /// numerical rank (this is how LSRN supports rank-deficiency).
+    pub fn from_svd(sketch: &Mat) -> Preconditioner {
+        let f = svd_thin(sketch);
+        let (d, n) = sketch.shape();
+        let rank = crate::linalg::numerical_rank(&f.s, d, n);
+        // M = V[:, :rank] · diag(1/s[:rank])
+        let mut m = Mat::zeros(n, rank);
+        for i in 0..n {
+            for j in 0..rank {
+                m[(i, j)] = f.v[(i, j)] / f.s[j];
+            }
+        }
+        let mut u = Mat::zeros(d, rank);
+        for i in 0..d {
+            for j in 0..rank {
+                u[(i, j)] = f.u[(i, j)];
+            }
+        }
+        Preconditioner::Svd { m, u }
+    }
+
+    /// Rank r of the preconditioner (dimension of the z space).
+    pub fn rank(&self) -> usize {
+        match self {
+            Preconditioner::Qr { r, .. } => r.rows(),
+            Preconditioner::Svd { m, .. } => m.cols(),
+        }
+    }
+
+    /// x = M·z.
+    pub fn apply(&self, z: &[f64]) -> Vec<f64> {
+        match self {
+            Preconditioner::Qr { r, .. } => solve_upper(r, z),
+            Preconditioner::Svd { m, .. } => gemv(m, z),
+        }
+    }
+
+    /// g = Mᵀ·y.
+    pub fn apply_t(&self, y: &[f64]) -> Vec<f64> {
+        match self {
+            Preconditioner::Qr { r, .. } => solve_upper_t(r, y),
+            Preconditioner::Svd { m, .. } => gemv_t(m, y),
+        }
+    }
+
+    /// z_sk = (ÂM)ᵀ·(Sb): the sketch-and-solve presolve point (Appendix A).
+    /// ÂM is Q (QR) or U (SVD) — column-orthonormal by construction.
+    pub fn presolve(&self, sb: &[f64]) -> Vec<f64> {
+        match self {
+            Preconditioner::Qr { q, .. } => gemv_t(q, sb),
+            Preconditioner::Svd { u, .. } => gemv_t(u, sb),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm;
+    use crate::rng::Rng;
+
+    /// Â·M must be column-orthonormal for both schemes (the defining
+    /// property in §3.3 / Proposition 3.1).
+    #[test]
+    fn sketch_times_m_is_orthonormal() {
+        let mut rng = Rng::new(1);
+        let sketch = Mat::from_fn(40, 10, |_, _| rng.normal());
+        for p in [Preconditioner::from_qr(&sketch), Preconditioner::from_svd(&sketch)] {
+            // Columns of Â·M: apply M to unit vectors.
+            let r = p.rank();
+            let mut am = Mat::zeros(40, r);
+            for j in 0..r {
+                let mut e = vec![0.0; r];
+                e[j] = 1.0;
+                let mz = p.apply(&e);
+                let col = gemv(&sketch, &mz);
+                for i in 0..40 {
+                    am[(i, j)] = col[i];
+                }
+            }
+            let gram = gemm(&am.transpose(), &am);
+            let mut d = gram.clone();
+            d.axpy(-1.0, &Mat::eye(r));
+            assert!(d.max_abs() < 1e-8, "ÂM not orthonormal: {}", d.max_abs());
+        }
+    }
+
+    #[test]
+    fn apply_t_is_transpose_of_apply() {
+        let mut rng = Rng::new(2);
+        let sketch = Mat::from_fn(30, 6, |_, _| rng.normal());
+        for p in [Preconditioner::from_qr(&sketch), Preconditioner::from_svd(&sketch)] {
+            let r = p.rank();
+            // ⟨M z, y⟩ = ⟨z, Mᵀ y⟩ for random z, y.
+            let z: Vec<f64> = (0..r).map(|_| rng.normal()).collect();
+            let y: Vec<f64> = (0..6).map(|_| rng.normal()).collect();
+            let lhs = crate::linalg::dot(&p.apply(&z), &y);
+            let rhs = crate::linalg::dot(&z, &p.apply_t(&y));
+            assert!((lhs - rhs).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn svd_handles_rank_deficient_sketch() {
+        let mut rng = Rng::new(3);
+        // 20×5 sketch with rank 3.
+        let b = Mat::from_fn(20, 3, |_, _| rng.normal());
+        let c = Mat::from_fn(3, 5, |_, _| rng.normal());
+        let sketch = gemm(&b, &c);
+        let p = Preconditioner::from_svd(&sketch);
+        assert_eq!(p.rank(), 3);
+        // ÂM still orthonormal on the reduced space.
+        let mut am = Mat::zeros(20, 3);
+        for j in 0..3 {
+            let mut e = vec![0.0; 3];
+            e[j] = 1.0;
+            let col = gemv(&sketch, &p.apply(&e));
+            for i in 0..20 {
+                am[(i, j)] = col[i];
+            }
+        }
+        let gram = gemm(&am.transpose(), &am);
+        let mut d = gram.clone();
+        d.axpy(-1.0, &Mat::eye(3));
+        assert!(d.max_abs() < 1e-8);
+    }
+
+    #[test]
+    fn presolve_solves_sketched_problem() {
+        // z_sk minimizes ‖Â M z − Sb‖; for orthonormal ÂM the minimizer is
+        // (ÂM)ᵀ Sb and the residual is orthogonal to range(ÂM).
+        let mut rng = Rng::new(4);
+        let sketch = Mat::from_fn(25, 5, |_, _| rng.normal());
+        let sb: Vec<f64> = (0..25).map(|_| rng.normal()).collect();
+        for p in [Preconditioner::from_qr(&sketch), Preconditioner::from_svd(&sketch)] {
+            let z = p.presolve(&sb);
+            // residual Â M z − Sb must satisfy (ÂM)ᵀ res = 0
+            let mz = p.apply(&z);
+            let mut res = gemv(&sketch, &mz);
+            for i in 0..25 {
+                res[i] -= sb[i];
+            }
+            let g = match &p {
+                Preconditioner::Qr { q, .. } => crate::linalg::gemv_t(q, &res),
+                Preconditioner::Svd { u, .. } => crate::linalg::gemv_t(u, &res),
+            };
+            assert!(crate::linalg::norm2(&g) < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,240 @@
+//! Sobol sensitivity analysis (§4.4, Table 5).
+//!
+//! Reproduces GPTune's pipeline: build a GP surrogate from (historical)
+//! performance samples, draw a Saltelli design from the surrogate, and
+//! compute variance-based first-order (S1) and total-effect (ST) indices
+//! with bootstrap confidence intervals.
+//!
+//! Estimators follow Saltelli et al. 2010 (SALib's defaults):
+//!   S1_i = (1/N)·Σⱼ f(B)ⱼ·(f(A_B^i)ⱼ − f(A)ⱼ) / V
+//!   ST_i = (1/2N)·Σⱼ (f(A)ⱼ − f(A_B^i)ⱼ)² / V        (Jansen)
+//! with V the variance of all model outputs in the design.
+
+mod saltelli;
+mod sobol_seq;
+
+pub use saltelli::*;
+pub use sobol_seq::SobolSeq;
+
+use crate::gp::GpModel;
+use crate::objective::{ParamSpace, Trial, DIMS};
+use crate::rng::Rng;
+
+/// Sensitivity indices for one input dimension.
+#[derive(Clone, Debug)]
+pub struct SobolIndex {
+    /// First-order index (main effect).
+    pub s1: f64,
+    /// 95% half-width confidence interval of S1 (bootstrap).
+    pub s1_conf: f64,
+    /// Total-effect index.
+    pub st: f64,
+    /// 95% half-width confidence interval of ST (bootstrap).
+    pub st_conf: f64,
+}
+
+/// Full analysis result: one [`SobolIndex`] per tuning parameter, ordered
+/// as [SAP_alg, sketching_operator, sampling_factor, vec_nnz,
+/// safety_factor] (the Table 5 columns).
+#[derive(Clone, Debug)]
+pub struct SensitivityResult {
+    pub indices: Vec<SobolIndex>,
+    /// Output variance of the surrogate over the design.
+    pub variance: f64,
+}
+
+/// Parameter display names in Table 5 order.
+pub const PARAM_NAMES: [&str; DIMS] =
+    ["SAP_alg", "sketch_operator", "sampling_factor", "vec_nnz", "safety_factor"];
+
+/// Run the surrogate-backed Sobol analysis of §4.4 on recorded trials:
+/// fit a GP to (encoded config, log objective), then analyze the GP mean
+/// over `n_base` Saltelli samples (the paper uses 100 samples → 512
+/// Saltelli draws).
+pub fn analyze_trials(
+    trials: &[Trial],
+    space: &ParamSpace,
+    n_base: usize,
+    rng: &mut Rng,
+) -> SensitivityResult {
+    assert!(trials.len() >= 5, "need at least a handful of samples");
+    let xs: Vec<Vec<f64>> = trials.iter().map(|t| space.encode(&t.config).to_vec()).collect();
+    let ys: Vec<f64> = trials.iter().map(|t| t.value.max(1e-12).ln()).collect();
+    let gp = GpModel::fit(&xs, &ys, 3, rng);
+    let f = |x: &[f64]| gp.predict(x).0;
+    sobol_analysis(&f, DIMS, n_base, 100, rng)
+}
+
+/// Variance-based Sobol analysis of an arbitrary model over [0,1]^dims.
+/// `n_base` is the Saltelli base sample size N (total model evaluations:
+/// N·(dims+2)); `n_boot` bootstrap resamples give the confidence widths.
+pub fn sobol_analysis(
+    model: &dyn Fn(&[f64]) -> f64,
+    dims: usize,
+    n_base: usize,
+    n_boot: usize,
+    rng: &mut Rng,
+) -> SensitivityResult {
+    let design = saltelli_design(dims, n_base);
+    let f_a: Vec<f64> = design.a.iter().map(|x| model(x)).collect();
+    let f_b: Vec<f64> = design.b.iter().map(|x| model(x)).collect();
+    let f_ab: Vec<Vec<f64>> = design
+        .ab
+        .iter()
+        .map(|mat| mat.iter().map(|x| model(x)).collect())
+        .collect();
+
+    // Output variance over all A and B evaluations.
+    let mut all = f_a.clone();
+    all.extend_from_slice(&f_b);
+    let variance = crate::gp::stats::variance(&all).max(1e-300);
+
+    let idx_all: Vec<usize> = (0..n_base).collect();
+    let mut indices = Vec::with_capacity(dims);
+    for i in 0..dims {
+        let (s1, st) = estimate(&f_a, &f_b, &f_ab[i], &idx_all, variance);
+        // Bootstrap.
+        let mut s1_samples = Vec::with_capacity(n_boot);
+        let mut st_samples = Vec::with_capacity(n_boot);
+        for _ in 0..n_boot {
+            let resample: Vec<usize> = (0..n_base).map(|_| rng.below(n_base)).collect();
+            let (b1, bt) = estimate(&f_a, &f_b, &f_ab[i], &resample, variance);
+            s1_samples.push(b1);
+            st_samples.push(bt);
+        }
+        indices.push(SobolIndex {
+            s1,
+            s1_conf: 1.96 * crate::gp::stats::stddev(&s1_samples),
+            st,
+            st_conf: 1.96 * crate::gp::stats::stddev(&st_samples),
+        });
+    }
+    SensitivityResult { indices, variance }
+}
+
+/// Saltelli/Jansen estimators over an index subset.
+fn estimate(f_a: &[f64], f_b: &[f64], f_abi: &[f64], idx: &[usize], variance: f64) -> (f64, f64) {
+    let n = idx.len() as f64;
+    let mut s1_acc = 0.0;
+    let mut st_acc = 0.0;
+    for &j in idx {
+        s1_acc += f_b[j] * (f_abi[j] - f_a[j]);
+        let d = f_a[j] - f_abi[j];
+        st_acc += d * d;
+    }
+    ((s1_acc / n) / variance, (st_acc / (2.0 * n)) / variance)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Ishigami function: the standard Sobol-analysis benchmark with known
+    /// analytic indices (a=7, b=0.1 over [−π, π]³):
+    /// S1 = [0.3139, 0.4424, 0], ST = [0.5576, 0.4424, 0.2437].
+    fn ishigami(x: &[f64]) -> f64 {
+        let map = |t: f64| -std::f64::consts::PI + 2.0 * std::f64::consts::PI * t;
+        let (x1, x2, x3) = (map(x[0]), map(x[1]), map(x[2]));
+        x1.sin() + 7.0 * x2.sin().powi(2) + 0.1 * x3.powi(4) * x1.sin()
+    }
+
+    #[test]
+    fn ishigami_indices_match_analytic() {
+        let mut rng = Rng::new(1);
+        let r = sobol_analysis(&ishigami, 3, 2048, 50, &mut rng);
+        let s1_true = [0.3139, 0.4424, 0.0];
+        let st_true = [0.5576, 0.4424, 0.2437];
+        for i in 0..3 {
+            assert!(
+                (r.indices[i].s1 - s1_true[i]).abs() < 0.05,
+                "S1[{i}] = {} want {}",
+                r.indices[i].s1,
+                s1_true[i]
+            );
+            assert!(
+                (r.indices[i].st - st_true[i]).abs() < 0.05,
+                "ST[{i}] = {} want {}",
+                r.indices[i].st,
+                st_true[i]
+            );
+        }
+    }
+
+    #[test]
+    fn additive_function_s1_equals_st() {
+        // f = 4x1 + 2x2 + x3 (no interactions): ST ≈ S1, and sensitivities
+        // ordered by coefficient magnitude (variance ∝ coef²: 16:4:1).
+        let f = |x: &[f64]| 4.0 * x[0] + 2.0 * x[1] + x[2];
+        let mut rng = Rng::new(2);
+        let r = sobol_analysis(&f, 3, 1024, 30, &mut rng);
+        let expect = [16.0 / 21.0, 4.0 / 21.0, 1.0 / 21.0];
+        for i in 0..3 {
+            assert!((r.indices[i].s1 - expect[i]).abs() < 0.03, "S1[{i}]");
+            assert!((r.indices[i].st - r.indices[i].s1).abs() < 0.03, "ST≠S1 at {i}");
+        }
+    }
+
+    #[test]
+    fn pure_interaction_shows_in_st_not_s1() {
+        // f = (x1−½)(x2−½): no main effects, all variance in the pairwise
+        // interaction.
+        let f = |x: &[f64]| (x[0] - 0.5) * (x[1] - 0.5);
+        let mut rng = Rng::new(3);
+        let r = sobol_analysis(&f, 2, 2048, 30, &mut rng);
+        for i in 0..2 {
+            assert!(r.indices[i].s1.abs() < 0.05, "S1[{i}] = {}", r.indices[i].s1);
+            assert!(
+                (r.indices[i].st - 1.0).abs() < 0.1,
+                "ST[{i}] = {}",
+                r.indices[i].st
+            );
+        }
+    }
+
+    #[test]
+    fn irrelevant_input_has_zero_indices() {
+        let f = |x: &[f64]| (6.0 * x[0]).sin();
+        let mut rng = Rng::new(4);
+        let r = sobol_analysis(&f, 2, 1024, 30, &mut rng);
+        assert!(r.indices[1].s1.abs() < 0.03);
+        assert!(r.indices[1].st.abs() < 0.03);
+        assert!(r.indices[0].st > 0.9);
+    }
+
+    #[test]
+    fn surrogate_pipeline_on_synthetic_trials() {
+        // Fabricate trials whose value depends only on sampling_factor;
+        // the surrogate analysis should rank dim 2 far above the rest.
+        use crate::sap::SapConfig;
+        let space = ParamSpace::paper();
+        let mut rng = Rng::new(5);
+        let trials: Vec<Trial> = (0..60)
+            .map(|_| {
+                let cfg = space.sample(&mut rng);
+                let v = 0.1 + (cfg.sampling_factor / 10.0).powi(2);
+                Trial {
+                    config: cfg,
+                    wall_clock: v,
+                    arfe: 1e-9,
+                    value: v,
+                    failed: false,
+                    is_reference: false,
+                }
+            })
+            .collect();
+        let _ = SapConfig::reference();
+        let r = analyze_trials(&trials, &space, 256, &mut rng);
+        let sf = &r.indices[2];
+        for (i, other) in r.indices.iter().enumerate() {
+            if i != 2 {
+                assert!(
+                    sf.st > other.st * 2.0,
+                    "sampling_factor ST {} not dominant over {} ({})",
+                    sf.st,
+                    PARAM_NAMES[i],
+                    other.st
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,94 @@
+//! Saltelli sampling design (Saltelli 2002/2010; SALib's `saltelli.sample`).
+//!
+//! From a 2d-dimensional low-discrepancy stream, build:
+//!   A  — N×d matrix from the first d columns,
+//!   B  — N×d matrix from the last d columns,
+//!   A_B^(i) — A with column i swapped in from B, for each i.
+//! Total model evaluations downstream: N·(d+2).
+
+use super::SobolSeq;
+
+/// The Saltelli design matrices.
+pub struct SaltelliDesign {
+    pub a: Vec<Vec<f64>>,
+    pub b: Vec<Vec<f64>>,
+    /// ab[i] = A with column i replaced by B's column i.
+    pub ab: Vec<Vec<Vec<f64>>>,
+}
+
+/// Build the design with base sample size `n` over [0,1]^dims.
+pub fn saltelli_design(dims: usize, n: usize) -> SaltelliDesign {
+    assert!(dims >= 1 && n >= 2);
+    let mut seq = SobolSeq::new(2 * dims);
+    // Skip an initial block for equidistribution (SALib skips 1024 by
+    // default; we skip the next power of two ≥ n to decorrelate A from B).
+    let skip = n.next_power_of_two();
+    for _ in 0..skip {
+        let _ = seq.next_point();
+    }
+    let pts = seq.take(n);
+    let a: Vec<Vec<f64>> = pts.iter().map(|p| p[..dims].to_vec()).collect();
+    let b: Vec<Vec<f64>> = pts.iter().map(|p| p[dims..].to_vec()).collect();
+    let mut ab = Vec::with_capacity(dims);
+    for i in 0..dims {
+        let mut m = a.clone();
+        for (row, brow) in m.iter_mut().zip(b.iter()) {
+            row[i] = brow[i];
+        }
+        ab.push(m);
+    }
+    SaltelliDesign { a, b, ab }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn design_shapes() {
+        let d = saltelli_design(5, 64);
+        assert_eq!(d.a.len(), 64);
+        assert_eq!(d.b.len(), 64);
+        assert_eq!(d.ab.len(), 5);
+        assert_eq!(d.ab[2].len(), 64);
+        assert_eq!(d.a[0].len(), 5);
+    }
+
+    #[test]
+    fn ab_differs_from_a_only_in_column_i() {
+        let d = saltelli_design(4, 32);
+        for i in 0..4 {
+            for j in 0..32 {
+                for k in 0..4 {
+                    if k == i {
+                        assert_eq!(d.ab[i][j][k], d.b[j][k]);
+                    } else {
+                        assert_eq!(d.ab[i][j][k], d.a[j][k]);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn a_and_b_are_distinct_samples() {
+        let d = saltelli_design(3, 16);
+        let mut any_diff = false;
+        for j in 0..16 {
+            if d.a[j] != d.b[j] {
+                any_diff = true;
+            }
+        }
+        assert!(any_diff);
+    }
+
+    #[test]
+    fn marginals_cover_the_unit_interval() {
+        let d = saltelli_design(5, 128);
+        for dim in 0..5 {
+            let lo = d.a.iter().map(|p| p[dim]).fold(f64::INFINITY, f64::min);
+            let hi = d.a.iter().map(|p| p[dim]).fold(0.0f64, f64::max);
+            assert!(lo < 0.15 && hi > 0.85, "dim {dim}: [{lo}, {hi}]");
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! LessUniform: data-oblivious LESS embedding (row-sparse).
+
+use super::SketchOp;
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// d×m operator with `k` non-zeros per **row**, values ±√(m/(k·d)) at
+/// uniformly-without-replacement column positions. k = 1 reduces to scaled
+/// uniform row sampling of A; k = m to a dense random-sign matrix
+/// (distributionally equal to SJLT with k = d).
+///
+/// Row-compressed storage: row i's column indices at
+/// `cols[i*k..(i+1)*k]`. The apply is embarrassingly parallel over sketch
+/// rows (each output row is an independent k-term gather of rows of A) and
+/// has only d·k non-zeros total — the cache-friendly fast path the paper
+/// highlights in §5.2.
+pub struct LessUniform {
+    d: usize,
+    m: usize,
+    k: usize,
+    /// len d·k: column indices per row.
+    cols: Vec<u32>,
+    /// len d·k: signed values (±√(m/(k·d))).
+    vals: Vec<f64>,
+}
+
+impl LessUniform {
+    /// Sample a LessUniform operator. `vec_nnz` is clamped into [1, m].
+    pub fn sample(d: usize, m: usize, vec_nnz: usize, rng: &mut Rng) -> LessUniform {
+        assert!(d > 0 && m > 0);
+        let k = vec_nnz.clamp(1, m);
+        let scale = (m as f64 / (k as f64 * d as f64)).sqrt();
+        let mut cols = Vec::with_capacity(d * k);
+        let mut vals = Vec::with_capacity(d * k);
+        for _row in 0..d {
+            let idx = rng.sample_without_replacement(m, k);
+            for j in idx {
+                cols.push(j as u32);
+                vals.push(rng.sign() * scale);
+            }
+        }
+        LessUniform { d, m, k, cols, vals }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+}
+
+impl SketchOp for LessUniform {
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn nnz(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Â[i, :] = Σ_k vals[i,k] · A[cols[i,k], :] — a gather-accumulate per
+    /// output row, parallelized over rows with no shared writes.
+    fn apply(&self, a: &Mat) -> Mat {
+        assert_eq!(a.rows(), self.m, "LessUniform expects {}-row input", self.m);
+        let n = a.cols();
+        let mut out = Mat::zeros(self.d, n);
+        let nt = crate::linalg::num_threads().min(self.d);
+        let work = self.d * self.k * n;
+        if nt <= 1 || work < 1 << 18 {
+            for i in 0..self.d {
+                self.fill_row(a, out.row_mut(i), i);
+            }
+            return out;
+        }
+        let rows_per = self.d.div_ceil(nt);
+        let chunks: Vec<(usize, &mut [f64])> =
+            out.as_mut_slice().chunks_mut(rows_per * n).enumerate().collect();
+        std::thread::scope(|s| {
+            for (t, band) in chunks {
+                let lo = t * rows_per;
+                s.spawn(move || {
+                    for (r, orow) in band.chunks_mut(n).enumerate() {
+                        self.fill_row(a, orow, lo + r);
+                    }
+                });
+            }
+        });
+        out
+    }
+
+    fn apply_vec(&self, b: &[f64]) -> Vec<f64> {
+        assert_eq!(b.len(), self.m);
+        (0..self.d)
+            .map(|i| {
+                let idx = &self.cols[i * self.k..(i + 1) * self.k];
+                let val = &self.vals[i * self.k..(i + 1) * self.k];
+                idx.iter().zip(val).map(|(&j, &v)| v * b[j as usize]).sum()
+            })
+            .collect()
+    }
+
+    fn to_dense(&self) -> Mat {
+        let mut s = Mat::zeros(self.d, self.m);
+        for i in 0..self.d {
+            let idx = &self.cols[i * self.k..(i + 1) * self.k];
+            let val = &self.vals[i * self.k..(i + 1) * self.k];
+            for (&j, &v) in idx.iter().zip(val) {
+                s[(i, j as usize)] = v;
+            }
+        }
+        s
+    }
+}
+
+impl LessUniform {
+    #[inline]
+    fn fill_row(&self, a: &Mat, orow: &mut [f64], i: usize) {
+        let idx = &self.cols[i * self.k..(i + 1) * self.k];
+        let val = &self.vals[i * self.k..(i + 1) * self.k];
+        for (&j, &v) in idx.iter().zip(val) {
+            crate::linalg::axpy(v, a.row(j as usize), orow);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_structure_and_values() {
+        let mut rng = Rng::new(1);
+        let (d, m, k) = (8usize, 30usize, 4usize);
+        let s = LessUniform::sample(d, m, k, &mut rng);
+        let dense = s.to_dense();
+        let expect = (m as f64 / (k as f64 * d as f64)).sqrt();
+        for i in 0..d {
+            let nz: Vec<f64> = dense.row(i).iter().copied().filter(|&x| x != 0.0).collect();
+            assert_eq!(nz.len(), k, "row {i} should have exactly {k} nnz");
+            for v in nz {
+                assert!((v.abs() - expect).abs() < 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn k1_is_scaled_row_sampling() {
+        let mut rng = Rng::new(2);
+        let a = Mat::from_fn(25, 4, |i, j| (i * 4 + j) as f64);
+        let s = LessUniform::sample(6, 25, 1, &mut rng);
+        let sk = s.apply(&a);
+        let scale = (25.0f64 / 6.0).sqrt();
+        // Every sketch row must be ±scale times some row of A.
+        for i in 0..6 {
+            let row = sk.row(i);
+            let matched = (0..25).any(|src| {
+                let arow = a.row(src);
+                (0..4).all(|j| (row[j] - scale * arow[j]).abs() < 1e-12)
+                    || (0..4).all(|j| (row[j] + scale * arow[j]).abs() < 1e-12)
+            });
+            assert!(matched, "row {i} is not a scaled source row");
+        }
+    }
+
+    #[test]
+    fn k_clamped_to_m() {
+        let mut rng = Rng::new(3);
+        let s = LessUniform::sample(5, 8, 100, &mut rng);
+        assert_eq!(s.k(), 8);
+        // Fully dense with |v| = sqrt(m/(m·d)) = 1/sqrt(d).
+        let dense = s.to_dense();
+        for i in 0..5 {
+            for j in 0..8 {
+                assert!((dense[(i, j)].abs() - 1.0 / 5f64.sqrt()).abs() < 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn embedding_preserves_norms_in_expectation() {
+        let mut rng = Rng::new(4);
+        let x: Vec<f64> = (0..60).map(|_| rng.normal()).collect();
+        let xn2 = crate::linalg::dot(&x, &x);
+        let trials = 300;
+        let mut acc = 0.0;
+        for _ in 0..trials {
+            let s = LessUniform::sample(20, 60, 5, &mut rng);
+            let sx = s.apply_vec(&x);
+            acc += crate::linalg::dot(&sx, &sx);
+        }
+        let ratio = acc / trials as f64 / xn2;
+        assert!((ratio - 1.0).abs() < 0.15, "E‖Sx‖²/‖x‖² = {ratio}");
+    }
+
+    #[test]
+    fn sparsity_is_much_lower_than_sjlt() {
+        // The paper's §5.2 cost argument: d·k vs m·k non-zeros.
+        let mut rng = Rng::new(5);
+        let (d, m, k) = (50usize, 5000usize, 8usize);
+        let lu = LessUniform::sample(d, m, k, &mut rng);
+        let sj = crate::sketch::Sjlt::sample(d, m, k, &mut rng);
+        use crate::sketch::SketchOp;
+        assert_eq!(lu.nnz(), d * k);
+        assert_eq!(sj.nnz(), m * k);
+        assert!(lu.nnz() * 10 < sj.nnz());
+    }
+}

@@ -1,0 +1,144 @@
+//! Sparse sketching operators (tuning opportunity TO1, §3.2).
+//!
+//! Two distributions, exactly as the paper parameterizes them:
+//!
+//! * [`Sjlt`] — Sparse Johnson–Lindenstrauss Transform: independent
+//!   **columns**; each column of the d×m operator S gets `k = vec_nnz`
+//!   distinct row indices sampled uniformly without replacement, values
+//!   ±1/√k. For k = d this recovers a dense scaled random-sign matrix.
+//! * [`LessUniform`] — data-oblivious LESS embedding: independent **rows**;
+//!   each row gets `k = vec_nnz` distinct column indices, values
+//!   ±√(m/(k·d)). For k = 1 this is (scaled) uniform row sampling of A,
+//!   for k = m a dense random-sign matrix.
+//!
+//! The asymmetry drives the paper's tuning landscape: S is wide (d ≪ m),
+//! so SJLT has m·k non-zeros while LessUniform has only d·k — LessUniform
+//! is far sparser at equal parameters, cheaper to apply, but needs larger
+//! k for high-coherence inputs (Fig. 4).
+//!
+//! Both operators store their non-zeros explicitly (index + value arrays)
+//! and implement the same [`SketchOp`] trait providing `S·A` (threaded)
+//! and `S·b`.
+
+mod less_uniform;
+mod plan;
+mod srht;
+mod sjlt;
+
+pub use less_uniform::LessUniform;
+pub use plan::RowPlan;
+pub use sjlt::Sjlt;
+pub use srht::{GaussianSketch, Srht};
+
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// Which sketching distribution to use — the paper's categorical
+/// `sketching_operator` tuning parameter.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SketchKind {
+    Sjlt,
+    LessUniform,
+}
+
+impl SketchKind {
+    pub const ALL: [SketchKind; 2] = [SketchKind::Sjlt, SketchKind::LessUniform];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SketchKind::Sjlt => "SJLT",
+            SketchKind::LessUniform => "LessUniform",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SketchKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "sjlt" => Some(SketchKind::Sjlt),
+            "lessuniform" | "less_uniform" | "less" => Some(SketchKind::LessUniform),
+            _ => None,
+        }
+    }
+}
+
+/// A realized d×m sketching operator.
+pub trait SketchOp: Send + Sync {
+    /// Sketch dimension d (rows of S).
+    fn d(&self) -> usize;
+    /// Input dimension m (columns of S).
+    fn m(&self) -> usize;
+    /// Number of stored non-zeros.
+    fn nnz(&self) -> usize;
+    /// Â = S·A where A is m×n. Must equal the dense product exactly
+    /// (modulo float associativity).
+    fn apply(&self, a: &Mat) -> Mat;
+    /// S·b for a vector b of length m.
+    fn apply_vec(&self, b: &[f64]) -> Vec<f64>;
+    /// Materialize S as a dense d×m matrix (tests / small problems only).
+    fn to_dense(&self) -> Mat;
+}
+
+/// Construct a sketching operator of the given kind.
+///
+/// `vec_nnz` follows the paper's semantics: non-zeros **per column** for
+/// SJLT (clamped to d), non-zeros **per row** for LessUniform (clamped to
+/// m).
+pub fn make_sketch(
+    kind: SketchKind,
+    d: usize,
+    m: usize,
+    vec_nnz: usize,
+    rng: &mut Rng,
+) -> Box<dyn SketchOp> {
+    match kind {
+        SketchKind::Sjlt => Box::new(Sjlt::sample(d, m, vec_nnz, rng)),
+        SketchKind::LessUniform => Box::new(LessUniform::sample(d, m, vec_nnz, rng)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm;
+
+    /// Shared contract test: sparse apply == dense apply for both kinds.
+    #[test]
+    fn sparse_apply_matches_dense() {
+        let mut rng = Rng::new(7);
+        let a = Mat::from_fn(50, 8, |_, _| rng.normal());
+        let b: Vec<f64> = (0..50).map(|_| rng.normal()).collect();
+        for kind in SketchKind::ALL {
+            for &nnz in &[1usize, 3, 10] {
+                let s = make_sketch(kind, 20, 50, nnz, &mut rng);
+                let sk = s.apply(&a);
+                let dense = gemm(&s.to_dense(), &a);
+                let mut diff = sk.clone();
+                diff.axpy(-1.0, &dense);
+                assert!(diff.max_abs() < 1e-12, "{kind:?} nnz={nnz}: {}", diff.max_abs());
+
+                let sb = s.apply_vec(&b);
+                let sb_dense = crate::linalg::gemv(&s.to_dense(), &b);
+                for i in 0..20 {
+                    assert!((sb[i] - sb_dense[i]).abs() < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kind_parse_round_trip() {
+        for kind in SketchKind::ALL {
+            assert_eq!(SketchKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(SketchKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn nnz_counts_follow_paper_semantics() {
+        let mut rng = Rng::new(1);
+        // SJLT: k per column → m·k total. LessUniform: k per row → d·k.
+        let s = make_sketch(SketchKind::Sjlt, 10, 40, 3, &mut rng);
+        assert_eq!(s.nnz(), 40 * 3);
+        let l = make_sketch(SketchKind::LessUniform, 10, 40, 3, &mut rng);
+        assert_eq!(l.nnz(), 10 * 3);
+    }
+}

@@ -1,0 +1,150 @@
+//! Row-gather plan extraction — the interchange format between the L3
+//! sketch operators and the AOT (L2/L1) artifacts.
+//!
+//! The Pallas sketch kernel consumes a padded row plan: for each of the d
+//! sketch rows, exactly `k` (index, value) pairs, zero-valued entries
+//! marking padding. LessUniform is natively row-sparse; SJLT's
+//! column-sparse storage is transposed into per-row lists at plan-build
+//! time (exactly what `python/compile/model.py` documents).
+
+use super::{LessUniform, SketchOp, Sjlt};
+
+/// Padded row-gather plan, row-major (d×k) arrays, ready to feed PJRT.
+#[derive(Clone, Debug)]
+pub struct RowPlan {
+    pub d: usize,
+    pub k: usize,
+    /// d·k row indices into A (i32 for the artifact interface).
+    pub idx: Vec<i32>,
+    /// d·k signed values; 0.0 on padding entries.
+    pub vals: Vec<f32>,
+}
+
+impl RowPlan {
+    /// Dense check helper: value of S[r, c] implied by the plan.
+    pub fn dense_entry(&self, r: usize, c: usize) -> f64 {
+        let mut v = 0.0;
+        for t in 0..self.k {
+            if self.idx[r * self.k + t] as usize == c {
+                v += self.vals[r * self.k + t] as f64;
+            }
+        }
+        v
+    }
+}
+
+impl LessUniform {
+    /// Extract the natural row plan, padded (or exact) to `kmax` entries
+    /// per row. Errors if the operator has more non-zeros per row than
+    /// `kmax`.
+    pub fn row_plan(&self, kmax: usize) -> Result<RowPlan, String> {
+        let (d, k) = (self.d(), self.k());
+        if k > kmax {
+            return Err(format!("LessUniform k={k} exceeds artifact kmax={kmax}"));
+        }
+        let dense = self.to_dense();
+        let mut idx = vec![0i32; d * kmax];
+        let mut vals = vec![0f32; d * kmax];
+        for r in 0..d {
+            let mut t = 0;
+            for c in 0..self.m() {
+                let v = dense[(r, c)];
+                if v != 0.0 {
+                    idx[r * kmax + t] = c as i32;
+                    vals[r * kmax + t] = v as f32;
+                    t += 1;
+                }
+            }
+        }
+        Ok(RowPlan { d, k: kmax, idx, vals })
+    }
+}
+
+impl Sjlt {
+    /// Transpose the column-sparse SJLT into a row plan. Each sketch row
+    /// receives on average m·k/d entries; rows exceeding `kmax` make the
+    /// conversion fail (pick a larger artifact k or use LessUniform for
+    /// the AOT deploy path — the paper's tuner almost always lands on
+    /// LessUniform anyway, Fig. 4/8).
+    pub fn row_plan(&self, kmax: usize) -> Result<RowPlan, String> {
+        let d = self.d();
+        let dense = self.to_dense();
+        let mut idx = vec![0i32; d * kmax];
+        let mut vals = vec![0f32; d * kmax];
+        for r in 0..d {
+            let mut t = 0;
+            for c in 0..self.m() {
+                let v = dense[(r, c)];
+                if v != 0.0 {
+                    if t >= kmax {
+                        return Err(format!(
+                            "SJLT row {r} has more than kmax={kmax} non-zeros"
+                        ));
+                    }
+                    idx[r * kmax + t] = c as i32;
+                    vals[r * kmax + t] = v as f32;
+                    t += 1;
+                }
+            }
+        }
+        Ok(RowPlan { d, k: kmax, idx, vals })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::sketch::SketchOp;
+
+    #[test]
+    fn less_uniform_plan_matches_dense() {
+        let mut rng = Rng::new(1);
+        let s = LessUniform::sample(10, 40, 4, &mut rng);
+        let plan = s.row_plan(8).unwrap();
+        assert_eq!(plan.d, 10);
+        assert_eq!(plan.k, 8);
+        let dense = s.to_dense();
+        for r in 0..10 {
+            for c in 0..40 {
+                assert!(
+                    (plan.dense_entry(r, c) - dense[(r, c)]).abs() < 1e-6,
+                    "({r},{c})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn less_uniform_plan_rejects_small_kmax() {
+        let mut rng = Rng::new(2);
+        let s = LessUniform::sample(10, 40, 6, &mut rng);
+        assert!(s.row_plan(4).is_err());
+    }
+
+    #[test]
+    fn sjlt_plan_matches_dense_when_it_fits() {
+        let mut rng = Rng::new(3);
+        // m·k/d = 30·2/15 = 4 avg entries per row; kmax 12 is ample.
+        let s = Sjlt::sample(15, 30, 2, &mut rng);
+        match s.row_plan(12) {
+            Ok(plan) => {
+                let dense = s.to_dense();
+                for r in 0..15 {
+                    for c in 0..30 {
+                        assert!((plan.dense_entry(r, c) - dense[(r, c)]).abs() < 1e-6);
+                    }
+                }
+            }
+            Err(e) => panic!("conversion should fit: {e}"),
+        }
+    }
+
+    #[test]
+    fn sjlt_plan_overflows_gracefully() {
+        let mut rng = Rng::new(4);
+        // Dense-ish SJLT: k=d ⇒ every row has ~m entries ≫ kmax.
+        let s = Sjlt::sample(5, 50, 5, &mut rng);
+        assert!(s.row_plan(8).is_err());
+    }
+}

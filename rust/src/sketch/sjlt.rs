@@ -1,0 +1,210 @@
+//! SJLT: Sparse Johnson–Lindenstrauss Transform (column-sparse).
+
+use super::SketchOp;
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// d×m operator with `k` non-zeros per **column**, values ±1/√k at
+/// uniformly-without-replacement row positions. k = 1 is CountSketch;
+/// k = d is a dense scaled sign matrix.
+///
+/// Storage is column-compressed: column j's row indices live at
+/// `rows[j*k..(j+1)*k]` with signs packed in `vals`. The apply streams A
+/// row-by-row (row-major friendly): row j of A contributes to the k sketch
+/// rows listed for column j of S.
+pub struct Sjlt {
+    d: usize,
+    m: usize,
+    k: usize,
+    /// len m·k: row indices of the non-zeros of each column.
+    rows: Vec<u32>,
+    /// len m·k: signed values (±1/√k).
+    vals: Vec<f64>,
+}
+
+impl Sjlt {
+    /// Sample an SJLT. `vec_nnz` is clamped into [1, d].
+    pub fn sample(d: usize, m: usize, vec_nnz: usize, rng: &mut Rng) -> Sjlt {
+        assert!(d > 0 && m > 0);
+        let k = vec_nnz.clamp(1, d);
+        let scale = 1.0 / (k as f64).sqrt();
+        let mut rows = Vec::with_capacity(m * k);
+        let mut vals = Vec::with_capacity(m * k);
+        for _col in 0..m {
+            let idx = rng.sample_without_replacement(d, k);
+            for i in idx {
+                rows.push(i as u32);
+                vals.push(rng.sign() * scale);
+            }
+        }
+        Sjlt { d, m, k, rows, vals }
+    }
+
+    /// Effective per-column sparsity after clamping.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+}
+
+impl SketchOp for Sjlt {
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn nnz(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Â = S·A. Â[r, :] += S[r, j]·A[j, :] for every stored non-zero
+    /// (r, j). Parallelized by partitioning sketch rows among threads:
+    /// each thread walks all of A but only accumulates non-zeros whose
+    /// target row falls in its band, so no synchronization is needed.
+    fn apply(&self, a: &Mat) -> Mat {
+        assert_eq!(a.rows(), self.m, "SJLT expects {}-row input", self.m);
+        let n = a.cols();
+        let mut out = Mat::zeros(self.d, n);
+        let nt = crate::linalg::num_threads().min(self.d);
+        if nt <= 1 || self.m * self.k * n < 1 << 18 {
+            self.apply_band(a, &mut out, 0, self.d);
+            return out;
+        }
+        let rows_per = self.d.div_ceil(nt);
+        let out_cols = n;
+        let chunks: Vec<(usize, &mut [f64])> = out
+            .as_mut_slice()
+            .chunks_mut(rows_per * out_cols)
+            .enumerate()
+            .collect();
+        std::thread::scope(|s| {
+            for (t, band) in chunks {
+                let lo = t * rows_per;
+                s.spawn(move || {
+                    let hi = lo + band.len() / out_cols;
+                    for (j, idx_chunk) in self.rows.chunks(self.k).enumerate() {
+                        let arow = a.row(j);
+                        let vchunk = &self.vals[j * self.k..(j + 1) * self.k];
+                        for (&r, &v) in idx_chunk.iter().zip(vchunk) {
+                            let r = r as usize;
+                            if r >= lo && r < hi {
+                                let orow = &mut band[(r - lo) * out_cols..(r - lo + 1) * out_cols];
+                                crate::linalg::axpy(v, arow, orow);
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        out
+    }
+
+    fn apply_vec(&self, b: &[f64]) -> Vec<f64> {
+        assert_eq!(b.len(), self.m);
+        let mut out = vec![0.0; self.d];
+        for (j, idx_chunk) in self.rows.chunks(self.k).enumerate() {
+            let bj = b[j];
+            let vchunk = &self.vals[j * self.k..(j + 1) * self.k];
+            for (&r, &v) in idx_chunk.iter().zip(vchunk) {
+                out[r as usize] += v * bj;
+            }
+        }
+        out
+    }
+
+    fn to_dense(&self) -> Mat {
+        let mut s = Mat::zeros(self.d, self.m);
+        for (j, idx_chunk) in self.rows.chunks(self.k).enumerate() {
+            let vchunk = &self.vals[j * self.k..(j + 1) * self.k];
+            for (&r, &v) in idx_chunk.iter().zip(vchunk) {
+                s[(r as usize, j)] = v;
+            }
+        }
+        s
+    }
+}
+
+impl Sjlt {
+    fn apply_band(&self, a: &Mat, out: &mut Mat, lo: usize, hi: usize) {
+        let n = a.cols();
+        for (j, idx_chunk) in self.rows.chunks(self.k).enumerate() {
+            let arow = a.row(j);
+            let vchunk = &self.vals[j * self.k..(j + 1) * self.k];
+            for (&r, &v) in idx_chunk.iter().zip(vchunk) {
+                let r = r as usize;
+                if r >= lo && r < hi {
+                    let orow = &mut out.as_mut_slice()[r * n..(r + 1) * n];
+                    crate::linalg::axpy(v, arow, orow);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn column_structure_and_values() {
+        let mut rng = Rng::new(1);
+        let s = Sjlt::sample(8, 30, 3, &mut rng);
+        let dense = s.to_dense();
+        let expect = 1.0 / 3f64.sqrt();
+        for j in 0..30 {
+            let col = dense.col(j);
+            let nz: Vec<f64> = col.iter().copied().filter(|&x| x != 0.0).collect();
+            assert_eq!(nz.len(), 3, "column {j} should have exactly 3 nnz");
+            for v in nz {
+                assert!((v.abs() - expect).abs() < 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn k_clamped_to_d() {
+        let mut rng = Rng::new(2);
+        let s = Sjlt::sample(4, 10, 100, &mut rng);
+        assert_eq!(s.k(), 4);
+        // Dense case: every entry non-zero with |v| = 1/2.
+        let dense = s.to_dense();
+        for j in 0..10 {
+            for i in 0..4 {
+                assert!((dense[(i, j)].abs() - 0.5).abs() < 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn embedding_preserves_norms_in_expectation() {
+        // E‖Sx‖² = ‖x‖²: average over many sampled operators.
+        let mut rng = Rng::new(3);
+        let x: Vec<f64> = (0..60).map(|_| rng.normal()).collect();
+        let xn2 = crate::linalg::dot(&x, &x);
+        let trials = 300;
+        let mut acc = 0.0;
+        for _ in 0..trials {
+            let s = Sjlt::sample(20, 60, 4, &mut rng);
+            let sx = s.apply_vec(&x);
+            acc += crate::linalg::dot(&sx, &sx);
+        }
+        let ratio = acc / trials as f64 / xn2;
+        assert!((ratio - 1.0).abs() < 0.15, "E‖Sx‖²/‖x‖² = {ratio}");
+    }
+
+    #[test]
+    fn threaded_apply_matches_serial() {
+        let mut rng = Rng::new(4);
+        // Big enough to take the threaded path.
+        let a = Mat::from_fn(2000, 64, |_, _| rng.normal());
+        let s = Sjlt::sample(300, 2000, 8, &mut rng);
+        let big = s.apply(&a);
+        let mut serial = Mat::zeros(300, 64);
+        s.apply_band(&a, &mut serial, 0, 300);
+        let mut d = big.clone();
+        d.axpy(-1.0, &serial);
+        assert!(d.max_abs() < 1e-12);
+    }
+}

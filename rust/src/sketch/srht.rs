@@ -1,0 +1,274 @@
+//! Additional sketching operators beyond the tuned space.
+//!
+//! §3.2 of the paper: "our parameterization does not include non-sparse
+//! distributions such as the subsampled randomized Hadamard transform
+//! (SRHT) ... our preliminary tests indicated that an SRHT-based approach
+//! would not improve upon sparse sketching operators. Nevertheless, our
+//! tuning framework can also support tuning these and other sketching
+//! options, if the user wants to include more options."
+//!
+//! This module provides those extra options:
+//! * [`Srht`] — subsampled randomized Hadamard transform
+//!   S = √(m̂/d)·P·H·D with D random signs, H the (padded) Walsh–Hadamard
+//!   transform applied via in-place FWHT in O(m̂·log m̂) per column, P a
+//!   uniform row subsample;
+//! * [`GaussianSketch`] — the dense iid N(0, 1/d) operator of the
+//!   original LSRN.
+//!
+//! Both implement [`SketchOp`] so every preconditioner/solver works with
+//! them unchanged; `benches/ablation_sketches.rs` reproduces the paper's
+//! "sparse wins" observation.
+
+use super::SketchOp;
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// Subsampled randomized Hadamard transform. Input length m is padded to
+/// the next power of two m̂ internally (zero rows change nothing).
+pub struct Srht {
+    d: usize,
+    m: usize,
+    /// padded length (power of two)
+    m_pad: usize,
+    /// random ±1 diagonal D (length m; padding rows never touched).
+    signs: Vec<f64>,
+    /// d sampled row indices of H·D (in 0..m_pad).
+    rows: Vec<u32>,
+}
+
+impl Srht {
+    pub fn sample(d: usize, m: usize, rng: &mut Rng) -> Srht {
+        assert!(d > 0 && m > 0);
+        let m_pad = m.next_power_of_two();
+        let signs: Vec<f64> = (0..m).map(|_| rng.sign()).collect();
+        let rows: Vec<u32> = rng
+            .sample_without_replacement(m_pad, d.min(m_pad))
+            .into_iter()
+            .map(|i| i as u32)
+            .collect();
+        Srht { d: rows.len(), m, m_pad, signs, rows }
+    }
+
+    /// In-place fast Walsh–Hadamard transform (unnormalized).
+    fn fwht(buf: &mut [f64]) {
+        let n = buf.len();
+        debug_assert!(n.is_power_of_two());
+        let mut h = 1;
+        while h < n {
+            for block in (0..n).step_by(2 * h) {
+                for i in block..block + h {
+                    let (x, y) = (buf[i], buf[i + h]);
+                    buf[i] = x + y;
+                    buf[i + h] = x - y;
+                }
+            }
+            h *= 2;
+        }
+    }
+
+    /// Scale so that E[SᵀS] = I: entries of H are ±1, so the subsampled
+    /// transform needs 1/√(d·m_pad)·√(m_pad) ... net √(m_pad/d)/√(m_pad)
+    /// = 1/√d per unnormalized-FWHT output.
+    fn scale(&self) -> f64 {
+        1.0 / (self.d as f64).sqrt() * (self.m_pad as f64 / self.m_pad as f64)
+    }
+}
+
+impl SketchOp for Srht {
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn nnz(&self) -> usize {
+        // dense in effect: d×m non-zeros (stored implicitly).
+        self.d * self.m
+    }
+
+    fn apply(&self, a: &Mat) -> Mat {
+        assert_eq!(a.rows(), self.m);
+        let n = a.cols();
+        let scale = self.scale();
+        let mut out = Mat::zeros(self.d, n);
+        // Process column blocks: for each column j of A, FWHT the signed,
+        // padded column once, then gather the sampled rows. Column-major
+        // access of A is strided; buffer a block of columns at a time to
+        // amortize (simple per-column loop is fine at our sizes).
+        let mut buf = vec![0.0f64; self.m_pad];
+        for j in 0..n {
+            for i in 0..self.m_pad {
+                buf[i] = if i < self.m { self.signs[i] * a[(i, j)] } else { 0.0 };
+            }
+            Self::fwht(&mut buf);
+            for (r, &src) in self.rows.iter().enumerate() {
+                out[(r, j)] = scale * buf[src as usize];
+            }
+        }
+        out
+    }
+
+    fn apply_vec(&self, b: &[f64]) -> Vec<f64> {
+        assert_eq!(b.len(), self.m);
+        let mut buf = vec![0.0f64; self.m_pad];
+        for i in 0..self.m {
+            buf[i] = self.signs[i] * b[i];
+        }
+        Self::fwht(&mut buf);
+        let scale = self.scale();
+        self.rows.iter().map(|&src| scale * buf[src as usize]).collect()
+    }
+
+    fn to_dense(&self) -> Mat {
+        // Apply to the identity (test-sized inputs only).
+        self.apply(&Mat::eye(self.m))
+    }
+}
+
+/// Dense Gaussian sketching operator (LSRN's original choice): entries
+/// iid N(0, 1/d).
+pub struct GaussianSketch {
+    mat: Mat,
+}
+
+impl GaussianSketch {
+    pub fn sample(d: usize, m: usize, rng: &mut Rng) -> GaussianSketch {
+        let scale = 1.0 / (d as f64).sqrt();
+        GaussianSketch { mat: Mat::from_fn(d, m, |_, _| scale * rng.normal()) }
+    }
+}
+
+impl SketchOp for GaussianSketch {
+    fn d(&self) -> usize {
+        self.mat.rows()
+    }
+
+    fn m(&self) -> usize {
+        self.mat.cols()
+    }
+
+    fn nnz(&self) -> usize {
+        self.mat.rows() * self.mat.cols()
+    }
+
+    fn apply(&self, a: &Mat) -> Mat {
+        crate::linalg::gemm(&self.mat, a)
+    }
+
+    fn apply_vec(&self, b: &[f64]) -> Vec<f64> {
+        crate::linalg::gemv(&self.mat, b)
+    }
+
+    fn to_dense(&self) -> Mat {
+        self.mat.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{dot, gemm};
+
+    #[test]
+    fn fwht_matches_hadamard_matrix() {
+        // H_4 explicit check.
+        let mut v = vec![1.0, 2.0, 3.0, 4.0];
+        Srht::fwht(&mut v);
+        // H4·x with H4 = [[1,1,1,1],[1,-1,1,-1],[1,1,-1,-1],[1,-1,-1,1]]
+        assert_eq!(v, vec![10.0, -2.0, -4.0, 0.0]);
+    }
+
+    #[test]
+    fn fwht_is_self_inverse_up_to_n() {
+        let mut rng = Rng::new(1);
+        let n = 64;
+        let orig: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut v = orig.clone();
+        Srht::fwht(&mut v);
+        Srht::fwht(&mut v);
+        for i in 0..n {
+            assert!((v[i] - n as f64 * orig[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn srht_apply_matches_dense() {
+        let mut rng = Rng::new(2);
+        let (d, m, n) = (12usize, 20usize, 5usize);
+        let s = Srht::sample(d, m, &mut rng);
+        let a = Mat::from_fn(m, n, |_, _| rng.normal());
+        let sparse = s.apply(&a);
+        let dense = gemm(&s.to_dense(), &a);
+        let mut diff = sparse.clone();
+        diff.axpy(-1.0, &dense);
+        assert!(diff.max_abs() < 1e-10);
+        // vector path
+        let b: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let sb = s.apply_vec(&b);
+        let sb2 = crate::linalg::gemv(&s.to_dense(), &b);
+        for i in 0..s.d() {
+            assert!((sb[i] - sb2[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn srht_preserves_norms_in_expectation() {
+        let mut rng = Rng::new(3);
+        let m = 48;
+        let x: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let xn2 = dot(&x, &x);
+        let trials = 200;
+        let mut acc = 0.0;
+        for _ in 0..trials {
+            let s = Srht::sample(24, m, &mut rng);
+            let sx = s.apply_vec(&x);
+            acc += dot(&sx, &sx);
+        }
+        let ratio = acc / trials as f64 / xn2;
+        // Padding to 64 loses a constant fraction of energy into
+        // unsampled coordinates only in expectation-neutral ways; the
+        // estimator concentrates near 1.
+        assert!((ratio - 1.0).abs() < 0.25, "ratio {ratio}");
+    }
+
+    #[test]
+    fn gaussian_sketch_embedding_quality() {
+        // d = 4n Gaussian sketch: preconditioned cond near 1.
+        let mut rng = Rng::new(4);
+        let (m, n) = (400, 10);
+        let a = Mat::from_fn(m, n, |_, _| rng.normal());
+        let g = GaussianSketch::sample(4 * n, m, &mut rng);
+        let sk = g.apply(&a);
+        let p = crate::sap::Preconditioner::from_qr(&sk);
+        // cond(AM) small ⇒ LSQR converges in few iterations.
+        let b: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let z0 = vec![0.0; p.rank()];
+        let res = crate::sap::lsqr_preconditioned(&a, &b, &p, &z0, 1e-10, 100);
+        assert!(res.converged);
+        assert!(res.iterations < 40, "{} iterations", res.iterations);
+    }
+
+    #[test]
+    fn srht_precondition_quality_comparable_to_sjlt() {
+        let mut rng = Rng::new(5);
+        let (m, n) = (512, 16);
+        let a = Mat::from_fn(m, n, |_, _| rng.normal());
+        let b: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let iters = |p: &crate::sap::Preconditioner| {
+            let z0 = vec![0.0; p.rank()];
+            crate::sap::lsqr_preconditioned(&a, &b, p, &z0, 1e-10, 200).iterations
+        };
+        let srht = Srht::sample(4 * n, m, &mut rng);
+        let p_srht = crate::sap::Preconditioner::from_qr(&srht.apply(&a));
+        let sjlt = crate::sketch::Sjlt::sample(4 * n, m, 8, &mut rng);
+        use crate::sketch::SketchOp as _;
+        let p_sjlt = crate::sap::Preconditioner::from_qr(&sjlt.apply(&a));
+        let (i_srht, i_sjlt) = (iters(&p_srht), iters(&p_sjlt));
+        assert!(
+            i_srht <= i_sjlt * 2 && i_sjlt <= i_srht * 2,
+            "SRHT {i_srht} vs SJLT {i_sjlt} iterations"
+        );
+    }
+}

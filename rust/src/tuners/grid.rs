@@ -1,0 +1,125 @@
+//! Grid search (§5.2): the paper's semi-exhaustive landscape explorer.
+//!
+//! Not a practical tuner (the paper is explicit about this) but the source
+//! of ground truth: Figures 4 and 8 plot its output, and the "peak
+//! performance" every other tuner is scored against comes from it.
+
+use super::Tuner;
+use crate::objective::{History, Objective};
+use crate::rng::Rng;
+use crate::sap::{SapAlgorithm, SapConfig};
+use crate::sketch::SketchKind;
+
+/// Evaluates a fixed list of configurations in order (truncated or cycled
+/// to the budget).
+pub struct GridTuner {
+    grid: Vec<SapConfig>,
+}
+
+impl GridTuner {
+    /// A grid tuner over an explicit configuration list. An empty list
+    /// falls back to the paper grid (possibly truncated by the budget).
+    pub fn new(grid: Vec<SapConfig>) -> GridTuner {
+        GridTuner { grid }
+    }
+
+    /// The paper's §5.2 grid: sampling_factor ∈ {1..10} × vec_nnz ∈
+    /// {1..10, 20..100 by 10} × safety ∈ {0, 2, 4} × 6 categories
+    /// = 3,420 configurations.
+    pub fn paper() -> GridTuner {
+        GridTuner { grid: paper_grid() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.grid.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.grid.is_empty()
+    }
+}
+
+/// Construct the paper's 3,420-point grid.
+pub fn paper_grid() -> Vec<SapConfig> {
+    let mut grid = Vec::new();
+    let nnz_values: Vec<usize> =
+        (1..=10).chain((20..=100).step_by(10)).collect(); // 19 values
+    for alg in SapAlgorithm::ALL {
+        for sketch in SketchKind::ALL {
+            for sf in 1..=10 {
+                for &nnz in &nnz_values {
+                    for safety in [0u32, 2, 4] {
+                        grid.push(SapConfig {
+                            algorithm: alg,
+                            sketch,
+                            sampling_factor: sf as f64,
+                            vec_nnz: nnz,
+                            safety_factor: safety,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    grid
+}
+
+impl Tuner for GridTuner {
+    fn name(&self) -> &str {
+        "Grid"
+    }
+
+    fn run(&mut self, objective: &mut Objective, budget: usize, _rng: &mut Rng) -> History {
+        objective.evaluate_reference();
+        let grid = if self.grid.is_empty() { paper_grid() } else { self.grid.clone() };
+        for cfg in grid.iter().take(budget.saturating_sub(1)) {
+            objective.evaluate(cfg);
+        }
+        objective.history().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_grid_has_3420_points() {
+        let g = paper_grid();
+        assert_eq!(g.len(), 3420);
+        // All unique.
+        let mut labels: Vec<String> = g.iter().map(|c| c.label()).collect();
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), 3420);
+    }
+
+    #[test]
+    fn grid_covers_all_categories_and_bounds() {
+        let g = paper_grid();
+        use crate::objective::category_index;
+        let mut seen = [false; 6];
+        for c in &g {
+            seen[category_index(c)] = true;
+            assert!((1.0..=10.0).contains(&c.sampling_factor));
+            assert!((1..=100).contains(&c.vec_nnz));
+            assert!([0, 2, 4].contains(&c.safety_factor));
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn explicit_grid_respects_order_and_budget() {
+        let cfgs: Vec<SapConfig> = (1..=5)
+            .map(|sf| SapConfig { sampling_factor: sf as f64, ..SapConfig::reference() })
+            .collect();
+        let mut tuner = GridTuner::new(cfgs.clone());
+        let mut obj = crate::tuners::testutil::tiny_objective(3);
+        let h = tuner.run(&mut obj, 4, &mut Rng::new(0));
+        assert_eq!(h.len(), 4);
+        // trial 0 = reference, trials 1..4 = first three grid points in order
+        for (i, t) in h.trials()[1..].iter().enumerate() {
+            assert_eq!(t.config.sampling_factor, cfgs[i].sampling_factor);
+        }
+    }
+}

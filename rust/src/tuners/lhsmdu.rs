@@ -1,0 +1,158 @@
+//! Random search via Latin Hypercube Sampling with Multi-Dimensional
+//! Uniformity (LHSMDU, Deutsch & Deutsch 2012) — the paper's non-surrogate
+//! baseline tuner.
+//!
+//! Algorithm: (1) oversample M = scale·N uniform points; (2) iteratively
+//! eliminate the point with the smallest average distance to its two
+//! nearest neighbours until N remain (this enforces multi-dimensional
+//! spread); (3) rank-transform each coordinate onto LHS strata so every
+//! one-dimensional projection is uniform.
+
+use super::Tuner;
+use crate::objective::{History, Objective, DIMS};
+use crate::rng::Rng;
+
+/// Oversampling factor (the reference implementation's default is 5).
+const SCALE: usize = 5;
+
+/// Generate `n` LHSMDU points in [0,1]^dims.
+pub fn lhsmdu_points(n: usize, dims: usize, rng: &mut Rng) -> Vec<Vec<f64>> {
+    assert!(n > 0);
+    let m = n * SCALE;
+    let mut pts: Vec<Vec<f64>> =
+        (0..m).map(|_| (0..dims).map(|_| rng.uniform()).collect()).collect();
+
+    // (2) eliminate by nearest-neighbour crowding.
+    while pts.len() > n {
+        // For each point, average distance to its two nearest neighbours.
+        let k = pts.len();
+        let mut crowding = vec![0.0f64; k];
+        for i in 0..k {
+            let mut d1 = f64::INFINITY; // nearest
+            let mut d2 = f64::INFINITY; // second nearest
+            for j in 0..k {
+                if i == j {
+                    continue;
+                }
+                let d = sq_dist(&pts[i], &pts[j]);
+                if d < d1 {
+                    d2 = d1;
+                    d1 = d;
+                } else if d < d2 {
+                    d2 = d;
+                }
+            }
+            crowding[i] = 0.5 * (d1.sqrt() + d2.sqrt());
+        }
+        // Remove the most crowded (smallest average NN distance).
+        let worst = crowding
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        pts.swap_remove(worst);
+    }
+
+    // (3) LHS-ify: replace each coordinate by its stratified rank value.
+    for d in 0..dims {
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| pts[a][d].partial_cmp(&pts[b][d]).unwrap());
+        for (rank, &idx) in order.iter().enumerate() {
+            // centre of stratum `rank`, jittered within the stratum
+            pts[idx][d] = (rank as f64 + rng.uniform()) / n as f64;
+        }
+    }
+    pts
+}
+
+fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b.iter()).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// The LHSMDU random-search tuner: one stratified batch of
+/// (budget − 1) configurations, evaluated in order.
+pub struct LhsmduTuner;
+
+impl LhsmduTuner {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> LhsmduTuner {
+        LhsmduTuner
+    }
+}
+
+impl Tuner for LhsmduTuner {
+    fn name(&self) -> &str {
+        "LHSMDU"
+    }
+
+    fn run(&mut self, objective: &mut Objective, budget: usize, rng: &mut Rng) -> History {
+        objective.evaluate_reference();
+        if budget > 1 {
+            let pts = lhsmdu_points(budget - 1, DIMS, rng);
+            let space = objective.task.space.clone();
+            for p in pts {
+                let cfg = space.decode(&p);
+                objective.evaluate(&cfg);
+            }
+        }
+        objective.history().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_dimensional_projections_are_stratified() {
+        let mut rng = Rng::new(1);
+        let n = 20;
+        let pts = lhsmdu_points(n, 3, &mut rng);
+        assert_eq!(pts.len(), n);
+        for d in 0..3 {
+            // Exactly one point per stratum [k/n, (k+1)/n).
+            let mut counts = vec![0usize; n];
+            for p in &pts {
+                let stratum = ((p[d] * n as f64) as usize).min(n - 1);
+                counts[stratum] += 1;
+            }
+            assert!(counts.iter().all(|&c| c == 1), "dim {d}: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn points_are_spread_better_than_iid() {
+        // Min pairwise distance of LHSMDU should beat plain iid sampling
+        // on average (that is its entire purpose).
+        let mut rng = Rng::new(2);
+        let min_dist = |pts: &[Vec<f64>]| -> f64 {
+            let mut best = f64::INFINITY;
+            for i in 0..pts.len() {
+                for j in 0..i {
+                    best = best.min(sq_dist(&pts[i], &pts[j]).sqrt());
+                }
+            }
+            best
+        };
+        let mut lhs_wins = 0;
+        for trial in 0..10 {
+            let mut r1 = rng.fork(trial);
+            let lhs = lhsmdu_points(15, 2, &mut r1);
+            let iid: Vec<Vec<f64>> =
+                (0..15).map(|_| vec![r1.uniform(), r1.uniform()]).collect();
+            if min_dist(&lhs) > min_dist(&iid) {
+                lhs_wins += 1;
+            }
+        }
+        assert!(lhs_wins >= 7, "LHSMDU won only {lhs_wins}/10");
+    }
+
+    #[test]
+    fn all_points_in_unit_box() {
+        let mut rng = Rng::new(3);
+        for p in lhsmdu_points(30, 5, &mut rng) {
+            assert!(p.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        }
+    }
+}

@@ -1,0 +1,98 @@
+//! Tuning algorithms compared in the paper's §5 experiments.
+//!
+//! | tuner | paper label | file |
+//! |---|---|---|
+//! | [`GridTuner`] | "Grid search" (§5.2, semi-exhaustive landscape) | `grid.rs` |
+//! | [`LhsmduTuner`] | "Random search (LHSMDU)" | `lhsmdu.rs` |
+//! | [`TpeTuner`] | "TPE" (hyperopt-style) | `tpe.rs` |
+//! | [`GpBoTuner`] | "GPTune" (GP Bayesian optimization) | `gp_bo.rs` |
+//! | [`TlaTuner`] | "TLA" (Algorithm 4.1: UCB bandit + LCM) | `tla.rs` |
+//!
+//! All tuners implement [`Tuner`]: given an [`Objective`] and an
+//! evaluation budget, they first evaluate the reference configuration
+//! (establishing ARFE_ref, Figure 3), then spend the remaining budget
+//! their own way, returning the [`History`] of evaluations in order.
+
+mod gp_bo;
+mod grid;
+mod lhsmdu;
+mod tla;
+mod tpe;
+mod ucb;
+
+pub use gp_bo::GpBoTuner;
+pub use grid::{paper_grid, GridTuner};
+pub use lhsmdu::{lhsmdu_points, LhsmduTuner};
+pub use tla::{SourceSample, TlaMode, TlaTuner};
+pub use tpe::TpeTuner;
+pub use ucb::UcbBandit;
+
+use crate::objective::{History, Objective};
+use crate::rng::Rng;
+
+/// A budget-bounded tuning algorithm.
+pub trait Tuner {
+    /// Display name (used in figures and EXPERIMENTS.md).
+    fn name(&self) -> &str;
+
+    /// Run the tuner for `budget` function evaluations (the reference
+    /// evaluation counts as the first, matching the paper's accounting)
+    /// and return the evaluation history.
+    fn run(&mut self, objective: &mut Objective, budget: usize, rng: &mut Rng) -> History;
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use crate::data::{generate_synthetic, Problem, SyntheticKind};
+    use crate::objective::{Constants, Objective, ParamSpace, TuningTask};
+    use crate::rng::Rng;
+
+    /// A small, fast tuning objective for tuner unit tests.
+    pub fn tiny_objective(seed: u64) -> Objective {
+        let mut rng = Rng::new(seed);
+        let p: Problem = generate_synthetic(SyntheticKind::GA, 300, 15, &mut rng);
+        let task = TuningTask {
+            problem: p,
+            space: ParamSpace::paper(),
+            constants: Constants { num_repeats: 1, num_pilots: 4, ..Constants::default() },
+        };
+        Objective::new(task, seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::tiny_objective;
+    use super::*;
+
+    /// Contract test run against every tuner: respects the budget, first
+    /// trial is the reference, all trials valid configurations.
+    fn check_contract(make: &mut dyn FnMut() -> Box<dyn Tuner>) {
+        let mut tuner = make();
+        let mut obj = tiny_objective(1);
+        let budget = 8;
+        let h = tuner.run(&mut obj, budget, &mut Rng::new(2));
+        assert_eq!(h.len(), budget, "{} ignored budget", tuner.name());
+        assert!(h.trials()[0].is_reference, "{} must evaluate ref first", tuner.name());
+        for t in h.trials() {
+            assert!((1.0..=10.0).contains(&t.config.sampling_factor));
+            assert!((1..=100).contains(&t.config.vec_nnz));
+            assert!(t.config.safety_factor <= 4);
+            assert!(t.wall_clock > 0.0);
+            assert!(t.value >= t.wall_clock); // penalty only inflates
+        }
+    }
+
+    #[test]
+    fn all_tuners_satisfy_contract() {
+        let mut makers: Vec<Box<dyn FnMut() -> Box<dyn Tuner>>> = vec![
+            Box::new(|| Box::new(LhsmduTuner::new())),
+            Box::new(|| Box::new(TpeTuner::new(4))),
+            Box::new(|| Box::new(GpBoTuner::new(4))),
+            Box::new(|| Box::new(GridTuner::new(vec![]))),
+        ];
+        for m in makers.iter_mut() {
+            check_contract(m.as_mut());
+        }
+    }
+}

@@ -1,0 +1,133 @@
+//! Integration: the three layers compose.
+//!
+//! Loads the AOT artifact (L2 JAX model + L1 Pallas kernels, lowered to
+//! HLO text) through the PJRT runtime and checks its solutions against
+//! (a) the native Rust SAP solver and (b) the direct QR solver, on the
+//! same problem with the same sketch plan.
+//!
+//! Requires `make artifacts` to have run; tests skip (pass with a notice)
+//! when artifacts are absent so `cargo test` works on a fresh checkout.
+
+use ranntune::data::{generate_synthetic, SyntheticKind};
+use ranntune::linalg::{gemv, lstsq_qr, norm2};
+use ranntune::rng::Rng;
+use ranntune::runtime::{default_artifacts_dir, ArtifactManifest, SapEngine};
+use ranntune::sap::arfe;
+use ranntune::sketch::LessUniform;
+
+fn artifacts_ready() -> bool {
+    ArtifactManifest::load(&default_artifacts_dir()).is_ok()
+}
+
+#[test]
+fn aot_engine_matches_direct_solver() {
+    if !artifacts_ready() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let engine = SapEngine::load(&default_artifacts_dir(), "sap_small")
+        .expect("load sap_small");
+    let meta = engine.meta.clone();
+
+    // Problem strictly inside the artifact envelope.
+    let mut rng = Rng::new(7);
+    let (m0, n0) = (meta.m - 100, meta.n - 28);
+    let problem = generate_synthetic(SyntheticKind::GA, m0, n0, &mut rng);
+
+    // LessUniform plan at the artifact's (d, k), indices into live rows.
+    let op = LessUniform::sample(meta.d, m0, meta.k, &mut rng);
+    let plan = op.row_plan(meta.k).expect("plan fits");
+
+    let (x, phibar) = engine.solve(&problem.a, &problem.b, &plan).expect("solve");
+    assert_eq!(x.len(), n0);
+
+    let x_star = lstsq_qr(&problem.a, &problem.b);
+    let err = arfe(&problem.a, &problem.b, &x, &x_star);
+    // f32 pipeline, 30 iterations: comfortably better than 1e-3.
+    assert!(err < 1e-3, "AOT ARFE {err}");
+
+    // phibar must approximate the true residual norm.
+    let mut r = gemv(&problem.a, &x);
+    for i in 0..r.len() {
+        r[i] -= problem.b[i];
+    }
+    let resid = norm2(&r);
+    assert!(
+        (phibar - resid).abs() / resid < 0.05,
+        "phibar {phibar} vs residual {resid}"
+    );
+}
+
+#[test]
+fn aot_engine_agrees_with_native_rust_solver() {
+    if !artifacts_ready() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let engine = SapEngine::load(&default_artifacts_dir(), "sap_small").unwrap();
+    let meta = engine.meta.clone();
+    let mut rng = Rng::new(11);
+    let (m0, n0) = (900, 100);
+    let problem = generate_synthetic(SyntheticKind::T3, m0, n0, &mut rng);
+
+    let op = LessUniform::sample(meta.d, m0, meta.k, &mut rng);
+    let plan = op.row_plan(meta.k).unwrap();
+    let (x_aot, _) = engine.solve(&problem.a, &problem.b, &plan).unwrap();
+
+    // Native solve with the SAME sketch realization: build the
+    // preconditioner from the identical sketch and run LSQR to the same
+    // iteration count.
+    use ranntune::sketch::SketchOp;
+    let sketch = op.apply(&problem.a);
+    let precond = ranntune::sap::Preconditioner::from_qr(&sketch);
+    let sb = op.apply_vec(&problem.b);
+    let z_sk = precond.presolve(&sb);
+    let z0 = {
+        let ax = gemv(&problem.a, &precond.apply(&z_sk));
+        let mut r = problem.b.clone();
+        for i in 0..r.len() {
+            r[i] -= ax[i];
+        }
+        if norm2(&r) < norm2(&problem.b) {
+            z_sk
+        } else {
+            vec![0.0; precond.rank()]
+        }
+    };
+    let native = ranntune::sap::lsqr_preconditioned(
+        &problem.a,
+        &problem.b,
+        &precond,
+        &z0,
+        0.0, // run the full fixed iteration count like the artifact
+        meta.iters,
+    );
+
+    // Same algorithm, same sketch, same iterations — differences come only
+    // from f32 vs f64 arithmetic.
+    let x_star = lstsq_qr(&problem.a, &problem.b);
+    let err_aot = arfe(&problem.a, &problem.b, &x_aot, &x_star);
+    let err_native = arfe(&problem.a, &problem.b, &native.x, &x_star);
+    assert!(err_aot < 1e-3, "AOT ARFE {err_aot}");
+    assert!(err_native < err_aot.max(1e-9) * 10.0 + 1e-9 || err_native < 1e-6);
+    // Solutions themselves agree to f32 resolution.
+    let mut diff = 0.0f64;
+    for i in 0..n0 {
+        diff = diff.max((x_aot[i] - native.x[i]).abs());
+    }
+    assert!(diff < 1e-3, "AOT vs native max diff {diff}");
+}
+
+#[test]
+fn engine_rejects_mismatched_plan() {
+    if !artifacts_ready() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let engine = SapEngine::load(&default_artifacts_dir(), "sap_small").unwrap();
+    let mut rng = Rng::new(1);
+    let problem = generate_synthetic(SyntheticKind::GA, 500, 50, &mut rng);
+    let op = LessUniform::sample(64, 500, 4, &mut rng); // wrong d
+    let plan = op.row_plan(4).unwrap();
+    assert!(engine.solve(&problem.a, &problem.b, &plan).is_err());
+}

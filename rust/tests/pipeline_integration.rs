@@ -1,0 +1,155 @@
+//! Integration tests across the tuning pipeline: data generation →
+//! objective → tuners → history DB → transfer → sensitivity, at small
+//! scale. These are the "modules compose" checks, complementing the
+//! per-module unit tests and the AOT tests in `aot_integration.rs`.
+
+use ranntune::cli::figures::collect_source;
+use ranntune::data::{generate_realworld, generate_synthetic, RealWorldKind, SyntheticKind};
+use ranntune::db::HistoryDb;
+use ranntune::objective::{Constants, Objective, ParamSpace, TuningTask};
+use ranntune::rng::Rng;
+use ranntune::sensitivity::analyze_trials;
+use ranntune::tuners::{GpBoTuner, LhsmduTuner, TlaTuner, TpeTuner, Tuner};
+
+fn small_objective(seed: u64) -> Objective {
+    let mut rng = Rng::new(seed);
+    let problem = generate_synthetic(SyntheticKind::GA, 600, 24, &mut rng);
+    Objective::new(
+        TuningTask {
+            problem,
+            space: ParamSpace::paper(),
+            constants: Constants { num_repeats: 1, num_pilots: 4, ..Constants::default() },
+        },
+        seed,
+    )
+}
+
+#[test]
+fn every_tuner_finds_a_config_at_least_as_good_as_reference() {
+    // The reference config is deliberately conservative; with 15
+    // evaluations every tuner should find something no slower (values are
+    // noisy, so allow 10% slack).
+    for (name, tuner) in [
+        ("lhsmdu", Box::new(LhsmduTuner::new()) as Box<dyn Tuner>),
+        ("tpe", Box::new(TpeTuner::new(4))),
+        ("gptune", Box::new(GpBoTuner::new(4))),
+    ] {
+        let mut tuner = tuner;
+        let mut obj = small_objective(3);
+        let h = tuner.run(&mut obj, 15, &mut Rng::new(1));
+        let ref_value = h.trials()[0].value;
+        let best = h.best().unwrap().value;
+        assert!(
+            best <= ref_value * 1.1,
+            "{name}: best {best} worse than reference {ref_value}"
+        );
+    }
+}
+
+#[test]
+fn full_transfer_pipeline_via_db() {
+    // source tuning on small problem → DB → reload → TLA on larger task.
+    let constants = Constants { num_repeats: 1, ..Constants::default() };
+    let mut rng = Rng::new(4);
+    let source_problem = generate_realworld(RealWorldKind::Musk, 300, 20, &mut rng);
+    let source = collect_source(source_problem, constants.clone(), 15, 9);
+
+    // Round-trip through the DB file format.
+    let dir = std::env::temp_dir().join("ranntune_pipeline_test");
+    let path = dir.join("db.json");
+    {
+        let mut db = HistoryDb::new();
+        let mut h = ranntune::objective::History::new();
+        for s in &source {
+            h.push(ranntune::objective::Trial {
+                config: s.config,
+                wall_clock: s.value,
+                arfe: 1e-9,
+                value: s.value,
+                failed: false,
+                is_reference: (s.value - s.ref_value).abs() < 1e-12,
+            });
+        }
+        db.record("Musk-sim", 300, 20, &h);
+        db.save(&path).unwrap();
+    }
+    let db = HistoryDb::load(&path).unwrap();
+    let source2 = db.source_samples("Musk-sim", 300, 20);
+    assert_eq!(source2.len(), source.len());
+
+    let mut rng = Rng::new(5);
+    let target = generate_realworld(RealWorldKind::Musk, 900, 20, &mut rng);
+    let mut obj = Objective::new(
+        TuningTask { problem: target, space: ParamSpace::paper(), constants },
+        1,
+    );
+    let mut tla = TlaTuner::new(source2);
+    let h = tla.run(&mut obj, 10, &mut Rng::new(2));
+    assert_eq!(h.len(), 10);
+    assert!(h.best().unwrap().value <= h.trials()[0].value * 1.1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sensitivity_runs_on_real_tuning_history() {
+    let mut obj = small_objective(6);
+    let mut sampler = LhsmduTuner::new();
+    let h = sampler.run(&mut obj, 25, &mut Rng::new(3));
+    let mut rng = Rng::new(7);
+    let res = analyze_trials(h.trials(), &ParamSpace::paper(), 256, &mut rng);
+    assert_eq!(res.indices.len(), 5);
+    // All indices finite; ST ≥ S1 up to estimator noise (theory: ST ≥ S1,
+    // but the S1 estimator has high variance at small sample counts).
+    for idx in &res.indices {
+        assert!(idx.s1.is_finite() && idx.st.is_finite());
+        assert!(
+            idx.st >= idx.s1 - (0.1 + 2.0 * idx.s1_conf),
+            "ST {} << S1 {} (conf {})",
+            idx.st,
+            idx.s1,
+            idx.s1_conf
+        );
+    }
+}
+
+#[test]
+fn downsampled_task_correlates_with_full_task() {
+    // The premise of §1.3: the best category on the down-sampled problem
+    // should be competitive on the full problem. Check weakly: the
+    // source-best config is at most 3x off the target-best config found
+    // by a short search.
+    let constants = Constants { num_repeats: 2, ..Constants::default() };
+    let mut rng = Rng::new(8);
+    let full = generate_synthetic(SyntheticKind::T3, 1200, 30, &mut rng);
+    let small = full.downsample(300);
+
+    let source = collect_source(small, constants.clone(), 20, 1);
+    let best_src = source
+        .iter()
+        .min_by(|a, b| a.value.partial_cmp(&b.value).unwrap())
+        .unwrap()
+        .config;
+
+    let mut obj = Objective::new(
+        TuningTask { problem: full, space: ParamSpace::paper(), constants },
+        2,
+    );
+    obj.evaluate_reference();
+    let t_src_best = obj.evaluate(&best_src);
+    let mut sampler = LhsmduTuner::new();
+    // continue searching on the same objective
+    let mut best_rand = f64::INFINITY;
+    let space = ParamSpace::paper();
+    let mut rng2 = Rng::new(3);
+    for _ in 0..15 {
+        let cfg = space.sample(&mut rng2);
+        best_rand = best_rand.min(obj.evaluate(&cfg).value);
+    }
+    let _ = sampler; // sampler unused beyond illustrating API
+    assert!(
+        t_src_best.value <= best_rand * 3.0,
+        "source-best {} vs random-best {}",
+        t_src_best.value,
+        best_rand
+    );
+}

@@ -1,0 +1,245 @@
+//! Property-based invariant tests over the L3 coordinator stack
+//! (proptest-lite harness; see `ranntune::proptest_lite`).
+//!
+//! Invariants covered:
+//! * linear algebra: QR/SVD reconstruction and orthogonality on random
+//!   shapes; triangular-solve inverse property;
+//! * sketching: sparse apply == dense apply; plan extraction consistency;
+//! * SAP: presolve residual rule; convergence to the direct solution;
+//! * objective/tuners: penalty monotonicity, best-so-far monotonicity,
+//!   bandit count conservation, LHSMDU stratification;
+//! * encode/decode: ParamSpace round-trips every valid config;
+//! * DB: record/serialize/load round-trip preserves sample rewards.
+
+use ranntune::linalg::{gemm, gemv, norm2, qr_thin, solve_upper, svd_thin, Mat};
+use ranntune::objective::{category_index, category_parts, History, ParamSpace, Trial};
+use ranntune::proptest_lite::{forall, Config};
+use ranntune::sap::SapConfig;
+use ranntune::sketch::{make_sketch, SketchKind, SketchOp};
+
+#[test]
+fn qr_reconstruction_and_orthogonality() {
+    forall(Config::cases(24), |rng| {
+        let (m, n) = rng.tall_shape(60, 12);
+        let a = rng.tall_matrix(m, n);
+        let f = qr_thin(&a);
+        let mut rec = gemm(&f.q, &f.r);
+        rec.axpy(-1.0, &a);
+        assert!(rec.max_abs() < 1e-9, "QR reconstruction {}", rec.max_abs());
+        let mut qtq = gemm(&f.q.transpose(), &f.q);
+        qtq.axpy(-1.0, &Mat::eye(n));
+        assert!(qtq.max_abs() < 1e-9, "orthogonality {}", qtq.max_abs());
+    });
+}
+
+#[test]
+fn svd_singular_values_bound_operator_norm() {
+    forall(Config::cases(16), |rng| {
+        let (m, n) = rng.tall_shape(40, 8);
+        let a = rng.tall_matrix(m, n);
+        let f = svd_thin(&a);
+        // ‖A·x‖ ≤ σ₁·‖x‖ for random x, and Σσᵢ² = ‖A‖_F².
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let ax = gemv(&a, &x);
+        assert!(norm2(&ax) <= f.s[0] * norm2(&x) * (1.0 + 1e-9));
+        let fro2: f64 = f.s.iter().map(|s| s * s).sum();
+        assert!((fro2.sqrt() - a.fro_norm()).abs() < 1e-8 * (1.0 + a.fro_norm()));
+    });
+}
+
+#[test]
+fn triangular_solve_inverts_multiplication() {
+    forall(Config::cases(32), |rng| {
+        let n = 1 + rng.below(15);
+        let mut u = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                u[(i, j)] = if i == j { 1.0 + rng.uniform() } else { rng.normal() };
+            }
+        }
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let b = gemv(&u, &x);
+        let x2 = solve_upper(&u, &b);
+        for i in 0..n {
+            assert!((x[i] - x2[i]).abs() < 1e-8, "component {i}");
+        }
+    });
+}
+
+#[test]
+fn sketch_sparse_apply_equals_dense_apply() {
+    forall(Config::cases(24), |rng| {
+        let m = 10 + rng.below(60);
+        let n = 1 + rng.below(10);
+        let d = 2 + rng.below(20);
+        let nnz = 1 + rng.below(12);
+        let kind = if rng.bernoulli(0.5) { SketchKind::Sjlt } else { SketchKind::LessUniform };
+        let a = rng.tall_matrix(m, n);
+        let mut sketch_rng = rng.fork(1);
+        let op = make_sketch(kind, d, m, nnz, &mut sketch_rng);
+        let sparse = op.apply(&a);
+        let mut dense = gemm(&op.to_dense(), &a);
+        dense.axpy(-1.0, &sparse);
+        assert!(dense.max_abs() < 1e-10, "{kind:?} d={d} nnz={nnz}: {}", dense.max_abs());
+    });
+}
+
+#[test]
+fn row_plan_reproduces_operator() {
+    forall(Config::cases(16), |rng| {
+        let m = 20 + rng.below(40);
+        let d = 4 + rng.below(12);
+        let k = 1 + rng.below(6);
+        let op = ranntune::sketch::LessUniform::sample(d, m, k, rng);
+        let plan = op.row_plan(8.max(k)).unwrap();
+        let dense = op.to_dense();
+        for r in 0..d {
+            for c in 0..m {
+                assert!(
+                    (plan.dense_entry(r, c) - dense[(r, c)]).abs() < 1e-6,
+                    "entry ({r},{c})"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn sap_presolve_rule_and_convergence() {
+    forall(Config::cases(8), |rng| {
+        let (m, n) = (200 + rng.below(200), 5 + rng.below(10));
+        let a = rng.tall_matrix(m, n);
+        let b: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let mut srng = rng.fork(2);
+        let op = make_sketch(SketchKind::Sjlt, 4 * n, m, 6, &mut srng);
+        let sketch = op.apply(&a);
+        let p = ranntune::sap::Preconditioner::from_qr(&sketch);
+        let sb = op.apply_vec(&b);
+        let z_sk = p.presolve(&sb);
+        let ax = gemv(&a, &p.apply(&z_sk));
+        let mut r = b.clone();
+        for i in 0..m {
+            r[i] -= ax[i];
+        }
+        let take_presolve = norm2(&r) < norm2(&b);
+        // LSQR from the Appendix-A start converges to the direct solution.
+        let z0 = if take_presolve { z_sk } else { vec![0.0; p.rank()] };
+        let res = ranntune::sap::lsqr_preconditioned(&a, &b, &p, &z0, 1e-10, 200);
+        let x_star = ranntune::linalg::lstsq_qr(&a, &b);
+        let err = ranntune::sap::arfe(&a, &b, &res.x, &x_star);
+        assert!(err < 1e-6, "ARFE {err}");
+    });
+}
+
+#[test]
+fn param_space_round_trips_all_valid_configs() {
+    let space = ParamSpace::paper();
+    forall(Config::cases(256), |rng| {
+        let cfg = space.sample(rng);
+        let enc = space.encode(&cfg);
+        assert!(enc.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        let dec = space.decode(&enc);
+        assert_eq!(dec, cfg);
+        let cat = category_index(&cfg);
+        let (alg, sk) = category_parts(cat);
+        assert_eq!(alg, cfg.algorithm);
+        assert_eq!(sk, cfg.sketch);
+    });
+}
+
+#[test]
+fn history_best_so_far_is_monotone_and_consistent() {
+    forall(Config::cases(64), |rng| {
+        let mut h = History::new();
+        let n = 1 + rng.below(30);
+        for i in 0..n {
+            let wall = 0.01 + rng.uniform();
+            let failed = rng.bernoulli(0.3);
+            h.push(Trial {
+                config: SapConfig::reference(),
+                wall_clock: wall,
+                arfe: rng.uniform(),
+                value: if failed { 2.0 * wall } else { wall },
+                failed,
+                is_reference: i == 0,
+            });
+        }
+        let series = h.best_so_far();
+        assert_eq!(series.len(), n);
+        for w in series.windows(2) {
+            assert!(w[1] <= w[0] + 1e-15, "best-so-far increased");
+        }
+        assert_eq!(*series.last().unwrap(), h.best().unwrap().value);
+        for t in h.trials() {
+            assert!(t.value >= t.wall_clock - 1e-15);
+        }
+        let pairs = h.best_vs_time(3);
+        for w in pairs.windows(2) {
+            assert!(w[1].0 > w[0].0);
+        }
+    });
+}
+
+#[test]
+fn db_round_trip_preserves_rewards() {
+    forall(Config::cases(12), |rng| {
+        let space = ParamSpace::paper();
+        let mut h = History::new();
+        let n = 2 + rng.below(10);
+        for i in 0..n {
+            let v = 0.01 + rng.uniform();
+            h.push(Trial {
+                config: space.sample(rng),
+                wall_clock: v,
+                arfe: 1e-8,
+                value: v,
+                failed: false,
+                is_reference: i == 0,
+            });
+        }
+        let mut db = ranntune::db::HistoryDb::new();
+        db.record("prop", 100, 10, &h);
+        let back = ranntune::db::HistoryDb::from_json(&db.to_json()).unwrap();
+        let a = db.source_samples("prop", 100, 10);
+        let b = back.source_samples("prop", 100, 10);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert!((x.reward() - y.reward()).abs() < 1e-9);
+            assert_eq!(x.config, y.config);
+        }
+    });
+}
+
+#[test]
+fn ucb_bandit_counts_are_conserved() {
+    forall(Config::cases(32), |rng| {
+        let mut bandit = ranntune::tuners::UcbBandit::new(0.5 + 8.0 * rng.uniform());
+        let n = 1 + rng.below(100);
+        for _ in 0..n {
+            let cat = bandit.choose();
+            assert!(cat < ranntune::objective::N_CATEGORIES);
+            bandit.observe(cat, rng.uniform());
+        }
+        assert_eq!(bandit.total(), n);
+        let sum: usize =
+            (0..ranntune::objective::N_CATEGORIES).map(|c| bandit.count(c)).sum();
+        assert_eq!(sum, n);
+    });
+}
+
+#[test]
+fn lhsmdu_projections_always_stratified() {
+    forall(Config::cases(12), |rng| {
+        let n = 4 + rng.below(24);
+        let dims = 1 + rng.below(5);
+        let pts = ranntune::tuners::lhsmdu_points(n, dims, rng);
+        assert_eq!(pts.len(), n);
+        for d in 0..dims {
+            let mut counts = vec![0usize; n];
+            for p in &pts {
+                counts[((p[d] * n as f64) as usize).min(n - 1)] += 1;
+            }
+            assert!(counts.iter().all(|&c| c == 1), "dim {d}: {counts:?}");
+        }
+    });
+}
