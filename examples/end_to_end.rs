@@ -83,7 +83,11 @@ fn main() {
     };
     let n_grid = grid_cfgs.len();
     let mut grid_obj = Objective::new(
-        TuningTask { problem: make_problem(100), space: ParamSpace::paper(), constants: constants.clone() },
+        TuningTask {
+            problem: make_problem(100),
+            space: ParamSpace::paper(),
+            constants: constants.clone(),
+        },
         11,
     );
     let mut grid = GridTuner::new(grid_cfgs);
@@ -117,7 +121,11 @@ fn main() {
                 _ => Box::new(TlaTuner::new(source.clone())),
             };
             let mut obj = Objective::new(
-                TuningTask { problem: make_problem(100), space: ParamSpace::paper(), constants: constants.clone() },
+                TuningTask {
+                    problem: make_problem(100),
+                    space: ParamSpace::paper(),
+                    constants: constants.clone(),
+                },
                 seed,
             );
             let h = tuner.run(&mut obj, budget, &mut Rng::new(seed * 31 + 5));
@@ -164,7 +172,11 @@ fn main() {
     // ---- 4. sensitivity
     println!("[4/5] Sobol sensitivity ...");
     let mut sens_obj = Objective::new(
-        TuningTask { problem: make_problem(100), space: ParamSpace::paper(), constants: constants.clone() },
+        TuningTask {
+            problem: make_problem(100),
+            space: ParamSpace::paper(),
+            constants: constants.clone(),
+        },
         3,
     );
     let mut sampler = LhsmduTuner::new();
@@ -184,8 +196,7 @@ fn main() {
             let mut rng = Rng::new(77);
             let problem = {
                 let mut prng = Rng::new(100);
-                let p = generate_realworld(RealWorldKind::Localization, dm, n.min(meta.n), &mut prng);
-                p
+                generate_realworld(RealWorldKind::Localization, dm, n.min(meta.n), &mut prng)
             };
             let op = LessUniform::sample(meta.d, dm, meta.k, &mut rng);
             let plan = op.row_plan(meta.k).unwrap();
@@ -204,7 +215,15 @@ fn main() {
         Err(e) => println!("      (skipped: {e:#})"),
     }
 
-    let headers = ["tuner", "final_best_s", "std", "evals_to_random_final", "acc_time_s", "vs_grid_peak"];
-    write_result(Path::new("results"), "end_to_end", "End-to-end driver (Localization-sim)", &headers, &rows).unwrap();
+    let headers =
+        ["tuner", "final_best_s", "std", "evals_to_random_final", "acc_time_s", "vs_grid_peak"];
+    write_result(
+        Path::new("results"),
+        "end_to_end",
+        "End-to-end driver (Localization-sim)",
+        &headers,
+        &rows,
+    )
+    .unwrap();
     println!("\nresults written to results/end_to_end.md");
 }

@@ -39,7 +39,11 @@ fn main() {
     let reference = &history.trials()[0];
     let best = history.best().expect("non-empty history");
     println!("\nevaluated {} configurations", history.len());
-    println!("reference (safe) config: {}  -> {:.5}s", reference.config.label(), reference.wall_clock);
+    println!(
+        "reference (safe) config: {}  -> {:.5}s",
+        reference.config.label(),
+        reference.wall_clock
+    );
     println!("best found:              {}  -> {:.5}s", best.config.label(), best.wall_clock);
     println!("speedup vs reference:    {:.2}x", reference.wall_clock / best.wall_clock);
     println!("solution accuracy ARFE:  {:.2e}", best.arfe);

@@ -28,7 +28,11 @@ fn main() {
     let mut objective = Objective::new(task, 0);
     let mut sampler = LhsmduTuner::new();
     let history = sampler.run(&mut objective, 100, &mut Rng::new(1));
-    println!("collected {} samples ({}% failed)", history.len(), (history.failure_rate() * 100.0) as u32);
+    println!(
+        "collected {} samples ({}% failed)",
+        history.len(),
+        (history.failure_rate() * 100.0) as u32
+    );
 
     // GP surrogate + 512 Saltelli draws.
     let mut rng = Rng::new(2);

@@ -58,7 +58,11 @@ fn main() {
 
     let mut tla = TlaTuner::new(source);
     let mut obj_tla = Objective::new(
-        TuningTask { problem: make_target(), space: ParamSpace::paper(), constants: constants.clone() },
+        TuningTask {
+            problem: make_target(),
+            space: ParamSpace::paper(),
+            constants: constants.clone(),
+        },
         1,
     );
     let h_tla = tla.run(&mut obj_tla, budget, &mut Rng::new(2));
@@ -78,7 +82,8 @@ fn main() {
     println!("TLA best after {budget} evals:                  {tla_final:.5}s");
     match evals {
         Some(e) => println!(
-            "TLA reached random-search-final quality after only {e} evaluations ({:.1}x fewer)",
+            "TLA reached random-search-final quality after only {e} evaluations \
+             ({:.1}x fewer)",
             budget as f64 / e as f64
         ),
         None => println!("TLA did not reach random search's final value (unusual — try more budget)"),

@@ -1,0 +1,6 @@
+"""L1/L2 of the ranntune stack.
+
+`model` is the JAX SAP least-squares model whose hot spots are Pallas
+kernels (`kernels/`); `aot` lowers it to static-shape HLO text artifacts
+that the Rust PJRT runtime (`rust/src/runtime/`) executes without Python.
+"""

@@ -42,11 +42,15 @@ fn main() {
                 (r.iterations, r.converged)
             })),
             ("PGD+momentum", Box::new(|| {
-                let r = pgd_momentum_preconditioned(&problem.a, &problem.b, &p, &z0, bounds, tol, iters);
+                let r = pgd_momentum_preconditioned(
+                    &problem.a, &problem.b, &p, &z0, bounds, tol, iters,
+                );
                 (r.iterations, r.converged)
             })),
             ("Chebyshev", Box::new(|| {
-                let r = chebyshev_preconditioned(&problem.a, &problem.b, &p, &z0, bounds, tol, iters);
+                let r = chebyshev_preconditioned(
+                    &problem.a, &problem.b, &p, &z0, bounds, tol, iters,
+                );
                 (r.iterations, r.converged)
             })),
         ];

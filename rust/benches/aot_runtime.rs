@@ -32,7 +32,11 @@ fn main() {
     let stats = time_fn(2, 8, || {
         std::hint::black_box(engine.solve(&problem.a, &problem.b, &plan).unwrap());
     });
-    rows.push(vec!["AOT PJRT (fixed 30 iters, f32)".into(), fmt_secs(stats.median), fmt_secs(stats.min)]);
+    rows.push(vec![
+        "AOT PJRT (fixed 30 iters, f32)".into(),
+        fmt_secs(stats.median),
+        fmt_secs(stats.min),
+    ]);
 
     let cfg = SapConfig {
         algorithm: SapAlgorithm::QrLsqr,
@@ -45,7 +49,11 @@ fn main() {
         let mut r = Rng::new(9);
         std::hint::black_box(solve_sap(&problem.a, &problem.b, &cfg, &mut r));
     });
-    rows.push(vec!["native Rust SAP (adaptive, f64)".into(), fmt_secs(stats.median), fmt_secs(stats.min)]);
+    rows.push(vec![
+        "native Rust SAP (adaptive, f64)".into(),
+        fmt_secs(stats.median),
+        fmt_secs(stats.min),
+    ]);
 
     let stats = time_fn(1, 5, || {
         std::hint::black_box(lstsq_qr(&problem.a, &problem.b));

@@ -2,6 +2,9 @@
 //! (small | default | paper; benches default to small so `cargo bench`
 //! finishes in minutes).
 
+// Compiled once per bench binary; not every bench uses every helper.
+#![allow(dead_code)]
+
 use ranntune::cli::figures::FigScale;
 
 pub fn bench_scale() -> FigScale {

@@ -13,27 +13,33 @@ use ranntune::rng::Rng;
 use ranntune::sap::{solve_sap, Preconditioner, SapConfig};
 use ranntune::sketch::{make_sketch, SketchKind, SketchOp};
 
+/// Dimension override for CI smoke runs: RANNTUNE_BENCH_M / RANNTUNE_BENCH_N
+/// shrink the problem below the interactive floor (the CI bench-smoke job
+/// runs at a few hundred rows so the whole binary finishes in seconds).
+fn env_dim(var: &str, default: usize) -> usize {
+    std::env::var(var).ok().and_then(|s| s.parse().ok()).filter(|&v| v > 0).unwrap_or(default)
+}
+
 fn main() {
     let scale = common::bench_scale();
-    let (m, n) = (scale.m.max(2000), scale.n.max(64));
+    let m = env_dim("RANNTUNE_BENCH_M", scale.m.max(2000));
+    let n = env_dim("RANNTUNE_BENCH_N", scale.n.max(64)).min(m);
     let d = 4 * n;
     let mut rng = Rng::new(1);
     println!("== hot-path micro benches (m={m}, n={n}, d={d}) ==\n");
 
     let problem = generate_synthetic(SyntheticKind::GA, m, n, &mut rng);
     let a = &problem.a;
-    let mut rows = Vec::new();
+    // (name, median_s, min_s, gflops) — gflops 0.0 when no flop count
+    // applies. The display table is derived from this after the runs.
+    let mut raw: Vec<(String, f64, f64, f64)> = Vec::new();
     let mut add = |name: &str, stats: ranntune::bench_harness::TimingStats, flops: f64| {
-        rows.push(vec![
-            name.to_string(),
-            fmt_secs(stats.median),
-            fmt_secs(stats.min),
-            if flops > 0.0 {
-                format!("{:.2}", flops / stats.median / 1e9)
-            } else {
-                "-".into()
-            },
-        ]);
+        let gflops = if flops > 0.0 && stats.median > 0.0 {
+            flops / stats.median / 1e9
+        } else {
+            0.0
+        };
+        raw.push((name.to_string(), stats.median, stats.min, gflops));
     };
 
     // Sketch applies: LessUniform (d·k·n flops) vs SJLT (m·k·n flops).
@@ -137,6 +143,17 @@ fn main() {
         0.0,
     );
 
+    let rows: Vec<Vec<String>> = raw
+        .iter()
+        .map(|(name, med, min, gflops)| {
+            vec![
+                name.clone(),
+                fmt_secs(*med),
+                fmt_secs(*min),
+                if *gflops > 0.0 { format!("{gflops:.2}") } else { "-".into() },
+            ]
+        })
+        .collect();
     let table = markdown_table(&["path", "median", "min", "GFLOP/s"], &rows);
     println!("{table}");
     let _ = ranntune::bench_harness::write_result(
@@ -146,4 +163,29 @@ fn main() {
         &["path", "median", "min", "GFLOP/s"],
         &rows,
     );
+
+    // Machine-readable snapshot for the CI perf trajectory (uploaded as a
+    // workflow artifact; diffable across commits).
+    use ranntune::json::Json;
+    let json_rows: Vec<Json> = raw
+        .iter()
+        .map(|(name, med, min, gflops)| {
+            Json::obj(vec![
+                ("path", Json::Str(name.clone())),
+                ("median_s", Json::Num(*med)),
+                ("min_s", Json::Num(*min)),
+                ("gflops", Json::Num(*gflops)),
+            ])
+        })
+        .collect();
+    let snapshot = Json::obj(vec![
+        ("bench", Json::Str("hotpath_micro".into())),
+        ("m", Json::Num(m as f64)),
+        ("n", Json::Num(n as f64)),
+        ("d", Json::Num(d as f64)),
+        ("rows", Json::Arr(json_rows)),
+    ]);
+    let dir = common::results_dir();
+    let _ = std::fs::create_dir_all(&dir);
+    let _ = std::fs::write(dir.join("BENCH_hotpath_micro.json"), snapshot.to_string_pretty());
 }

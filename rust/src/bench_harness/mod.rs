@@ -21,12 +21,22 @@ pub struct TimingStats {
 impl TimingStats {
     pub fn from_samples(samples: &[f64]) -> TimingStats {
         use crate::gp::stats::{median, stddev};
+        if samples.is_empty() {
+            return TimingStats {
+                mean: 0.0,
+                median: 0.0,
+                stddev: 0.0,
+                min: 0.0,
+                max: 0.0,
+                iters: 0,
+            };
+        }
         TimingStats {
             mean: crate::gp::stats::mean(samples),
             median: median(samples),
             stddev: stddev(samples),
             min: samples.iter().cloned().fold(f64::INFINITY, f64::min),
-            max: samples.iter().cloned().fold(0.0, f64::max),
+            max: samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
             iters: samples.len(),
         }
     }
@@ -131,6 +141,48 @@ mod tests {
         assert_eq!(stats.iters, 5);
         assert!(stats.min <= stats.median && stats.median <= stats.max);
         assert!(stats.mean > 0.0);
+    }
+
+    #[test]
+    fn from_samples_single_sample() {
+        let s = TimingStats::from_samples(&[0.25]);
+        assert_eq!(s.iters, 1);
+        assert_eq!(s.mean, 0.25);
+        assert_eq!(s.median, 0.25);
+        assert_eq!(s.min, 0.25);
+        assert_eq!(s.max, 0.25);
+        assert_eq!(s.stddev, 0.0);
+    }
+
+    #[test]
+    fn from_samples_constant_samples() {
+        let s = TimingStats::from_samples(&[0.5; 7]);
+        assert_eq!(s.iters, 7);
+        assert_eq!(s.mean, 0.5);
+        assert_eq!(s.median, 0.5);
+        assert_eq!(s.min, 0.5);
+        assert_eq!(s.max, 0.5);
+        assert_eq!(s.stddev, 0.0);
+    }
+
+    #[test]
+    fn from_samples_empty_is_zeroed() {
+        let s = TimingStats::from_samples(&[]);
+        assert_eq!(s.iters, 0);
+        assert_eq!(s.mean, 0.0);
+        assert_eq!(s.median, 0.0);
+        assert_eq!(s.min, 0.0);
+        assert_eq!(s.max, 0.0);
+    }
+
+    #[test]
+    fn from_samples_order_statistics() {
+        let s = TimingStats::from_samples(&[0.4, 0.1, 0.3, 0.2]);
+        assert_eq!(s.min, 0.1);
+        assert_eq!(s.max, 0.4);
+        assert!((s.median - 0.25).abs() < 1e-15);
+        assert!((s.mean - 0.25).abs() < 1e-15);
+        assert!(s.stddev > 0.0);
     }
 
     #[test]

@@ -18,7 +18,6 @@ use crate::tuners::{
 };
 use std::path::Path;
 
-
 /// Experiment scale: problem sizes, tuning budgets, repetition counts.
 #[derive(Clone, Debug)]
 pub struct FigScale {
@@ -171,7 +170,14 @@ pub fn fig1(scale: &FigScale, out: &Path) -> String {
         }
     }
     let headers = ["matrix", "vec_nnz", "sampling_factor", "wall_clock_s", "ARFE", "failed"];
-    write_result(out, "fig1_sketch_config", "Figure 1: SAP performance vs sketching matrix (QR-LSQR, LessUniform)", &headers, &rows).unwrap();
+    write_result(
+        out,
+        "fig1_sketch_config",
+        "Figure 1: SAP performance vs sketching matrix (QR-LSQR, LessUniform)",
+        &headers,
+        &rows,
+    )
+    .unwrap();
     crate::bench_harness::markdown_table(&headers, &rows)
 }
 
@@ -192,7 +198,14 @@ pub fn table3(scale: &FigScale, out: &Path) -> String {
         ]);
     }
     let headers = ["Matrix", "Coherence", "Condition number"];
-    write_result(out, "table3_matrix_props", "Table 3: properties of input matrices", &headers, &rows).unwrap();
+    write_result(
+        out,
+        "table3_matrix_props",
+        "Table 3: properties of input matrices",
+        &headers,
+        &rows,
+    )
+    .unwrap();
     crate::bench_harness::markdown_table(&headers, &rows)
 }
 
@@ -265,7 +278,10 @@ fn grid_landscape(
                     dataset.to_string(),
                     label,
                     format!("{:.5}", t.wall_clock),
-                    format!("sf={:.0} nnz={} s={}", t.config.sampling_factor, t.config.vec_nnz, t.config.safety_factor),
+                    format!(
+                        "sf={:.0} nnz={} s={}",
+                        t.config.sampling_factor, t.config.vec_nnz, t.config.safety_factor
+                    ),
                     format!("{}/{}", fails[c], counts[c]),
                 ]);
             }
@@ -315,12 +331,33 @@ pub fn grid_figure(scale: &FigScale, datasets: &[&str], name: &str, out: &Path) 
         ]);
     }
     let sum_headers = ["matrix", "category", "best_wall_clock_s", "best_config", "failures"];
-    write_result(out, &format!("{name}_summary"), &format!("{name}: per-category grid optimum"), &sum_headers, &summary_rows).unwrap();
+    write_result(
+        out,
+        &format!("{name}_summary"),
+        &format!("{name}: per-category grid optimum"),
+        &sum_headers,
+        &summary_rows,
+    )
+    .unwrap();
     let dump_headers =
         ["matrix", "alg", "sketch", "sf", "nnz", "safety", "wall_clock_s", "ARFE", "failed"];
-    write_result(out, &format!("{name}_landscape"), &format!("{name}: full landscape"), &dump_headers, &dump_rows).unwrap();
+    write_result(
+        out,
+        &format!("{name}_landscape"),
+        &format!("{name}: full landscape"),
+        &dump_headers,
+        &dump_rows,
+    )
+    .unwrap();
     let head_headers = ["matrix", "ref_config_s", "grid_best_s", "speedup"];
-    write_result(out, &format!("{name}_speedup"), &format!("{name}: optimal vs safe reference (paper §5.2: 3.9x–6.4x)"), &head_headers, &headline_rows).unwrap();
+    write_result(
+        out,
+        &format!("{name}_speedup"),
+        &format!("{name}: optimal vs safe reference (paper §5.2: 3.9x–6.4x)"),
+        &head_headers,
+        &headline_rows,
+    )
+    .unwrap();
     format!(
         "{}\n{}",
         crate::bench_harness::markdown_table(&sum_headers, &summary_rows),
@@ -432,9 +469,23 @@ pub fn tuner_figure(scale: &FigScale, datasets: &[&str], name: &str, out: &Path)
         "evals_to_LHSMDU_final",
         "accumulated_eval_time_s",
     ];
-    write_result(out, &format!("{name}_summary"), &format!("{name}: tuner comparison"), &headers, &summary).unwrap();
+    write_result(
+        out,
+        &format!("{name}_summary"),
+        &format!("{name}: tuner comparison"),
+        &headers,
+        &summary,
+    )
+    .unwrap();
     let series_headers = ["matrix", "tuner", "seed", "evaluation", "best_so_far_s"];
-    write_result(out, &format!("{name}_series"), &format!("{name}: best-so-far series"), &series_headers, &series_rows).unwrap();
+    write_result(
+        out,
+        &format!("{name}_series"),
+        &format!("{name}: best-so-far series"),
+        &series_headers,
+        &series_rows,
+    )
+    .unwrap();
     crate::bench_harness::markdown_table(&headers, &summary)
 }
 
@@ -473,7 +524,8 @@ pub fn fig6(scale: &FigScale, out: &Path) -> String {
         }
     }
     let headers = ["target", "source", "final_best_s(mean)", "final_best_s(std)"];
-    write_result(out, "fig6_tla_sources", "Figure 6: effect of source data on TLA", &headers, &rows).unwrap();
+    write_result(out, "fig6_tla_sources", "Figure 6: effect of source data on TLA", &headers, &rows)
+        .unwrap();
     crate::bench_harness::markdown_table(&headers, &rows)
 }
 
@@ -520,7 +572,14 @@ pub fn fig7(scale: &FigScale, out: &Path) -> String {
         }
     }
     let headers = ["matrix", "transfer variant", "final_best_s(mean)", "accumulated_time_s"];
-    write_result(out, "fig7_bandit_constant", "Figure 7: transfer-learning variants (UCB constant / original LCM)", &headers, &rows).unwrap();
+    write_result(
+        out,
+        "fig7_bandit_constant",
+        "Figure 7: transfer-learning variants (UCB constant / original LCM)",
+        &headers,
+        &rows,
+    )
+    .unwrap();
     crate::bench_harness::markdown_table(&headers, &rows)
 }
 
@@ -549,7 +608,14 @@ pub fn table5(scale: &FigScale, out: &Path) -> String {
         }
     }
     let headers = ["dataset", "parameter", "S1 (conf)", "ST (conf)"];
-    write_result(out, "table5_sensitivity", "Table 5: Sobol sensitivity (GP surrogate + Saltelli)", &headers, &rows).unwrap();
+    write_result(
+        out,
+        "table5_sensitivity",
+        "Table 5: Sobol sensitivity (GP surrogate + Saltelli)",
+        &headers,
+        &rows,
+    )
+    .unwrap();
     crate::bench_harness::markdown_table(&headers, &rows)
 }
 
@@ -607,7 +673,14 @@ pub fn fig10(scale: &FigScale, out: &Path) -> String {
         }
     }
     let headers = ["constraint", "tuner", "final_best_s(mean)", "failure_rate"];
-    write_result(out, "fig10_penalty_allowance", "Figure 10: effect of allowance/penalty factors", &headers, &rows).unwrap();
+    write_result(
+        out,
+        "fig10_penalty_allowance",
+        "Figure 10: effect of allowance/penalty factors",
+        &headers,
+        &rows,
+    )
+    .unwrap();
     crate::bench_harness::markdown_table(&headers, &rows)
 }
 

@@ -95,10 +95,14 @@ COMMANDS
                --tuner lhsmdu|tpe|gptune|tla   --budget N   --m M --n N
                --seed S  --repeats R  --db results/db.json (record history)
                --source-db path (tla: load source samples)
+               --eval-threads N (run batched evaluations on N threads;
+               per-trial ARFE is deterministic, but tuners that adapt to
+               measured wall-clock may propose different sequences)
   grid         semi-exhaustive grid landscape (Fig. 4/8 ground truth)
                --data ... --m --n [--coarse] [--repeats R]
   sensitivity  Sobol analysis via GP surrogate (Table 5)
                --data ... --m --n [--samples 100] [--saltelli 512]
+               [--eval-threads N]
   deploy       run the AOT (JAX+Pallas→PJRT) artifact vs the native solver
                --variant sap_small [--m 900 --n 100]
   props        dataset diagnostics: coherence, condition number (Table 3)

@@ -20,7 +20,9 @@
 //!   text artifacts at chosen configurations.
 //! * [`runtime`] loads those artifacts through the PJRT C API (`xla`
 //!   crate) so a *tuned* configuration can be deployed as a self-contained
-//!   compiled executable — Python never runs on the solve path.
+//!   compiled executable — Python never runs on the solve path. The PJRT
+//!   engine needs the off-by-default `pjrt` cargo feature; without it the
+//!   core crate is pure-std and the engine is a graceful stub.
 
 pub mod bench_harness;
 pub mod cli;

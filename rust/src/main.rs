@@ -7,7 +7,7 @@
 use ranntune::cli::{figures, make_problem, Args, USAGE};
 use ranntune::data::{coherence, condition_number};
 use ranntune::db::HistoryDb;
-use ranntune::objective::{Constants, Objective, ParamSpace, TuningTask};
+use ranntune::objective::{Constants, Objective, ParallelEvaluator, ParamSpace, TuningTask};
 use ranntune::rng::Rng;
 use ranntune::runtime::{default_artifacts_dir, SapEngine};
 use ranntune::sensitivity::{analyze_trials, PARAM_NAMES};
@@ -107,6 +107,11 @@ fn cmd_tune(args: &Args) -> i32 {
     println!("tuning {name} ({m}x{n}) with {} for {budget} evaluations ...", tuner.name());
     let task = TuningTask { problem, space: ParamSpace::paper(), constants: constants.clone() };
     let mut obj = Objective::new(task, seed);
+    let eval_threads = args.get_usize("eval-threads", 1);
+    if eval_threads > 1 {
+        obj.set_evaluator(Box::new(ParallelEvaluator::new(eval_threads)));
+        println!("evaluation engine: parallel ({eval_threads} threads)");
+    }
     println!("direct solver: {:.4}s", obj.direct_secs);
     let history = tuner.run(&mut obj, budget, &mut Rng::new(seed));
 
@@ -170,6 +175,10 @@ fn cmd_sensitivity(args: &Args) -> i32 {
     println!("collecting {samples} random samples on {} ...", problem.name);
     let task = TuningTask { problem, space: ParamSpace::paper(), constants };
     let mut obj = Objective::new(task, 0);
+    let eval_threads = args.get_usize("eval-threads", 1);
+    if eval_threads > 1 {
+        obj.set_evaluator(Box::new(ParallelEvaluator::new(eval_threads)));
+    }
     let mut tuner = LhsmduTuner::new();
     let h = tuner.run(&mut obj, samples, &mut Rng::new(3));
     let mut rng = Rng::new(9);

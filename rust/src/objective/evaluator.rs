@@ -1,0 +1,282 @@
+//! Ask/tell evaluation engine: how queued configuration measurements are
+//! actually executed.
+//!
+//! The paper's cost model is *tuning cost = number of objective
+//! evaluations × wall-clock per evaluation*. The surrogate tuners cut the
+//! first factor; this module cuts the second by separating **what** to
+//! measure (an ordered batch of [`EvalJob`]s — the "ask") from **how** it
+//! is measured (an [`Evaluator`] returning [`RawEval`]s — the "tell"):
+//!
+//! * [`SerialEvaluator`] — one `(config, repeat)` solver run at a time,
+//!   the seed behaviour.
+//! * [`ParallelEvaluator`] — fans the `num_jobs × num_repeats` solver runs
+//!   out over `std::thread::scope` workers.
+//!
+//! Determinism: each solver run draws randomness from a stream derived
+//! *purely* from `(base_seed, trial_index, repeat)` — see [`repeat_rng`] —
+//! never from shared mutable RNG state. Results are written into slots
+//! indexed by `(job, repeat)`, so ARFE values, failure flags, and trial
+//! order are bit-identical between the serial and parallel evaluators (and
+//! across any thread count); only the measured wall-clock differs, as it
+//! must.
+
+use super::Constants;
+use crate::data::Problem;
+use crate::rng::Rng;
+use crate::sap::{arfe, solve_sap, SapConfig};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Immutable task state an evaluator needs to measure configurations.
+pub struct EvalContext<'a> {
+    pub problem: &'a Problem,
+    pub constants: &'a Constants,
+    /// Direct-solver reference solution (the x* in ARFE).
+    pub x_star: &'a [f64],
+    /// Root seed of the objective's solver-randomness streams.
+    pub base_seed: u64,
+}
+
+/// One queued measurement: the global trial index (position in the
+/// [`super::History`]) plus the configuration to measure.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalJob {
+    pub trial_index: usize,
+    pub config: SapConfig,
+}
+
+/// Raw measurement of one configuration, averaged over `num_repeats`
+/// solver seeds. Validity/penalty handling stays in [`super::Objective`].
+#[derive(Clone, Copy, Debug)]
+pub struct RawEval {
+    pub wall_clock: f64,
+    pub arfe: f64,
+}
+
+/// Deterministic solver RNG for one `(trial, repeat)` cell: a SplitMix64-
+/// style hash of the indices folded into the base seed. Independent of
+/// evaluation order and thread schedule, so serial and parallel execution
+/// see identical solver randomness.
+pub fn repeat_rng(base_seed: u64, trial_index: usize, repeat: usize) -> Rng {
+    let mut h = base_seed ^ 0x517c_c1b7_2722_0a95;
+    h = h.wrapping_add((trial_index as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    h = (h ^ (h >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    h = h.wrapping_add((repeat as u64).wrapping_mul(0xD134_2543_DE82_EF95));
+    h = (h ^ (h >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    Rng::new(h ^ (h >> 31))
+}
+
+/// Run one solver repeat; returns (wall-clock seconds, ARFE).
+fn run_repeat(ctx: &EvalContext<'_>, job: &EvalJob, repeat: usize) -> (f64, f64) {
+    let mut rng = repeat_rng(ctx.base_seed, job.trial_index, repeat);
+    // `total_secs` is measured inside solve_sap, so both evaluators agree
+    // on what "wall clock" means regardless of scheduling overhead here.
+    let sol = solve_sap(&ctx.problem.a, &ctx.problem.b, &job.config, &mut rng);
+    let err = arfe(&ctx.problem.a, &ctx.problem.b, &sol.x, ctx.x_star);
+    (sol.stats.total_secs, err)
+}
+
+/// Reduce per-repeat samples into one [`RawEval`].
+fn reduce(times: &[f64], errors: &[f64]) -> RawEval {
+    RawEval {
+        wall_clock: crate::gp::stats::mean(times),
+        arfe: crate::gp::stats::mean(errors),
+    }
+}
+
+/// A strategy for executing a batch of queued evaluations.
+pub trait Evaluator {
+    /// Display name (surfaced by the CLI and benches).
+    fn name(&self) -> &'static str;
+
+    /// Execute every job (`num_repeats` solver runs each) and return one
+    /// [`RawEval`] per job, **in submission order**.
+    fn run_batch(&self, ctx: &EvalContext<'_>, jobs: &[EvalJob]) -> Vec<RawEval>;
+}
+
+/// The seed behaviour: jobs and repeats run one after another on the
+/// calling thread.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SerialEvaluator;
+
+impl SerialEvaluator {
+    pub fn new() -> SerialEvaluator {
+        SerialEvaluator
+    }
+}
+
+impl Evaluator for SerialEvaluator {
+    fn name(&self) -> &'static str {
+        "serial"
+    }
+
+    fn run_batch(&self, ctx: &EvalContext<'_>, jobs: &[EvalJob]) -> Vec<RawEval> {
+        let repeats = ctx.constants.num_repeats.max(1);
+        jobs.iter()
+            .map(|job| {
+                let mut times = Vec::with_capacity(repeats);
+                let mut errors = Vec::with_capacity(repeats);
+                for r in 0..repeats {
+                    let (secs, err) = run_repeat(ctx, job, r);
+                    times.push(secs);
+                    errors.push(err);
+                }
+                reduce(&times, &errors)
+            })
+            .collect()
+    }
+}
+
+/// Scoped-thread fan-out over the `jobs × repeats` unit grid.
+///
+/// Workers pull unit indices from an atomic counter and write results into
+/// disjoint slots, so output order is submission order regardless of
+/// scheduling. Wall-clock per *unit* can inflate under contention (the
+/// inner linalg kernels also thread via `RANNTUNE_THREADS`); total batch
+/// latency is what this buys down.
+#[derive(Clone, Copy, Debug)]
+pub struct ParallelEvaluator {
+    threads: usize,
+}
+
+impl ParallelEvaluator {
+    /// `threads` is clamped to at least 1; 1 behaves exactly like
+    /// [`SerialEvaluator`] (same results, same order).
+    pub fn new(threads: usize) -> ParallelEvaluator {
+        ParallelEvaluator { threads: threads.max(1) }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+}
+
+impl Evaluator for ParallelEvaluator {
+    fn name(&self) -> &'static str {
+        "parallel"
+    }
+
+    fn run_batch(&self, ctx: &EvalContext<'_>, jobs: &[EvalJob]) -> Vec<RawEval> {
+        let repeats = ctx.constants.num_repeats.max(1);
+        let n_units = jobs.len() * repeats;
+        if n_units == 0 {
+            return Vec::new();
+        }
+        let nt = self.threads.min(n_units);
+        if nt <= 1 {
+            return SerialEvaluator.run_batch(ctx, jobs);
+        }
+
+        let next = AtomicUsize::new(0);
+        let worker_results: Vec<Vec<(usize, f64, f64)>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..nt)
+                .map(|_| {
+                    let next = &next;
+                    s.spawn(move || {
+                        let mut out = Vec::new();
+                        loop {
+                            let u = next.fetch_add(1, Ordering::Relaxed);
+                            if u >= n_units {
+                                break;
+                            }
+                            let (j, r) = (u / repeats, u % repeats);
+                            let (secs, err) = run_repeat(ctx, &jobs[j], r);
+                            out.push((u, secs, err));
+                        }
+                        out
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("evaluator worker")).collect()
+        });
+
+        // Scatter into (job, repeat) slots, then reduce in job order.
+        let mut times = vec![0.0f64; n_units];
+        let mut errors = vec![0.0f64; n_units];
+        for chunk in worker_results {
+            for (u, secs, err) in chunk {
+                times[u] = secs;
+                errors[u] = err;
+            }
+        }
+        (0..jobs.len())
+            .map(|j| {
+                let span = j * repeats..(j + 1) * repeats;
+                reduce(&times[span.clone()], &errors[span])
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate_synthetic, SyntheticKind};
+    use crate::objective::ParamSpace;
+
+    fn tiny_ctx_parts() -> (Problem, Constants, Vec<f64>) {
+        let mut rng = Rng::new(1);
+        let problem = generate_synthetic(SyntheticKind::GA, 250, 12, &mut rng);
+        let x_star = crate::linalg::lstsq_qr(&problem.a, &problem.b);
+        let constants = Constants { num_repeats: 2, ..Constants::default() };
+        (problem, constants, x_star)
+    }
+
+    fn jobs_for(n: usize) -> Vec<EvalJob> {
+        let space = ParamSpace::paper();
+        let mut rng = Rng::new(7);
+        (0..n)
+            .map(|i| EvalJob { trial_index: i, config: space.sample(&mut rng) })
+            .collect()
+    }
+
+    #[test]
+    fn repeat_rng_is_order_free_and_distinct() {
+        let mut a = repeat_rng(5, 3, 1);
+        let mut a2 = repeat_rng(5, 3, 1);
+        assert_eq!(a.next_u64(), a2.next_u64());
+        let mut b = repeat_rng(5, 3, 2);
+        let mut c = repeat_rng(5, 4, 1);
+        let x = repeat_rng(5, 3, 1).next_u64();
+        assert_ne!(x, b.next_u64());
+        assert_ne!(x, c.next_u64());
+    }
+
+    #[test]
+    fn parallel_matches_serial_bitwise_on_arfe() {
+        let (problem, constants, x_star) = tiny_ctx_parts();
+        let ctx = EvalContext {
+            problem: &problem,
+            constants: &constants,
+            x_star: &x_star,
+            base_seed: 42,
+        };
+        let jobs = jobs_for(6);
+        let serial = SerialEvaluator.run_batch(&ctx, &jobs);
+        for threads in [1, 2, 4, 16] {
+            let par = ParallelEvaluator::new(threads).run_batch(&ctx, &jobs);
+            assert_eq!(par.len(), serial.len());
+            for (p, s) in par.iter().zip(serial.iter()) {
+                assert_eq!(p.arfe.to_bits(), s.arfe.to_bits(), "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let (problem, constants, x_star) = tiny_ctx_parts();
+        let ctx = EvalContext {
+            problem: &problem,
+            constants: &constants,
+            x_star: &x_star,
+            base_seed: 0,
+        };
+        assert!(SerialEvaluator.run_batch(&ctx, &[]).is_empty());
+        assert!(ParallelEvaluator::new(8).run_batch(&ctx, &[]).is_empty());
+    }
+
+    #[test]
+    fn thread_count_clamps() {
+        assert_eq!(ParallelEvaluator::new(0).threads(), 1);
+        assert_eq!(ParallelEvaluator::new(3).threads(), 3);
+    }
+}

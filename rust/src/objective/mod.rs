@@ -6,23 +6,29 @@
 //! * [`TuningTask`] — a problem plus its space and constant parameters
 //!   (`num_pilots`, `num_repeats`, `ref_config`, `penalty_factor`,
 //!   `allowance_factor`).
-//! * [`Objective`] — the black-box function the tuners call: runs the SAP
-//!   solver `num_repeats` times, averages wall-clock time and ARFE,
+//! * [`Objective`] — the black-box function the tuners call: queues
+//!   configurations (ask), executes them through an [`Evaluator`] (tell),
+//!   averages wall-clock time and ARFE over `num_repeats` solver seeds,
 //!   validates against `allowance_factor × ARFE_ref`, and penalizes
-//!   failures by `penalty_factor × wall_clock_time` (§4.1.2).
+//!   failures by `penalty_factor × wall_clock_time` (§4.1.2). Evaluations
+//!   may be submitted one at a time ([`Objective::evaluate`]) or as a
+//!   batch ([`Objective::evaluate_batch`]) — with a [`ParallelEvaluator`]
+//!   the batch's `num_repeats × batch_len` solver runs execute
+//!   concurrently with deterministic per-trial RNG streams.
 //! * [`History`]/[`Trial`] — the per-evaluation record every tuner
 //!   produces; also the unit stored in the crowd database.
 
+mod evaluator;
 mod history;
 mod space;
 
+pub use evaluator::*;
 pub use history::*;
 pub use space::*;
 
 use crate::data::Problem;
 use crate::linalg::lstsq_qr;
-use crate::rng::Rng;
-use crate::sap::{arfe, solve_sap, SapConfig};
+use crate::sap::SapConfig;
 use std::time::Instant;
 
 /// Constant parameters of the tuning pipeline (Table 2 bottom / Table 4).
@@ -70,6 +76,8 @@ impl TuningTask {
 
 /// The black-box objective. Owns the direct-solver reference solution and
 /// the ARFE_ref state; accumulates every evaluation into a [`History`].
+/// Measurement execution is delegated to an [`Evaluator`] (serial by
+/// default; see [`ParallelEvaluator`] and the CLI's `--eval-threads`).
 pub struct Objective {
     pub task: TuningTask,
     /// Direct (QR) least-squares solution — the x* in ARFE.
@@ -80,14 +88,24 @@ pub struct Objective {
     /// evaluation.
     arfe_ref: Option<f64>,
     history: History,
-    /// Root generator for solver randomness; each repeat forks a child.
-    rng: Rng,
+    /// Root seed of the deterministic per-(trial, repeat) solver streams.
+    base_seed: u64,
+    evaluator: Box<dyn Evaluator>,
 }
 
 impl Objective {
-    /// Create the objective: runs the direct solver once (Figure 3's first
-    /// step) to obtain x*.
+    /// Create the objective with the serial evaluator: runs the direct
+    /// solver once (Figure 3's first step) to obtain x*.
     pub fn new(task: TuningTask, seed: u64) -> Objective {
+        Objective::with_evaluator(task, seed, Box::new(SerialEvaluator))
+    }
+
+    /// Create the objective with an explicit evaluation engine.
+    pub fn with_evaluator(
+        task: TuningTask,
+        seed: u64,
+        evaluator: Box<dyn Evaluator>,
+    ) -> Objective {
         let t = Instant::now();
         let x_star = lstsq_qr(&task.problem.a, &task.problem.b);
         let direct_secs = t.elapsed().as_secs_f64();
@@ -97,8 +115,21 @@ impl Objective {
             direct_secs,
             arfe_ref: None,
             history: History::new(),
-            rng: Rng::new(seed ^ OBJECTIVE_SEED_SALT),
+            base_seed: seed ^ OBJECTIVE_SEED_SALT,
+            evaluator,
         }
+    }
+
+    /// Swap the evaluation engine (e.g. serial → parallel). Does not
+    /// affect determinism of ARFE values: solver streams depend only on
+    /// the objective seed and trial indices.
+    pub fn set_evaluator(&mut self, evaluator: Box<dyn Evaluator>) {
+        self.evaluator = evaluator;
+    }
+
+    /// Name of the active evaluation engine.
+    pub fn evaluator_name(&self) -> &'static str {
+        self.evaluator.name()
     }
 
     /// ARFE_ref once established (None before the reference evaluation).
@@ -123,55 +154,74 @@ impl Objective {
             return self.history.trials()[0].clone();
         }
         let cfg = self.task.constants.ref_config;
-        let trial = self.run_config(&cfg, true);
-        self.history.push(trial.clone());
-        trial
+        self.run_batch(&[cfg], true).pop().expect("one reference trial")
     }
 
     /// Evaluate a configuration: `num_repeats` solver runs with distinct
     /// seeds, averaged; validity check against ARFE_ref; penalty on
     /// failure. Requires the reference to have been evaluated.
     pub fn evaluate(&mut self, cfg: &SapConfig) -> Trial {
+        self.evaluate_batch(std::slice::from_ref(cfg)).pop().expect("one trial")
+    }
+
+    /// Evaluate a batch of configurations (ask/tell). Trials are recorded
+    /// in submission order, so histories are identical across evaluators
+    /// up to wall-clock measurement noise. Requires the reference to have
+    /// been evaluated.
+    pub fn evaluate_batch(&mut self, cfgs: &[SapConfig]) -> Vec<Trial> {
         assert!(
             self.arfe_ref.is_some(),
             "evaluate_reference() must run before evaluate() — see Figure 3"
         );
-        let trial = self.run_config(cfg, false);
-        self.history.push(trial.clone());
-        trial
+        self.run_batch(cfgs, false)
     }
 
-    fn run_config(&mut self, cfg: &SapConfig, is_reference: bool) -> Trial {
-        let repeats = self.task.constants.num_repeats.max(1);
-        let mut times = Vec::with_capacity(repeats);
-        let mut errors = Vec::with_capacity(repeats);
-        for r in 0..repeats {
-            let mut child = self.rng.fork(r as u64);
-            let sol = solve_sap(&self.task.problem.a, &self.task.problem.b, cfg, &mut child);
-            times.push(sol.stats.total_secs);
-            errors.push(arfe(&self.task.problem.a, &self.task.problem.b, &sol.x, &self.x_star));
-        }
-        let wall_clock = crate::gp::stats::mean(&times);
-        let mean_arfe = crate::gp::stats::mean(&errors);
-
-        if is_reference {
-            self.arfe_ref = Some(mean_arfe.max(f64::MIN_POSITIVE));
-        }
-        let arfe_ref = self.arfe_ref.expect("reference evaluated");
-        let failed = mean_arfe > self.task.constants.allowance_factor * arfe_ref;
-        let value = if failed {
-            self.task.constants.penalty_factor * wall_clock
-        } else {
-            wall_clock
+    fn run_batch(&mut self, cfgs: &[SapConfig], is_reference: bool) -> Vec<Trial> {
+        let start = self.history.len();
+        let jobs: Vec<EvalJob> = cfgs
+            .iter()
+            .enumerate()
+            .map(|(i, c)| EvalJob { trial_index: start + i, config: *c })
+            .collect();
+        let raw = {
+            let ctx = EvalContext {
+                problem: &self.task.problem,
+                constants: &self.task.constants,
+                x_star: &self.x_star,
+                base_seed: self.base_seed,
+            };
+            self.evaluator.run_batch(&ctx, &jobs)
         };
-        Trial {
-            config: *cfg,
-            wall_clock,
-            arfe: mean_arfe,
-            value,
-            failed,
-            is_reference,
+        assert_eq!(
+            raw.len(),
+            jobs.len(),
+            "Evaluator::run_batch must return one RawEval per job"
+        );
+
+        let mut out = Vec::with_capacity(raw.len());
+        for (i, r) in raw.iter().enumerate() {
+            if is_reference && i == 0 && self.arfe_ref.is_none() {
+                self.arfe_ref = Some(r.arfe.max(f64::MIN_POSITIVE));
+            }
+            let arfe_ref = self.arfe_ref.expect("reference evaluated");
+            let failed = r.arfe > self.task.constants.allowance_factor * arfe_ref;
+            let value = if failed {
+                self.task.constants.penalty_factor * r.wall_clock
+            } else {
+                r.wall_clock
+            };
+            let trial = Trial {
+                config: jobs[i].config,
+                wall_clock: r.wall_clock,
+                arfe: r.arfe,
+                value,
+                failed,
+                is_reference: is_reference && i == 0,
+            };
+            self.history.push(trial.clone());
+            out.push(trial);
         }
+        out
     }
 }
 
@@ -183,6 +233,7 @@ const OBJECTIVE_SEED_SALT: u64 = 0x5eed_0b1e_c701_u64;
 mod tests {
     use super::*;
     use crate::data::{generate_synthetic, SyntheticKind};
+    use crate::rng::Rng;
     use crate::sap::SapAlgorithm;
     use crate::sketch::SketchKind;
 
@@ -272,5 +323,58 @@ mod tests {
         let min_val =
             obj.history().trials().iter().map(|t| t.value).fold(f64::INFINITY, f64::min);
         assert_eq!(best.value, min_val);
+    }
+
+    #[test]
+    fn batch_submission_matches_singles() {
+        // Same seed, same configs: batch vs one-at-a-time must record the
+        // same ARFE values and flags in the same order.
+        let cfgs = [
+            SapConfig { sampling_factor: 3.0, vec_nnz: 4, ..SapConfig::reference() },
+            SapConfig { sampling_factor: 6.0, vec_nnz: 10, ..SapConfig::reference() },
+            SapConfig { sampling_factor: 2.0, vec_nnz: 2, ..SapConfig::reference() },
+        ];
+        let mut single = Objective::new(small_task(), 9);
+        single.evaluate_reference();
+        for c in &cfgs {
+            single.evaluate(c);
+        }
+        let mut batched = Objective::new(small_task(), 9);
+        batched.evaluate_reference();
+        batched.evaluate_batch(&cfgs);
+        assert_eq!(single.evaluations(), batched.evaluations());
+        for (a, b) in single.history().trials().iter().zip(batched.history().trials()) {
+            assert_eq!(a.config, b.config);
+            assert_eq!(a.arfe.to_bits(), b.arfe.to_bits());
+            assert_eq!(a.failed, b.failed);
+        }
+    }
+
+    #[test]
+    fn parallel_objective_matches_serial_objective() {
+        let cfgs = [
+            SapConfig { sampling_factor: 4.0, vec_nnz: 8, ..SapConfig::reference() },
+            SapConfig { sampling_factor: 2.0, vec_nnz: 3, ..SapConfig::reference() },
+        ];
+        let mut serial = Objective::new(small_task(), 5);
+        serial.evaluate_reference();
+        serial.evaluate_batch(&cfgs);
+
+        let mut parallel =
+            Objective::with_evaluator(small_task(), 5, Box::new(ParallelEvaluator::new(4)));
+        assert_eq!(parallel.evaluator_name(), "parallel");
+        parallel.evaluate_reference();
+        parallel.evaluate_batch(&cfgs);
+
+        assert_eq!(
+            serial.arfe_ref().unwrap().to_bits(),
+            parallel.arfe_ref().unwrap().to_bits()
+        );
+        for (a, b) in serial.history().trials().iter().zip(parallel.history().trials()) {
+            assert_eq!(a.config, b.config);
+            assert_eq!(a.arfe.to_bits(), b.arfe.to_bits());
+            assert_eq!(a.failed, b.failed);
+            assert_eq!(a.is_reference, b.is_reference);
+        }
     }
 }

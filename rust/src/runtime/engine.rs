@@ -1,0 +1,107 @@
+//! The PJRT-backed SAP engine (compiled only with the `pjrt` feature).
+//!
+//! Loads one AOT artifact through `HloModuleProto::from_text_file`,
+//! compiles it on the PJRT CPU client, and executes it with concrete
+//! inputs. Internally errors are assembled with `anyhow` context and
+//! flattened into [`RuntimeError`] at the public boundary so the API is
+//! identical to the no-`pjrt` stub.
+
+use super::{ArtifactManifest, RtResult, RuntimeError, VariantMeta};
+use crate::linalg::Mat;
+use crate::sketch::RowPlan;
+use anyhow::{anyhow, bail, Context};
+use std::path::Path;
+
+/// A compiled SAP executable on the PJRT CPU client.
+pub struct SapEngine {
+    exe: xla::PjRtLoadedExecutable,
+    pub meta: VariantMeta,
+}
+
+impl SapEngine {
+    /// Load + compile one artifact variant.
+    pub fn load(artifacts_dir: &Path, variant: &str) -> RtResult<SapEngine> {
+        Self::load_impl(artifacts_dir, variant)
+            .map_err(|e| RuntimeError::new(format!("{e:#}")))
+    }
+
+    fn load_impl(artifacts_dir: &Path, variant: &str) -> anyhow::Result<SapEngine> {
+        let manifest = ArtifactManifest::load(artifacts_dir).map_err(|e| anyhow!("{e}"))?;
+        let meta = manifest
+            .find(variant)
+            .ok_or_else(|| {
+                anyhow!(
+                    "variant {variant} not in manifest (have: {:?})",
+                    manifest.variants.iter().map(|v| &v.name).collect::<Vec<_>>()
+                )
+            })?
+            .clone();
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt client: {e:?}"))?;
+        let hlo_path = artifacts_dir.join(&meta.file);
+        let proto =
+            xla::HloModuleProto::from_text_file(hlo_path.to_str().context("non-utf8 path")?)
+                .map_err(|e| anyhow!("hlo parse: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(|e| anyhow!("compile: {e:?}"))?;
+        Ok(SapEngine { exe, meta })
+    }
+
+    /// Solve min‖Ax − b‖ with the compiled SAP pipeline.
+    ///
+    /// `a` is m₀×n₀ with m₀ ≤ artifact m, n₀ ≤ artifact n (zero-padded
+    /// here, matching `pad_to_tiles` on the Python side). The plan's
+    /// indices address *original* rows of A. Returns (x[..n₀], phibar).
+    pub fn solve(&self, a: &Mat, b: &[f64], plan: &RowPlan) -> RtResult<(Vec<f64>, f64)> {
+        self.solve_impl(a, b, plan).map_err(|e| RuntimeError::new(format!("{e:#}")))
+    }
+
+    fn solve_impl(&self, a: &Mat, b: &[f64], plan: &RowPlan) -> anyhow::Result<(Vec<f64>, f64)> {
+        let (m0, n0) = a.shape();
+        let (m, n, d, k) = (self.meta.m, self.meta.n, self.meta.d, self.meta.k);
+        if m0 > m || n0 > n {
+            bail!("problem {m0}x{n0} exceeds artifact {m}x{n}");
+        }
+        if plan.d != d || plan.k != k {
+            bail!("plan ({}, {}) does not match artifact sketch ({d}, {k})", plan.d, plan.k);
+        }
+        if b.len() != m0 {
+            bail!("b length {} != m0 {m0}", b.len());
+        }
+
+        // Pad inputs to artifact shapes (f32 row-major).
+        let mut a_pad = vec![0f32; m * n];
+        for i in 0..m0 {
+            let row = a.row(i);
+            for j in 0..n0 {
+                a_pad[i * n + j] = row[j] as f32;
+            }
+        }
+        let mut b_pad = vec![0f32; m];
+        for i in 0..m0 {
+            b_pad[i] = b[i] as f32;
+        }
+
+        let lit_a = xla::Literal::vec1(&a_pad)
+            .reshape(&[m as i64, n as i64])
+            .map_err(|e| anyhow!("reshape a: {e:?}"))?;
+        let lit_b = xla::Literal::vec1(&b_pad);
+        let lit_idx = xla::Literal::vec1(&plan.idx)
+            .reshape(&[d as i64, k as i64])
+            .map_err(|e| anyhow!("reshape idx: {e:?}"))?;
+        let lit_vals = xla::Literal::vec1(&plan.vals)
+            .reshape(&[d as i64, k as i64])
+            .map_err(|e| anyhow!("reshape vals: {e:?}"))?;
+
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit_a, lit_b, lit_idx, lit_vals])
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("sync: {e:?}"))?;
+        let (x_lit, phibar_lit) = result.to_tuple2().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        let x: Vec<f32> = x_lit.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        let phibar: f32 =
+            phibar_lit.to_vec::<f32>().map_err(|e| anyhow!("phibar: {e:?}"))?[0];
+        Ok((x[..n0].iter().map(|&v| v as f64).collect(), phibar as f64))
+    }
+}

@@ -1,0 +1,33 @@
+//! Stub SAP engine used when the `pjrt` feature is off.
+//!
+//! Same public API as the real engine so the CLI `deploy` command, the
+//! AOT examples, the `aot_runtime` bench, and `tests/aot_integration.rs`
+//! all compile with default features; `load` fails with an actionable
+//! message, so those call sites take their existing skip/error paths.
+
+use super::{RtResult, RuntimeError, VariantMeta};
+use crate::linalg::Mat;
+use crate::sketch::RowPlan;
+use std::path::Path;
+
+/// Placeholder for the PJRT-compiled SAP executable.
+pub struct SapEngine {
+    pub meta: VariantMeta,
+}
+
+impl SapEngine {
+    /// Always fails: the PJRT deploy path is not compiled in.
+    pub fn load(_artifacts_dir: &Path, _variant: &str) -> RtResult<SapEngine> {
+        Err(RuntimeError::new(
+            "PJRT runtime not compiled in: rebuild with `cargo build --features pjrt` \
+             (and swap vendor/xla for the real xla-rs bindings to execute artifacts)",
+        ))
+    }
+
+    /// Unreachable in practice (`load` never succeeds), kept for API parity.
+    pub fn solve(&self, _a: &Mat, _b: &[f64], _plan: &RowPlan) -> RtResult<(Vec<f64>, f64)> {
+        Err(RuntimeError::new(
+            "PJRT runtime not compiled in: rebuild with `cargo build --features pjrt`",
+        ))
+    }
+}

@@ -3,19 +3,57 @@
 //! This is the deployment half of the three-layer architecture: the L2 JAX
 //! model (with its L1 Pallas kernels) is lowered once by
 //! `python/compile/aot.py` to HLO text under `artifacts/`; this module
-//! loads the text through `HloModuleProto::from_text_file`, compiles it on
-//! the PJRT CPU client, and executes it with concrete inputs — Python is
-//! never on the solve path.
+//! loads the text through the PJRT C API (`xla` crate), compiles it on the
+//! PJRT CPU client, and executes it with concrete inputs — Python is never
+//! on the solve path.
+//!
+//! The manifest/metadata layer below is pure-std and always compiled. The
+//! actual engine ([`SapEngine`]) needs the `xla` + `anyhow` dependencies
+//! and is gated behind the off-by-default **`pjrt`** cargo feature; without
+//! it a stub `SapEngine` with the same API returns a clear error from
+//! `load`, so every caller (CLI `deploy`, examples, the AOT bench and
+//! integration tests) compiles and degrades gracefully.
 //!
 //! Artifact interface (see `artifacts/manifest.json`):
 //!   inputs:  a(m,n) f32, b(m) f32, row_idx(d,k) i32, row_vals(d,k) f32
 //!   outputs: (x(n) f32, phibar() f32)
 
+#[cfg(feature = "pjrt")]
+mod engine;
+#[cfg(not(feature = "pjrt"))]
+mod engine_stub;
+
+#[cfg(feature = "pjrt")]
+pub use engine::SapEngine;
+#[cfg(not(feature = "pjrt"))]
+pub use engine_stub::SapEngine;
+
 use crate::json::Json;
-use crate::linalg::Mat;
-use crate::sketch::RowPlan;
-use anyhow::{anyhow, bail, Context, Result};
+use std::fmt;
 use std::path::{Path, PathBuf};
+
+/// Runtime-layer error: a plain message (possibly with chained context
+/// folded in). `{}` and `{:#}` both print the full message, matching how
+/// call sites format engine failures.
+#[derive(Clone, Debug)]
+pub struct RuntimeError(String);
+
+impl RuntimeError {
+    pub fn new(msg: impl Into<String>) -> RuntimeError {
+        RuntimeError(msg.into())
+    }
+}
+
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+/// Result alias for the runtime layer.
+pub type RtResult<T> = Result<T, RuntimeError>;
 
 /// Metadata of one AOT variant, mirrored from the manifest.
 #[derive(Clone, Debug)]
@@ -38,27 +76,29 @@ pub struct ArtifactManifest {
 
 impl ArtifactManifest {
     /// Load the manifest from an artifacts directory.
-    pub fn load(dir: &Path) -> Result<ArtifactManifest> {
+    pub fn load(dir: &Path) -> RtResult<ArtifactManifest> {
         let path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
-        let v = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            RuntimeError::new(format!("reading {path:?} (run `make artifacts`): {e}"))
+        })?;
+        let v = Json::parse(&text)
+            .map_err(|e| RuntimeError::new(format!("manifest parse: {e}")))?;
         let variants = v
             .get("variants")
             .and_then(|x| x.as_arr())
-            .ok_or_else(|| anyhow!("manifest missing variants"))?
+            .ok_or_else(|| RuntimeError::new("manifest missing variants"))?
             .iter()
-            .map(|j| -> Result<VariantMeta> {
+            .map(|j| -> RtResult<VariantMeta> {
                 let s = |k: &str| {
                     j.get(k)
                         .and_then(|x| x.as_str())
                         .map(str::to_string)
-                        .ok_or_else(|| anyhow!("variant missing {k}"))
+                        .ok_or_else(|| RuntimeError::new(format!("variant missing {k}")))
                 };
                 let u = |k: &str| {
                     j.get(k)
                         .and_then(|x| x.as_usize())
-                        .ok_or_else(|| anyhow!("variant missing {k}"))
+                        .ok_or_else(|| RuntimeError::new(format!("variant missing {k}")))
                 };
                 Ok(VariantMeta {
                     name: s("name")?,
@@ -70,104 +110,12 @@ impl ArtifactManifest {
                     iters: u("iters")?,
                 })
             })
-            .collect::<Result<Vec<_>>>()?;
+            .collect::<RtResult<Vec<_>>>()?;
         Ok(ArtifactManifest { dir: dir.to_path_buf(), variants })
     }
 
     pub fn find(&self, name: &str) -> Option<&VariantMeta> {
         self.variants.iter().find(|v| v.name == name)
-    }
-}
-
-/// A compiled SAP executable on the PJRT CPU client.
-pub struct SapEngine {
-    exe: xla::PjRtLoadedExecutable,
-    pub meta: VariantMeta,
-}
-
-impl SapEngine {
-    /// Load + compile one artifact variant.
-    pub fn load(artifacts_dir: &Path, variant: &str) -> Result<SapEngine> {
-        let manifest = ArtifactManifest::load(artifacts_dir)?;
-        let meta = manifest
-            .find(variant)
-            .ok_or_else(|| {
-                anyhow!(
-                    "variant {variant} not in manifest (have: {:?})",
-                    manifest.variants.iter().map(|v| &v.name).collect::<Vec<_>>()
-                )
-            })?
-            .clone();
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt client: {e:?}"))?;
-        let hlo_path = artifacts_dir.join(&meta.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            hlo_path.to_str().context("non-utf8 path")?,
-        )
-        .map_err(|e| anyhow!("hlo parse: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp).map_err(|e| anyhow!("compile: {e:?}"))?;
-        Ok(SapEngine { exe, meta })
-    }
-
-    /// Solve min‖Ax − b‖ with the compiled SAP pipeline.
-    ///
-    /// `a` is m₀×n₀ with m₀ ≤ artifact m, n₀ ≤ artifact n (zero-padded
-    /// here, matching `pad_to_tiles` on the Python side). The plan's
-    /// indices address *original* rows of A. Returns (x[..n₀], phibar).
-    pub fn solve(&self, a: &Mat, b: &[f64], plan: &RowPlan) -> Result<(Vec<f64>, f64)> {
-        let (m0, n0) = a.shape();
-        let (m, n, d, k) = (self.meta.m, self.meta.n, self.meta.d, self.meta.k);
-        if m0 > m || n0 > n {
-            bail!("problem {m0}x{n0} exceeds artifact {m}x{n}");
-        }
-        if plan.d != d || plan.k != k {
-            bail!(
-                "plan ({}, {}) does not match artifact sketch ({d}, {k})",
-                plan.d,
-                plan.k
-            );
-        }
-        if b.len() != m0 {
-            bail!("b length {} != m0 {m0}", b.len());
-        }
-
-        // Pad inputs to artifact shapes (f32 row-major).
-        let mut a_pad = vec![0f32; m * n];
-        for i in 0..m0 {
-            let row = a.row(i);
-            for j in 0..n0 {
-                a_pad[i * n + j] = row[j] as f32;
-            }
-        }
-        let mut b_pad = vec![0f32; m];
-        for i in 0..m0 {
-            b_pad[i] = b[i] as f32;
-        }
-
-        let lit_a = xla::Literal::vec1(&a_pad)
-            .reshape(&[m as i64, n as i64])
-            .map_err(|e| anyhow!("reshape a: {e:?}"))?;
-        let lit_b = xla::Literal::vec1(&b_pad);
-        let lit_idx = xla::Literal::vec1(&plan.idx)
-            .reshape(&[d as i64, k as i64])
-            .map_err(|e| anyhow!("reshape idx: {e:?}"))?;
-        let lit_vals = xla::Literal::vec1(&plan.vals)
-            .reshape(&[d as i64, k as i64])
-            .map_err(|e| anyhow!("reshape vals: {e:?}"))?;
-
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&[lit_a, lit_b, lit_idx, lit_vals])
-            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("sync: {e:?}"))?;
-        let (x_lit, phibar_lit) =
-            result.to_tuple2().map_err(|e| anyhow!("tuple: {e:?}"))?;
-        let x: Vec<f32> = x_lit.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
-        let phibar: f32 = phibar_lit
-            .to_vec::<f32>()
-            .map_err(|e| anyhow!("phibar: {e:?}"))?[0];
-        Ok((x[..n0].iter().map(|&v| v as f64).collect(), phibar as f64))
     }
 }
 
@@ -208,5 +156,6 @@ mod tests {
     }
 
     // Full engine execution is covered by tests/aot_integration.rs (needs
-    // built artifacts) and the deploy example.
+    // built artifacts and the `pjrt` feature with real xla bindings) and
+    // the deploy example.
 }

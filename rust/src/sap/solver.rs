@@ -119,7 +119,7 @@ pub fn arfe(a: &Mat, b: &[f64], x: &[f64], x_star: &[f64]) -> f64 {
     let mut num = ax.clone();
     axpy(-1.0, &ax_star, &mut num);
     let mut den = ax;
-    axpy(-1.0, &b.to_vec(), &mut den);
+    axpy(-1.0, b, &mut den);
     let d = norm2(&den);
     if d == 0.0 {
         // Exactly consistent system solved exactly: define ARFE as 0.

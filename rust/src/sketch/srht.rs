@@ -68,9 +68,9 @@ impl Srht {
 
     /// Scale so that E[SᵀS] = I: entries of H are ±1, so the subsampled
     /// transform needs 1/√(d·m_pad)·√(m_pad) ... net √(m_pad/d)/√(m_pad)
-    /// = 1/√d per unnormalized-FWHT output.
+    /// = 1/√d per unnormalized-FWHT output (the m_pad factors cancel).
     fn scale(&self) -> f64 {
-        1.0 / (self.d as f64).sqrt() * (self.m_pad as f64 / self.m_pad as f64)
+        1.0 / (self.d as f64).sqrt()
     }
 }
 

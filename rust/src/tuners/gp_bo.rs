@@ -43,14 +43,15 @@ impl Tuner for GpBoTuner {
             };
         record(&mut xs, &mut ys, &objective.history().trials()[0]);
 
-        // Pilot phase (random LHS-like samples).
+        // Pilot phase (random LHS-like samples): the stratified design is
+        // independent of any observation, so submit it as one batch.
         let pilots = super::lhsmdu_points(self.num_pilots.max(1), DIMS, rng);
-        for p in pilots {
-            if objective.evaluations() >= budget {
-                break;
+        let n_p = pilots.len().min(budget.saturating_sub(objective.evaluations()));
+        if n_p > 0 {
+            let cfgs: Vec<_> = pilots[..n_p].iter().map(|p| space.decode(p)).collect();
+            for t in objective.evaluate_batch(&cfgs) {
+                record(&mut xs, &mut ys, &t);
             }
-            let t = objective.evaluate(&space.decode(&p));
-            record(&mut xs, &mut ys, &t);
         }
 
         // Surrogate loop.

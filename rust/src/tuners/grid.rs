@@ -72,9 +72,10 @@ impl Tuner for GridTuner {
     fn run(&mut self, objective: &mut Objective, budget: usize, _rng: &mut Rng) -> History {
         objective.evaluate_reference();
         let grid = if self.grid.is_empty() { paper_grid() } else { self.grid.clone() };
-        for cfg in grid.iter().take(budget.saturating_sub(1)) {
-            objective.evaluate(cfg);
-        }
+        // Grid points are independent of each other: submit the whole
+        // budget as one batch so a ParallelEvaluator can fan it out.
+        let take = budget.saturating_sub(1).min(grid.len());
+        objective.evaluate_batch(&grid[..take]);
         objective.history().clone()
     }
 }

@@ -91,10 +91,9 @@ impl Tuner for LhsmduTuner {
         if budget > 1 {
             let pts = lhsmdu_points(budget - 1, DIMS, rng);
             let space = objective.task.space.clone();
-            for p in pts {
-                let cfg = space.decode(&p);
-                objective.evaluate(&cfg);
-            }
+            // The whole stratified design is known up front: one batch.
+            let cfgs: Vec<_> = pts.iter().map(|p| space.decode(p)).collect();
+            objective.evaluate_batch(&cfgs);
         }
         objective.history().clone()
     }

@@ -15,7 +15,7 @@
 use super::{Tuner, UcbBandit};
 use crate::gp::{expected_improvement, stats};
 use crate::lcm::{LcmModel, TaskSample};
-use crate::objective::{category_index, History, Objective, ORDINAL_DIMS};
+use crate::objective::{category_index, History, Objective, N_CATEGORIES, ORDINAL_DIMS};
 use crate::rng::Rng;
 use crate::sap::SapConfig;
 
@@ -129,6 +129,34 @@ impl TlaTuner {
         // ... and with the target evaluations made so far (ref + hist-best).
         for t in objective.history().trials() {
             bandit.observe(category_index(&t.config), target_ref_value / t.value.max(1e-12));
+        }
+
+        // Batched exploration: the bandit explores unseen categories first
+        // (in index order), and any category with < 2 in-category samples
+        // gets random ordinals — those proposals are independent of each
+        // other, so submit them as one batch before the sequential
+        // model-guided loop.
+        // (The bandit has observed every source sample and every target
+        // trial above, so an unseen category necessarily has no
+        // in-category data to model — random ordinals are exactly what
+        // the sequential loop would pick for it.)
+        let mut sweep = Vec::new();
+        for cat in 0..N_CATEGORIES {
+            if objective.evaluations() + sweep.len() >= budget {
+                break;
+            }
+            if bandit.count(cat) == 0 {
+                let x: Vec<f64> = (0..ORDINAL_DIMS).map(|_| rng.uniform()).collect();
+                sweep.push(space.decode_ordinals(cat, &x));
+            }
+        }
+        if !sweep.is_empty() {
+            for t in objective.evaluate_batch(&sweep) {
+                bandit.observe(
+                    category_index(&t.config),
+                    target_ref_value / t.value.max(1e-12),
+                );
+            }
         }
 
         while objective.evaluations() < budget {

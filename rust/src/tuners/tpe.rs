@@ -47,8 +47,21 @@ impl Tuner for TpeTuner {
             ys.push(t.value);
         }
 
+        // Startup phase: the random configurations are independent of any
+        // observation, so submit them as one batch (pilot fan-out).
+        let n_start = self.n_startup.min(budget.saturating_sub(objective.evaluations()));
+        if n_start > 0 {
+            let cfgs: Vec<_> = (0..n_start).map(|_| space.sample(rng)).collect();
+            for t in objective.evaluate_batch(&cfgs) {
+                xs.push(space.encode(&t.config));
+                ys.push(t.value);
+            }
+        }
+
         while objective.evaluations() < budget {
-            let cfg = if xs.len() < self.n_startup + 1 {
+            let cfg = if ys.len() < 2 {
+                // Degenerate startup (n_startup = 0 or budget-truncated):
+                // the Parzen split needs at least two observations.
                 space.sample(rng)
             } else {
                 // Split at the γ-quantile.

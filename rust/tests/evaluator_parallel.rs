@@ -1,0 +1,145 @@
+//! Integration: the parallel ask/tell evaluator is observably equivalent
+//! to the serial one.
+//!
+//! Acceptance contract (PR 1): on a fixed-seed synthetic task, a tuner run
+//! with `ParallelEvaluator::new(4)` produces the same `History` as the
+//! serial evaluator — same trial order, same configurations, bit-identical
+//! ARFE values, same failure flags and penalty multipliers. Only measured
+//! wall-clock may differ (it is a physical measurement).
+
+use ranntune::data::{generate_synthetic, SyntheticKind};
+use ranntune::objective::{
+    Constants, History, Objective, ParallelEvaluator, ParamSpace, SerialEvaluator, TuningTask,
+};
+use ranntune::rng::Rng;
+use ranntune::sap::SapConfig;
+use ranntune::tuners::{GridTuner, LhsmduTuner, Tuner};
+
+fn fixed_task(seed: u64) -> TuningTask {
+    let mut rng = Rng::new(seed);
+    let problem = generate_synthetic(SyntheticKind::GA, 500, 20, &mut rng);
+    TuningTask {
+        problem,
+        space: ParamSpace::paper(),
+        constants: Constants { num_repeats: 3, ..Constants::default() },
+    }
+}
+
+/// The deterministic parts of two histories must match exactly.
+fn assert_histories_equivalent(serial: &History, parallel: &History) {
+    assert_eq!(serial.len(), parallel.len(), "trial counts differ");
+    for (i, (s, p)) in serial.trials().iter().zip(parallel.trials()).enumerate() {
+        assert_eq!(s.config, p.config, "trial {i}: config order diverged");
+        assert_eq!(
+            s.arfe.to_bits(),
+            p.arfe.to_bits(),
+            "trial {i}: ARFE not bit-identical ({} vs {})",
+            s.arfe,
+            p.arfe
+        );
+        assert_eq!(s.failed, p.failed, "trial {i}: failure flag diverged");
+        assert_eq!(s.is_reference, p.is_reference, "trial {i}: reference flag diverged");
+        // Penalty application: value/wall_clock ratio is exactly 1 or the
+        // penalty factor, and must agree between evaluators.
+        let rs = s.value / s.wall_clock;
+        let rp = p.value / p.wall_clock;
+        assert!((rs - rp).abs() < 1e-12, "trial {i}: penalty multiplier diverged");
+    }
+}
+
+#[test]
+fn grid_tuner_history_identical_across_evaluators() {
+    // A grid over sharply different configurations, including the
+    // paper's Fig. 1 risk case (LessUniform nnz=1 at minimal d), so the
+    // failure/penalty path is exercised whenever it triggers.
+    let grid: Vec<SapConfig> = vec![
+        SapConfig { sampling_factor: 4.0, vec_nnz: 8, ..SapConfig::reference() },
+        SapConfig {
+            algorithm: ranntune::sap::SapAlgorithm::SvdPgd,
+            sketch: ranntune::sketch::SketchKind::LessUniform,
+            sampling_factor: 1.0,
+            vec_nnz: 1,
+            safety_factor: 0,
+        },
+        SapConfig { sampling_factor: 2.0, vec_nnz: 30, ..SapConfig::reference() },
+        SapConfig {
+            algorithm: ranntune::sap::SapAlgorithm::SvdLsqr,
+            sketch: ranntune::sketch::SketchKind::LessUniform,
+            sampling_factor: 6.0,
+            vec_nnz: 4,
+            safety_factor: 2,
+        },
+    ];
+    let budget = grid.len() + 1;
+
+    let mut serial_obj = Objective::with_evaluator(fixed_task(1), 7, Box::new(SerialEvaluator));
+    let h_serial = GridTuner::new(grid.clone()).run(&mut serial_obj, budget, &mut Rng::new(3));
+
+    let mut par_obj =
+        Objective::with_evaluator(fixed_task(1), 7, Box::new(ParallelEvaluator::new(4)));
+    let h_par = GridTuner::new(grid).run(&mut par_obj, budget, &mut Rng::new(3));
+
+    assert_histories_equivalent(&h_serial, &h_par);
+}
+
+#[test]
+fn lhsmdu_tuner_history_identical_across_evaluators() {
+    // LHSMDU proposes from the tuner RNG only, so the proposed sequence is
+    // evaluator-independent; the recorded ARFEs must then match bitwise.
+    let budget = 9;
+    let mut serial_obj = Objective::new(fixed_task(2), 11);
+    let h_serial = LhsmduTuner::new().run(&mut serial_obj, budget, &mut Rng::new(5));
+
+    let mut par_obj =
+        Objective::with_evaluator(fixed_task(2), 11, Box::new(ParallelEvaluator::new(4)));
+    let h_par = LhsmduTuner::new().run(&mut par_obj, budget, &mut Rng::new(5));
+
+    assert_histories_equivalent(&h_serial, &h_par);
+}
+
+#[test]
+fn single_thread_parallel_equals_serial() {
+    let cfgs = [
+        SapConfig { sampling_factor: 3.0, vec_nnz: 6, ..SapConfig::reference() },
+        SapConfig { sampling_factor: 7.0, vec_nnz: 20, ..SapConfig::reference() },
+    ];
+    let mut a = Objective::with_evaluator(fixed_task(3), 0, Box::new(ParallelEvaluator::new(1)));
+    a.evaluate_reference();
+    a.evaluate_batch(&cfgs);
+    let mut b = Objective::new(fixed_task(3), 0);
+    b.evaluate_reference();
+    b.evaluate_batch(&cfgs);
+    assert_histories_equivalent(b.history(), a.history());
+}
+
+#[test]
+fn history_db_round_trips_through_a_temp_file() {
+    // Satellite: DB save → load through a real file preserves the record,
+    // including failure and reference flags, for histories produced by the
+    // new batched evaluation path.
+    let mut obj =
+        Objective::with_evaluator(fixed_task(4), 13, Box::new(ParallelEvaluator::new(3)));
+    obj.evaluate_reference();
+    let space = ParamSpace::paper();
+    let mut rng = Rng::new(17);
+    let cfgs: Vec<SapConfig> = (0..5).map(|_| space.sample(&mut rng)).collect();
+    obj.evaluate_batch(&cfgs);
+
+    let dir = std::env::temp_dir().join("ranntune_evaluator_db_test");
+    let path = dir.join("db.json");
+    let mut db = ranntune::db::HistoryDb::new();
+    db.record("GA", 500, 20, obj.history());
+    db.save(&path).expect("db save");
+
+    let back = ranntune::db::HistoryDb::load(&path).expect("db load");
+    let orig = db.source_samples("GA", 500, 20);
+    let loaded = back.source_samples("GA", 500, 20);
+    assert_eq!(orig.len(), loaded.len());
+    assert_eq!(loaded.len(), obj.history().len());
+    for (x, y) in orig.iter().zip(loaded.iter()) {
+        assert_eq!(x.config, y.config);
+        assert!((x.value - y.value).abs() < 1e-12);
+        assert!((x.reward() - y.reward()).abs() < 1e-12);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

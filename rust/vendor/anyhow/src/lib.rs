@@ -1,0 +1,150 @@
+//! Minimal, pure-std stand-in for the `anyhow` crate.
+//!
+//! The build is fully offline, so instead of pulling `anyhow` from a
+//! registry we vendor the small subset the `ranntune::runtime` module
+//! actually uses: an [`Error`] type carrying a message plus an optional
+//! cause chain, the [`anyhow!`]/[`bail!`] macros, and the [`Context`]
+//! extension trait for `Result`/`Option`. Display formatting matches
+//! anyhow's conventions closely enough for our call sites: `{}` prints
+//! the outermost message, `{:#}` prints the whole chain separated by
+//! `": "`.
+
+use std::fmt;
+
+/// A contextual error: message plus an optional chain of causes.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Construct an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap `self` with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// Iterate the chain from outermost to innermost message.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut msgs = vec![self.msg.as_str()];
+        let mut cur = self.source.as_deref();
+        while let Some(e) = cur {
+            msgs.push(e.msg.as_str());
+            cur = e.source.as_deref();
+        }
+        msgs.into_iter()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            let joined: Vec<&str> = self.chain().collect();
+            write!(f, "{}", joined.join(": "))
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let causes: Vec<&str> = self.chain().skip(1).collect();
+        if !causes.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for c in causes {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// `anyhow::Result<T>`: result with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to fallible values, like anyhow's `Context` trait.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Wrap with a lazily-evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let inner: Result<()> = Err(anyhow!("root cause {}", 7));
+        let outer = inner.context("outer");
+        let e = outer.unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: root cause 7");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(format!("{e:#}"), "missing");
+        assert_eq!(Some(3).context("missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn bail_returns_err() {
+        fn f(x: bool) -> Result<u32> {
+            if x {
+                bail!("nope");
+            }
+            Ok(1)
+        }
+        assert!(f(true).is_err());
+        assert_eq!(f(false).unwrap(), 1);
+    }
+}

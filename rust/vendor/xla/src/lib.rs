@@ -1,0 +1,137 @@
+//! API-compatible stub of the `xla` crate (xla-rs PJRT bindings).
+//!
+//! The container building this repository has no PJRT/XLA shared library,
+//! so this vendored crate provides just enough surface for
+//! `ranntune::runtime` to **compile** under `--features pjrt`: the types
+//! and signatures mirror xla-rs, and every entry point that would touch
+//! PJRT returns [`Error`] at runtime with a message explaining how to get
+//! the real thing. To actually execute the AOT artifacts, point the `xla`
+//! dependency at the real bindings, e.g. in `rust/Cargo.toml`:
+//!
+//! ```toml
+//! [patch.crates-io]  # or replace the vendor path dependency directly
+//! xla = { git = "https://github.com/LaurentMazare/xla-rs" }
+//! ```
+
+use std::fmt;
+
+/// Stub error: every PJRT operation fails with this.
+pub struct Error(pub String);
+
+impl Error {
+    fn stub(op: &str) -> Error {
+        Error(format!(
+            "xla stub: `{op}` is unavailable (vendor/xla compiles the API only; \
+             swap in the real xla-rs bindings to execute PJRT artifacts)"
+        ))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Element types the literal constructors accept (subset of xla-rs).
+pub trait NativeType: Copy + 'static {}
+
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+
+/// A parsed HLO module (stub: parsing always fails).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        Err(Error::stub("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// A PJRT client (stub: construction always fails, so nothing downstream
+/// of it ever runs).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(Error::stub("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(Error::stub("PjRtClient::compile"))
+    }
+}
+
+/// A compiled executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(Error::stub("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A device buffer returned by execution.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(Error::stub("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A host-side literal (stub: constructible, but all conversions fail).
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_values: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        Err(Error::stub("Literal::reshape"))
+    }
+
+    pub fn to_tuple2(self) -> Result<(Literal, Literal), Error> {
+        Err(Error::stub("Literal::to_tuple2"))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        Err(Error::stub("Literal::to_vec"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn everything_fails_loudly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let lit = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(lit.reshape(&[2, 1]).is_err());
+        let msg = format!("{:?}", PjRtClient::cpu().unwrap_err());
+        assert!(msg.contains("xla stub"), "{msg}");
+    }
+}
