@@ -4,32 +4,33 @@
 //! make artifacts && cargo run --release --example end_to_end
 //! ```
 //!
-//! Exercises every layer on a Localization-like regression workload
-//! (the paper's headline dataset, §5.4):
+//! Exercises every layer through the **campaign** subsystem — the paper's
+//! evaluation methodology as one resumable run instead of hand-rolled
+//! loops:
 //!
-//!   1. generate the dataset + a down-sampled source problem;
-//!   2. semi-exhaustive grid search → ground-truth peak performance;
-//!   3. run LHSMDU / TPE / GPTune / TLA at a 50-evaluation budget across
-//!      seeds, reproducing the Figure 9 comparison and the paper's
-//!      headline metric ("TLA needs Nx fewer evaluations than random
-//!      search to match its final quality");
-//!   4. Sobol sensitivity of the tuning parameters (Table 5 row);
-//!   5. deploy the tuned configuration through the AOT PJRT artifact and
-//!      validate against the direct solver.
+//!   1. declare a three-regime problem suite (Localization-sim §5.4,
+//!      plus GA / T3 for the coherence sweep of §5.1);
+//!   2. run the LHSMDU / TPE / GPTune / TLA tuner set over every problem
+//!      via `ranntune::campaign` (sharded per-cell histories, checkpoint
+//!      after every cell — kill it and rerun to resume);
+//!   3. generate the per-regime winner report + convergence curves, and
+//!      reproduce the paper's headline metric ("TLA needs Nx fewer
+//!      evaluations than random search to match its final quality");
+//!   4. deploy a tuned-family configuration through the AOT PJRT artifact
+//!      and validate against the direct solver.
 //!
-//! Results land in `results/end_to_end.md` and are summarized in
-//! EXPERIMENTS.md.
+//! Results land in `results/end_to_end/`; rerunning resumes (delete the
+//! directory for a fresh run). Set `RANNTUNE_SCALE=small|default|paper`
+//! to pick the problem scale and `RANNTUNE_EVAL_THREADS` to parallelize
+//! evaluations.
 
-use ranntune::bench_harness::write_result;
-use ranntune::cli::figures::{collect_source, FigScale};
-use ranntune::data::{generate_realworld, RealWorldKind};
+use ranntune::campaign::{write_report, Campaign, CampaignSpec, TunerKind};
+use ranntune::cli::figures::FigScale;
+use ranntune::data::{generate_realworld, ProblemSpec, RealWorldKind, Regime};
 use ranntune::gp::stats;
-use ranntune::objective::{Constants, Objective, ParamSpace, TuningTask};
-use ranntune::rng::Rng;
 use ranntune::runtime::{default_artifacts_dir, SapEngine};
-use ranntune::sensitivity::{analyze_trials, PARAM_NAMES};
+use ranntune::rng::Rng;
 use ranntune::sketch::LessUniform;
-use ranntune::tuners::{GpBoTuner, GridTuner, LhsmduTuner, TlaTuner, TpeTuner, Tuner};
 use std::path::Path;
 
 fn scale() -> FigScale {
@@ -43,152 +44,101 @@ fn scale() -> FigScale {
 fn main() {
     let sc = scale();
     let (m, n) = (sc.m, sc.n.min(128)); // n ≤ 128 so the AOT artifact applies
-    let budget = sc.budget;
-    let constants = Constants { num_repeats: sc.repeats, ..Constants::default() };
-    let make_problem = |seed: u64| {
-        let mut rng = Rng::new(seed);
-        generate_realworld(RealWorldKind::Localization, m, n, &mut rng)
-    };
-    println!("== end-to-end: Localization-sim ({m}x{n}), budget {budget}, {} seeds ==\n", sc.seeds);
+    let out = Path::new("results/end_to_end");
 
-    // ---- 1. source data on the down-sampled problem
-    let source_problem = {
-        let mut rng = Rng::new(500);
-        generate_realworld(RealWorldKind::Localization, sc.source_m, n, &mut rng)
-    };
-    println!("[1/5] collecting {} source samples at m={} ...", sc.source_samples, sc.source_m);
-    let source = collect_source(source_problem, constants.clone(), sc.source_samples, 500);
+    // ---- 1. the suite: one real-world profile + two synthetic regimes.
+    let suite = vec![
+        ProblemSpec::new("Localization", m, n, 100, Regime::RealWorld),
+        ProblemSpec::new("GA", m, n, 101, Regime::LowCoherence),
+        ProblemSpec::new("T3", m, n, 102, Regime::ModerateCoherence),
+    ];
+    let tuners =
+        vec![TunerKind::Lhsmdu, TunerKind::Tpe, TunerKind::GpTune, TunerKind::Tla];
+    let mut spec = CampaignSpec::new("end-to-end", suite, tuners, sc.budget);
+    spec.num_repeats = sc.repeats;
+    spec.source_samples = sc.source_samples;
+    spec.eval_threads = std::env::var("RANNTUNE_EVAL_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1);
+    let n_cells = spec.cells().len();
+    println!(
+        "== end-to-end campaign: {} problems x {} tuners = {} cells, {}x{} budget {} ==\n",
+        spec.suite.len(),
+        spec.tuners.len(),
+        n_cells,
+        m,
+        n,
+        spec.budget
+    );
 
-    // ---- 2. grid ground truth
-    println!("[2/5] grid search ground truth ...");
-    let grid_cfgs: Vec<_> = {
-        // Coarse grid is plenty to locate the peak at this scale.
-        let mut v = Vec::new();
-        for alg in ranntune::sap::SapAlgorithm::ALL {
-            for sketch in ranntune::sketch::SketchKind::ALL {
-                for sf in [1.0f64, 2.0, 4.0, 6.0, 8.0, 10.0] {
-                    for nnz in [1usize, 2, 4, 8, 16, 32, 64, 100] {
-                        v.push(ranntune::sap::SapConfig {
-                            algorithm: alg,
-                            sketch,
-                            sampling_factor: sf,
-                            vec_nnz: nnz,
-                            safety_factor: 0,
-                        });
-                    }
-                }
+    // ---- 2. run (or resume) the campaign.
+    let campaign = Campaign::new(spec, out);
+    let outcome = match campaign.run() {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("campaign failed: {e}");
+            std::process::exit(1);
+        }
+    };
+    println!(
+        "[campaign] {} cell(s) executed, {} resumed from checkpoint\n",
+        outcome.completed_now, outcome.skipped
+    );
+
+    // ---- 3. report + headline metric.
+    let report = write_report(&campaign.spec, &outcome.results, out).expect("report");
+    println!("{}", report.summary_md);
+    if !report.warnings.is_empty() {
+        println!(
+            "note: {} vec_nnz proposal(s) silently clamped (campaign_clamp_warnings.csv)\n",
+            report.warnings.len()
+        );
+    }
+
+    // Headline: evaluations each tuner needs to reach random search's
+    // final quality, averaged over the suite.
+    let mut per_tuner: Vec<(&str, Vec<f64>)> = Vec::new();
+    for &tuner in &campaign.spec.tuners {
+        let mut evals = Vec::new();
+        for p in &campaign.spec.suite {
+            let lhs_final = outcome
+                .results
+                .iter()
+                .find(|r| r.cell.problem.id == p.id && r.cell.tuner == TunerKind::Lhsmdu)
+                .and_then(|r| r.history.best_so_far().last().copied());
+            let Some(target) = lhs_final else { continue };
+            if let Some(r) = outcome
+                .results
+                .iter()
+                .find(|r| r.cell.problem.id == p.id && r.cell.tuner == tuner)
+            {
+                let e = r
+                    .history
+                    .evals_to_reach(target)
+                    .unwrap_or(campaign.spec.budget) as f64;
+                evals.push(e);
             }
         }
-        v
-    };
-    let n_grid = grid_cfgs.len();
-    let mut grid_obj = Objective::new(
-        TuningTask {
-            problem: make_problem(100),
-            space: ParamSpace::paper(),
-            constants: constants.clone(),
-        },
-        11,
-    );
-    let mut grid = GridTuner::new(grid_cfgs);
-    let gh = grid.run(&mut grid_obj, n_grid + 1, &mut Rng::new(0));
-    let peak = gh.best_valid_time().expect("grid found a valid config");
-    let ref_time = gh.trials()[0].wall_clock;
-    let best_cfg = gh
-        .trials()
-        .iter()
-        .filter(|t| !t.failed)
-        .min_by(|a, b| a.wall_clock.partial_cmp(&b.wall_clock).unwrap())
-        .unwrap()
-        .config;
-    println!("      grid peak: {} at {:.5}s ({:.1}x faster than safe reference {:.5}s)",
-        best_cfg.label(), peak, ref_time / peak, ref_time);
-
-    // ---- 3. tuner comparison
-    println!("[3/5] tuner comparison ...");
-    let mut rows = Vec::new();
-    let mut rnd_finals = Vec::new();
-    let mut per_tuner_evals: Vec<(String, Vec<f64>, Vec<f64>)> = Vec::new();
-    for tuner_name in ["LHSMDU", "TPE", "GPTune", "TLA"] {
-        let mut finals = Vec::new();
-        let mut acc_times = Vec::new();
-        let mut histories = Vec::new();
-        for seed in 0..sc.seeds as u64 {
-            let mut tuner: Box<dyn Tuner> = match tuner_name {
-                "LHSMDU" => Box::new(LhsmduTuner::new()),
-                "TPE" => Box::new(TpeTuner::new(10)),
-                "GPTune" => Box::new(GpBoTuner::new(10)),
-                _ => Box::new(TlaTuner::new(source.clone())),
-            };
-            let mut obj = Objective::new(
-                TuningTask {
-                    problem: make_problem(100),
-                    space: ParamSpace::paper(),
-                    constants: constants.clone(),
-                },
-                seed,
-            );
-            let h = tuner.run(&mut obj, budget, &mut Rng::new(seed * 31 + 5));
-            finals.push(*h.best_so_far().last().unwrap());
-            acc_times.push(h.total_eval_time(sc.repeats));
-            histories.push(h);
-        }
-        if tuner_name == "LHSMDU" {
-            rnd_finals = finals.clone();
-        }
-        let target = stats::mean(&rnd_finals);
-        let evals: Vec<f64> = histories
+        per_tuner.push((tuner.name(), evals));
+    }
+    let mean_of = |name: &str| {
+        per_tuner
             .iter()
-            .map(|h| h.evals_to_reach(target).map(|e| e as f64).unwrap_or(budget as f64))
-            .collect();
-        println!(
-            "      {tuner_name:<8} final {:.5}s ±{:.5}  evals-to-random-final {:>5.1}  acc-time {:.1}s  vs-peak {:.2}x",
-            stats::mean(&finals),
-            stats::stddev(&finals),
-            stats::mean(&evals),
-            stats::mean(&acc_times),
-            stats::mean(&finals) / peak
-        );
-        rows.push(vec![
-            tuner_name.to_string(),
-            format!("{:.5}", stats::mean(&finals)),
-            format!("{:.5}", stats::stddev(&finals)),
-            format!("{:.1}", stats::mean(&evals)),
-            format!("{:.2}", stats::mean(&acc_times)),
-            format!("{:.2}", stats::mean(&finals) / peak),
-        ]);
-        per_tuner_evals.push((tuner_name.to_string(), finals, evals));
-    }
-    // Headline: evaluation-count ratio LHSMDU vs TLA.
-    let lhs_evals = stats::mean(&per_tuner_evals[0].2);
-    let tla_evals = stats::mean(&per_tuner_evals[3].2);
-    let gp_evals = stats::mean(&per_tuner_evals[2].2);
+            .find(|(t, _)| *t == name)
+            .map(|(_, v)| stats::mean(v))
+            .unwrap_or(f64::NAN)
+    };
+    let (lhs, gp, tla) = (mean_of("LHSMDU"), mean_of("GPTune"), mean_of("TLA"));
     println!(
-        "      headline: GPTune {:.1}x, TLA {:.1}x fewer evaluations than random search (paper: 3.5x / 7.6x)",
-        lhs_evals / gp_evals.max(1.0),
-        lhs_evals / tla_evals.max(1.0)
+        "headline: GPTune {:.1}x, TLA {:.1}x fewer evaluations than random search \
+         to match its final quality (paper: 3.5x / 7.6x)\n",
+        lhs / gp.max(1.0),
+        lhs / tla.max(1.0)
     );
 
-    // ---- 4. sensitivity
-    println!("[4/5] Sobol sensitivity ...");
-    let mut sens_obj = Objective::new(
-        TuningTask {
-            problem: make_problem(100),
-            space: ParamSpace::paper(),
-            constants: constants.clone(),
-        },
-        3,
-    );
-    let mut sampler = LhsmduTuner::new();
-    let sh = sampler.run(&mut sens_obj, sc.source_samples.max(40), &mut Rng::new(8));
-    let mut rng = Rng::new(2);
-    let sens = analyze_trials(sh.trials(), &ParamSpace::paper(), sc.saltelli, &mut rng);
-    for (i, idx) in sens.indices.iter().enumerate() {
-        println!("      {:<18} S1 {:>5.2}  ST {:>5.2}", PARAM_NAMES[i], idx.s1, idx.st);
-    }
-
-    // ---- 5. AOT deploy of the tuned configuration family
-    println!("[5/5] AOT deploy (JAX+Pallas -> HLO -> PJRT) ...");
+    // ---- 4. AOT deploy of the tuned configuration family.
+    println!("[deploy] AOT (JAX+Pallas -> HLO -> PJRT) ...");
     match SapEngine::load(&default_artifacts_dir(), "sap_medium") {
         Ok(engine) => {
             let meta = engine.meta.clone();
@@ -206,8 +156,12 @@ fn main() {
                     let aot_secs = t.elapsed().as_secs_f64();
                     let x_star = ranntune::linalg::lstsq_qr(&problem.a, &problem.b);
                     let err = ranntune::sap::arfe(&problem.a, &problem.b, &x, &x_star);
-                    println!("      AOT solve {:.4}s, ARFE {:.2e} -> {}", aot_secs, err,
-                        if err < 1e-3 { "OK" } else { "FAIL" });
+                    println!(
+                        "      AOT solve {:.4}s, ARFE {:.2e} -> {}",
+                        aot_secs,
+                        err,
+                        if err < 1e-3 { "OK" } else { "FAIL" }
+                    );
                 }
                 Err(e) => println!("      AOT solve failed: {e:#}"),
             }
@@ -215,15 +169,9 @@ fn main() {
         Err(e) => println!("      (skipped: {e:#})"),
     }
 
-    let headers =
-        ["tuner", "final_best_s", "std", "evals_to_random_final", "acc_time_s", "vs_grid_peak"];
-    write_result(
-        Path::new("results"),
-        "end_to_end",
-        "End-to-end driver (Localization-sim)",
-        &headers,
-        &rows,
-    )
-    .unwrap();
-    println!("\nresults written to results/end_to_end.md");
+    println!(
+        "\nmerged database: {}\nartifacts in {}",
+        outcome.merged_db_path.display(),
+        out.display()
+    );
 }

@@ -10,15 +10,22 @@ use std::time::Instant;
 /// Summary statistics of repeated timings (seconds).
 #[derive(Clone, Debug)]
 pub struct TimingStats {
+    /// Mean seconds per measured run.
     pub mean: f64,
+    /// Median seconds.
     pub median: f64,
+    /// Sample standard deviation of the runs.
     pub stddev: f64,
+    /// Fastest run.
     pub min: f64,
+    /// Slowest run.
     pub max: f64,
+    /// Number of measured runs.
     pub iters: usize,
 }
 
 impl TimingStats {
+    /// Summarize raw timing samples (all-zero stats for empty input).
     pub fn from_samples(samples: &[f64]) -> TimingStats {
         use crate::gp::stats::{median, stddev};
         if samples.is_empty() {

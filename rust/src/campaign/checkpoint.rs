@@ -1,0 +1,133 @@
+//! Campaign checkpoints: crash-safe progress records.
+//!
+//! A checkpoint is a tiny JSON document — the campaign
+//! [fingerprint](crate::campaign::CampaignSpec::fingerprint) plus the set
+//! of completed cell ids — written after **every** completed cell with an
+//! atomic write-to-temp-then-rename, so a kill at any instant leaves
+//! either the previous or the next consistent state, never a torn file.
+//! Together with per-cell seed derivation ([`crate::campaign::Cell::seed`])
+//! this gives the resume guarantee: re-running a killed campaign skips
+//! completed cells (their shards are already on disk) and re-executes the
+//! rest with identical streams, producing a merged database bit-identical
+//! to an uninterrupted run under deterministic timing.
+
+use crate::json::Json;
+use std::collections::BTreeSet;
+use std::path::Path;
+
+/// On-disk progress record of a campaign run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    /// [`crate::campaign::CampaignSpec::fingerprint`] of the owning spec.
+    pub fingerprint: String,
+    /// Ids of completed cells (sorted set: serialization is deterministic
+    /// regardless of the order cells finished in).
+    pub completed: BTreeSet<String>,
+}
+
+impl Checkpoint {
+    /// Fresh checkpoint for a spec fingerprint (nothing completed).
+    pub fn new(fingerprint: String) -> Checkpoint {
+        Checkpoint { fingerprint, completed: BTreeSet::new() }
+    }
+
+    /// Has this cell already completed?
+    pub fn is_completed(&self, cell_id: &str) -> bool {
+        self.completed.contains(cell_id)
+    }
+
+    /// Record a completed cell.
+    pub fn mark(&mut self, cell_id: &str) {
+        self.completed.insert(cell_id.to_string());
+    }
+
+    /// Serialize to the `ranntune-campaign-ckpt-v1` JSON document.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::Str("ranntune-campaign-ckpt-v1".into())),
+            ("fingerprint", Json::Str(self.fingerprint.clone())),
+            (
+                "completed",
+                Json::Arr(self.completed.iter().map(|c| Json::Str(c.clone())).collect()),
+            ),
+        ])
+    }
+
+    /// Parse a checkpoint document.
+    pub fn from_json(v: &Json) -> Result<Checkpoint, String> {
+        let fingerprint = v
+            .get("fingerprint")
+            .and_then(|x| x.as_str())
+            .ok_or("checkpoint missing fingerprint")?
+            .to_string();
+        let completed = v
+            .get("completed")
+            .and_then(|x| x.as_arr())
+            .ok_or("checkpoint missing completed")?
+            .iter()
+            .map(|c| c.as_str().map(str::to_string).ok_or("bad cell id"))
+            .collect::<Result<BTreeSet<_>, _>>()?;
+        Ok(Checkpoint { fingerprint, completed })
+    }
+
+    /// Atomically persist: write `<path>.tmp`, then rename over `path`.
+    /// A kill between the two leaves the previous checkpoint intact.
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, self.to_json().to_string_pretty())?;
+        std::fs::rename(&tmp, path)
+    }
+
+    /// Load a checkpoint file.
+    pub fn load(path: &Path) -> Result<Checkpoint, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        Checkpoint::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_and_marking() {
+        let mut c = Checkpoint::new("fp-1".into());
+        assert!(!c.is_completed("a"));
+        c.mark("b");
+        c.mark("a");
+        c.mark("a"); // idempotent
+        assert!(c.is_completed("a"));
+        let back = Checkpoint::from_json(&c.to_json()).unwrap();
+        assert_eq!(back, c);
+        // Deterministic serialization: sorted cell ids.
+        let s = c.to_json().to_string();
+        assert!(s.find("\"a\"").unwrap() < s.find("\"b\"").unwrap());
+    }
+
+    #[test]
+    fn save_is_atomic_and_loadable() {
+        let dir = std::env::temp_dir().join(format!("ranntune_ckpt_{}", std::process::id()));
+        let path = dir.join("checkpoint.json");
+        let mut c = Checkpoint::new("fp-2".into());
+        c.mark("cell-1");
+        c.save(&path).unwrap();
+        // No stray temp file left behind.
+        assert!(!path.with_extension("json.tmp").exists());
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back, c);
+        // Overwrite keeps it loadable.
+        c.mark("cell-2");
+        c.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap().completed.len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn malformed_checkpoints_error() {
+        assert!(Checkpoint::from_json(&Json::parse("{}").unwrap()).is_err());
+        assert!(Checkpoint::load(Path::new("/definitely/not/here.json")).is_err());
+    }
+}

@@ -1,0 +1,68 @@
+//! Multi-problem tuning campaigns: suites × tuners on one machine, with
+//! sharded results, resumable checkpoints, and per-regime reports.
+//!
+//! The paper's claim is a *general-purpose* autotuning pipeline, but a
+//! single `ranntune tune` invocation exercises one (problem, tuner) pair.
+//! A **campaign** sweeps a whole [`crate::data::ProblemSpec`] suite across
+//! a tuner set in one resumable run — the shape of evidence the RandNLA
+//! benchmarking literature asks for (regime coverage, not single-instance
+//! demos) and the first consumer that drives the ask/tell
+//! [`crate::objective::Evaluator`] stack end to end at scale.
+//!
+//! Pipeline (each stage is its own submodule):
+//!
+//! 1. [`CampaignSpec`] (`suite`) — the declarative plan: a problem suite
+//!    from the [`crate::data`] registry × a [`TunerKind`] set × a
+//!    trial budget, plus execution knobs (evaluation threads, cell
+//!    workers, [`crate::objective::TimingMode`]).
+//! 2. [`Campaign`] (`runner`) — drives every cell (problem × tuner)
+//!    through the existing tuning stack, sharding each cell's history
+//!    into its own [`crate::db::HistoryDb`] file and checkpointing after
+//!    every completed cell. Cells are independent, so `cell_workers > 1`
+//!    fans whole cells out across threads while `eval_threads > 1`
+//!    parallelizes the repeats × batch grid *within* a cell.
+//! 3. [`Checkpoint`] (`checkpoint`) — a small JSON file recording the
+//!    campaign fingerprint and the completed cell set. A killed campaign
+//!    restarts at the first incomplete cell; because every cell's seeds
+//!    derive only from the spec, a resumed run's merged database is
+//!    *bit-identical* to an uninterrupted one under
+//!    [`crate::objective::TimingMode::Modeled`].
+//! 4. `report` — per-regime winner tables, best-so-far / ARFE-vs-trials
+//!    curves, and `vec_nnz` clamp warnings, in the same markdown + CSV
+//!    format as the `figures` subcommand (plus a machine-readable
+//!    `campaign.json`).
+//!
+//! Cost: a campaign is Σ_cells (budget × num_repeats) SAP solves plus one
+//! direct solve per problem; the runner's own bookkeeping is O(cells) and
+//! the merge step is linear in the total trial count.
+//!
+//! ```
+//! use ranntune::campaign::{Campaign, CampaignSpec, TunerKind};
+//! use ranntune::data::builtin_suite;
+//! use ranntune::objective::TimingMode;
+//!
+//! let mut spec = CampaignSpec::new(
+//!     "doc-smoke",
+//!     builtin_suite("smoke").unwrap().iter().map(|s| s.shrunk(4)).collect(),
+//!     vec![TunerKind::Lhsmdu],
+//!     4,
+//! );
+//! spec.num_repeats = 1;
+//! spec.timing = TimingMode::Modeled; // deterministic, test-friendly
+//! let dir = std::env::temp_dir().join(format!("ranntune_doc_{}", std::process::id()));
+//! std::fs::remove_dir_all(&dir).ok();
+//! let outcome = Campaign::new(spec, &dir).run().unwrap();
+//! assert!(outcome.finished);
+//! assert_eq!(outcome.results.len(), 3); // 3 problems × 1 tuner
+//! std::fs::remove_dir_all(&dir).ok();
+//! ```
+
+mod checkpoint;
+mod report;
+mod runner;
+mod suite;
+
+pub use checkpoint::Checkpoint;
+pub use report::{write_report, CampaignReport, ClampWarning};
+pub use runner::{Campaign, CampaignOutcome, CellResult};
+pub use suite::{CampaignSpec, Cell, TunerKind};

@@ -1,0 +1,423 @@
+//! The campaign execution engine: drives every (problem × tuner) cell
+//! through the ask/tell tuning stack, shards results, checkpoints, and
+//! merges.
+//!
+//! Execution layout on disk (`out_dir`):
+//!
+//! ```text
+//! out_dir/
+//!   checkpoint.json        # fingerprint + completed cell set (atomic)
+//!   shards/<cell_id>.json  # one HistoryDb per completed cell
+//!   merged.json            # fold of all shards, written when finished
+//! ```
+//!
+//! Concurrency: cells are mutually independent (each derives its RNG
+//! streams from the spec alone), so `cell_workers > 1` runs whole cells
+//! on scoped threads while `eval_threads > 1` parallelizes the
+//! `batch × num_repeats` solver grid *inside* a cell — together they keep
+//! every core busy even when individual tuners serialize their proposal
+//! loop. Neither knob changes recorded numbers under
+//! [`crate::objective::TimingMode::Modeled`]; under measured timing they
+//! change wall-clock values only, like `--eval-threads` in `ranntune tune`.
+//!
+//! The merged database is always built by re-reading the shard files (not
+//! from in-memory histories), so an interrupted-then-resumed campaign and
+//! an uninterrupted one produce byte-identical `merged.json` files under
+//! modeled timing — pinned by `tests/campaign_resume.rs`.
+
+use super::{CampaignSpec, Cell, Checkpoint};
+use crate::data::ProblemSpec;
+use crate::db::HistoryDb;
+use crate::objective::{
+    Constants, History, Objective, ParallelEvaluator, ParamSpace, TuningTask,
+};
+use crate::rng::Rng;
+use crate::tuners::SourceSample;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// One executed (or shard-restored) campaign cell.
+pub struct CellResult {
+    /// The cell this history belongs to.
+    pub cell: Cell,
+    /// Its full evaluation history (trial 0 is the reference).
+    pub history: History,
+    /// True if the history was restored from a shard written by an
+    /// earlier (interrupted) run rather than executed now.
+    pub from_checkpoint: bool,
+}
+
+/// What a [`Campaign::run`] invocation produced.
+pub struct CampaignOutcome {
+    /// Per-cell results in spec order — all cells when `finished`, the
+    /// completed prefix set otherwise.
+    pub results: Vec<CellResult>,
+    /// Cells executed by *this* invocation.
+    pub completed_now: usize,
+    /// Cells skipped because a checkpoint already had them.
+    pub skipped: usize,
+    /// Whether every cell of the spec is now complete (merged DB written).
+    pub finished: bool,
+    /// Path of the merged database (exists only when `finished`).
+    pub merged_db_path: PathBuf,
+}
+
+/// A resumable multi-problem tuning campaign bound to an output directory.
+pub struct Campaign {
+    /// The declarative plan.
+    pub spec: CampaignSpec,
+    out_dir: PathBuf,
+}
+
+/// Salt separating the tuner's proposal RNG from the objective's solver
+/// streams within a cell.
+const TUNER_SEED_SALT: u64 = 0x7454_4e52_u64;
+/// Salt separating TLA source collection from everything else.
+const SOURCE_SEED_SALT: u64 = 0x5059_4c0a_u64;
+
+impl Campaign {
+    /// Bind a spec to an output directory (created on [`Campaign::run`]).
+    pub fn new(spec: CampaignSpec, out_dir: &Path) -> Campaign {
+        Campaign { spec, out_dir: out_dir.to_path_buf() }
+    }
+
+    /// The campaign's output directory.
+    pub fn out_dir(&self) -> &Path {
+        &self.out_dir
+    }
+
+    /// Path of the checkpoint file.
+    pub fn checkpoint_path(&self) -> PathBuf {
+        self.out_dir.join("checkpoint.json")
+    }
+
+    /// Path of a cell's shard database.
+    pub fn shard_path(&self, cell: &Cell) -> PathBuf {
+        self.out_dir.join("shards").join(format!("{}.json", cell.id()))
+    }
+
+    /// Path of the merged database.
+    pub fn merged_path(&self) -> PathBuf {
+        self.out_dir.join("merged.json")
+    }
+
+    /// Execute the campaign (resuming from a checkpoint if one exists).
+    ///
+    /// ```
+    /// use ranntune::campaign::{Campaign, CampaignSpec, TunerKind};
+    /// use ranntune::data::{ProblemSpec, Regime};
+    /// use ranntune::objective::TimingMode;
+    ///
+    /// let suite = vec![ProblemSpec::new("GA", 120, 8, 1, Regime::LowCoherence)];
+    /// let mut spec = CampaignSpec::new("doc-run", suite, vec![TunerKind::Lhsmdu], 3);
+    /// spec.num_repeats = 1;
+    /// spec.timing = TimingMode::Modeled;
+    /// let dir = std::env::temp_dir().join(format!("ranntune_docrun_{}", std::process::id()));
+    /// std::fs::remove_dir_all(&dir).ok();
+    ///
+    /// let outcome = Campaign::new(spec, &dir).run().unwrap();
+    /// assert!(outcome.finished && outcome.merged_db_path.exists());
+    /// assert_eq!(outcome.results[0].history.len(), 3);
+    /// std::fs::remove_dir_all(&dir).ok();
+    /// ```
+    ///
+    /// Completed cells are skipped and restored from their shards;
+    /// pending cells run — up to `spec.max_cells` of them, on
+    /// `spec.cell_workers` threads — each writing its shard and then
+    /// atomically updating the checkpoint. When the last cell completes,
+    /// all shards are folded into `merged.json`.
+    ///
+    /// Errors on: an out-of-date checkpoint fingerprint (the spec changed
+    /// under an existing output directory), an unbuildable problem spec,
+    /// or I/O failure. A cell error aborts the run but never corrupts the
+    /// checkpoint — completed cells stay completed.
+    pub fn run(&self) -> Result<CampaignOutcome, String> {
+        std::fs::create_dir_all(self.out_dir.join("shards")).map_err(|e| e.to_string())?;
+        let fingerprint = self.spec.fingerprint();
+        let ckpt_path = self.checkpoint_path();
+        let mut ckpt = if ckpt_path.exists() {
+            let c = Checkpoint::load(&ckpt_path)?;
+            if c.fingerprint != fingerprint {
+                return Err(format!(
+                    "checkpoint at {} belongs to a different campaign spec; \
+                     use a fresh --out directory or delete it to restart",
+                    ckpt_path.display()
+                ));
+            }
+            c
+        } else {
+            Checkpoint::new(fingerprint)
+        };
+
+        let cells = self.spec.cells();
+        // Defensive: a cell marked complete whose shard vanished is re-run.
+        for cell in &cells {
+            if ckpt.is_completed(&cell.id()) && !self.shard_path(cell).exists() {
+                ckpt.completed.remove(&cell.id());
+            }
+        }
+
+        let pending: Vec<usize> = (0..cells.len())
+            .filter(|&i| !ckpt.is_completed(&cells[i].id()))
+            .collect();
+        let skipped = cells.len() - pending.len();
+        let to_run: Vec<usize> = match self.spec.max_cells {
+            Some(k) => pending.iter().copied().take(k).collect(),
+            None => pending.clone(),
+        };
+
+        let completed_now = self.run_cells(&cells, &to_run, &mut ckpt)?;
+
+        let finished = cells.iter().all(|c| ckpt.is_completed(&c.id()));
+        let mut results = Vec::new();
+        for cell in &cells {
+            if !ckpt.is_completed(&cell.id()) {
+                continue;
+            }
+            let shard = HistoryDb::load(&self.shard_path(cell))?;
+            let rec = shard
+                .all_tasks()
+                .into_iter()
+                .find(|t| t.task_name == cell.id())
+                .ok_or_else(|| format!("shard for {} has no task record", cell.id()))?;
+            let executed_now = to_run.iter().any(|&i| cells[i].id() == cell.id());
+            results.push(CellResult {
+                cell: cell.clone(),
+                history: rec.to_history(),
+                from_checkpoint: !executed_now,
+            });
+        }
+
+        if finished {
+            let mut merged = HistoryDb::new();
+            for cell in &cells {
+                merged.merge_from(&HistoryDb::load(&self.shard_path(cell))?);
+            }
+            merged.save(&self.merged_path()).map_err(|e| e.to_string())?;
+        }
+
+        Ok(CampaignOutcome {
+            results,
+            completed_now,
+            skipped,
+            finished,
+            merged_db_path: self.merged_path(),
+        })
+    }
+
+    /// Run the selected cells, on one thread or `cell_workers` scoped
+    /// threads. Returns the number of cells completed.
+    fn run_cells(
+        &self,
+        cells: &[Cell],
+        to_run: &[usize],
+        ckpt: &mut Checkpoint,
+    ) -> Result<usize, String> {
+        if to_run.is_empty() {
+            return Ok(0);
+        }
+        let workers = self.spec.cell_workers.max(1).min(to_run.len());
+        if workers == 1 {
+            for &i in to_run {
+                let cell = &cells[i];
+                let history = run_cell(&self.spec, cell)?;
+                self.commit_cell(cell, &history, ckpt)?;
+            }
+            return Ok(to_run.len());
+        }
+
+        // Fan whole cells out: workers pull indices from a shared cursor;
+        // shard writes + checkpoint updates serialize on a mutex.
+        let next = AtomicUsize::new(0);
+        let shared = Mutex::new(ckpt.clone());
+        let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
+        let done = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let u = next.fetch_add(1, Ordering::Relaxed);
+                    if u >= to_run.len() || !errors.lock().unwrap().is_empty() {
+                        break;
+                    }
+                    let cell = &cells[to_run[u]];
+                    match run_cell(&self.spec, cell) {
+                        Ok(history) => {
+                            let mut c = shared.lock().unwrap();
+                            match self.commit_cell(cell, &history, &mut c) {
+                                Ok(()) => {
+                                    done.fetch_add(1, Ordering::Relaxed);
+                                }
+                                Err(e) => errors.lock().unwrap().push(e),
+                            }
+                        }
+                        Err(e) => errors.lock().unwrap().push(e),
+                    }
+                });
+            }
+        });
+        *ckpt = shared.into_inner().unwrap();
+        let errs = errors.into_inner().unwrap();
+        if let Some(e) = errs.into_iter().next() {
+            return Err(e);
+        }
+        Ok(done.load(Ordering::Relaxed))
+    }
+
+    /// Persist one completed cell: shard first, checkpoint second, so a
+    /// kill between the two re-runs the cell instead of losing it.
+    fn commit_cell(
+        &self,
+        cell: &Cell,
+        history: &History,
+        ckpt: &mut Checkpoint,
+    ) -> Result<(), String> {
+        let mut shard = HistoryDb::new();
+        shard.record(&cell.id(), cell.problem.m, cell.problem.n, history);
+        shard.save(&self.shard_path(cell)).map_err(|e| e.to_string())?;
+        ckpt.mark(&cell.id());
+        ckpt.save(&self.checkpoint_path()).map_err(|e| e.to_string())
+    }
+}
+
+/// Execute one cell: build the problem, assemble the objective (with the
+/// spec's evaluator and timing mode), collect TLA source data if needed,
+/// and run the tuner for the budget.
+fn run_cell(spec: &CampaignSpec, cell: &Cell) -> Result<History, String> {
+    let problem = cell.problem.build()?;
+    let constants = Constants {
+        num_repeats: spec.num_repeats,
+        timing: spec.timing,
+        ..Constants::default()
+    };
+    let cell_seed = cell.seed(spec.seed);
+
+    let source = if cell.tuner.needs_source() {
+        collect_cell_source(spec, &cell.problem, &constants, cell_seed)?
+    } else {
+        Vec::new()
+    };
+
+    let task = TuningTask { problem, space: ParamSpace::paper(), constants: constants.clone() };
+    let mut obj = Objective::new(task, cell_seed);
+    if spec.eval_threads > 1 {
+        obj.set_evaluator(Box::new(ParallelEvaluator::new(spec.eval_threads)));
+    }
+    let mut tuner = cell.tuner.make(constants.num_pilots, source);
+    let history = tuner.run(&mut obj, spec.budget, &mut Rng::new(cell_seed ^ TUNER_SEED_SALT));
+    Ok(history)
+}
+
+/// Pre-collect TLA source samples on a down-scaled sibling of the
+/// problem: same generator family, m/4 rows (floored at n + 50), shifted
+/// data seed — the paper's §5.3.1 source protocol, fully determined by
+/// the spec.
+fn collect_cell_source(
+    spec: &CampaignSpec,
+    p: &ProblemSpec,
+    constants: &Constants,
+    cell_seed: u64,
+) -> Result<Vec<SourceSample>, String> {
+    let src_m = (p.m / 4).max(p.n + 50).min(p.m);
+    let src_problem = crate::data::build_problem(&p.dataset, src_m, p.n, p.data_seed + 400)?;
+    Ok(crate::cli::figures::collect_source(
+        src_problem,
+        constants.clone(),
+        spec.source_samples,
+        cell_seed ^ SOURCE_SEED_SALT,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::TunerKind;
+    use crate::data::{builtin_suite, ProblemSpec, Regime};
+    use crate::objective::TimingMode;
+
+    fn tiny_spec(name: &str) -> CampaignSpec {
+        let suite: Vec<ProblemSpec> =
+            builtin_suite("smoke").unwrap().iter().map(|s| s.shrunk(2)).collect();
+        let mut spec =
+            CampaignSpec::new(name, suite, vec![TunerKind::Lhsmdu, TunerKind::Grid], 4);
+        spec.num_repeats = 1;
+        spec.timing = TimingMode::Modeled;
+        spec
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("ranntune_campaign_{}_{}", tag, std::process::id()))
+    }
+
+    #[test]
+    fn full_run_produces_all_cells_and_merged_db() {
+        let dir = tmp_dir("full");
+        let _ = std::fs::remove_dir_all(&dir);
+        let campaign = Campaign::new(tiny_spec("full"), &dir);
+        let out = campaign.run().unwrap();
+        assert!(out.finished);
+        assert_eq!(out.results.len(), 6);
+        assert_eq!(out.completed_now, 6);
+        assert_eq!(out.skipped, 0);
+        assert!(out.merged_db_path.exists());
+        let merged = HistoryDb::load(&out.merged_db_path).unwrap();
+        assert_eq!(merged.len(), 6);
+        for r in &out.results {
+            assert_eq!(r.history.len(), campaign.spec.budget);
+            assert!(r.history.trials()[0].is_reference);
+            assert!(!r.from_checkpoint);
+        }
+        // Re-running is a no-op (everything checkpointed).
+        let again = campaign.run().unwrap();
+        assert_eq!(again.completed_now, 0);
+        assert_eq!(again.skipped, 6);
+        assert!(again.results.iter().all(|r| r.from_checkpoint));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cell_workers_match_serial_results() {
+        let dir_a = tmp_dir("serial");
+        let dir_b = tmp_dir("workers");
+        let _ = std::fs::remove_dir_all(&dir_a);
+        let _ = std::fs::remove_dir_all(&dir_b);
+        let a = Campaign::new(tiny_spec("par"), &dir_a).run().unwrap();
+        let mut spec = tiny_spec("par");
+        spec.cell_workers = 4;
+        let b = Campaign::new(spec, &dir_b).run().unwrap();
+        let bytes_a = std::fs::read(&a.merged_db_path).unwrap();
+        let bytes_b = std::fs::read(&b.merged_db_path).unwrap();
+        assert_eq!(bytes_a, bytes_b, "cell fan-out changed recorded results");
+        std::fs::remove_dir_all(&dir_a).ok();
+        std::fs::remove_dir_all(&dir_b).ok();
+    }
+
+    #[test]
+    fn fingerprint_mismatch_is_refused() {
+        let dir = tmp_dir("fp");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut spec = tiny_spec("fp");
+        spec.max_cells = Some(1);
+        Campaign::new(spec.clone(), &dir).run().unwrap();
+        spec.budget += 1;
+        spec.max_cells = None;
+        let err = Campaign::new(spec, &dir).run().unwrap_err();
+        assert!(err.contains("different campaign spec"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tla_cell_runs_with_spec_derived_source() {
+        let dir = tmp_dir("tla");
+        let _ = std::fs::remove_dir_all(&dir);
+        let suite = vec![ProblemSpec::new("GA", 220, 10, 5, Regime::LowCoherence)];
+        let mut spec = CampaignSpec::new("tla", suite, vec![TunerKind::Tla], 4);
+        spec.num_repeats = 1;
+        spec.source_samples = 6;
+        spec.timing = TimingMode::Modeled;
+        let out = Campaign::new(spec, &dir).run().unwrap();
+        assert!(out.finished);
+        assert_eq!(out.results[0].history.len(), 4);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

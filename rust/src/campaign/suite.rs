@@ -1,0 +1,272 @@
+//! The declarative campaign plan: which problems, which tuners, how much
+//! budget, and the execution/determinism knobs.
+//!
+//! A campaign's result identity is its [`CampaignSpec::fingerprint`]: the
+//! canonical string of every field that can change a recorded number.
+//! Execution knobs that *cannot* (`eval_threads`, `cell_workers`,
+//! `max_cells`) are deliberately excluded so a campaign may be resumed on
+//! a machine with a different core count.
+
+use crate::data::ProblemSpec;
+use crate::objective::TimingMode;
+use crate::tuners::{GpBoTuner, GridTuner, LhsmduTuner, SourceSample, TlaTuner, TpeTuner, Tuner};
+
+/// The tuner set a campaign can sweep — one variant per §5 competitor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TunerKind {
+    /// Random search via LHSMDU stratified sampling.
+    Lhsmdu,
+    /// Tree-structured Parzen Estimator.
+    Tpe,
+    /// GP Bayesian optimization ("GPTune").
+    GpTune,
+    /// Semi-exhaustive grid (truncated to the budget) — ground truth.
+    Grid,
+    /// Transfer-learning autotuner (UCB bandit + LCM); collects its own
+    /// source samples on a down-scaled sibling of each problem.
+    Tla,
+}
+
+impl TunerKind {
+    /// Every tuner, in the order campaigns iterate them.
+    pub const ALL: [TunerKind; 5] =
+        [TunerKind::Lhsmdu, TunerKind::Tpe, TunerKind::GpTune, TunerKind::Grid, TunerKind::Tla];
+
+    /// Display name, matching the figure labels.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TunerKind::Lhsmdu => "LHSMDU",
+            TunerKind::Tpe => "TPE",
+            TunerKind::GpTune => "GPTune",
+            TunerKind::Grid => "Grid",
+            TunerKind::Tla => "TLA",
+        }
+    }
+
+    /// Parse a CLI name (the same aliases as `ranntune tune --tuner`).
+    pub fn parse(s: &str) -> Option<TunerKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "lhsmdu" | "random" => Some(TunerKind::Lhsmdu),
+            "tpe" => Some(TunerKind::Tpe),
+            "gptune" | "gp" => Some(TunerKind::GpTune),
+            "grid" => Some(TunerKind::Grid),
+            "tla" => Some(TunerKind::Tla),
+            _ => None,
+        }
+    }
+
+    /// Whether this tuner consumes source-task samples (TLA only).
+    pub fn needs_source(&self) -> bool {
+        matches!(self, TunerKind::Tla)
+    }
+
+    /// Instantiate the tuner. `source` is only consumed by TLA; pass an
+    /// empty slice for the others.
+    pub fn make(&self, num_pilots: usize, source: Vec<SourceSample>) -> Box<dyn Tuner> {
+        match self {
+            TunerKind::Lhsmdu => Box::new(LhsmduTuner::new()),
+            TunerKind::Tpe => Box::new(TpeTuner::new(num_pilots)),
+            TunerKind::GpTune => Box::new(GpBoTuner::new(num_pilots)),
+            TunerKind::Grid => Box::new(GridTuner::new(vec![])),
+            TunerKind::Tla => Box::new(TlaTuner::new(source)),
+        }
+    }
+}
+
+/// One campaign cell: a problem from the suite × a tuner.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    /// The problem spec (owned copy of the suite entry).
+    pub problem: ProblemSpec,
+    /// The tuner to run on it.
+    pub tuner: TunerKind,
+}
+
+impl Cell {
+    /// Stable id used for shard filenames, checkpoint entries, and report
+    /// rows, e.g. `"GA-400x16-s1001__lhsmdu"`.
+    pub fn id(&self) -> String {
+        format!("{}__{}", self.problem.id, self.tuner.name().to_ascii_lowercase())
+    }
+
+    /// Deterministic seed of this cell's objective and tuner RNG streams:
+    /// a hash of the cell id folded into the campaign seed, so a cell's
+    /// results depend only on (spec, cell) — never on execution order,
+    /// thread count, or which cells ran before a kill.
+    pub fn seed(&self, campaign_seed: u64) -> u64 {
+        // FNV-1a over the id, then a SplitMix64 finalizer.
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in self.id().bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        let mut z = h ^ campaign_seed.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// The full declarative plan of a campaign.
+#[derive(Clone, Debug)]
+pub struct CampaignSpec {
+    /// Campaign name (report titles; part of the fingerprint).
+    pub name: String,
+    /// The problem suite, in sweep order.
+    pub suite: Vec<ProblemSpec>,
+    /// The tuner set, in sweep order.
+    pub tuners: Vec<TunerKind>,
+    /// Function-evaluation budget per cell (the reference evaluation
+    /// counts as the first, as everywhere in the paper).
+    pub budget: usize,
+    /// Solver repeats averaged per evaluation.
+    pub num_repeats: usize,
+    /// Root seed; every cell derives its own stream via [`Cell::seed`].
+    pub seed: u64,
+    /// LHSMDU samples pre-collected per problem for TLA's source task.
+    pub source_samples: usize,
+    /// Wall-clock mode: measured (paper objective) or deterministic model.
+    pub timing: TimingMode,
+    /// Threads for the within-cell [`crate::objective::ParallelEvaluator`]
+    /// (1 = serial). Not part of the fingerprint.
+    pub eval_threads: usize,
+    /// Concurrent cells (campaign-level fan-out; cells are independent).
+    /// Not part of the fingerprint.
+    pub cell_workers: usize,
+    /// Stop after completing this many *new* cells (kill simulation /
+    /// time-boxed runs); `None` runs to the end. Not fingerprinted.
+    pub max_cells: Option<usize>,
+}
+
+impl CampaignSpec {
+    /// A spec with the default execution knobs: 3 repeats, seed 0, 30
+    /// source samples, measured timing, serial execution.
+    pub fn new(
+        name: &str,
+        suite: Vec<ProblemSpec>,
+        tuners: Vec<TunerKind>,
+        budget: usize,
+    ) -> CampaignSpec {
+        CampaignSpec {
+            name: name.to_string(),
+            suite,
+            tuners,
+            budget,
+            num_repeats: 3,
+            seed: 0,
+            source_samples: 30,
+            timing: TimingMode::Measured,
+            eval_threads: 1,
+            cell_workers: 1,
+            max_cells: None,
+        }
+    }
+
+    /// The sweep grid in execution order: problem-major (all tuners of a
+    /// problem run consecutively, so its direct solve and source samples
+    /// stay warm in cache).
+    pub fn cells(&self) -> Vec<Cell> {
+        let mut out = Vec::with_capacity(self.suite.len() * self.tuners.len());
+        for p in &self.suite {
+            for &t in &self.tuners {
+                out.push(Cell { problem: p.clone(), tuner: t });
+            }
+        }
+        out
+    }
+
+    /// Canonical identity string of everything that determines recorded
+    /// numbers. Stored in the checkpoint; resuming with a different
+    /// fingerprint is refused (the shards would be inconsistent).
+    pub fn fingerprint(&self) -> String {
+        let mut s = format!(
+            "ranntune-campaign-v1;name={};budget={};repeats={};seed={};src={};timing={:?}",
+            self.name, self.budget, self.num_repeats, self.seed, self.source_samples, self.timing
+        );
+        for p in &self.suite {
+            s.push_str(&format!(
+                ";p={}:{}:{}x{}@{}:{}",
+                p.id,
+                p.dataset,
+                p.m,
+                p.n,
+                p.data_seed,
+                p.regime.name()
+            ));
+        }
+        for t in &self.tuners {
+            s.push_str(&format!(";t={}", t.name()));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::builtin_suite;
+
+    fn spec() -> CampaignSpec {
+        CampaignSpec::new(
+            "t",
+            builtin_suite("smoke").unwrap(),
+            vec![TunerKind::Lhsmdu, TunerKind::Tpe],
+            8,
+        )
+    }
+
+    #[test]
+    fn tuner_kind_parse_round_trip() {
+        for t in TunerKind::ALL {
+            assert_eq!(TunerKind::parse(t.name()), Some(t));
+        }
+        assert_eq!(TunerKind::parse("gp"), Some(TunerKind::GpTune));
+        assert!(TunerKind::parse("nope").is_none());
+        assert!(TunerKind::Tla.needs_source());
+        assert!(!TunerKind::Grid.needs_source());
+    }
+
+    #[test]
+    fn cells_are_problem_major_with_unique_ids() {
+        let s = spec();
+        let cells = s.cells();
+        assert_eq!(cells.len(), 6);
+        assert_eq!(cells[0].problem.id, cells[1].problem.id);
+        assert_ne!(cells[1].problem.id, cells[2].problem.id);
+        let mut ids: Vec<String> = cells.iter().map(Cell::id).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), 6);
+    }
+
+    #[test]
+    fn cell_seeds_are_stable_and_distinct() {
+        let s = spec();
+        let cells = s.cells();
+        let seeds: Vec<u64> = cells.iter().map(|c| c.seed(s.seed)).collect();
+        let again: Vec<u64> = cells.iter().map(|c| c.seed(s.seed)).collect();
+        assert_eq!(seeds, again);
+        let mut uniq = seeds.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert_eq!(uniq.len(), seeds.len(), "seed collision: {seeds:?}");
+        // Different campaign seed shifts every stream.
+        assert_ne!(cells[0].seed(0), cells[0].seed(1));
+    }
+
+    #[test]
+    fn fingerprint_tracks_result_relevant_fields_only() {
+        let base = spec();
+        let mut b = base.clone();
+        b.eval_threads = 8;
+        b.cell_workers = 4;
+        b.max_cells = Some(1);
+        assert_eq!(base.fingerprint(), b.fingerprint());
+        let mut c = base.clone();
+        c.budget += 1;
+        assert_ne!(base.fingerprint(), c.fingerprint());
+        let mut d = base.clone();
+        d.timing = TimingMode::Modeled;
+        assert_ne!(base.fingerprint(), d.fingerprint());
+    }
+}

@@ -23,6 +23,7 @@ use std::path::Path;
 pub struct FigScale {
     /// Synthetic matrix shape (paper: 50,000 × 1,000).
     pub m: usize,
+    /// Columns of the synthetic matrices.
     pub n: usize,
     /// Transfer-learning source shape (paper: 10,000 × 1,000).
     pub source_m: usize,
@@ -38,6 +39,7 @@ pub struct FigScale {
     pub full_grid: bool,
     /// Saltelli base samples for Table 5 (paper: 512).
     pub saltelli: usize,
+    /// Scale name shown in logs and report headers.
     pub label: &'static str,
 }
 
@@ -91,6 +93,7 @@ impl FigScale {
         }
     }
 
+    /// Parse a `--scale` value: `small`, `paper`, or (default) `default`.
     pub fn parse(s: &str) -> FigScale {
         match s {
             "small" => FigScale::small(),
@@ -371,8 +374,11 @@ pub fn grid_figure(scale: &FigScale, datasets: &[&str], name: &str, out: &Path) 
 
 /// One tuner run identified by (tuner name, seed) with its history.
 pub struct SuiteRun {
+    /// Tuner display name.
     pub tuner: String,
+    /// Repetition seed of the run.
     pub seed: u64,
+    /// The run's evaluation history.
     pub history: crate::objective::History,
 }
 

@@ -4,6 +4,7 @@
 //!
 //! ```text
 //! ranntune tune        --data GA --tuner gptune --budget 50 [--m 4000 --n 100]
+//! ranntune campaign    --suite synthetic --tuners lhsmdu,gptune,tla --budget 30
 //! ranntune grid        --data T1 [--coarse] [--m ... --n ...]
 //! ranntune tla         --data Localization --source-db db.json --budget 50
 //! ranntune sensitivity --data Musk [--samples 100]
@@ -14,19 +15,21 @@
 
 pub mod figures;
 
-use crate::data::{generate_realworld, generate_synthetic, Problem, RealWorldKind, SyntheticKind};
-use crate::rng::Rng;
+use crate::data::Problem;
 use std::collections::BTreeMap;
 
 /// Parsed CLI arguments: positional subcommand + `--key value` flags
 /// (`--flag` alone stores "true").
 #[derive(Debug, Default)]
 pub struct Args {
+    /// Positional subcommand (empty when only flags were given).
     pub command: String,
     flags: BTreeMap<String, String>,
 }
 
 impl Args {
+    /// Parse argv: the first bare token is the subcommand; `--key value`
+    /// pairs fill the flag map and a bare `--flag` stores `"true"`.
     pub fn parse(argv: &[String]) -> Args {
         let mut args = Args::default();
         let mut i = 0;
@@ -48,42 +51,40 @@ impl Args {
         args
     }
 
+    /// Raw string value of a flag.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// Flag parsed as `usize`, or `default` when absent/malformed.
     pub fn get_usize(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Flag parsed as `u64`, or `default` when absent/malformed.
     pub fn get_u64(&self, key: &str, default: u64) -> u64 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Flag parsed as `f64`, or `default` when absent/malformed.
     pub fn get_f64(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Was the flag present (with or without a value)?
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
 }
 
 /// Build a problem from a dataset name (synthetic family or simulated
-/// real-world dataset), at the given shape.
+/// real-world dataset), at the given shape. Thin alias for
+/// [`crate::data::build_problem`] kept for CLI-facing call sites.
 pub fn make_problem(name: &str, m: usize, n: usize, seed: u64) -> Result<Problem, String> {
-    let mut rng = Rng::new(seed);
-    if let Some(kind) = SyntheticKind::parse(name) {
-        return Ok(generate_synthetic(kind, m, n, &mut rng));
-    }
-    if let Some(kind) = RealWorldKind::parse(name) {
-        return Ok(generate_realworld(kind, m, n, &mut rng));
-    }
-    Err(format!(
-        "unknown dataset {name:?}; expected GA|T5|T3|T1|Musk|CIFAR10|Localization"
-    ))
+    crate::data::build_problem(name, m, n, seed)
 }
 
+/// The `ranntune help` text.
 pub const USAGE: &str = "\
 ranntune — surrogate-based autotuning for randomized sketching (SAP least squares)
 
@@ -98,6 +99,17 @@ COMMANDS
                --eval-threads N (run batched evaluations on N threads;
                per-trial ARFE is deterministic, but tuners that adapt to
                measured wall-clock may propose different sequences)
+  campaign     sweep a problem suite across a tuner set in one resumable
+               run (shards + checkpoint + per-regime report)
+               --suite smoke|synthetic|realworld|full
+               --tuners lhsmdu,tpe,gptune[,grid,tla]   --budget N
+               --repeats R  --seed S  --out results/campaign
+               --eval-threads N (within-cell parallel evaluation)
+               --cell-workers K (run K cells concurrently)
+               --shrink F (divide every problem's m,n by F)
+               --max-cells C (stop after C new cells; rerun to resume)
+               --modeled-time (deterministic flop-model wall clock:
+               kill/resume runs are bit-identical)
   grid         semi-exhaustive grid landscape (Fig. 4/8 ground truth)
                --data ... --m --n [--coarse] [--repeats R]
   sensitivity  Sobol analysis via GP surrogate (Table 5)

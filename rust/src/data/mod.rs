@@ -1,41 +1,50 @@
 //! Input-problem generation (§5.1, Table 3) and matrix diagnostics.
 //!
-//! * [`synthetic`] — the paper's GA / T5 / T3 / T1 families: rows drawn
+//! * `synthetic` — the paper's GA / T5 / T3 / T1 families: rows drawn
 //!   from a multivariate normal or multivariate t (ν = 5, 3, 1) with AR(1)
 //!   covariance Σᵢⱼ = 2·0.5^{|i−j|}; b = A·x + ε with the paper's planted
 //!   x (1 on the first/last 10 coordinates, 0.1 elsewhere) and
 //!   ε ∼ N(0, 0.09²).
-//! * [`realworld`] — simulated stand-ins for the Musk, CIFAR-10 and
+//! * `realworld` — simulated stand-ins for the Musk, CIFAR-10 and
 //!   Localization datasets (no network in this environment); each matches
 //!   the original's shape and a coherence/spectral profile chosen to
 //!   reproduce the tuning landscape of Fig. 8. The substitution rationale
 //!   is documented in DESIGN.md.
-//! * [`diagnostics`] — coherence μ(A) = m·maxᵢ‖U₍ᵢ₎‖² and condition
+//! * `diagnostics` — coherence μ(A) = m·maxᵢ‖U₍ᵢ₎‖² and condition
 //!   number (Table 3).
+//! * `suite` — the problem-suite registry: named, reproducible lists of
+//!   [`ProblemSpec`]s tagged by landscape regime, consumed by the
+//!   multi-problem campaign runner ([`crate::campaign`]).
 
 mod diagnostics;
 mod realworld;
+mod suite;
 mod synthetic;
 
 pub use diagnostics::*;
 pub use realworld::*;
+pub use suite::*;
 pub use synthetic::*;
 
 use crate::linalg::Mat;
 
 /// A least-squares problem instance: minimize ‖A·x − b‖₂.
 pub struct Problem {
+    /// The m×n design matrix (m ≫ n in every paper workload).
     pub a: Mat,
+    /// The length-m response vector.
     pub b: Vec<f64>,
     /// Human-readable name, e.g. "GA", "T1", "Localization-sim".
     pub name: String,
 }
 
 impl Problem {
+    /// Number of rows of A.
     pub fn m(&self) -> usize {
         self.a.rows()
     }
 
+    /// Number of columns of A.
     pub fn n(&self) -> usize {
         self.a.cols()
     }

@@ -27,15 +27,21 @@ use crate::rng::Rng;
 /// The three simulated real-world datasets.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum RealWorldKind {
+    /// UCI Musk v2 stand-in (6,598 × 166 at paper scale).
     Musk,
+    /// CIFAR-10 two-class feature stand-in (32,768 × 512).
     Cifar10,
+    /// CT-slice localization stand-in (53,500 × 386) — the paper's
+    /// headline dataset.
     Localization,
 }
 
 impl RealWorldKind {
+    /// All three simulated datasets, in paper order.
     pub const ALL: [RealWorldKind; 3] =
         [RealWorldKind::Musk, RealWorldKind::Cifar10, RealWorldKind::Localization];
 
+    /// Display name; the `-sim` suffix marks the offline substitution.
     pub fn name(&self) -> &'static str {
         match self {
             RealWorldKind::Musk => "Musk-sim",
@@ -44,6 +50,7 @@ impl RealWorldKind {
         }
     }
 
+    /// Parse a CLI dataset name (case-insensitive; `-sim` optional).
     pub fn parse(s: &str) -> Option<RealWorldKind> {
         match s.to_ascii_lowercase().as_str() {
             "musk" | "musk-sim" => Some(RealWorldKind::Musk),

@@ -1,0 +1,221 @@
+//! Problem-suite registry for multi-problem tuning campaigns.
+//!
+//! The paper's evaluation (§5) argues its pipeline is *general-purpose* by
+//! spanning a spectrum of least-squares problems: synthetic families whose
+//! row-tail weight sweeps coherence from ~0 to 1 (Table 3), and real-world
+//! feature matrices of varying shape and conditioning. This module names
+//! those spectra as reproducible **suites**: ordered lists of
+//! [`ProblemSpec`]s, each pinning a generator family, a shape, a data
+//! seed, and a [`Regime`] tag describing which corner of the landscape the
+//! problem stresses. The campaign runner ([`crate::campaign`]) sweeps a
+//! suite × tuner-set grid and reports winners *per regime*, mirroring the
+//! benchmark-suite methodology advocated by the RandNLA software papers
+//! (arXiv 2302.11474, 2409.14309) rather than single-instance demos.
+//!
+//! Generating a spec's problem is O(m·n) (one pass over the matrix) plus
+//! the O(m·n) response synthesis; every spec is bit-reproducible from its
+//! `(dataset, m, n, data_seed)` tuple.
+
+use super::{generate_realworld, generate_synthetic, Problem, RealWorldKind, SyntheticKind};
+use crate::rng::Rng;
+
+/// Which corner of the tuning landscape a suite problem stresses.
+///
+/// The labels follow the axes the paper varies in §5: row-coherence
+/// (Table 3's μ column, the knob that decides how large `vec_nnz` must
+/// be), aspect ratio (how tall A is relative to n, which shifts cost from
+/// factorization to sketching), and the simulated real-world profiles
+/// (decaying spectra + leverage outliers).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Regime {
+    /// Gaussian-like rows, coherence ≈ n/m: any sparse sketch works.
+    LowCoherence,
+    /// Moderately heavy tails (t₅/t₃): sketch quality starts to matter.
+    ModerateCoherence,
+    /// Cauchy-like rows, coherence ≈ 1: uniform-ish sampling fails.
+    HighCoherence,
+    /// Very tall aspect (m ≫ n): sketch application dominates cost.
+    TallAspect,
+    /// Simulated real-world profile: decaying spectrum + leverage tail.
+    RealWorld,
+}
+
+impl Regime {
+    /// Stable lower-case label used in reports and CSV output.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Regime::LowCoherence => "low-coherence",
+            Regime::ModerateCoherence => "moderate-coherence",
+            Regime::HighCoherence => "high-coherence",
+            Regime::TallAspect => "tall-aspect",
+            Regime::RealWorld => "real-world",
+        }
+    }
+}
+
+/// One reproducible problem in a suite: a named generator family at a
+/// pinned shape and data seed, tagged with the regime it exercises.
+#[derive(Clone, Debug)]
+pub struct ProblemSpec {
+    /// Unique id within the suite (used in cell ids, shard filenames and
+    /// report rows), e.g. `"GA-1500x48-s1101"`. Includes the data seed so
+    /// two specs differing only in seed (repeated instances, or distinct
+    /// problems shrunk onto the same shape) never collide on shard files.
+    pub id: String,
+    /// Dataset name accepted by [`build_problem`]
+    /// (`GA|T5|T3|T1|Musk|CIFAR10|Localization`).
+    pub dataset: String,
+    /// Rows of A.
+    pub m: usize,
+    /// Columns of A.
+    pub n: usize,
+    /// Seed of the data-generation RNG stream.
+    pub data_seed: u64,
+    /// Landscape corner this problem stresses.
+    pub regime: Regime,
+}
+
+impl ProblemSpec {
+    /// Construct a spec with the conventional `"{dataset}-{m}x{n}-s{seed}"`
+    /// id.
+    pub fn new(dataset: &str, m: usize, n: usize, data_seed: u64, regime: Regime) -> ProblemSpec {
+        ProblemSpec {
+            id: format!("{dataset}-{m}x{n}-s{data_seed}"),
+            dataset: dataset.to_string(),
+            m,
+            n,
+            data_seed,
+            regime,
+        }
+    }
+
+    /// Generate the problem instance. Bit-reproducible: the same spec
+    /// always yields the same matrix and response.
+    pub fn build(&self) -> Result<Problem, String> {
+        build_problem(&self.dataset, self.m, self.n, self.data_seed)
+    }
+
+    /// Copy of this spec with `m` and `n` divided by `factor` (floored at
+    /// n ≥ 8 and m ≥ 4·n so the problem stays meaningfully overdetermined).
+    /// Used by `campaign --shrink` for time-boxed CI sweeps.
+    pub fn shrunk(&self, factor: usize) -> ProblemSpec {
+        let f = factor.max(1);
+        let n = (self.n / f).max(8);
+        let m = (self.m / f).max(4 * n);
+        ProblemSpec::new(&self.dataset, m, n, self.data_seed, self.regime)
+    }
+}
+
+/// Build a problem from a dataset name (synthetic family or simulated
+/// real-world dataset) at the given shape. The single dataset-name parser
+/// shared by the CLI and the suite registry.
+pub fn build_problem(name: &str, m: usize, n: usize, seed: u64) -> Result<Problem, String> {
+    let mut rng = Rng::new(seed);
+    if let Some(kind) = SyntheticKind::parse(name) {
+        return Ok(generate_synthetic(kind, m, n, &mut rng));
+    }
+    if let Some(kind) = RealWorldKind::parse(name) {
+        return Ok(generate_realworld(kind, m, n, &mut rng));
+    }
+    Err(format!(
+        "unknown dataset {name:?}; expected GA|T5|T3|T1|Musk|CIFAR10|Localization"
+    ))
+}
+
+/// Names of the built-in suites, in documentation order.
+pub const SUITE_NAMES: [&str; 4] = ["smoke", "synthetic", "realworld", "full"];
+
+/// Look up a built-in suite by name.
+///
+/// * `smoke` — three tiny problems (one per coherence regime); seconds to
+///   run, used by tests and CI.
+/// * `synthetic` — the §5.1 families GA/T5/T3/T1 sweeping coherence, plus
+///   two very tall variants that shift cost into the sketch apply.
+/// * `realworld` — the three simulated §5.4 datasets at reduced scale.
+/// * `full` — `synthetic` + `realworld`.
+pub fn builtin_suite(name: &str) -> Option<Vec<ProblemSpec>> {
+    use Regime::*;
+    match name.to_ascii_lowercase().as_str() {
+        "smoke" => Some(vec![
+            ProblemSpec::new("GA", 400, 16, 1001, LowCoherence),
+            ProblemSpec::new("T3", 400, 16, 1002, ModerateCoherence),
+            ProblemSpec::new("T1", 400, 16, 1003, HighCoherence),
+        ]),
+        "synthetic" => Some(vec![
+            ProblemSpec::new("GA", 1500, 48, 1101, LowCoherence),
+            ProblemSpec::new("T5", 1500, 48, 1102, ModerateCoherence),
+            ProblemSpec::new("T3", 1500, 48, 1103, ModerateCoherence),
+            ProblemSpec::new("T1", 1500, 48, 1104, HighCoherence),
+            ProblemSpec::new("GA", 4000, 24, 1105, TallAspect),
+            ProblemSpec::new("T3", 4000, 24, 1106, TallAspect),
+        ]),
+        "realworld" => Some(vec![
+            ProblemSpec::new("Musk", 1200, 64, 1201, RealWorld),
+            ProblemSpec::new("CIFAR10", 1600, 64, 1202, RealWorld),
+            ProblemSpec::new("Localization", 2000, 48, 1203, RealWorld),
+        ]),
+        "full" => {
+            let mut v = builtin_suite("synthetic").unwrap();
+            v.extend(builtin_suite("realworld").unwrap());
+            Some(v)
+        }
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_builtin_suites_resolve_and_build() {
+        for name in SUITE_NAMES {
+            let suite = builtin_suite(name).expect(name);
+            assert!(suite.len() >= 3, "{name} too small");
+            // Unique ids.
+            let mut ids: Vec<&str> = suite.iter().map(|s| s.id.as_str()).collect();
+            ids.sort();
+            ids.dedup();
+            assert_eq!(ids.len(), suite.len(), "{name}: duplicate spec ids");
+        }
+        // Actually generate the smoke suite (it is sized for tests).
+        for spec in builtin_suite("smoke").unwrap() {
+            let p = spec.build().unwrap();
+            assert_eq!(p.m(), spec.m);
+            assert_eq!(p.n(), spec.n);
+        }
+        assert!(builtin_suite("nope").is_none());
+    }
+
+    #[test]
+    fn specs_are_bit_reproducible() {
+        let spec = ProblemSpec::new("T3", 200, 12, 42, Regime::ModerateCoherence);
+        let a = spec.build().unwrap();
+        let b = spec.build().unwrap();
+        assert_eq!(a.a.as_slice(), b.a.as_slice());
+        assert_eq!(a.b, b.b);
+    }
+
+    #[test]
+    fn shrink_keeps_problems_overdetermined() {
+        let spec = ProblemSpec::new("GA", 4000, 24, 7, Regime::TallAspect);
+        let s = spec.shrunk(10);
+        assert!(s.n >= 8);
+        assert!(s.m >= 4 * s.n);
+        assert!(s.id.contains(&format!("{}x{}", s.m, s.n)));
+        // shrink(1) is identity on shape
+        let t = spec.shrunk(1);
+        assert_eq!((t.m, t.n), (spec.m, spec.n));
+    }
+
+    #[test]
+    fn ids_stay_unique_when_shrinking_collapses_shapes() {
+        // Two same-dataset specs at different shapes/seeds collapse onto
+        // one shape under aggressive shrink; the seed keeps ids distinct
+        // (shard filenames and cell ids depend on this).
+        let a = ProblemSpec::new("GA", 1500, 48, 1101, Regime::LowCoherence).shrunk(200);
+        let b = ProblemSpec::new("GA", 4000, 24, 1105, Regime::TallAspect).shrunk(200);
+        assert_eq!((a.m, a.n), (b.m, b.n));
+        assert_ne!(a.id, b.id, "{} vs {}", a.id, b.id);
+    }
+}

@@ -29,9 +29,11 @@ pub enum SyntheticKind {
 }
 
 impl SyntheticKind {
+    /// All four families in increasing tail weight (Table 3 order).
     pub const ALL: [SyntheticKind; 4] =
         [SyntheticKind::GA, SyntheticKind::T5, SyntheticKind::T3, SyntheticKind::T1];
 
+    /// Display name used in figures and the CLI.
     pub fn name(&self) -> &'static str {
         match self {
             SyntheticKind::GA => "GA",
@@ -41,6 +43,7 @@ impl SyntheticKind {
         }
     }
 
+    /// Parse a CLI family name (case-insensitive).
     pub fn parse(s: &str) -> Option<SyntheticKind> {
         match s.to_ascii_uppercase().as_str() {
             "GA" => Some(SyntheticKind::GA),

@@ -19,20 +19,50 @@ use std::path::Path;
 /// A stored task: identity + its evaluation records.
 #[derive(Clone, Debug)]
 pub struct TaskRecord {
+    /// Task name (dataset name, or a campaign cell id).
     pub task_name: String,
+    /// Problem rows.
     pub m: usize,
+    /// Problem columns.
     pub n: usize,
+    /// Stored evaluations, in recording order.
     pub trials: Vec<TrialRecord>,
+}
+
+impl TaskRecord {
+    /// Rehydrate the stored trials into an in-memory [`History`] (the
+    /// inverse of [`HistoryDb::record`]) — used by the campaign runner to
+    /// rebuild completed cells from their shard files on resume.
+    pub fn to_history(&self) -> History {
+        let mut h = History::new();
+        for t in &self.trials {
+            h.push(crate::objective::Trial {
+                config: t.config,
+                wall_clock: t.wall_clock,
+                arfe: t.arfe,
+                value: t.value,
+                failed: t.failed,
+                is_reference: t.is_reference,
+            });
+        }
+        h
+    }
 }
 
 /// One stored evaluation.
 #[derive(Clone, Debug)]
 pub struct TrialRecord {
+    /// The evaluated configuration.
     pub config: SapConfig,
+    /// Mean wall-clock seconds over the repeats.
     pub wall_clock: f64,
+    /// Mean ARFE over the repeats.
     pub arfe: f64,
+    /// Objective value (wall-clock, inflated by the penalty on failure).
     pub value: f64,
+    /// Did ARFE exceed the allowance threshold?
     pub failed: bool,
+    /// Was this the ARFE_ref-defining reference evaluation?
     pub is_reference: bool,
 }
 
@@ -48,14 +78,17 @@ fn task_key(name: &str, m: usize, n: usize) -> String {
 }
 
 impl HistoryDb {
+    /// Empty database.
     pub fn new() -> HistoryDb {
         HistoryDb::default()
     }
 
+    /// Number of stored tasks.
     pub fn len(&self) -> usize {
         self.tasks.len()
     }
 
+    /// Is the database empty?
     pub fn is_empty(&self) -> bool {
         self.tasks.is_empty()
     }
@@ -82,12 +115,28 @@ impl HistoryDb {
         }
     }
 
+    /// Merge every task record of `other` into this DB, appending trials
+    /// for task keys present in both (the crowd-sourcing semantics of
+    /// [`HistoryDb::record`]). Used to fold per-cell campaign shards into
+    /// one merged database; since tasks are keyed in a sorted map, the
+    /// merged serialization is independent of merge order.
+    pub fn merge_from(&mut self, other: &HistoryDb) {
+        for rec in other.tasks.values() {
+            let key = task_key(&rec.task_name, rec.m, rec.n);
+            self.tasks
+                .entry(key)
+                .and_modify(|e| e.trials.extend(rec.trials.iter().cloned()))
+                .or_insert_with(|| rec.clone());
+        }
+    }
+
     /// All records for tasks with the given name (any shape), e.g. every
     /// stored "GA" run.
     pub fn tasks_named(&self, name: &str) -> Vec<&TaskRecord> {
         self.tasks.values().filter(|t| t.task_name == name).collect()
     }
 
+    /// Every stored task record (sorted by task key).
     pub fn all_tasks(&self) -> Vec<&TaskRecord> {
         self.tasks.values().collect()
     }
@@ -117,6 +166,7 @@ impl HistoryDb {
 
     // ---- persistence ----
 
+    /// Serialize to the `ranntune-db-v1` JSON document.
     pub fn to_json(&self) -> Json {
         let tasks: Vec<Json> = self
             .tasks
@@ -139,6 +189,7 @@ impl HistoryDb {
         ])
     }
 
+    /// Parse a `ranntune-db-v1` document.
     pub fn from_json(v: &Json) -> Result<HistoryDb, String> {
         let mut db = HistoryDb::new();
         let tasks = v
@@ -164,6 +215,7 @@ impl HistoryDb {
         Ok(db)
     }
 
+    /// Pretty-print to `path`, creating parent directories as needed.
     pub fn save(&self, path: &Path) -> std::io::Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
@@ -171,6 +223,7 @@ impl HistoryDb {
         std::fs::write(path, self.to_json().to_string_pretty())
     }
 
+    /// Load a database file.
     pub fn load(path: &Path) -> Result<HistoryDb, String> {
         let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
         HistoryDb::from_json(&Json::parse(&text)?)
@@ -299,6 +352,29 @@ mod tests {
         db.record("GA", 1000, 50, &fake_history(3));
         assert_eq!(db.len(), 1);
         assert_eq!(db.source_samples("GA", 1000, 50).len(), 5);
+    }
+
+    #[test]
+    fn merge_from_appends_and_round_trips_history() {
+        let mut a = HistoryDb::new();
+        a.record("GA", 100, 10, &fake_history(2));
+        let mut b = HistoryDb::new();
+        b.record("GA", 100, 10, &fake_history(3));
+        b.record("T1", 100, 10, &fake_history(1));
+        a.merge_from(&b);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a.source_samples("GA", 100, 10).len(), 5);
+        // to_history inverts record.
+        let h = fake_history(4);
+        let mut db = HistoryDb::new();
+        db.record("X", 50, 5, &h);
+        let back = db.tasks_named("X")[0].to_history();
+        assert_eq!(back.len(), h.len());
+        for (x, y) in back.trials().iter().zip(h.trials()) {
+            assert_eq!(x.config, y.config);
+            assert_eq!(x.value.to_bits(), y.value.to_bits());
+            assert_eq!(x.is_reference, y.is_reference);
+        }
     }
 
     #[test]

@@ -16,6 +16,7 @@ pub struct ArdKernel {
 }
 
 impl ArdKernel {
+    /// Kernel from explicit hyperparameters (all must be positive).
     pub fn new(sigma_f2: f64, lengthscales: Vec<f64>) -> ArdKernel {
         assert!(sigma_f2 > 0.0);
         assert!(lengthscales.iter().all(|&l| l > 0.0));
@@ -27,6 +28,7 @@ impl ArdKernel {
         ArdKernel::new(sigma_f2, vec![l; dims])
     }
 
+    /// Input dimensionality β.
     pub fn dims(&self) -> usize {
         self.lengthscales.len()
     }

@@ -98,10 +98,12 @@ impl GpModel {
         &self.kernel
     }
 
+    /// Fitted observation-noise variance σ_n².
     pub fn noise(&self) -> f64 {
         self.noise
     }
 
+    /// Number of training observations.
     pub fn training_size(&self) -> usize {
         self.xs.len()
     }

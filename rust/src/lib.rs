@@ -6,8 +6,9 @@
 //! plus the full autotuning pipeline the paper builds around them —
 //! Gaussian-process Bayesian optimization, TPE, LHSMDU random search, grid
 //! search, a UCB-bandit + LCM transfer-learning tuner, ARFE-based output
-//! validation with penalty handling, a shareable history database, and
-//! Sobol sensitivity analysis.
+//! validation with penalty handling, a shareable history database, Sobol
+//! sensitivity analysis, and a resumable multi-problem [`campaign`] layer
+//! that sweeps problem suites across the whole tuner set.
 //!
 //! ## Layering
 //!
@@ -24,7 +25,10 @@
 //!   engine needs the off-by-default `pjrt` cargo feature; without it the
 //!   core crate is pure-std and the engine is a graceful stub.
 
+#![deny(missing_docs)]
+
 pub mod bench_harness;
+pub mod campaign;
 pub mod cli;
 pub mod data;
 pub mod db;

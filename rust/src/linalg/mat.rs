@@ -55,16 +55,19 @@ impl Mat {
     }
 
     #[inline]
+    /// Number of rows.
     pub fn rows(&self) -> usize {
         self.rows
     }
 
     #[inline]
+    /// Number of columns.
     pub fn cols(&self) -> usize {
         self.cols
     }
 
     #[inline]
+    /// (rows, cols).
     pub fn shape(&self) -> (usize, usize) {
         (self.rows, self.cols)
     }
@@ -96,6 +99,7 @@ impl Mat {
     }
 
     #[inline]
+    /// Mutable row-major backing slice.
     pub fn as_mut_slice(&mut self) -> &mut [f64] {
         &mut self.data
     }

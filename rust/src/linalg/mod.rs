@@ -4,16 +4,20 @@
 //! the needed kernels ourselves:
 //!
 //! * [`Mat`] — row-major dense matrix with slicing helpers.
-//! * [`gemm`] — blocked, multi-threaded matrix multiply (plus `gemv`,
-//!   `gemv_t`), the workhorse behind sketching, preconditioning, and GP fits.
-//! * [`qr`] — Householder QR (thin), used for the QR-LSQR preconditioner,
-//!   the direct reference solver, and coherence computation.
-//! * [`svd`] — one-sided Jacobi SVD (thin), used for the SVD-based
+//! * [`gemm()`] — blocked, multi-threaded matrix multiply (plus
+//!   [`gemv`], [`gemv_t`]), the workhorse behind sketching,
+//!   preconditioning, and GP fits.
+//! * [`qr_thin`] — Householder QR (thin), used for the QR-LSQR
+//!   preconditioner, the direct reference solver ([`lstsq_qr`]), and
+//!   coherence computation.
+//! * [`svd_thin`] — one-sided Jacobi SVD (thin), used for the SVD-based
 //!   preconditioners and condition numbers. Jacobi is chosen for its
 //!   simplicity and high relative accuracy; our sketches are small
 //!   (d×n with d ≈ a few·n), where Jacobi is perfectly adequate.
-//! * [`chol`] — Cholesky with jitter, for GP/LCM covariance solves.
-//! * [`solve`] — triangular solves (vector and multiple-RHS).
+//! * [`cholesky_jittered`] — Cholesky with jitter, for GP/LCM covariance
+//!   solves.
+//! * [`solve_upper`]/[`solve_lower`] — triangular solves (vector and
+//!   multiple-RHS variants).
 
 mod chol;
 mod gemm;

@@ -10,7 +10,9 @@ use super::{dot, norm2, Mat};
 /// Thin QR of an m×n matrix with m ≥ n: A = Q·R with Q m×n column-
 /// orthonormal and R n×n upper-triangular (non-negative diagonal).
 pub struct QrFactors {
+    /// Column-orthonormal m×n factor Q.
     pub q: Mat,
+    /// Upper-triangular n×n factor R (non-negative diagonal).
     pub r: Mat,
 }
 

@@ -11,8 +11,11 @@ use super::{dot, norm2, Mat};
 
 /// Thin SVD A = U·diag(s)·Vᵀ with U m×n, s descending, V n×n.
 pub struct SvdFactors {
+    /// Left singular vectors (m×n, column-orthonormal).
     pub u: Mat,
+    /// Singular values, descending.
     pub s: Vec<f64>,
+    /// Right singular vectors (n×n).
     pub v: Mat,
 }
 

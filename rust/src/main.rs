@@ -4,10 +4,13 @@
 //! database, the figure/bench drivers, and the PJRT deploy path. See
 //! `ranntune help` (or [`ranntune::cli::USAGE`]) for the command set.
 
+use ranntune::campaign::{Campaign, CampaignSpec, TunerKind};
 use ranntune::cli::{figures, make_problem, Args, USAGE};
 use ranntune::data::{coherence, condition_number};
 use ranntune::db::HistoryDb;
-use ranntune::objective::{Constants, Objective, ParallelEvaluator, ParamSpace, TuningTask};
+use ranntune::objective::{
+    Constants, Objective, ParallelEvaluator, ParamSpace, TimingMode, TuningTask,
+};
 use ranntune::rng::Rng;
 use ranntune::runtime::{default_artifacts_dir, SapEngine};
 use ranntune::sensitivity::{analyze_trials, PARAM_NAMES};
@@ -20,6 +23,7 @@ fn main() {
     let args = Args::parse(&argv);
     let code = match args.command.as_str() {
         "tune" => cmd_tune(&args),
+        "campaign" => cmd_campaign(&args),
         "grid" => cmd_grid(&args),
         "sensitivity" => cmd_sensitivity(&args),
         "deploy" => cmd_deploy(&args),
@@ -142,6 +146,103 @@ fn cmd_tune(args: &Args) -> i32 {
         }
         println!("recorded {} trials into {db_path}", history.len());
     }
+    0
+}
+
+fn cmd_campaign(args: &Args) -> i32 {
+    let suite_name = args.get("suite").unwrap_or("smoke");
+    let Some(mut suite) = ranntune::data::builtin_suite(suite_name) else {
+        eprintln!(
+            "unknown suite {suite_name:?}; expected one of {:?}",
+            ranntune::data::SUITE_NAMES
+        );
+        return 2;
+    };
+    let shrink = args.get_usize("shrink", 1);
+    if shrink > 1 {
+        suite = suite.iter().map(|s| s.shrunk(shrink)).collect();
+    }
+    let tuner_names = args.get("tuners").unwrap_or("lhsmdu,tpe,gptune");
+    let mut tuners = Vec::new();
+    for name in tuner_names.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        match TunerKind::parse(name) {
+            Some(t) => tuners.push(t),
+            None => {
+                eprintln!("unknown tuner {name:?} in --tuners");
+                return 2;
+            }
+        }
+    }
+    if tuners.is_empty() {
+        eprintln!("--tuners produced an empty tuner set");
+        return 2;
+    }
+
+    let mut spec = CampaignSpec::new(suite_name, suite, tuners, args.get_usize("budget", 16));
+    spec.num_repeats = args.get_usize("repeats", 3);
+    spec.seed = args.get_u64("seed", 0);
+    spec.source_samples = args.get_usize("source-samples", 30);
+    spec.eval_threads = args.get_usize("eval-threads", 1);
+    spec.cell_workers = args.get_usize("cell-workers", 1);
+    if args.has("modeled-time") {
+        spec.timing = TimingMode::Modeled;
+    }
+    if args.has("max-cells") {
+        spec.max_cells = Some(args.get_usize("max-cells", 1));
+    }
+
+    let out = PathBuf::from(args.get("out").unwrap_or("results/campaign"));
+    let campaign = Campaign::new(spec, &out);
+    let n_cells = campaign.spec.cells().len();
+    println!(
+        "campaign {suite_name}: {} problems x {} tuners = {n_cells} cells, budget {} \
+         (repeats {}, {:?} timing)",
+        campaign.spec.suite.len(),
+        campaign.spec.tuners.len(),
+        campaign.spec.budget,
+        campaign.spec.num_repeats,
+        campaign.spec.timing,
+    );
+    let outcome = match campaign.run() {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("campaign failed: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "completed {} cell(s) now, {} restored from checkpoint",
+        outcome.completed_now, outcome.skipped
+    );
+    if !outcome.finished {
+        println!(
+            "campaign paused at {}/{} cells (rerun the same command to resume)",
+            outcome.results.len(),
+            n_cells
+        );
+        return 0;
+    }
+    match ranntune::campaign::write_report(&campaign.spec, &outcome.results, &out) {
+        Ok(report) => {
+            println!("\n{}", report.summary_md);
+            if !report.warnings.is_empty() {
+                println!(
+                    "note: {} tuner proposal(s) had vec_nnz silently clamped by the \
+                     sketch constructor — see campaign_clamp_warnings.csv",
+                    report.warnings.len()
+                );
+            }
+        }
+        Err(e) => {
+            eprintln!("report generation failed: {e}");
+            return 1;
+        }
+    }
+    println!(
+        "merged database: {}\nartifacts written to {}",
+        outcome.merged_db_path.display(),
+        out.display()
+    );
     0
 }
 

@@ -7,6 +7,7 @@ use crate::sap::SapConfig;
 /// One function evaluation of the objective.
 #[derive(Clone, Debug)]
 pub struct Trial {
+    /// The evaluated configuration.
     pub config: SapConfig,
     /// Mean wall-clock seconds over num_repeats solver runs.
     pub wall_clock: f64,
@@ -28,22 +29,27 @@ pub struct History {
 }
 
 impl History {
+    /// Empty history.
     pub fn new() -> History {
         History { trials: Vec::new() }
     }
 
+    /// Append an evaluation record.
     pub fn push(&mut self, t: Trial) {
         self.trials.push(t);
     }
 
+    /// All trials, in evaluation order.
     pub fn trials(&self) -> &[Trial] {
         &self.trials
     }
 
+    /// Number of recorded trials.
     pub fn len(&self) -> usize {
         self.trials.len()
     }
 
+    /// Is the history empty?
     pub fn is_empty(&self) -> bool {
         self.trials.is_empty()
     }

@@ -44,6 +44,10 @@ pub struct Constants {
     pub penalty_factor: f64,
     /// Failure threshold: ARFE > allowance_factor × ARFE_ref ⇒ failure.
     pub allowance_factor: f64,
+    /// How the per-evaluation "wall clock" is obtained: measured (the
+    /// paper's objective, the default) or replaced by the deterministic
+    /// flop-count model of [`modeled_secs`] — see [`TimingMode`].
+    pub timing: TimingMode,
 }
 
 impl Default for Constants {
@@ -55,6 +59,7 @@ impl Default for Constants {
             ref_config: SapConfig::reference(),
             penalty_factor: 2.0,
             allowance_factor: 10.0,
+            timing: TimingMode::Measured,
         }
     }
 }
@@ -62,8 +67,11 @@ impl Default for Constants {
 /// A tuning task: the input problem (task parameters m, n) plus the search
 /// space and constants.
 pub struct TuningTask {
+    /// The input least-squares problem (task parameters m, n).
     pub problem: Problem,
+    /// The search space the tuners explore.
     pub space: ParamSpace,
+    /// Pipeline constants (Table 4).
     pub constants: Constants,
 }
 
@@ -79,6 +87,7 @@ impl TuningTask {
 /// Measurement execution is delegated to an [`Evaluator`] (serial by
 /// default; see [`ParallelEvaluator`] and the CLI's `--eval-threads`).
 pub struct Objective {
+    /// The task under tuning (tuners read the space through this).
     pub task: TuningTask,
     /// Direct (QR) least-squares solution — the x* in ARFE.
     x_star: Vec<f64>,
@@ -137,10 +146,12 @@ impl Objective {
         self.arfe_ref
     }
 
+    /// The accumulated evaluation record.
     pub fn history(&self) -> &History {
         &self.history
     }
 
+    /// Number of evaluations so far.
     pub fn evaluations(&self) -> usize {
         self.history.len()
     }
@@ -168,6 +179,34 @@ impl Objective {
     /// in submission order, so histories are identical across evaluators
     /// up to wall-clock measurement noise. Requires the reference to have
     /// been evaluated.
+    ///
+    /// ```
+    /// use ranntune::data::{generate_synthetic, SyntheticKind};
+    /// use ranntune::objective::{Constants, Objective, ParamSpace, TuningTask};
+    /// use ranntune::rng::Rng;
+    /// use ranntune::sap::SapConfig;
+    ///
+    /// let mut rng = Rng::new(1);
+    /// let problem = generate_synthetic(SyntheticKind::GA, 250, 12, &mut rng);
+    /// let task = TuningTask {
+    ///     problem,
+    ///     space: ParamSpace::paper(),
+    ///     constants: Constants { num_repeats: 1, ..Constants::default() },
+    /// };
+    /// let mut obj = Objective::new(task, 0);
+    /// obj.evaluate_reference(); // establishes ARFE_ref first (Figure 3)
+    ///
+    /// // Ask: queue a batch of configurations ...
+    /// let cfgs = [
+    ///     SapConfig { sampling_factor: 3.0, ..SapConfig::reference() },
+    ///     SapConfig { sampling_factor: 6.0, ..SapConfig::reference() },
+    /// ];
+    /// // ... tell: measured trials come back in submission order.
+    /// let trials = obj.evaluate_batch(&cfgs);
+    /// assert_eq!(trials.len(), 2);
+    /// assert_eq!(obj.evaluations(), 3);
+    /// assert!(trials.iter().all(|t| t.wall_clock > 0.0));
+    /// ```
     pub fn evaluate_batch(&mut self, cfgs: &[SapConfig]) -> Vec<Trial> {
         assert!(
             self.arfe_ref.is_some(),

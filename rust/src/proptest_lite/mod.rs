@@ -20,15 +20,19 @@ use crate::rng::Rng;
 /// Property-run configuration.
 #[derive(Clone, Debug)]
 pub struct Config {
+    /// Number of independent cases to run.
     pub cases: usize,
+    /// Root seed; each case forks its own child generator.
     pub seed: u64,
 }
 
 impl Config {
+    /// Config with `n` cases and the default seed.
     pub fn cases(n: usize) -> Config {
         Config { cases: n, seed: 0x9e3779b97f4a7c15 }
     }
 
+    /// Same config with a different root seed.
     pub fn with_seed(mut self, seed: u64) -> Config {
         self.seed = seed;
         self

@@ -15,6 +15,7 @@ use std::path::Path;
 /// A compiled SAP executable on the PJRT CPU client.
 pub struct SapEngine {
     exe: xla::PjRtLoadedExecutable,
+    /// Variant metadata from the artifact manifest.
     pub meta: VariantMeta,
 }
 

@@ -12,6 +12,7 @@ use std::path::Path;
 
 /// Placeholder for the PJRT-compiled SAP executable.
 pub struct SapEngine {
+    /// Variant metadata from the artifact manifest.
     pub meta: VariantMeta,
 }
 

@@ -39,6 +39,7 @@ use std::path::{Path, PathBuf};
 pub struct RuntimeError(String);
 
 impl RuntimeError {
+    /// Error with the given message.
     pub fn new(msg: impl Into<String>) -> RuntimeError {
         RuntimeError(msg.into())
     }
@@ -58,19 +59,28 @@ pub type RtResult<T> = Result<T, RuntimeError>;
 /// Metadata of one AOT variant, mirrored from the manifest.
 #[derive(Clone, Debug)]
 pub struct VariantMeta {
+    /// Variant name, e.g. `sap_small`.
     pub name: String,
+    /// HLO artifact filename inside the artifacts directory.
     pub file: String,
+    /// Maximum problem rows the artifact accepts.
     pub m: usize,
+    /// Maximum problem columns the artifact accepts.
     pub n: usize,
+    /// Sketch dimension baked into the artifact.
     pub d: usize,
+    /// Per-row non-zeros of the baked LESS row plan.
     pub k: usize,
+    /// LSQR iteration count baked into the artifact.
     pub iters: usize,
 }
 
 /// Parsed `artifacts/manifest.json`.
 #[derive(Debug)]
 pub struct ArtifactManifest {
+    /// Directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Every variant the manifest lists.
     pub variants: Vec<VariantMeta>,
 }
 
@@ -114,6 +124,7 @@ impl ArtifactManifest {
         Ok(ArtifactManifest { dir: dir.to_path_buf(), variants })
     }
 
+    /// Look up a variant by name.
     pub fn find(&self, name: &str) -> Option<&VariantMeta> {
         self.variants.iter().find(|v| v.name == name)
     }

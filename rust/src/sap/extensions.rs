@@ -23,10 +23,13 @@ use crate::sap::Preconditioner;
 
 /// Result of an extension-solver run.
 pub struct ExtensionResult {
+    /// Solution in the original space, x = M·z.
     pub x: Vec<f64>,
+    /// Inner iterations performed.
     pub iterations: usize,
     /// Final value of criterion (3.2) with ‖AM‖_EF = √n.
     pub termination_value: f64,
+    /// Did criterion (3.2) trigger before the iteration limit?
     pub converged: bool,
 }
 

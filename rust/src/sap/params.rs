@@ -15,9 +15,11 @@ pub enum SapAlgorithm {
 }
 
 impl SapAlgorithm {
+    /// All three algorithms, in Table 1 order.
     pub const ALL: [SapAlgorithm; 3] =
         [SapAlgorithm::QrLsqr, SapAlgorithm::SvdLsqr, SapAlgorithm::SvdPgd];
 
+    /// Display name used in figures and the CLI.
     pub fn name(&self) -> &'static str {
         match self {
             SapAlgorithm::QrLsqr => "QR-LSQR",
@@ -26,6 +28,7 @@ impl SapAlgorithm {
         }
     }
 
+    /// Parse a CLI name (aliases: `blendenpik`, `lsrn`, `newtonsketch`).
     pub fn parse(s: &str) -> Option<SapAlgorithm> {
         match s.to_ascii_lowercase().replace('_', "-").as_str() {
             "qr-lsqr" | "qrlsqr" | "blendenpik" => Some(SapAlgorithm::QrLsqr),

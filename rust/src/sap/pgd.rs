@@ -23,9 +23,11 @@ use crate::sap::Preconditioner;
 pub struct PgdResult {
     /// Solution in the original space, x = M·z.
     pub x: Vec<f64>,
+    /// Gradient steps performed.
     pub iterations: usize,
     /// Final value of the termination quantity (3.2).
     pub termination_value: f64,
+    /// Did criterion (3.2) trigger before the iteration limit?
     pub converged: bool,
 }
 

@@ -39,7 +39,9 @@ pub struct SapStats {
 
 /// Result of one SAP solve: the approximate solution and its stats.
 pub struct SapSolution {
+    /// The approximate least-squares solution (length n).
     pub x: Vec<f64>,
+    /// Timing breakdown and solver diagnostics.
     pub stats: SapStats,
 }
 
@@ -47,6 +49,22 @@ pub struct SapSolution {
 ///
 /// Randomness (operator sampling) is drawn from `rng`, so repeated calls
 /// with forked generators reproduce the paper's `num_repeats` protocol.
+///
+/// ```
+/// use ranntune::linalg::{lstsq_qr, Mat};
+/// use ranntune::rng::Rng;
+/// use ranntune::sap::{arfe, solve_sap, SapConfig};
+///
+/// let mut rng = Rng::new(1);
+/// let a = Mat::from_fn(300, 10, |_, _| rng.normal());
+/// let b: Vec<f64> = (0..300).map(|_| rng.normal()).collect();
+///
+/// let sol = solve_sap(&a, &b, &SapConfig::reference(), &mut Rng::new(7));
+/// assert!(sol.stats.converged);
+/// // The randomized solve matches the direct QR solution to high accuracy.
+/// let x_star = lstsq_qr(&a, &b);
+/// assert!(arfe(&a, &b, &sol.x, &x_star) < 1e-3);
+/// ```
 pub fn solve_sap(a: &Mat, b: &[f64], cfg: &SapConfig, rng: &mut Rng) -> SapSolution {
     let (m, n) = a.shape();
     assert_eq!(b.len(), m);

@@ -38,6 +38,7 @@ pub struct SobolIndex {
 /// safety_factor] (the Table 5 columns).
 #[derive(Clone, Debug)]
 pub struct SensitivityResult {
+    /// One index pair per tuning parameter (Table 5 order).
     pub indices: Vec<SobolIndex>,
     /// Output variance of the surrogate over the design.
     pub variance: f64,

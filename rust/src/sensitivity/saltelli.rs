@@ -10,7 +10,9 @@ use super::SobolSeq;
 
 /// The Saltelli design matrices.
 pub struct SaltelliDesign {
+    /// Base matrix A (N×d points in [0,1]^d).
     pub a: Vec<Vec<f64>>,
+    /// Resample matrix B (independent N×d points).
     pub b: Vec<Vec<f64>>,
     /// ab[i] = A with column i replaced by B's column i.
     pub ab: Vec<Vec<Vec<f64>>>,

@@ -42,6 +42,7 @@ impl LessUniform {
         LessUniform { d, m, k, cols, vals }
     }
 
+    /// Effective per-row sparsity after clamping.
     pub fn k(&self) -> usize {
         self.k
     }

@@ -37,13 +37,17 @@ use crate::rng::Rng;
 /// `sketching_operator` tuning parameter.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum SketchKind {
+    /// Sparse Johnson–Lindenstrauss Transform (column-sparse).
     Sjlt,
+    /// Data-oblivious LESS embedding (row-sparse).
     LessUniform,
 }
 
 impl SketchKind {
+    /// Both kinds, in Table 2 order.
     pub const ALL: [SketchKind; 2] = [SketchKind::Sjlt, SketchKind::LessUniform];
 
+    /// Display name used in figures and the CLI.
     pub fn name(&self) -> &'static str {
         match self {
             SketchKind::Sjlt => "SJLT",
@@ -51,6 +55,7 @@ impl SketchKind {
         }
     }
 
+    /// Parse a CLI name (case-insensitive; `less` is accepted).
     pub fn parse(s: &str) -> Option<SketchKind> {
         match s.to_ascii_lowercase().as_str() {
             "sjlt" => Some(SketchKind::Sjlt),
@@ -70,6 +75,23 @@ pub trait SketchOp: Send + Sync {
     fn nnz(&self) -> usize;
     /// Â = S·A where A is m×n. Must equal the dense product exactly
     /// (modulo float associativity).
+    ///
+    /// ```
+    /// use ranntune::linalg::Mat;
+    /// use ranntune::rng::Rng;
+    /// use ranntune::sketch::{make_sketch, SketchKind, SketchOp};
+    ///
+    /// let mut rng = Rng::new(7);
+    /// let a = Mat::from_fn(60, 8, |_, _| rng.normal());
+    /// let s = make_sketch(SketchKind::Sjlt, 24, 60, 4, &mut rng);
+    /// let sketched = s.apply(&a);
+    /// assert_eq!(sketched.shape(), (24, 8));
+    /// // The sparse apply equals the materialized dense product.
+    /// let dense = ranntune::linalg::gemm(&s.to_dense(), &a);
+    /// let mut diff = sketched.clone();
+    /// diff.axpy(-1.0, &dense);
+    /// assert!(diff.max_abs() < 1e-12);
+    /// ```
     fn apply(&self, a: &Mat) -> Mat;
     /// S·b for a vector b of length m.
     fn apply_vec(&self, b: &[f64]) -> Vec<f64>;
@@ -77,11 +99,29 @@ pub trait SketchOp: Send + Sync {
     fn to_dense(&self) -> Mat;
 }
 
+/// The effective per-vector sparsity a `(kind, d, m)` operator will use
+/// for a requested `vec_nnz` — i.e. the clamp that [`Sjlt::sample`] /
+/// [`LessUniform::sample`] apply silently.
+///
+/// SJLT draws `vec_nnz` distinct *row* indices per column, so at most `d`
+/// are available; LessUniform draws distinct *column* indices per row, so
+/// at most `m`. Both floor at 1. Tuners explore `vec_nnz` up to the
+/// space's bound (100 in the paper) regardless of the current problem's
+/// `d = ⌈sf·n⌉`, so requests above the limit are routine on narrow
+/// problems — the campaign report surfaces them as clamp warnings rather
+/// than failing the evaluation.
+pub fn effective_vec_nnz(kind: SketchKind, d: usize, m: usize, vec_nnz: usize) -> usize {
+    match kind {
+        SketchKind::Sjlt => vec_nnz.clamp(1, d),
+        SketchKind::LessUniform => vec_nnz.clamp(1, m),
+    }
+}
+
 /// Construct a sketching operator of the given kind.
 ///
 /// `vec_nnz` follows the paper's semantics: non-zeros **per column** for
 /// SJLT (clamped to d), non-zeros **per row** for LessUniform (clamped to
-/// m).
+/// m); [`effective_vec_nnz`] reports the post-clamp value.
 pub fn make_sketch(
     kind: SketchKind,
     d: usize,
@@ -130,6 +170,24 @@ mod tests {
             assert_eq!(SketchKind::parse(kind.name()), Some(kind));
         }
         assert_eq!(SketchKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn effective_vec_nnz_matches_sampled_operators() {
+        let mut rng = Rng::new(3);
+        for kind in SketchKind::ALL {
+            for &req in &[1usize, 7, 50, 1000] {
+                let eff = effective_vec_nnz(kind, 12, 40, req);
+                let op = make_sketch(kind, 12, 40, req, &mut rng);
+                let per_vec = match kind {
+                    SketchKind::Sjlt => op.nnz() / 40,
+                    SketchKind::LessUniform => op.nnz() / 12,
+                };
+                assert_eq!(eff, per_vec, "{kind:?} req={req}");
+            }
+        }
+        // Floor at 1.
+        assert_eq!(effective_vec_nnz(SketchKind::Sjlt, 12, 40, 0), 1);
     }
 
     #[test]

@@ -12,7 +12,9 @@ use super::{LessUniform, SketchOp, Sjlt};
 /// Padded row-gather plan, row-major (d×k) arrays, ready to feed PJRT.
 #[derive(Clone, Debug)]
 pub struct RowPlan {
+    /// Sketch rows.
     pub d: usize,
+    /// Padded non-zeros per row.
     pub k: usize,
     /// d·k row indices into A (i32 for the artifact interface).
     pub idx: Vec<i32>,

@@ -23,7 +23,17 @@ pub struct Sjlt {
 }
 
 impl Sjlt {
-    /// Sample an SJLT. `vec_nnz` is clamped into [1, d].
+    /// Sample an SJLT.
+    ///
+    /// `vec_nnz` is **silently clamped into [1, d]**: a column has only
+    /// `d` distinct row slots, so requesting more non-zeros than rows
+    /// cannot be honoured (at `vec_nnz ≥ d` the operator is a dense
+    /// scaled sign matrix and extra budget changes nothing). Tuners
+    /// routinely propose such values on narrow problems because the
+    /// search space bounds `vec_nnz` at 100 independent of `d`; use
+    /// [`super::effective_vec_nnz`] to detect the clamp (the campaign
+    /// report emits a warning per clamped proposal), and [`Sjlt::k`] to
+    /// read the realized sparsity of a sampled operator.
     pub fn sample(d: usize, m: usize, vec_nnz: usize, rng: &mut Rng) -> Sjlt {
         assert!(d > 0 && m > 0);
         let k = vec_nnz.clamp(1, d);

@@ -37,6 +37,8 @@ pub struct Srht {
 }
 
 impl Srht {
+    /// Sample an SRHT: a random ±1 diagonal plus `d` sampled rows of
+    /// the (power-of-two padded) Hadamard transform.
     pub fn sample(d: usize, m: usize, rng: &mut Rng) -> Srht {
         assert!(d > 0 && m > 0);
         let m_pad = m.next_power_of_two();
@@ -134,6 +136,7 @@ pub struct GaussianSketch {
 }
 
 impl GaussianSketch {
+    /// Sample a dense d×m operator with iid N(0, 1/d) entries.
     pub fn sample(d: usize, m: usize, rng: &mut Rng) -> GaussianSketch {
         let scale = 1.0 / (d as f64).sqrt();
         GaussianSketch { mat: Mat::from_fn(d, m, |_, _| scale * rng.normal()) }

@@ -13,6 +13,7 @@ use crate::gp::{propose_ei, GpModel};
 use crate::objective::{History, Objective, DIMS};
 use crate::rng::Rng;
 
+/// The GP Bayesian-optimization tuner (paper label "GPTune").
 pub struct GpBoTuner {
     num_pilots: usize,
     /// Nelder–Mead restarts per GP fit.
@@ -20,6 +21,7 @@ pub struct GpBoTuner {
 }
 
 impl GpBoTuner {
+    /// Tuner with `num_pilots` random samples before the surrogate loop.
     pub fn new(num_pilots: usize) -> GpBoTuner {
         GpBoTuner { num_pilots, fit_starts: 3 }
     }

@@ -30,10 +30,12 @@ impl GridTuner {
         GridTuner { grid: paper_grid() }
     }
 
+    /// Number of configurations in the explicit grid.
     pub fn len(&self) -> usize {
         self.grid.len()
     }
 
+    /// Is the explicit grid empty (the paper grid is the fallback)?
     pub fn is_empty(&self) -> bool {
         self.grid.is_empty()
     }

@@ -76,6 +76,7 @@ pub struct LhsmduTuner;
 
 impl LhsmduTuner {
     #[allow(clippy::new_without_default)]
+    /// Construct the (stateless) tuner.
     pub fn new() -> LhsmduTuner {
         LhsmduTuner
     }

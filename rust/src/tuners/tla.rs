@@ -23,6 +23,7 @@ use crate::sap::SapConfig;
 /// or a prior tuning run on a smaller matrix).
 #[derive(Clone, Debug)]
 pub struct SourceSample {
+    /// The sampled configuration.
     pub config: SapConfig,
     /// Objective value on the source task (penalized wall-clock seconds).
     pub value: f64,
@@ -53,6 +54,7 @@ pub enum TlaMode {
     OriginalLcm,
 }
 
+/// The transfer-learning tuner (Algorithm 4.1), generic over [`TlaMode`].
 pub struct TlaTuner {
     mode: TlaMode,
     source: Vec<SourceSample>,
@@ -66,6 +68,7 @@ impl TlaTuner {
         TlaTuner::with_mode(source, TlaMode::Hybrid { c: 4.0 })
     }
 
+    /// TLA with an explicit search mode (Figure 7's variants).
     pub fn with_mode(source: Vec<SourceSample>, mode: TlaMode) -> TlaTuner {
         TlaTuner { mode, source, q_latent: 2 }
     }

@@ -17,6 +17,7 @@ const GAMMA: f64 = 0.25;
 /// Candidates drawn from l(x) per iteration (hyperopt's n_EI_candidates).
 const N_CANDIDATES: usize = 24;
 
+/// The TPE tuner (hyperopt-style Parzen surrogate).
 pub struct TpeTuner {
     n_startup: usize,
 }

@@ -23,6 +23,7 @@ pub struct UcbBandit {
 }
 
 impl UcbBandit {
+    /// Fresh bandit with exploration constant `c`.
     pub fn new(c: f64) -> UcbBandit {
         UcbBandit { c, reward_sum: [0.0; N_CATEGORIES], count: [0; N_CATEGORIES] }
     }
@@ -39,6 +40,7 @@ impl UcbBandit {
         self.count.iter().sum()
     }
 
+    /// Observation count N_t(cat).
     pub fn count(&self, category: usize) -> usize {
         self.count[category]
     }

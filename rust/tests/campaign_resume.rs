@@ -1,0 +1,103 @@
+//! Campaign checkpoint/resume contract: a campaign interrupted after any
+//! prefix of its cells and then resumed must produce a merged HistoryDb
+//! **byte-identical** to an uninterrupted run (under deterministic modeled
+//! timing — measured wall-clock is inherently non-reproducible).
+
+use ranntune::campaign::{Campaign, CampaignSpec, TunerKind};
+use ranntune::data::{builtin_suite, ProblemSpec};
+use ranntune::db::HistoryDb;
+use ranntune::objective::TimingMode;
+use std::path::PathBuf;
+
+fn spec(eval_threads: usize) -> CampaignSpec {
+    let suite: Vec<ProblemSpec> =
+        builtin_suite("smoke").unwrap().iter().map(|s| s.shrunk(2)).collect();
+    let mut spec = CampaignSpec::new(
+        "resume-contract",
+        suite,
+        vec![TunerKind::Lhsmdu, TunerKind::Tpe, TunerKind::GpTune],
+        6,
+    );
+    spec.num_repeats = 1;
+    spec.seed = 42;
+    spec.timing = TimingMode::Modeled;
+    spec.eval_threads = eval_threads;
+    spec
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("ranntune_resume_{}_{}", tag, std::process::id()))
+}
+
+#[test]
+fn killed_and_resumed_campaign_merges_bit_identically() {
+    let dir_full = tmp("uninterrupted");
+    let dir_killed = tmp("killed");
+    let _ = std::fs::remove_dir_all(&dir_full);
+    let _ = std::fs::remove_dir_all(&dir_killed);
+
+    // Uninterrupted reference run.
+    let full = Campaign::new(spec(1), &dir_full).run().unwrap();
+    assert!(full.finished);
+    let reference_bytes = std::fs::read(&full.merged_db_path).unwrap();
+
+    // "Kill" after 2 cells, then again after 3 more, then finish. Each
+    // invocation is a fresh Campaign value, as it would be after a real
+    // process kill; only the out-dir carries state across them.
+    let mut killed = spec(1);
+    killed.max_cells = Some(2);
+    let first = Campaign::new(killed.clone(), &dir_killed).run().unwrap();
+    assert!(!first.finished);
+    assert_eq!(first.completed_now, 2);
+    assert!(dir_killed.join("checkpoint.json").exists());
+    assert!(!dir_killed.join("merged.json").exists());
+
+    killed.max_cells = Some(3);
+    let second = Campaign::new(killed.clone(), &dir_killed).run().unwrap();
+    assert!(!second.finished);
+    assert_eq!(second.skipped, 2);
+    assert_eq!(second.completed_now, 3);
+
+    killed.max_cells = None;
+    let last = Campaign::new(killed, &dir_killed).run().unwrap();
+    assert!(last.finished);
+    assert_eq!(last.skipped, 5);
+    assert_eq!(last.completed_now, 4);
+    assert!(last.results.iter().filter(|r| r.from_checkpoint).count() == 5);
+
+    let resumed_bytes = std::fs::read(&last.merged_db_path).unwrap();
+    assert_eq!(
+        reference_bytes, resumed_bytes,
+        "resumed merged DB differs from uninterrupted run"
+    );
+
+    // The merged DB is well-formed and holds one task per cell.
+    let merged = HistoryDb::from_json(
+        &ranntune::json::Json::parse(std::str::from_utf8(&resumed_bytes).unwrap()).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(merged.len(), 9);
+
+    std::fs::remove_dir_all(&dir_full).ok();
+    std::fs::remove_dir_all(&dir_killed).ok();
+}
+
+#[test]
+fn eval_thread_count_does_not_change_modeled_results() {
+    // The within-cell parallel evaluator must not alter any recorded
+    // number under modeled timing — the campaign-level statement of the
+    // serial/parallel bit-identity contract of tests/evaluator_parallel.rs.
+    let dir_serial = tmp("serial");
+    let dir_par = tmp("parallel");
+    let _ = std::fs::remove_dir_all(&dir_serial);
+    let _ = std::fs::remove_dir_all(&dir_par);
+
+    let a = Campaign::new(spec(1), &dir_serial).run().unwrap();
+    let b = Campaign::new(spec(4), &dir_par).run().unwrap();
+    let bytes_a = std::fs::read(&a.merged_db_path).unwrap();
+    let bytes_b = std::fs::read(&b.merged_db_path).unwrap();
+    assert_eq!(bytes_a, bytes_b, "--eval-threads changed modeled campaign results");
+
+    std::fs::remove_dir_all(&dir_serial).ok();
+    std::fs::remove_dir_all(&dir_par).ok();
+}
