@@ -2,6 +2,11 @@
 //! preconditioner factorizations, LSQR/PGD iterations, the full SAP solve,
 //! and GP fit/propose. These are the §Perf before/after numbers in
 //! EXPERIMENTS.md.
+//!
+//! The `cmp:` rows compare the persistent-pool kernels against scoped
+//! baselines that re-implement the pre-pool behaviour (a fresh
+//! `std::thread::scope` spawn/join per call) at identical flop counts —
+//! the delta is exactly the dispatch overhead the pool exists to delete.
 
 mod common;
 
@@ -143,6 +148,89 @@ fn main() {
         0.0,
     );
 
+    // --- pool-vs-scoped comparison ------------------------------------
+    let nt = ranntune::linalg::num_threads();
+
+    // Bare dispatch: fan nt trivial tasks out and join.
+    add(
+        &format!("cmp: dispatch pooled ({nt} tasks)"),
+        time_fn(10, 50, || {
+            ranntune::linalg::pool().run(nt, &|t| {
+                std::hint::black_box(t);
+            });
+        }),
+        0.0,
+    );
+    add(
+        &format!("cmp: dispatch scoped ({nt} tasks)"),
+        time_fn(10, 50, || {
+            std::thread::scope(|s| {
+                for t in 0..nt {
+                    s.spawn(move || {
+                        std::hint::black_box(t);
+                    });
+                }
+            });
+        }),
+        0.0,
+    );
+
+    // GEMM at roofline scale.
+    let gemm_flops = 2.0 * 256f64.powi(3);
+    add(
+        "cmp: gemm 256³ pooled",
+        time_fn(2, 10, || {
+            std::hint::black_box(gemm(&g1, &g2));
+        }),
+        gemm_flops,
+    );
+    add(
+        "cmp: gemm 256³ scoped",
+        time_fn(2, 10, || {
+            std::hint::black_box(gemm_scoped(&g1, &g2));
+        }),
+        gemm_flops,
+    );
+
+    // GEMV above the threading cutoff (fixed dims so the comparison is
+    // stable across RANNTUNE_BENCH_M/N smoke overrides).
+    let gv_a = Mat::from_fn(2048, 1024, |_, _| rng.normal());
+    let gv_x: Vec<f64> = (0..1024).map(|_| rng.normal()).collect();
+    let gv_flops = 2.0 * (2048 * 1024) as f64;
+    add(
+        "cmp: gemv 2048×1024 pooled",
+        time_fn(2, 10, || {
+            std::hint::black_box(ranntune::linalg::gemv(&gv_a, &gv_x));
+        }),
+        gv_flops,
+    );
+    add(
+        "cmp: gemv 2048×1024 scoped",
+        time_fn(2, 10, || {
+            std::hint::black_box(gemv_scoped(&gv_a, &gv_x));
+        }),
+        gv_flops,
+    );
+
+    // Sketch apply at bench scale (SJLT, the band-partitioned operator).
+    let cmp_op = make_sketch(SketchKind::Sjlt, d, m, 8, &mut rng);
+    let cmp_nz = sketch_rows_nz(cmp_op.as_ref());
+    let sk_flops = 2.0 * cmp_op.nnz() as f64 * n as f64;
+    add(
+        "cmp: sketch_apply SJLT k=8 pooled",
+        time_fn(2, 8, || {
+            std::hint::black_box(cmp_op.apply(a));
+        }),
+        sk_flops,
+    );
+    add(
+        "cmp: sketch_apply SJLT k=8 scoped",
+        time_fn(2, 8, || {
+            std::hint::black_box(sketch_apply_scoped(&cmp_nz, a));
+        }),
+        sk_flops,
+    );
+
     let rows: Vec<Vec<String>> = raw
         .iter()
         .map(|(name, med, min, gflops)| {
@@ -188,4 +276,112 @@ fn main() {
     let dir = common::results_dir();
     let _ = std::fs::create_dir_all(&dir);
     let _ = std::fs::write(dir.join("BENCH_hotpath_micro.json"), snapshot.to_string_pretty());
+}
+
+// ---- scoped baselines (the pre-pool kernels, for the `cmp:` rows) ----
+
+/// C = A·B with a fresh `std::thread::scope` per call — the old gemm
+/// threading, kept here as the dispatch-overhead baseline.
+fn gemm_scoped(a: &Mat, b: &Mat) -> Mat {
+    let (m, _k) = a.shape();
+    let n = b.cols();
+    let mut c = Mat::zeros(m, n);
+    let nt = ranntune::linalg::num_threads().min(m.max(1));
+    let rows_per = m.div_ceil(nt);
+    let bands: Vec<(usize, &mut [f64])> =
+        c.as_mut_slice().chunks_mut(rows_per * n).enumerate().collect();
+    std::thread::scope(|s| {
+        for (t, band) in bands {
+            let lo = t * rows_per;
+            s.spawn(move || {
+                let hi = lo + band.len() / n;
+                gemm_rows_scoped(a, b, band, lo, hi);
+            });
+        }
+    });
+    c
+}
+
+fn gemm_rows_scoped(a: &Mat, b: &Mat, c_band: &mut [f64], row_lo: usize, row_hi: usize) {
+    let k = a.cols();
+    let n = b.cols();
+    const KB: usize = 256;
+    for kb in (0..k).step_by(KB) {
+        let kmax = (kb + KB).min(k);
+        for i in row_lo..row_hi {
+            let arow = a.row(i);
+            let crow = &mut c_band[(i - row_lo) * n..(i - row_lo + 1) * n];
+            for kk in kb..kmax {
+                let aik = arow[kk];
+                if aik == 0.0 {
+                    continue;
+                }
+                for (cj, bj) in crow.iter_mut().zip(b.row(kk).iter()) {
+                    *cj += aik * bj;
+                }
+            }
+        }
+    }
+}
+
+/// y = A·x with a fresh `std::thread::scope` per call.
+fn gemv_scoped(a: &Mat, x: &[f64]) -> Vec<f64> {
+    let m = a.rows();
+    let mut y = vec![0.0; m];
+    let nt = ranntune::linalg::num_threads();
+    let rows_per = m.div_ceil(nt);
+    let chunks: Vec<&mut [f64]> = y.chunks_mut(rows_per).collect();
+    std::thread::scope(|s| {
+        for (t, band) in chunks.into_iter().enumerate() {
+            let lo = t * rows_per;
+            s.spawn(move || {
+                for (r, yo) in band.iter_mut().enumerate() {
+                    *yo = ranntune::linalg::dot(a.row(lo + r), x);
+                }
+            });
+        }
+    });
+    y
+}
+
+/// Recover the per-output-row non-zeros of a sketching operator from its
+/// dense form, so the scoped baseline applies the *same* sparse gather at
+/// the same flop count as the library's threaded apply.
+fn sketch_rows_nz(op: &dyn SketchOp) -> Vec<Vec<(usize, f64)>> {
+    let dense = op.to_dense();
+    (0..op.d())
+        .map(|r| {
+            (0..op.m())
+                .filter_map(|j| {
+                    let v = dense[(r, j)];
+                    (v != 0.0).then_some((j, v))
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Â = S·A as a row-banded gather with a fresh `std::thread::scope` per
+/// call — the pre-pool sketch-apply threading shape.
+fn sketch_apply_scoped(rows_nz: &[Vec<(usize, f64)>], a: &Mat) -> Mat {
+    let d = rows_nz.len();
+    let n = a.cols();
+    let mut out = Mat::zeros(d, n);
+    let nt = ranntune::linalg::num_threads().min(d.max(1));
+    let rows_per = d.div_ceil(nt);
+    let bands: Vec<(usize, &mut [f64])> =
+        out.as_mut_slice().chunks_mut(rows_per * n).enumerate().collect();
+    std::thread::scope(|s| {
+        for (t, band) in bands {
+            let lo = t * rows_per;
+            s.spawn(move || {
+                for (rr, orow) in band.chunks_mut(n).enumerate() {
+                    for &(j, v) in &rows_nz[lo + rr] {
+                        ranntune::linalg::axpy(v, a.row(j), orow);
+                    }
+                }
+            });
+        }
+    });
+    out
 }

@@ -1,30 +1,24 @@
-//! Blocked, multi-threaded GEMM / GEMV.
+//! Blocked, multi-threaded GEMM / GEMV on the persistent worker pool.
 //!
 //! This is the dense-compute workhorse: `SA` for dense comparisons, `Q·R`
 //! checks, `AM` products in tests, GP covariance assembly. The kernel is a
 //! cache-blocked i-k-j loop (row-major friendly: innermost loop streams a
-//! row of B and a row of C), parallelized over row blocks of A with scoped
-//! threads. No unsafe, no SIMD intrinsics — autovectorization of the
-//! innermost FMA loop gets within a small factor of peak, which is all we
-//! need (§Perf in EXPERIMENTS.md has measurements).
+//! row of B and a row of C), parallelized over row bands of A dispatched
+//! to the shared [`crate::linalg::pool()`] — workers park between calls,
+//! so the per-call thread spawn/join the scoped kernels used to pay is
+//! gone. No SIMD intrinsics — autovectorization of the innermost FMA loop
+//! gets within a small factor of peak, which is all we need (§Perf in
+//! EXPERIMENTS.md has measurements).
+//!
+//! ## Determinism
+//!
+//! Every kernel here is bit-deterministic across `RANNTUNE_THREADS`
+//! values: band splits never change an output element's accumulation
+//! order ([`gemm_into`], [`gemv_into`]), and where a cross-band reduction
+//! exists ([`gemv_t`]) its tree shape is fixed by the problem size alone,
+//! never by the worker count. Pinned by `tests/kernel_determinism.rs`.
 
 use super::Mat;
-
-/// Number of worker threads for the dense kernels. Initialized once from
-/// `RANNTUNE_THREADS` or available parallelism.
-pub fn num_threads() -> usize {
-    use std::sync::OnceLock;
-    static N: OnceLock<usize> = OnceLock::new();
-    *N.get_or_init(|| {
-        std::env::var("RANNTUNE_THREADS")
-            .ok()
-            .and_then(|s| s.parse().ok())
-            .filter(|&n| n > 0)
-            .unwrap_or_else(|| {
-                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-            })
-    })
-}
 
 /// C = A · B.
 pub fn gemm(a: &Mat, b: &Mat) -> Mat {
@@ -36,40 +30,36 @@ pub fn gemm(a: &Mat, b: &Mat) -> Mat {
     c
 }
 
-/// C += A · B (C must be pre-shaped). Exposed separately so hot loops can
-/// reuse allocations.
+/// C += A · B (C must be pre-shaped).
+///
+/// This is the **accumulating** kernel: existing contents of `C` are kept
+/// and the product is added on top — the blocked inner loop only ever
+/// reads-modifies-writes, it never zeroes. Passing a non-zero `C` is
+/// defined behaviour and means "add"; callers that reuse a buffer for a
+/// pure product must clear it first (as [`gemm`] does). Pinned by the
+/// `gemm_into_accumulates_into_nonzero_c` regression test.
 pub fn gemm_into(a: &Mat, b: &Mat, c: &mut Mat) {
     let (m, kk) = a.shape();
     let n = b.cols();
     assert_eq!(b.rows(), kk);
     assert_eq!(c.shape(), (m, n));
 
-    let nt = num_threads().min(m.max(1));
-    // Serial cutoff: thread spawn ~10µs each; tiny products are common in
-    // the GP inner loops.
+    let nt = super::num_threads().min(m.max(1));
+    // Serial cutoff: tiny products are common in the GP inner loops, and
+    // even a parked-pool dispatch is not free.
     if nt <= 1 || m * n * kk < 64 * 64 * 64 {
-        gemm_block(a, b, c, 0, m);
+        gemm_rows(a, b, c.as_mut_slice(), 0, m);
         return;
     }
     let rows_per = m.div_ceil(nt);
-    // Split C into disjoint row bands; each thread owns one band.
-    let bands: Vec<(usize, &mut [f64])> =
-        c.as_mut_slice().chunks_mut(rows_per * n).enumerate().collect();
-    std::thread::scope(|s| {
-        for (t, band) in bands {
-            let lo = t * rows_per;
-            s.spawn(move || {
-                let hi = lo + band.len() / n;
-                gemm_rows(a, b, band, lo, hi);
-            });
-        }
+    // Disjoint row bands of C, one pool task each. Band boundaries do not
+    // alter any entry's accumulation order, so the split width is free to
+    // follow the worker count without costing determinism.
+    super::run_chunks(c.as_mut_slice(), rows_per * n, &|t, band| {
+        let lo = t * rows_per;
+        let hi = lo + band.len() / n;
+        gemm_rows(a, b, band, lo, hi);
     });
-}
-
-fn gemm_block(a: &Mat, b: &Mat, c: &mut Mat, row_lo: usize, row_hi: usize) {
-    let n = b.cols();
-    let c_band = &mut c.as_mut_slice()[row_lo * n..row_hi * n];
-    gemm_rows(a, b, c_band, row_lo, row_hi);
 }
 
 /// Compute rows [row_lo, row_hi) of C += A·B into the band slice.
@@ -106,71 +96,74 @@ pub fn gemv(a: &Mat, x: &[f64]) -> Vec<f64> {
     y
 }
 
-/// y = A · x into a preallocated buffer.
+/// y = A · x into a preallocated buffer (overwrites `y`).
 pub fn gemv_into(a: &Mat, x: &[f64], y: &mut [f64]) {
     let m = a.rows();
+    assert_eq!(a.cols(), x.len());
     assert_eq!(y.len(), m);
-    let nt = num_threads();
-    // Serial below ~1M madds: scoped-thread spawn (~tens of µs) would
-    // dominate the small gemv calls that LSQR makes at bench scale.
-    if nt <= 1 || m * a.cols() < 1 << 20 {
+    let nt = super::num_threads();
+    // Serial below ~1M madds: dispatch overhead would dominate the small
+    // gemv calls that LSQR makes at bench scale.
+    if nt <= 1 || m == 0 || m * a.cols() < 1 << 20 {
         for i in 0..m {
             y[i] = super::dot(a.row(i), x);
         }
         return;
     }
     let rows_per = m.div_ceil(nt);
-    let chunks: Vec<&mut [f64]> = y.chunks_mut(rows_per).collect();
-    std::thread::scope(|s| {
-        for (t, band) in chunks.into_iter().enumerate() {
-            let lo = t * rows_per;
-            s.spawn(move || {
-                for (r, yo) in band.iter_mut().enumerate() {
-                    *yo = super::dot(a.row(lo + r), x);
-                }
-            });
+    super::run_chunks(y, rows_per, &|t, band| {
+        let lo = t * rows_per;
+        for (r, yo) in band.iter_mut().enumerate() {
+            *yo = super::dot(a.row(lo + r), x);
         }
     });
 }
 
-/// y = Aᵀ · x without materializing Aᵀ (row-major A streamed once, threaded
-/// with per-thread accumulators).
+/// Fixed row-chunk length of the [`gemv_t`] reduction tree. The
+/// partial-sum structure must not depend on the worker count, or
+/// different `RANNTUNE_THREADS` values would reassociate the final
+/// reduction and change low-order bits; chunking by a constant keeps
+/// y = Σ_chunks (Σ_rows-in-chunk xᵢ·A[i,:]) bit-identical from 1 thread
+/// to N.
+const GEMV_T_CHUNK: usize = 512;
+
+/// y = Aᵀ · x without materializing Aᵀ (row-major A streamed once,
+/// threaded over fixed-size row chunks with per-chunk accumulators).
 pub fn gemv_t(a: &Mat, x: &[f64]) -> Vec<f64> {
-    assert_eq!(a.rows(), x.len());
-    let n = a.cols();
-    let m = a.rows();
-    let nt = num_threads();
-    if nt <= 1 || m * n < 1 << 20 {
-        let mut y = vec![0.0; n];
-        for i in 0..m {
-            super::axpy(x[i], a.row(i), &mut y);
-        }
-        return y;
-    }
-    let rows_per = m.div_ceil(nt);
-    let partials: Vec<Vec<f64>> = std::thread::scope(|s| {
-        let mut handles = Vec::new();
-        for t in 0..nt {
-            let lo = t * rows_per;
-            let hi = ((t + 1) * rows_per).min(m);
-            if lo >= hi {
-                break;
-            }
-            handles.push(s.spawn(move || {
-                let mut acc = vec![0.0; n];
-                for i in lo..hi {
-                    super::axpy(x[i], a.row(i), &mut acc);
-                }
-                acc
-            }));
-        }
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
-    });
-    let mut y = vec![0.0; n];
-    for p in partials {
-        super::axpy(1.0, &p, &mut y);
-    }
+    let mut y = vec![0.0; a.cols()];
+    gemv_t_into(a, x, &mut y);
     y
+}
+
+/// y = Aᵀ · x into a preallocated buffer (overwrites `y`).
+pub fn gemv_t_into(a: &Mat, x: &[f64], y: &mut [f64]) {
+    let (m, n) = a.shape();
+    assert_eq!(x.len(), m);
+    assert_eq!(y.len(), n);
+    y.fill(0.0);
+    // Structure decided by problem size alone (never the worker count):
+    // below the cutoff every thread-count sums rows serially in the same
+    // order; above it every thread-count uses the same fixed chunk tree.
+    if m * n < 1 << 20 {
+        for i in 0..m {
+            super::axpy(x[i], a.row(i), y);
+        }
+        return;
+    }
+    let n_chunks = m.div_ceil(GEMV_T_CHUNK);
+    let mut partials = vec![0.0f64; n_chunks * n];
+    super::run_chunks(&mut partials, n, &|t, acc| {
+        let lo = t * GEMV_T_CHUNK;
+        let hi = (lo + GEMV_T_CHUNK).min(m);
+        for i in lo..hi {
+            super::axpy(x[i], a.row(i), acc);
+        }
+    });
+    // Reduce in chunk order — a fixed-shape tree independent of both the
+    // scheduling and the worker count.
+    for t in 0..n_chunks {
+        super::axpy(1.0, &partials[t * n..(t + 1) * n], y);
+    }
 }
 
 #[cfg(test)]
@@ -212,6 +205,26 @@ mod tests {
     }
 
     #[test]
+    fn gemm_into_accumulates_into_nonzero_c() {
+        // The documented contract: C += A·B, both below and above the
+        // threading cutoff. A caller passing non-zero C gets "add", not a
+        // silent overwrite.
+        let mut r = Rng::new(5);
+        for &(m, k, n) in &[(20usize, 15usize, 9usize), (200, 100, 120)] {
+            let a = Mat::from_fn(m, k, |_, _| r.normal());
+            let b = Mat::from_fn(k, n, |_, _| r.normal());
+            let seed = Mat::from_fn(m, n, |_, _| r.normal());
+            let mut c = seed.clone();
+            gemm_into(&a, &b, &mut c);
+            let mut expect = gemm(&a, &b);
+            expect.axpy(1.0, &seed);
+            let mut diff = c.clone();
+            diff.axpy(-1.0, &expect);
+            assert!(diff.max_abs() < 1e-9, "m={m} k={k} n={n}: {}", diff.max_abs());
+        }
+    }
+
+    #[test]
     fn gemv_and_gemv_t_match_gemm() {
         let mut r = Rng::new(3);
         let a = Mat::from_fn(300, 40, |_, _| r.normal());
@@ -227,6 +240,33 @@ mod tests {
         for j in 0..40 {
             assert!((z[j] - z0[(j, 0)]).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn gemv_t_chunked_path_matches() {
+        // m·n ≥ 2^20 forces the fixed-chunk reduction tree.
+        let mut r = Rng::new(6);
+        let a = Mat::from_fn(1100, 1024, |_, _| r.normal());
+        let x: Vec<f64> = (0..1100).map(|_| r.normal()).collect();
+        let z = gemv_t(&a, &x);
+        let z0 = gemm(&a.transpose(), &Mat::col_vec(&x));
+        for j in 0..1024 {
+            assert!((z[j] - z0[(j, 0)]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn into_variants_match_allocating_bitwise() {
+        let mut r = Rng::new(7);
+        let a = Mat::from_fn(90, 35, |_, _| r.normal());
+        let x: Vec<f64> = (0..35).map(|_| r.normal()).collect();
+        let u: Vec<f64> = (0..90).map(|_| r.normal()).collect();
+        let mut y = vec![1.0; 90]; // stale contents must be overwritten
+        gemv_into(&a, &x, &mut y);
+        assert_eq!(y, gemv(&a, &x));
+        let mut z = vec![1.0; 35];
+        gemv_t_into(&a, &u, &mut z);
+        assert_eq!(z, gemv_t(&a, &u));
     }
 
     #[test]

@@ -4,9 +4,14 @@
 //! the needed kernels ourselves:
 //!
 //! * [`Mat`] — row-major dense matrix with slicing helpers.
+//! * [`pool()`] — the persistent worker [`Pool`] behind every threaded
+//!   kernel (sized by `RANNTUNE_THREADS` via [`num_threads()`]; workers
+//!   park between calls instead of being respawned), plus the per-thread
+//!   [`with_scratch`] buffer.
 //! * [`gemm()`] — blocked, multi-threaded matrix multiply (plus
 //!   [`gemv`], [`gemv_t`]), the workhorse behind sketching,
-//!   preconditioning, and GP fits.
+//!   preconditioning, and GP fits. Bit-deterministic across thread
+//!   counts.
 //! * [`qr_thin`] — Householder QR (thin), used for the QR-LSQR
 //!   preconditioner, the direct reference solver ([`lstsq_qr`]), and
 //!   coherence computation.
@@ -22,6 +27,7 @@
 mod chol;
 mod gemm;
 mod mat;
+mod pool;
 mod qr;
 mod solve;
 mod svd;
@@ -29,6 +35,7 @@ mod svd;
 pub use chol::*;
 pub use gemm::*;
 pub use mat::*;
+pub use pool::*;
 pub use qr::*;
 pub use solve::*;
 pub use svd::*;

@@ -1,0 +1,411 @@
+//! Persistent worker pool for the dense hot paths.
+//!
+//! Every threaded kernel in the crate used to spawn fresh scoped threads
+//! on each call (`std::thread::scope`), paying ~tens of µs of spawn/join
+//! cost per GEMM, GEMV, or sketch apply — a visible overhead at
+//! tuning-loop sizes where one kernel invocation lasts well under a
+//! millisecond. This module replaces that with one lazily-initialized
+//! process-wide pool whose workers park between calls:
+//!
+//! * [`pool()`] — the shared [`Pool`], sized by [`num_threads()`]
+//!   (`RANNTUNE_THREADS` or available parallelism — exactly the env
+//!   contract the scoped kernels honoured).
+//! * [`Pool::run`] — scope-style fan-out: run `tasks` indexed closures
+//!   and return when all have finished. The submitting thread
+//!   participates as a worker, so `RANNTUNE_THREADS=1` means "no extra
+//!   threads at all".
+//! * [`run_chunks`] — the band-dispatch idiom on top of it: hand each
+//!   task a disjoint `&mut` chunk of an output slice.
+//! * [`with_scratch`] — reusable per-thread scratch buffer for kernels
+//!   that need a temporary per task (e.g. the SRHT's FWHT column buffer).
+//!
+//! ## Nesting and contention
+//!
+//! The pool is deliberately single-job: one `run` call owns the workers
+//! at a time. A nested `run` (a pooled task calling back into a pooled
+//! kernel — e.g. the parallel evaluator fanning out `solve_sap` calls
+//! whose inner kernels also want threads) or a concurrent `run` from
+//! another OS thread executes its tasks inline on the calling thread
+//! instead. That bounds total parallelism at the configured width and —
+//! crucially — cannot deadlock, no matter how evaluator- and
+//! kernel-level calls nest or oversubscribe.
+//!
+//! ## Determinism
+//!
+//! Scheduling never influences results: tasks are indexed, every output
+//! slot is owned by exactly one task, and each task's arithmetic is a
+//! pure function of its index. Kernels additionally choose their *task
+//! structure* (band splits, reduction trees) independently of the worker
+//! count wherever the floating-point reduction order would otherwise
+//! depend on it (see `gemv_t`), so kernel results are bit-identical for
+//! every `RANNTUNE_THREADS` value — pinned by
+//! `tests/kernel_determinism.rs`.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Number of worker threads for the dense kernels (the pool width).
+/// Initialized once from `RANNTUNE_THREADS` or available parallelism.
+pub fn num_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        std::env::var("RANNTUNE_THREADS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
+    })
+}
+
+/// The process-wide kernel pool, created on first use with
+/// `num_threads() - 1` parked workers (the submitting thread acts as the
+/// final worker).
+pub fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| Pool::new(num_threads()))
+}
+
+/// A task-function reference whose lifetime has been erased for the
+/// worker threads; only ever dereferenced while the owning
+/// [`Pool::run_capped`] call is still on the stack.
+#[derive(Clone, Copy)]
+struct TaskRef(&'static (dyn Fn(usize) + Sync));
+
+/// Mutex-protected state of the (single) in-flight job.
+struct JobSlot {
+    /// Current job's task function; `None` while the pool is idle.
+    task: Option<TaskRef>,
+    /// Next unclaimed task index.
+    next: usize,
+    /// Total tasks in the current job.
+    tasks: usize,
+    /// Max tasks in flight at once (submitter included).
+    cap: usize,
+    /// Tasks claimed but not yet finished.
+    active: usize,
+    /// First panic payload raised by a task, re-raised by the submitter.
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+struct Shared {
+    slot: Mutex<JobSlot>,
+    /// Signalled when work may be claimable (new job, freed cap slot, or
+    /// job end — waiters re-check the slot either way).
+    work_cv: Condvar,
+    /// Signalled when the current job has fully drained.
+    done_cv: Condvar,
+}
+
+/// Persistent worker pool with a scope-style [`Pool::run`] API. See the
+/// module docs for the nesting and determinism contract.
+pub struct Pool {
+    shared: Arc<Shared>,
+    /// Set while a `run` call owns the workers; losers go inline.
+    busy: AtomicBool,
+    size: usize,
+    workers: usize,
+}
+
+impl Pool {
+    fn new(size: usize) -> Pool {
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(JobSlot {
+                task: None,
+                next: 0,
+                tasks: 0,
+                cap: 0,
+                active: 0,
+                panic: None,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let workers = size.saturating_sub(1);
+        for i in 0..workers {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name(format!("ranntune-pool-{i}"))
+                .spawn(move || worker_loop(shared))
+                .expect("spawn pool worker");
+        }
+        Pool { shared, busy: AtomicBool::new(false), size, workers }
+    }
+
+    /// Configured width (the `RANNTUNE_THREADS` contract): the maximum
+    /// number of tasks that execute concurrently, submitter included.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Run `task(t)` for every `t` in `0..tasks` across the pool and
+    /// return once all calls have finished. Panics inside tasks are
+    /// re-raised here (first one wins) after the job drains. Falls back
+    /// to inline serial execution when the pool is width-1, the batch is
+    /// trivial, or the pool is already running a job (nested or
+    /// concurrent submission) — see the module docs.
+    pub fn run(&self, tasks: usize, task: &(dyn Fn(usize) + Sync)) {
+        self.run_capped(tasks, usize::MAX, task)
+    }
+
+    /// [`Pool::run`] with at most `cap` tasks in flight at once
+    /// (submitter included). Used by the parallel evaluator to honour
+    /// `--eval-threads` below the pool width.
+    pub fn run_capped(&self, tasks: usize, cap: usize, task: &(dyn Fn(usize) + Sync)) {
+        let cap = cap.max(1);
+        if tasks == 0 {
+            return;
+        }
+        let claimed_pool = tasks > 1
+            && cap > 1
+            && self.workers > 0
+            && self
+                .busy
+                .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+                .is_ok();
+        if !claimed_pool {
+            for t in 0..tasks {
+                task(t);
+            }
+            return;
+        }
+        // SAFETY: the borrow of `task` is erased to 'static so the parked
+        // workers (spawned with 'static closures) can call it. This
+        // function does not return until no further task can be claimed
+        // (`next == tasks`) and every claimed task has finished
+        // (`active == 0`), so all uses of the reference end before its
+        // real lifetime does. The panic path keeps the same guarantee:
+        // claimed tasks drain before the payload is re-raised.
+        let task_static: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(task)
+        };
+        {
+            let mut slot = self.shared.slot.lock().unwrap();
+            debug_assert!(slot.active == 0 && slot.panic.is_none());
+            slot.task = Some(TaskRef(task_static));
+            slot.next = 0;
+            slot.tasks = tasks;
+            slot.cap = cap;
+        }
+        self.shared.work_cv.notify_all();
+        // The submitter claims and runs tasks like any worker.
+        loop {
+            let claimed = {
+                let mut slot = self.shared.slot.lock().unwrap();
+                loop {
+                    if slot.next >= slot.tasks {
+                        break None;
+                    }
+                    if slot.active < slot.cap {
+                        let i = slot.next;
+                        slot.next += 1;
+                        slot.active += 1;
+                        break Some(i);
+                    }
+                    slot = self.shared.work_cv.wait(slot).unwrap();
+                }
+            };
+            match claimed {
+                Some(idx) => exec_task(&self.shared, task_static, idx),
+                None => break,
+            }
+        }
+        // Wait for straggler workers, then retire the job.
+        let panic = {
+            let mut slot = self.shared.slot.lock().unwrap();
+            while slot.active > 0 {
+                slot = self.shared.done_cv.wait(slot).unwrap();
+            }
+            slot.task = None;
+            slot.panic.take()
+        };
+        self.busy.store(false, Ordering::Release);
+        if let Some(payload) = panic {
+            resume_unwind(payload);
+        }
+    }
+}
+
+/// Run one claimed task and update the job accounting.
+fn exec_task(shared: &Shared, task: &(dyn Fn(usize) + Sync), idx: usize) {
+    let result = catch_unwind(AssertUnwindSafe(|| task(idx)));
+    let (finished, capped) = {
+        let mut slot = shared.slot.lock().unwrap();
+        slot.active -= 1;
+        if let Err(payload) = result {
+            // Poison the job: no further tasks are handed out; the
+            // submitter re-raises the first panic after the job drains.
+            slot.next = slot.tasks;
+            if slot.panic.is_none() {
+                slot.panic = Some(payload);
+            }
+        }
+        (slot.active == 0 && slot.next >= slot.tasks, slot.cap != usize::MAX)
+    };
+    // Claim-waiters blocked on the cap condition (`active < cap`) only
+    // exist for capped jobs — an uncapped claim never waits — so the
+    // hot uncapped path skips the broadcast instead of futilely waking
+    // every idle worker once per task.
+    if capped {
+        shared.work_cv.notify_all();
+    }
+    if finished {
+        shared.done_cv.notify_all();
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let (task, idx) = {
+            let mut slot = shared.slot.lock().unwrap();
+            loop {
+                if let Some(t) = slot.task {
+                    if slot.next < slot.tasks && slot.active < slot.cap {
+                        let i = slot.next;
+                        slot.next += 1;
+                        slot.active += 1;
+                        break (t, i);
+                    }
+                }
+                slot = shared.work_cv.wait(slot).unwrap();
+            }
+        };
+        exec_task(&shared, task.0, idx);
+    }
+}
+
+/// Split `data` into contiguous chunks of `chunk_len` elements (the last
+/// may be shorter) and run `f(chunk_index, chunk)` for each on the shared
+/// pool — the one band-dispatch idiom every threaded kernel uses. Each
+/// task owns exactly its chunk (handed out through an uncontended
+/// per-chunk mutex), so there are no shared writes, and chunk indices are
+/// in slice order, letting callers recover the band offset as
+/// `chunk_index * chunk_len`.
+pub fn run_chunks(data: &mut [f64], chunk_len: usize, f: &(dyn Fn(usize, &mut [f64]) + Sync)) {
+    assert!(chunk_len > 0, "run_chunks needs a positive chunk length");
+    if data.is_empty() {
+        return;
+    }
+    let chunks: Vec<Mutex<&mut [f64]>> = data.chunks_mut(chunk_len).map(Mutex::new).collect();
+    pool().run(chunks.len(), &|t| {
+        let mut chunk = chunks[t].lock().unwrap();
+        f(t, &mut chunk);
+    });
+}
+
+thread_local! {
+    static SCRATCH: std::cell::RefCell<Vec<f64>> = const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// Run `f` on a zeroed per-thread scratch buffer of length `len`.
+///
+/// The buffer is owned by the calling thread and reused across calls, so
+/// pooled kernels pay the allocation once per worker rather than once per
+/// task. Reentrant use (the closure itself calling [`with_scratch`])
+/// falls back to a fresh allocation rather than aliasing the buffer.
+pub fn with_scratch<R>(len: usize, f: impl FnOnce(&mut [f64]) -> R) -> R {
+    SCRATCH.with(|cell| match cell.try_borrow_mut() {
+        Ok(mut buf) => {
+            if buf.len() < len {
+                buf.resize(len, 0.0);
+            }
+            let slice = &mut buf[..len];
+            slice.fill(0.0);
+            f(slice)
+        }
+        Err(_) => f(&mut vec![0.0; len]),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn run_visits_every_task_exactly_once() {
+        let hits: Vec<AtomicUsize> = (0..97).map(|_| AtomicUsize::new(0)).collect();
+        pool().run(97, &|t| {
+            hits[t].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn nested_runs_complete_inline() {
+        let total = AtomicUsize::new(0);
+        pool().run(16, &|_| {
+            pool().run(8, &|_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 128);
+    }
+
+    #[test]
+    fn capped_run_bounds_concurrency() {
+        let in_flight = AtomicUsize::new(0);
+        let peak = AtomicUsize::new(0);
+        pool().run_capped(32, 2, &|_| {
+            let now = in_flight.fetch_add(1, Ordering::SeqCst) + 1;
+            peak.fetch_max(now, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            in_flight.fetch_sub(1, Ordering::SeqCst);
+        });
+        assert!(peak.load(Ordering::SeqCst) <= 2, "peak {}", peak.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn panics_propagate_and_pool_survives() {
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool().run(8, &|t| {
+                if t == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(caught.is_err());
+        let count = AtomicUsize::new(0);
+        pool().run(8, &|_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn run_chunks_visits_disjoint_bands_in_order() {
+        let mut data = vec![0.0f64; 103]; // non-multiple: short final chunk
+        run_chunks(&mut data, 10, &|t, chunk| {
+            assert!(chunk.len() == 10 || (t == 10 && chunk.len() == 3));
+            for (i, x) in chunk.iter_mut().enumerate() {
+                *x = (t * 10 + i) as f64;
+            }
+        });
+        for (i, x) in data.iter().enumerate() {
+            assert_eq!(*x, i as f64, "element {i}");
+        }
+    }
+
+    #[test]
+    fn scratch_is_zeroed_and_reused() {
+        let p1 = with_scratch(64, |b| {
+            b[0] = 5.0;
+            b.as_ptr() as usize
+        });
+        let p2 = with_scratch(32, |b| {
+            assert_eq!(b[0], 0.0, "scratch not re-zeroed");
+            b.as_ptr() as usize
+        });
+        assert_eq!(p1, p2, "scratch buffer not reused on the same thread");
+        with_scratch(8, |outer| {
+            outer[0] = 1.0;
+            with_scratch(8, |inner| {
+                assert_eq!(inner[0], 0.0);
+                inner[0] = 2.0;
+            });
+            assert_eq!(outer[0], 1.0, "reentrant call aliased the buffer");
+        });
+    }
+}

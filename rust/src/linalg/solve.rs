@@ -9,10 +9,19 @@ use super::Mat;
 
 /// Solve U x = b with U upper-triangular (back substitution).
 pub fn solve_upper(u: &Mat, b: &[f64]) -> Vec<f64> {
+    let mut x = vec![0.0; b.len()];
+    solve_upper_into(u, b, &mut x);
+    x
+}
+
+/// [`solve_upper`] into a preallocated buffer (overwrites `x`); lets the
+/// LSQR workspace apply the QR preconditioner without allocating.
+pub fn solve_upper_into(u: &Mat, b: &[f64], x: &mut [f64]) {
     let n = u.rows();
     assert_eq!(u.cols(), n);
     assert_eq!(b.len(), n);
-    let mut x = b.to_vec();
+    assert_eq!(x.len(), n);
+    x.copy_from_slice(b);
     for i in (0..n).rev() {
         let urow = u.row(i);
         let mut s = x[i];
@@ -24,16 +33,23 @@ pub fn solve_upper(u: &Mat, b: &[f64]) -> Vec<f64> {
         assert!(d != 0.0, "singular triangular factor at {i}");
         x[i] = s / d;
     }
-    x
 }
 
 /// Solve Uᵀ x = b with U upper-triangular (forward substitution on Uᵀ,
 /// i.e. a lower-triangular solve without materializing the transpose).
 pub fn solve_upper_t(u: &Mat, b: &[f64]) -> Vec<f64> {
+    let mut x = vec![0.0; b.len()];
+    solve_upper_t_into(u, b, &mut x);
+    x
+}
+
+/// [`solve_upper_t`] into a preallocated buffer (overwrites `x`).
+pub fn solve_upper_t_into(u: &Mat, b: &[f64], x: &mut [f64]) {
     let n = u.rows();
     assert_eq!(u.cols(), n);
     assert_eq!(b.len(), n);
-    let mut x = b.to_vec();
+    assert_eq!(x.len(), n);
+    x.copy_from_slice(b);
     for i in 0..n {
         let d = u[(i, i)];
         assert!(d != 0.0, "singular triangular factor at {i}");
@@ -45,7 +61,6 @@ pub fn solve_upper_t(u: &Mat, b: &[f64]) -> Vec<f64> {
             x[j] -= urow[j] * xi;
         }
     }
-    x
 }
 
 /// Solve L x = b with L lower-triangular.

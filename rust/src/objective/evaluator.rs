@@ -10,7 +10,12 @@
 //! * [`SerialEvaluator`] — one `(config, repeat)` solver run at a time,
 //!   the seed behaviour.
 //! * [`ParallelEvaluator`] — fans the `num_jobs × num_repeats` solver runs
-//!   out over `std::thread::scope` workers.
+//!   out over the shared kernel pool ([`crate::linalg::pool()`]), capped
+//!   at `--eval-threads` units in flight. Evaluator and kernels share one
+//!   set of persistent workers: while a batch owns the pool, the dense
+//!   kernels inside each solve run inline (the pool's nested-run
+//!   fallback), so the two parallelism levels never nest scoped spawns or
+//!   oversubscribe the machine.
 //!
 //! Determinism: each solver run draws randomness from a stream derived
 //! *purely* from `(base_seed, trial_index, repeat)` — see [`repeat_rng`] —
@@ -18,13 +23,15 @@
 //! indexed by `(job, repeat)`, so ARFE values, failure flags, and trial
 //! order are bit-identical between the serial and parallel evaluators (and
 //! across any thread count); only the measured wall-clock differs, as it
-//! must.
+//! must. Each worker thread keeps a [`SapWorkspace`] so repeated runs
+//! reuse the LSQR iteration buffers — also bit-neutral.
 
 use super::Constants;
 use crate::data::Problem;
 use crate::rng::Rng;
-use crate::sap::{arfe, solve_sap, SapConfig};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use crate::sap::{arfe, solve_sap_ws, SapConfig, SapWorkspace};
+use std::cell::RefCell;
+use std::sync::Mutex;
 
 /// Immutable task state an evaluator needs to measure configurations.
 pub struct EvalContext<'a> {
@@ -128,12 +135,29 @@ pub fn repeat_rng(base_seed: u64, trial_index: usize, repeat: usize) -> Rng {
     Rng::new(h ^ (h >> 31))
 }
 
-/// Run one solver repeat; returns (wall-clock seconds, ARFE).
+thread_local! {
+    /// Per-thread solver scratch: pool workers (and the serial caller)
+    /// reuse one [`SapWorkspace`] across every repeat they execute.
+    static SAP_WS: RefCell<SapWorkspace> = RefCell::new(SapWorkspace::new());
+}
+
+/// Run one solver repeat on this thread's workspace; returns (wall-clock
+/// seconds, ARFE).
 fn run_repeat(ctx: &EvalContext<'_>, job: &EvalJob, repeat: usize) -> (f64, f64) {
+    SAP_WS.with(|ws| run_repeat_ws(ctx, job, repeat, &mut ws.borrow_mut()))
+}
+
+/// Run one solver repeat; returns (wall-clock seconds, ARFE).
+fn run_repeat_ws(
+    ctx: &EvalContext<'_>,
+    job: &EvalJob,
+    repeat: usize,
+    ws: &mut SapWorkspace,
+) -> (f64, f64) {
     let mut rng = repeat_rng(ctx.base_seed, job.trial_index, repeat);
     // `total_secs` is measured inside solve_sap, so both evaluators agree
     // on what "wall clock" means regardless of scheduling overhead here.
-    let sol = solve_sap(&ctx.problem.a, &ctx.problem.b, &job.config, &mut rng);
+    let sol = solve_sap_ws(&ctx.problem.a, &ctx.problem.b, &job.config, &mut rng, ws);
     let err = arfe(&ctx.problem.a, &ctx.problem.b, &sol.x, ctx.x_star);
     let secs = match ctx.constants.timing {
         TimingMode::Measured => sol.stats.total_secs,
@@ -230,13 +254,17 @@ impl Evaluator for SerialEvaluator {
     }
 }
 
-/// Scoped-thread fan-out over the `jobs × repeats` unit grid.
+/// Pool-backed fan-out over the `jobs × repeats` unit grid.
 ///
-/// Workers pull unit indices from an atomic counter and write results into
-/// disjoint slots, so output order is submission order regardless of
-/// scheduling. Wall-clock per *unit* can inflate under contention (the
-/// inner linalg kernels also thread via `RANNTUNE_THREADS`); total batch
-/// latency is what this buys down.
+/// Units are dispatched to the shared kernel pool
+/// ([`crate::linalg::pool()`]) with at most `threads` in flight at once,
+/// each writing its own `(job, repeat)` slot — so output order is
+/// submission order regardless of scheduling, and evaluator-level and
+/// kernel-level parallelism share one set of persistent workers instead
+/// of nesting scoped spawns. The pool width (`RANNTUNE_THREADS`) is the
+/// global budget: `threads` caps the evaluator's share of it, and while a
+/// batch owns the pool the inner dense kernels run inline (nested-run
+/// fallback), which cannot deadlock.
 #[derive(Clone, Copy, Debug)]
 pub struct ParallelEvaluator {
     threads: usize,
@@ -249,7 +277,7 @@ impl ParallelEvaluator {
         ParallelEvaluator { threads: threads.max(1) }
     }
 
-    /// Configured worker-thread count.
+    /// Configured cap on concurrently-evaluated units.
     pub fn threads(&self) -> usize {
         self.threads
     }
@@ -266,47 +294,28 @@ impl Evaluator for ParallelEvaluator {
         if n_units == 0 {
             return Vec::new();
         }
-        let nt = self.threads.min(n_units);
-        if nt <= 1 {
+        let cap = self.threads.min(n_units);
+        if cap <= 1 {
             return SerialEvaluator.run_batch(ctx, jobs);
         }
 
-        let next = AtomicUsize::new(0);
-        let worker_results: Vec<Vec<(usize, f64, f64)>> = std::thread::scope(|s| {
-            let handles: Vec<_> = (0..nt)
-                .map(|_| {
-                    let next = &next;
-                    s.spawn(move || {
-                        let mut out = Vec::new();
-                        loop {
-                            let u = next.fetch_add(1, Ordering::Relaxed);
-                            if u >= n_units {
-                                break;
-                            }
-                            let (j, r) = (u / repeats, u % repeats);
-                            let (secs, err) = run_repeat(ctx, &jobs[j], r);
-                            out.push((u, secs, err));
-                        }
-                        out
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().expect("evaluator worker")).collect()
+        // One slot per (job, repeat) unit; each task locks only its own
+        // slot, so there is no contention and no ordering dependence.
+        let slots: Vec<Mutex<(f64, f64)>> =
+            (0..n_units).map(|_| Mutex::new((0.0, 0.0))).collect();
+        crate::linalg::pool().run_capped(n_units, cap, &|u| {
+            let (j, r) = (u / repeats, u % repeats);
+            let out = run_repeat(ctx, &jobs[j], r);
+            *slots[u].lock().unwrap() = out;
         });
 
-        // Scatter into (job, repeat) slots, then reduce in job order.
-        let mut times = vec![0.0f64; n_units];
-        let mut errors = vec![0.0f64; n_units];
-        for chunk in worker_results {
-            for (u, secs, err) in chunk {
-                times[u] = secs;
-                errors[u] = err;
-            }
-        }
         (0..jobs.len())
             .map(|j| {
-                let span = j * repeats..(j + 1) * repeats;
-                reduce(&times[span.clone()], &errors[span])
+                let times: Vec<f64> =
+                    (0..repeats).map(|r| slots[j * repeats + r].lock().unwrap().0).collect();
+                let errors: Vec<f64> =
+                    (0..repeats).map(|r| slots[j * repeats + r].lock().unwrap().1).collect();
+                reduce(&times, &errors)
             })
             .collect()
     }
@@ -357,7 +366,10 @@ mod tests {
         };
         let jobs = jobs_for(6);
         let serial = SerialEvaluator.run_batch(&ctx, &jobs);
-        for threads in [1, 2, 4, 16] {
+        // 64 deliberately oversubscribes any plausible pool width: the cap
+        // saturates at the pool size and the nested kernel calls fall back
+        // inline — results must still be bit-identical.
+        for threads in [1, 2, 4, 16, 64] {
             let par = ParallelEvaluator::new(threads).run_batch(&ctx, &jobs);
             assert_eq!(par.len(), serial.len());
             for (p, s) in par.iter().zip(serial.iter()) {

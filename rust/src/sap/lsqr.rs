@@ -12,7 +12,7 @@
 //! describes — and ‖(AM)ᵀr‖, ‖r‖ come from the bidiagonalization
 //! recurrences (φ̄·|ρ̄| and φ̄ respectively), so the check costs O(1).
 
-use crate::linalg::{axpy, gemv, gemv_t, norm2, scal, Mat};
+use crate::linalg::{axpy, gemv_into, gemv_t_into, norm2, scal, Mat};
 use crate::sap::Preconditioner;
 
 /// Output of a preconditioned LSQR run.
@@ -29,7 +29,53 @@ pub struct LsqrResult {
     pub am_norm_estimate: f64,
 }
 
-/// Run preconditioned LSQR on min ‖A·M·z − b‖ starting from `z0`.
+/// Reusable buffers for [`lsqr_preconditioned_ws`]: the bidiagonalization
+/// vectors and operator products, preallocated once and reused across
+/// every iteration — and across *solves* when the caller keeps the
+/// workspace alive (the ask/tell evaluator holds one per worker thread,
+/// so the `trials × num_repeats` solver runs of a tuning campaign pay the
+/// allocations once per worker, not once per run).
+#[derive(Default)]
+pub struct LsqrWorkspace {
+    /// Left bidiagonalization vector u (length m).
+    u: Vec<f64>,
+    /// Right bidiagonalization vector v (length r).
+    v: Vec<f64>,
+    /// Search direction w (length r).
+    w: Vec<f64>,
+    /// M·v intermediate (length n).
+    mv: Vec<f64>,
+    /// A·(M·v) product (length m).
+    av: Vec<f64>,
+    /// Aᵀ·u intermediate (length n).
+    atu: Vec<f64>,
+    /// Mᵀ·(Aᵀ·u) product (length r).
+    matu: Vec<f64>,
+}
+
+impl LsqrWorkspace {
+    /// Empty workspace; buffers are sized lazily on first use.
+    pub fn new() -> LsqrWorkspace {
+        LsqrWorkspace::default()
+    }
+
+    /// Size every buffer for an m×n problem with rank-r preconditioner.
+    /// Stale contents are fine: each buffer is fully overwritten before
+    /// its first read in a solve.
+    fn resize(&mut self, m: usize, n: usize, r: usize) {
+        self.u.resize(m, 0.0);
+        self.v.resize(r, 0.0);
+        self.w.resize(r, 0.0);
+        self.mv.resize(n, 0.0);
+        self.av.resize(m, 0.0);
+        self.atu.resize(n, 0.0);
+        self.matu.resize(r, 0.0);
+    }
+}
+
+/// Run preconditioned LSQR on min ‖A·M·z − b‖ starting from `z0`,
+/// allocating a fresh workspace (see [`lsqr_preconditioned_ws`] for the
+/// reusable-buffer variant; results are identical).
 ///
 /// `a` is m×n, `precond` has rank r, `z0` has length r, `b` length m.
 pub fn lsqr_preconditioned(
@@ -40,36 +86,48 @@ pub fn lsqr_preconditioned(
     rho_tol: f64,
     max_iters: usize,
 ) -> LsqrResult {
-    let m = a.rows();
+    lsqr_preconditioned_ws(a, b, precond, z0, rho_tol, max_iters, &mut LsqrWorkspace::new())
+}
+
+/// [`lsqr_preconditioned`] with caller-owned buffers: every per-iteration
+/// vector (u, v, w and the operator products) lives in `ws`, so repeated
+/// solves on same-shaped problems perform no per-iteration allocation.
+pub fn lsqr_preconditioned_ws(
+    a: &Mat,
+    b: &[f64],
+    precond: &Preconditioner,
+    z0: &[f64],
+    rho_tol: f64,
+    max_iters: usize,
+    ws: &mut LsqrWorkspace,
+) -> LsqrResult {
+    let (m, n) = a.shape();
     let r = precond.rank();
     assert_eq!(b.len(), m);
     assert_eq!(z0.len(), r);
-
-    let op = |v: &[f64]| -> Vec<f64> { gemv(a, &precond.apply(v)) };
-    let op_t = |u: &[f64]| -> Vec<f64> { precond.apply_t(&gemv_t(a, u)) };
+    ws.resize(m, n, r);
 
     let mut z = z0.to_vec();
 
-    // u = b − op(z0); β = ‖u‖.
-    let mut u = {
-        let az = op(&z);
-        let mut u = b.to_vec();
-        axpy(-1.0, &az, &mut u);
-        u
-    };
-    let mut beta = norm2(&u);
+    // u = b − A·(M·z0); β = ‖u‖.
+    precond.apply_into(&z, &mut ws.mv);
+    gemv_into(a, &ws.mv, &mut ws.av);
+    ws.u.copy_from_slice(b);
+    axpy(-1.0, &ws.av, &mut ws.u);
+    let mut beta = norm2(&ws.u);
     if beta > 0.0 {
-        scal(1.0 / beta, &mut u);
+        scal(1.0 / beta, &mut ws.u);
     }
 
-    // v = opᵀ(u); α = ‖v‖.
-    let mut v = op_t(&u);
-    let mut alpha = norm2(&v);
+    // v = Mᵀ·Aᵀ·u; α = ‖v‖.
+    gemv_t_into(a, &ws.u, &mut ws.atu);
+    precond.apply_t_into(&ws.atu, &mut ws.v);
+    let mut alpha = norm2(&ws.v);
     if alpha > 0.0 {
-        scal(1.0 / alpha, &mut v);
+        scal(1.0 / alpha, &mut ws.v);
     }
 
-    let mut w = v.clone();
+    ws.w.copy_from_slice(&ws.v);
     let mut phibar = beta;
     let mut rhobar = alpha;
     // ‖AM‖_EF running estimate (Appendix B / Paige–Saunders `anorm`).
@@ -93,23 +151,25 @@ pub fn lsqr_preconditioned(
     for it in 1..=max_iters {
         iterations = it;
 
-        // Bidiagonalization: u ← op(v) − α·u; β = ‖u‖.
-        let av = op(&v);
-        scal(-alpha, &mut u);
-        axpy(1.0, &av, &mut u);
-        beta = norm2(&u);
+        // Bidiagonalization: u ← A·(M·v) − α·u; β = ‖u‖.
+        precond.apply_into(&ws.v, &mut ws.mv);
+        gemv_into(a, &ws.mv, &mut ws.av);
+        scal(-alpha, &mut ws.u);
+        axpy(1.0, &ws.av, &mut ws.u);
+        beta = norm2(&ws.u);
         if beta > 0.0 {
-            scal(1.0 / beta, &mut u);
+            scal(1.0 / beta, &mut ws.u);
         }
         anorm2 += beta * beta;
 
-        // v ← opᵀ(u) − β·v; α = ‖v‖.
-        let atu = op_t(&u);
-        scal(-beta, &mut v);
-        axpy(1.0, &atu, &mut v);
-        alpha = norm2(&v);
+        // v ← Mᵀ·Aᵀ·u − β·v; α = ‖v‖.
+        gemv_t_into(a, &ws.u, &mut ws.atu);
+        precond.apply_t_into(&ws.atu, &mut ws.matu);
+        scal(-beta, &mut ws.v);
+        axpy(1.0, &ws.matu, &mut ws.v);
+        alpha = norm2(&ws.v);
         if alpha > 0.0 {
-            scal(1.0 / alpha, &mut v);
+            scal(1.0 / alpha, &mut ws.v);
         }
         anorm2 += alpha * alpha;
 
@@ -125,8 +185,8 @@ pub fn lsqr_preconditioned(
         // z ← z + (φ/ρ)·w;  w ← v − (θ/ρ)·w.
         let t1 = phi / rho;
         let t2 = -theta / rho;
-        axpy(t1, &w, &mut z);
-        for (wi, vi) in w.iter_mut().zip(v.iter()) {
+        axpy(t1, &ws.w, &mut z);
+        for (wi, vi) in ws.w.iter_mut().zip(ws.v.iter()) {
             *wi = vi + t2 * *wi;
         }
 
@@ -158,7 +218,7 @@ pub fn lsqr_preconditioned(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::lstsq_qr;
+    use crate::linalg::{gemv, gemv_t, lstsq_qr};
     use crate::rng::Rng;
     use crate::sketch::{make_sketch, SketchKind};
 
@@ -252,6 +312,27 @@ mod tests {
             warm.iterations,
             cold.iterations
         );
+    }
+
+    #[test]
+    fn reused_workspace_matches_fresh_bitwise() {
+        // One workspace driven across differently-shaped problems (grow,
+        // shrink, repeat) must reproduce the fresh-workspace runs bit for
+        // bit: stale buffer contents never leak into a solve.
+        let mut ws = LsqrWorkspace::new();
+        for &(m, n, seed) in &[(400usize, 20usize, 1u64), (200, 10, 5), (300, 15, 3), (200, 10, 5)]
+        {
+            let (a, b, p) = setup(m, n, seed);
+            let z0 = vec![0.0; p.rank()];
+            let fresh = lsqr_preconditioned(&a, &b, &p, &z0, 1e-10, 200);
+            let reused = lsqr_preconditioned_ws(&a, &b, &p, &z0, 1e-10, 200, &mut ws);
+            assert_eq!(fresh.x, reused.x, "m={m} n={n}");
+            assert_eq!(fresh.iterations, reused.iterations);
+            assert_eq!(
+                fresh.termination_value.to_bits(),
+                reused.termination_value.to_bits()
+            );
+        }
     }
 
     #[test]

@@ -27,7 +27,7 @@ mod precond;
 mod solver;
 
 pub use extensions::*;
-pub use lsqr::{lsqr_preconditioned, LsqrResult};
+pub use lsqr::{lsqr_preconditioned, lsqr_preconditioned_ws, LsqrResult, LsqrWorkspace};
 pub use params::*;
 pub use pgd::{pgd_preconditioned, PgdResult};
 pub use precond::*;

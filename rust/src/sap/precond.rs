@@ -11,7 +11,9 @@
 //! Both expose the presolve ingredient of Appendix A: the orthonormal
 //! factor of Â·M (Q for QR, U for SVD) so z_sk = (ÂM)ᵀ(Sb) is one GEMV.
 
-use crate::linalg::{gemv, gemv_t, qr_thin, solve_upper, solve_upper_t, svd_thin, Mat};
+use crate::linalg::{
+    gemv_into, gemv_t, gemv_t_into, qr_thin, solve_upper_into, solve_upper_t_into, svd_thin, Mat,
+};
 
 /// A realized preconditioner M (n×r) with its orthonormal sketch factor.
 pub enum Preconditioner {
@@ -58,19 +60,43 @@ impl Preconditioner {
         }
     }
 
+    /// Output length of [`Preconditioner::apply`] (n for both schemes).
+    pub fn out_dim(&self) -> usize {
+        match self {
+            Preconditioner::Qr { r, .. } => r.rows(),
+            Preconditioner::Svd { m, .. } => m.rows(),
+        }
+    }
+
     /// x = M·z.
     pub fn apply(&self, z: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.out_dim()];
+        self.apply_into(z, &mut out);
+        out
+    }
+
+    /// x = M·z into a preallocated buffer of length [`Self::out_dim`]
+    /// (overwrites `out`; no allocation — the LSQR workspace hot path).
+    pub fn apply_into(&self, z: &[f64], out: &mut [f64]) {
         match self {
-            Preconditioner::Qr { r, .. } => solve_upper(r, z),
-            Preconditioner::Svd { m, .. } => gemv(m, z),
+            Preconditioner::Qr { r, .. } => solve_upper_into(r, z, out),
+            Preconditioner::Svd { m, .. } => gemv_into(m, z, out),
         }
     }
 
     /// g = Mᵀ·y.
     pub fn apply_t(&self, y: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.rank()];
+        self.apply_t_into(y, &mut out);
+        out
+    }
+
+    /// g = Mᵀ·y into a preallocated buffer of length [`Self::rank`]
+    /// (overwrites `out`; no allocation).
+    pub fn apply_t_into(&self, y: &[f64], out: &mut [f64]) {
         match self {
-            Preconditioner::Qr { r, .. } => solve_upper_t(r, y),
-            Preconditioner::Svd { m, .. } => gemv_t(m, y),
+            Preconditioner::Qr { r, .. } => solve_upper_t_into(r, y, out),
+            Preconditioner::Svd { m, .. } => gemv_t_into(m, y, out),
         }
     }
 
@@ -87,7 +113,7 @@ impl Preconditioner {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::gemm;
+    use crate::linalg::{gemm, gemv};
     use crate::rng::Rng;
 
     /// Â·M must be column-orthonormal for both schemes (the defining
@@ -154,6 +180,22 @@ mod tests {
         let mut d = gram.clone();
         d.axpy(-1.0, &Mat::eye(3));
         assert!(d.max_abs() < 1e-8);
+    }
+
+    #[test]
+    fn into_variants_match_allocating_bitwise() {
+        let mut rng = Rng::new(5);
+        let sketch = Mat::from_fn(35, 9, |_, _| rng.normal());
+        for p in [Preconditioner::from_qr(&sketch), Preconditioner::from_svd(&sketch)] {
+            let z: Vec<f64> = (0..p.rank()).map(|_| rng.normal()).collect();
+            let y: Vec<f64> = (0..p.out_dim()).map(|_| rng.normal()).collect();
+            let mut x = vec![1.0; p.out_dim()]; // stale contents must be overwritten
+            p.apply_into(&z, &mut x);
+            assert_eq!(x, p.apply(&z));
+            let mut g = vec![1.0; p.rank()];
+            p.apply_t_into(&y, &mut g);
+            assert_eq!(g, p.apply_t(&y));
+        }
     }
 
     #[test]

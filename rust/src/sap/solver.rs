@@ -10,9 +10,27 @@ use std::time::Instant;
 use crate::linalg::{axpy, gemv, norm2, Mat};
 use crate::rng::Rng;
 use crate::sap::{
-    lsqr_preconditioned, pgd_preconditioned, Preconditioner, SapAlgorithm, SapConfig, MAX_ITERS,
+    lsqr_preconditioned_ws, pgd_preconditioned, LsqrWorkspace, Preconditioner, SapAlgorithm,
+    SapConfig, MAX_ITERS,
 };
 use crate::sketch::make_sketch;
+
+/// Reusable scratch shared across repeated SAP solves
+/// ([`solve_sap_ws`]). Holding one per worker amortizes the LSQR
+/// iteration-vector allocations across the `trials × num_repeats` solver
+/// runs of a tuning campaign; results are bit-identical to fresh-buffer
+/// solves (every buffer is fully overwritten before use).
+#[derive(Default)]
+pub struct SapWorkspace {
+    lsqr: LsqrWorkspace,
+}
+
+impl SapWorkspace {
+    /// Empty workspace; buffers are sized lazily on first solve.
+    pub fn new() -> SapWorkspace {
+        SapWorkspace::default()
+    }
+}
 
 /// Timing breakdown and diagnostics of one SAP solve.
 #[derive(Clone, Debug, Default)]
@@ -66,6 +84,20 @@ pub struct SapSolution {
 /// assert!(arfe(&a, &b, &sol.x, &x_star) < 1e-3);
 /// ```
 pub fn solve_sap(a: &Mat, b: &[f64], cfg: &SapConfig, rng: &mut Rng) -> SapSolution {
+    solve_sap_ws(a, b, cfg, rng, &mut SapWorkspace::new())
+}
+
+/// [`solve_sap`] with caller-owned scratch: the iterative phase reuses the
+/// buffers in `ws` instead of allocating per solve. The evaluator passes a
+/// per-worker workspace down here so repeated measurement runs share one
+/// set of LSQR vectors.
+pub fn solve_sap_ws(
+    a: &Mat,
+    b: &[f64],
+    cfg: &SapConfig,
+    rng: &mut Rng,
+    ws: &mut SapWorkspace,
+) -> SapSolution {
     let (m, n) = a.shape();
     assert_eq!(b.len(), m);
     let t_all = Instant::now();
@@ -102,7 +134,7 @@ pub fn solve_sap(a: &Mat, b: &[f64], cfg: &SapConfig, rng: &mut Rng) -> SapSolut
     let rho = cfg.tolerance();
     let (x, iterations, converged, termination_value) = match cfg.algorithm {
         SapAlgorithm::QrLsqr | SapAlgorithm::SvdLsqr => {
-            let r = lsqr_preconditioned(a, b, &precond, &z0, rho, MAX_ITERS);
+            let r = lsqr_preconditioned_ws(a, b, &precond, &z0, rho, MAX_ITERS, &mut ws.lsqr);
             (r.x, r.iterations, r.converged, r.termination_value)
         }
         SapAlgorithm::SvdPgd => {
@@ -248,6 +280,23 @@ mod tests {
             worst = worst.max(arfe(&a, &b, &sol.x, &x_star));
         }
         assert!(worst > 1e-3, "expected a failure case, worst ARFE {worst}");
+    }
+
+    #[test]
+    fn workspace_reuse_matches_fresh_solves() {
+        // One SapWorkspace across many solves (the evaluator's per-worker
+        // pattern) must reproduce fresh-workspace results exactly.
+        let (a, b) = problem(300, 12, 7);
+        let mut ws = SapWorkspace::new();
+        for alg in SapAlgorithm::ALL {
+            let cfg = SapConfig { algorithm: alg, ..SapConfig::reference() };
+            for seed in 0..3u64 {
+                let fresh = solve_sap(&a, &b, &cfg, &mut Rng::new(seed));
+                let reused = solve_sap_ws(&a, &b, &cfg, &mut Rng::new(seed), &mut ws);
+                assert_eq!(fresh.x, reused.x, "{} seed={seed}", alg.name());
+                assert_eq!(fresh.stats.iterations, reused.stats.iterations);
+            }
+        }
     }
 
     #[test]

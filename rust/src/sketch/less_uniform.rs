@@ -62,7 +62,10 @@ impl SketchOp for LessUniform {
     }
 
     /// Â[i, :] = Σ_k vals[i,k] · A[cols[i,k], :] — a gather-accumulate per
-    /// output row, parallelized over rows with no shared writes.
+    /// output row, parallelized over row bands on the shared
+    /// [`crate::linalg::pool()`] with no shared writes. Each output row is
+    /// computed by exactly the same gather order regardless of banding,
+    /// so results are bit-identical across `RANNTUNE_THREADS` values.
     fn apply(&self, a: &Mat) -> Mat {
         assert_eq!(a.rows(), self.m, "LessUniform expects {}-row input", self.m);
         let n = a.cols();
@@ -76,16 +79,10 @@ impl SketchOp for LessUniform {
             return out;
         }
         let rows_per = self.d.div_ceil(nt);
-        let chunks: Vec<(usize, &mut [f64])> =
-            out.as_mut_slice().chunks_mut(rows_per * n).enumerate().collect();
-        std::thread::scope(|s| {
-            for (t, band) in chunks {
-                let lo = t * rows_per;
-                s.spawn(move || {
-                    for (r, orow) in band.chunks_mut(n).enumerate() {
-                        self.fill_row(a, orow, lo + r);
-                    }
-                });
+        crate::linalg::run_chunks(out.as_mut_slice(), rows_per * n, &|t, band| {
+            let lo = t * rows_per;
+            for (r, orow) in band.chunks_mut(n).enumerate() {
+                self.fill_row(a, orow, lo + r);
             }
         });
         out

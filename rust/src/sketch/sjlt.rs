@@ -70,9 +70,13 @@ impl SketchOp for Sjlt {
     }
 
     /// Â = S·A. Â[r, :] += S[r, j]·A[j, :] for every stored non-zero
-    /// (r, j). Parallelized by partitioning sketch rows among threads:
-    /// each thread walks all of A but only accumulates non-zeros whose
-    /// target row falls in its band, so no synchronization is needed.
+    /// (r, j). Parallelized by partitioning sketch rows into bands, one
+    /// task per band on the shared [`crate::linalg::pool()`]: each task
+    /// walks all of A but only accumulates non-zeros whose target row
+    /// falls in its band, so no synchronization is needed — and every
+    /// output row's accumulation order (ascending input row j) is
+    /// independent of the band split, keeping the result bit-identical
+    /// across `RANNTUNE_THREADS` values.
     fn apply(&self, a: &Mat) -> Mat {
         assert_eq!(a.rows(), self.m, "SJLT expects {}-row input", self.m);
         let n = a.cols();
@@ -84,28 +88,19 @@ impl SketchOp for Sjlt {
         }
         let rows_per = self.d.div_ceil(nt);
         let out_cols = n;
-        let chunks: Vec<(usize, &mut [f64])> = out
-            .as_mut_slice()
-            .chunks_mut(rows_per * out_cols)
-            .enumerate()
-            .collect();
-        std::thread::scope(|s| {
-            for (t, band) in chunks {
-                let lo = t * rows_per;
-                s.spawn(move || {
-                    let hi = lo + band.len() / out_cols;
-                    for (j, idx_chunk) in self.rows.chunks(self.k).enumerate() {
-                        let arow = a.row(j);
-                        let vchunk = &self.vals[j * self.k..(j + 1) * self.k];
-                        for (&r, &v) in idx_chunk.iter().zip(vchunk) {
-                            let r = r as usize;
-                            if r >= lo && r < hi {
-                                let orow = &mut band[(r - lo) * out_cols..(r - lo + 1) * out_cols];
-                                crate::linalg::axpy(v, arow, orow);
-                            }
-                        }
+        crate::linalg::run_chunks(out.as_mut_slice(), rows_per * out_cols, &|t, band| {
+            let lo = t * rows_per;
+            let hi = lo + band.len() / out_cols;
+            for (j, idx_chunk) in self.rows.chunks(self.k).enumerate() {
+                let arow = a.row(j);
+                let vchunk = &self.vals[j * self.k..(j + 1) * self.k];
+                for (&r, &v) in idx_chunk.iter().zip(vchunk) {
+                    let r = r as usize;
+                    if r >= lo && r < hi {
+                        let orow = &mut band[(r - lo) * out_cols..(r - lo + 1) * out_cols];
+                        crate::linalg::axpy(v, arow, orow);
                     }
-                });
+                }
             }
         });
         out

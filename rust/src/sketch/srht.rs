@@ -74,6 +74,15 @@ impl Srht {
     fn scale(&self) -> f64 {
         1.0 / (self.d as f64).sqrt()
     }
+
+    /// Load column `j` of A (signed, zero-padded to `m_pad`) into `buf`
+    /// and FWHT it in place.
+    fn fwht_col(&self, a: &Mat, j: usize, buf: &mut [f64]) {
+        for i in 0..self.m_pad {
+            buf[i] = if i < self.m { self.signs[i] * a[(i, j)] } else { 0.0 };
+        }
+        Self::fwht(buf);
+    }
 }
 
 impl SketchOp for Srht {
@@ -94,19 +103,47 @@ impl SketchOp for Srht {
         assert_eq!(a.rows(), self.m);
         let n = a.cols();
         let scale = self.scale();
-        let mut out = Mat::zeros(self.d, n);
-        // Process column blocks: for each column j of A, FWHT the signed,
-        // padded column once, then gather the sampled rows. Column-major
-        // access of A is strided; buffer a block of columns at a time to
-        // amortize (simple per-column loop is fine at our sizes).
-        let mut buf = vec![0.0f64; self.m_pad];
+        let d = self.d;
+        let mut out = Mat::zeros(d, n);
+        // Each column j of A is independent: FWHT the signed, padded
+        // column once, then gather the sampled rows. The FWHT buffer
+        // comes from the per-worker scratch, so parked pool workers (and
+        // the serial path) allocate it once, not once per call.
+        let nt = crate::linalg::num_threads().min(n.max(1));
+        if nt <= 1 || self.m_pad * n < 1 << 16 {
+            crate::linalg::with_scratch(self.m_pad, |buf| {
+                for j in 0..n {
+                    self.fwht_col(a, j, buf);
+                    for (r, &src) in self.rows.iter().enumerate() {
+                        out[(r, j)] = scale * buf[src as usize];
+                    }
+                }
+            });
+            return out;
+        }
+        // Pooled: tasks own disjoint column blocks, each writing its own
+        // contiguous column-major slab (row-major `out` interleaves
+        // columns, so tasks cannot write it directly); one serial
+        // transpose-scatter at the end. Per-column arithmetic is
+        // identical in both paths, so the result is bit-identical across
+        // `RANNTUNE_THREADS` values.
+        let cols_per = n.div_ceil(nt);
+        let mut temp = vec![0.0f64; n * d];
+        crate::linalg::run_chunks(&mut temp, cols_per * d, &|t, slab| {
+            let j0 = t * cols_per;
+            crate::linalg::with_scratch(self.m_pad, |buf| {
+                for (jj, dst) in slab.chunks_mut(d).enumerate() {
+                    self.fwht_col(a, j0 + jj, buf);
+                    for (r, &src) in self.rows.iter().enumerate() {
+                        dst[r] = scale * buf[src as usize];
+                    }
+                }
+            });
+        });
         for j in 0..n {
-            for i in 0..self.m_pad {
-                buf[i] = if i < self.m { self.signs[i] * a[(i, j)] } else { 0.0 };
-            }
-            Self::fwht(&mut buf);
-            for (r, &src) in self.rows.iter().enumerate() {
-                out[(r, j)] = scale * buf[src as usize];
+            let col = &temp[j * d..(j + 1) * d];
+            for (r, &v) in col.iter().enumerate() {
+                out[(r, j)] = v;
             }
         }
         out

@@ -1,0 +1,194 @@
+//! Kernel-level determinism contract: every dense hot path produces
+//! **bit-identical** results for every `RANNTUNE_THREADS` value.
+//!
+//! The campaign layer promises byte-identical kill/resume results, so the
+//! threading runtime must guarantee determinism at the kernel level, not
+//! just the evaluator level: band splits must never change an output
+//! element's accumulation order, and cross-band reductions (`gemv_t`)
+//! must use a tree shape fixed by the problem size alone.
+//!
+//! The pool width is latched once per process (`RANNTUNE_THREADS` is read
+//! by a `OnceLock`), so cross-thread-count comparison is necessarily
+//! cross-process: the parent test re-executes this test binary with
+//! `RANNTUNE_THREADS ∈ {1, 2, 8}`, each child prints an FNV fingerprint
+//! of every kernel's raw result bits, and the parent asserts all three
+//! transcripts are identical.
+
+use std::collections::BTreeMap;
+use std::process::Command;
+
+use ranntune::linalg::{gemm, gemv, gemv_t, Mat};
+use ranntune::rng::Rng;
+use ranntune::sap::{solve_sap, SapAlgorithm, SapConfig};
+use ranntune::sketch::{LessUniform, SketchKind, SketchOp, Sjlt, Srht};
+
+/// Env var marking a child process (value ignored).
+const CHILD_ENV: &str = "RANNTUNE_KDET_CHILD";
+/// Line prefix the parent greps out of the child's libtest output.
+const PREFIX: &str = "KDET";
+
+/// FNV-1a over a stream of little-endian u64 words.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn push(&mut self, word: u64) {
+        for byte in word.to_le_bytes() {
+            self.0 ^= byte as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    fn push_f64s(&mut self, xs: &[f64]) {
+        for x in xs {
+            self.push(x.to_bits());
+        }
+    }
+}
+
+fn emit_slice(name: &str, xs: &[f64]) {
+    let mut h = Fnv::new();
+    h.push(xs.len() as u64);
+    h.push_f64s(xs);
+    println!("{PREFIX} {name} {:016x}", h.0);
+}
+
+fn emit_mat(name: &str, m: &Mat) {
+    emit_slice(name, m.as_slice());
+}
+
+/// The kernel suite a child runs. Everything is seeded, so any
+/// cross-child difference can only come from the thread count.
+fn child_suite() {
+    // --- gemm band-split edge shapes: m = 1, nt−1, nt, nt+1 for every
+    // tested worker count, with k·n large enough to cross the serial
+    // cutoff (m·n·k ≥ 64³ for all m ≥ 1).
+    let mut rng = Rng::new(1);
+    let b_wide = Mat::from_fn(512, 512, |_, _| rng.normal());
+    for m in [1usize, 2, 3, 7, 8, 9] {
+        let a = Mat::from_fn(m, 512, |_, _| rng.normal());
+        emit_mat(&format!("gemm_edge_m{m}"), &gemm(&a, &b_wide));
+    }
+    // n = 1 edge: row bands each own a single-column slice.
+    let a_tall1 = Mat::from_fn(2048, 256, |_, _| rng.normal());
+    let b_col = Mat::from_fn(256, 1, |_, _| rng.normal());
+    emit_mat("gemm_edge_n1", &gemm(&a_tall1, &b_col));
+    // A bulk shape well above the cutoff.
+    let a_bulk = Mat::from_fn(300, 80, |_, _| rng.normal());
+    let b_bulk = Mat::from_fn(80, 64, |_, _| rng.normal());
+    emit_mat("gemm_bulk", &gemm(&a_bulk, &b_bulk));
+
+    // --- gemv / gemv_t at threaded scale (m·n = 2^20 crosses the cutoff).
+    let mut rng = Rng::new(2);
+    let a_tall = Mat::from_fn(4096, 256, |_, _| rng.normal());
+    let x: Vec<f64> = (0..256).map(|_| rng.normal()).collect();
+    emit_slice("gemv_threaded", &gemv(&a_tall, &x));
+    let u: Vec<f64> = (0..4096).map(|_| rng.normal()).collect();
+    emit_slice("gemv_t_chunked", &gemv_t(&a_tall, &u));
+    // gemv_t chunk-boundary edge: m one past a chunk multiple.
+    let a_edge = Mat::from_fn(513, 2048, |_, _| rng.normal());
+    let u_edge: Vec<f64> = (0..513).map(|_| rng.normal()).collect();
+    emit_slice("gemv_t_edge_m513", &gemv_t(&a_edge, &u_edge));
+
+    // --- sketch applies, threaded shapes plus band edges (d = 1, nt±1).
+    let mut rng = Rng::new(3);
+    let a_sk = Mat::from_fn(2000, 64, |_, _| rng.normal());
+    for d in [1usize, 7, 9, 300] {
+        let s = Sjlt::sample(d, 2000, 8, &mut rng.fork(d as u64));
+        emit_mat(&format!("sjlt_d{d}"), &s.apply(&a_sk));
+    }
+    let a_lu = Mat::from_fn(800, 64, |_, _| rng.normal());
+    for d in [9usize, 512] {
+        let s = LessUniform::sample(d, 800, 8, &mut rng.fork(1000 + d as u64));
+        emit_mat(&format!("less_uniform_d{d}"), &s.apply(&a_lu));
+    }
+    let a_srht = Mat::from_fn(1500, 48, |_, _| rng.normal());
+    let s = Srht::sample(64, 1500, &mut rng.fork(7));
+    emit_mat("srht_d64", &s.apply(&a_srht));
+
+    // --- full SAP solves: the end-to-end pipeline over the kernels above
+    // (timings are excluded — only the solution and iteration count are
+    // deterministic by contract).
+    let mut rng = Rng::new(4);
+    let a = Mat::from_fn(4000, 16, |_, _| rng.normal());
+    let b: Vec<f64> = (0..4000).map(|_| rng.normal()).collect();
+    for (label, sketch, alg) in [
+        ("sjlt_qr", SketchKind::Sjlt, SapAlgorithm::QrLsqr),
+        ("less_svd", SketchKind::LessUniform, SapAlgorithm::SvdLsqr),
+    ] {
+        let cfg = SapConfig {
+            algorithm: alg,
+            sketch,
+            sampling_factor: 4.0,
+            vec_nnz: 8,
+            safety_factor: 1,
+        };
+        let sol = solve_sap(&a, &b, &cfg, &mut Rng::new(11));
+        let mut h = Fnv::new();
+        h.push(sol.stats.iterations as u64);
+        h.push_f64s(&sol.x);
+        println!("{PREFIX} solve_sap_{label} {:016x}", h.0);
+    }
+}
+
+/// Child entry point: a no-op under a normal `cargo test` run; emits the
+/// fingerprint transcript when spawned by the parent test below.
+#[test]
+fn child_emit() {
+    if std::env::var(CHILD_ENV).is_err() {
+        return;
+    }
+    child_suite();
+}
+
+fn run_child(threads: &str) -> BTreeMap<String, String> {
+    let exe = std::env::current_exe().expect("current_exe");
+    let out = Command::new(&exe)
+        .args(["child_emit", "--exact", "--nocapture", "--test-threads", "1"])
+        .env(CHILD_ENV, "1")
+        .env("RANNTUNE_THREADS", threads)
+        .output()
+        .expect("spawn determinism child");
+    assert!(
+        out.status.success(),
+        "child (RANNTUNE_THREADS={threads}) failed:\n{}\n{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let mut map = BTreeMap::new();
+    for line in String::from_utf8_lossy(&out.stdout).lines() {
+        let mut parts = line.split_whitespace();
+        if parts.next() == Some(PREFIX) {
+            let name = parts.next().expect("fingerprint name").to_string();
+            let hash = parts.next().expect("fingerprint hash").to_string();
+            map.insert(name, hash);
+        }
+    }
+    assert!(!map.is_empty(), "child (RANNTUNE_THREADS={threads}) emitted no fingerprints");
+    map
+}
+
+#[test]
+fn kernels_bit_identical_across_thread_counts() {
+    if std::env::var(CHILD_ENV).is_ok() {
+        return; // never recurse from a child
+    }
+    let baseline = run_child("1");
+    for threads in ["2", "8"] {
+        let other = run_child(threads);
+        assert_eq!(
+            baseline.keys().collect::<Vec<_>>(),
+            other.keys().collect::<Vec<_>>(),
+            "fingerprint sets differ at RANNTUNE_THREADS={threads}"
+        );
+        for (name, hash) in &baseline {
+            assert_eq!(
+                hash, &other[name],
+                "{name}: bits differ between RANNTUNE_THREADS=1 and {threads}"
+            );
+        }
+    }
+}

@@ -4,6 +4,9 @@
 //! Invariants covered:
 //! * linear algebra: QR/SVD reconstruction and orthogonality on random
 //!   shapes; triangular-solve inverse property;
+//! * worker pool: randomized-shape kernel stress (degenerate/zero dims),
+//!   more tasks than workers, nested evaluator×kernel oversubscription
+//!   never deadlocking;
 //! * sketching: sparse apply == dense apply; plan extraction consistency;
 //! * SAP: presolve residual rule; convergence to the direct solution;
 //! * objective/tuners: penalty monotonicity, best-so-far monotonicity,
@@ -64,6 +67,99 @@ fn triangular_solve_inverts_multiplication() {
             assert!((x[i] - x2[i]).abs() < 1e-8, "component {i}");
         }
     });
+}
+
+#[test]
+fn pool_stress_random_shapes_including_zero_dims() {
+    // Randomized shapes spanning the serial/pooled cutoffs, including
+    // zero-row / zero-col matrices — none may panic, deadlock, or diverge
+    // from the naive reference.
+    forall(Config::cases(24), |rng| {
+        let m = rng.below(70);
+        let k = rng.below(50);
+        let n = rng.below(40);
+        let a = Mat::from_fn(m, k, |_, _| rng.normal());
+        let b = Mat::from_fn(k, n, |_, _| rng.normal());
+        let c = gemm(&a, &b);
+        let c0 = Mat::from_fn(m, n, |i, j| (0..k).map(|p| a[(i, p)] * b[(p, j)]).sum());
+        let mut d = c.clone();
+        d.axpy(-1.0, &c0);
+        assert!(d.max_abs() < 1e-9, "gemm m={m} k={k} n={n}: {}", d.max_abs());
+
+        let x: Vec<f64> = (0..k).map(|_| rng.normal()).collect();
+        let y = gemv(&a, &x);
+        assert_eq!(y.len(), m);
+        for i in 0..m {
+            assert!((y[i] - c0_dot(&a, &x, i)).abs() < 1e-9, "gemv row {i}");
+        }
+
+        let u: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let z = ranntune::linalg::gemv_t(&a, &u);
+        assert_eq!(z.len(), k);
+        for j in 0..k {
+            let expect: f64 = (0..m).map(|i| a[(i, j)] * u[i]).sum();
+            assert!((z[j] - expect).abs() < 1e-8, "gemv_t col {j}");
+        }
+    });
+}
+
+fn c0_dot(a: &Mat, x: &[f64], i: usize) -> f64 {
+    a.row(i).iter().zip(x.iter()).map(|(p, q)| p * q).sum()
+}
+
+#[test]
+fn pool_more_tasks_than_workers_with_nested_kernels_does_not_deadlock() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    // Far more tasks than any plausible worker count, each task itself
+    // calling pooled kernels (the evaluator×kernel nesting shape): the
+    // nested calls must fall back inline rather than waiting for pool
+    // workers that are all busy — i.e. this test terminating *is* the
+    // assertion.
+    let total = AtomicUsize::new(0);
+    ranntune::linalg::pool().run(64, &|t| {
+        let m = 40 + t % 7;
+        let a = Mat::from_fn(m, 8, |i, j| (i + 2 * j + t) as f64 * 0.01);
+        let b = Mat::from_fn(8, 5, |i, j| (i * 5 + j) as f64 * 0.01);
+        let c = gemm(&a, &b);
+        total.fetch_add(c.rows(), Ordering::Relaxed);
+    });
+    let expect: usize = (0..64).map(|t| 40 + t % 7).sum();
+    assert_eq!(total.load(Ordering::Relaxed), expect);
+}
+
+#[test]
+fn oversubscribed_nested_evaluator_batches_complete() {
+    use ranntune::objective::{Constants, EvalContext, EvalJob, Evaluator, ParallelEvaluator};
+    use ranntune::data::{generate_synthetic, SyntheticKind};
+    // Evaluator batches launched from *inside* a pool job, each asking
+    // for far more threads than exist: every layer must degrade to inline
+    // execution and finish with the serial evaluator's exact results.
+    let mut rng = ranntune::rng::Rng::new(1);
+    let problem = generate_synthetic(SyntheticKind::GA, 150, 8, &mut rng);
+    let x_star = ranntune::linalg::lstsq_qr(&problem.a, &problem.b);
+    let constants = Constants { num_repeats: 2, ..Constants::default() };
+    let ctx =
+        EvalContext { problem: &problem, constants: &constants, x_star: &x_star, base_seed: 3 };
+    let jobs = [
+        EvalJob { trial_index: 0, config: SapConfig::reference() },
+        EvalJob { trial_index: 1, config: SapConfig::reference() },
+    ];
+    let serial = ranntune::objective::SerialEvaluator.run_batch(&ctx, &jobs);
+    let results: Vec<Vec<_>> = {
+        let slots: Vec<std::sync::Mutex<Vec<ranntune::objective::RawEval>>> =
+            (0..4).map(|_| std::sync::Mutex::new(Vec::new())).collect();
+        ranntune::linalg::pool().run(4, &|t| {
+            let out = ParallelEvaluator::new(64).run_batch(&ctx, &jobs);
+            *slots[t].lock().unwrap() = out;
+        });
+        slots.into_iter().map(|s| s.into_inner().unwrap()).collect()
+    };
+    for batch in results {
+        assert_eq!(batch.len(), serial.len());
+        for (p, s) in batch.iter().zip(serial.iter()) {
+            assert_eq!(p.arfe.to_bits(), s.arfe.to_bits());
+        }
+    }
 }
 
 #[test]
