@@ -11,8 +11,10 @@
 //!   1. declare a three-regime problem suite (Localization-sim §5.4,
 //!      plus GA / T3 for the coherence sweep of §5.1);
 //!   2. run the LHSMDU / TPE / GPTune / TLA tuner set over every problem
-//!      via `ranntune::campaign` (sharded per-cell histories, checkpoint
-//!      after every cell — kill it and rerun to resume);
+//!      via `ranntune::campaign` — each cell driven by a `TuningSession`
+//!      with per-trial-batch checkpoints (kill it at any point and rerun
+//!      to resume, mid-cell included; set `RANNTUNE_MAX_TRIALS=N` to
+//!      time-box a visit to N trials);
 //!   3. generate the per-regime winner report + convergence curves, and
 //!      reproduce the paper's headline metric ("TLA needs Nx fewer
 //!      evaluations than random search to match its final quality");
@@ -61,6 +63,9 @@ fn main() {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(1);
+    // Time-boxing: stop after N new trials this visit (the in-flight cell
+    // pauses mid-run; rerunning resumes it from its session checkpoint).
+    spec.max_trials = std::env::var("RANNTUNE_MAX_TRIALS").ok().and_then(|v| v.parse().ok());
     let n_cells = spec.cells().len();
     println!(
         "== end-to-end campaign: {} problems x {} tuners = {} cells, {}x{} budget {} ==\n",
@@ -85,6 +90,15 @@ fn main() {
         "[campaign] {} cell(s) executed, {} resumed from checkpoint\n",
         outcome.completed_now, outcome.skipped
     );
+    if !outcome.finished {
+        println!(
+            "campaign paused at {}/{} completed cells (trial quota hit); \
+             rerun this example to resume mid-cell",
+            outcome.results.len(),
+            n_cells
+        );
+        return;
+    }
 
     // ---- 3. report + headline metric.
     let report = write_report(&campaign.spec, &outcome.results, out).expect("report");

@@ -4,15 +4,16 @@
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! Generates a GA-family synthetic problem (§5.1 of the paper), runs the
-//! GP-surrogate tuner for 25 evaluations, and prints the best SAP
-//! configuration found together with its speedup over the paper's "safe"
-//! reference configuration.
+//! Generates a GA-family synthetic problem (§5.1 of the paper), drives
+//! the GP-surrogate tuner through a `TuningSession` for 25 evaluations
+//! (streaming per-trial progress through an observer), and prints the
+//! best SAP configuration found together with its speedup over the
+//! paper's "safe" reference configuration.
 
 use ranntune::data::{generate_synthetic, SyntheticKind};
-use ranntune::objective::{Constants, Objective, ParamSpace, TuningTask};
+use ranntune::objective::{Constants, Objective, ParamSpace, TuningSession, TuningTask};
 use ranntune::rng::Rng;
-use ranntune::tuners::{GpBoTuner, Tuner};
+use ranntune::tuners::GpBoTuner;
 
 fn main() {
     // 1. A least-squares problem: rows ~ multivariate normal with AR(1)
@@ -31,9 +32,22 @@ fn main() {
     let mut objective = Objective::new(task, /*seed=*/ 42);
     println!("direct solver reference: {:.4}s", objective.direct_secs);
 
-    // 3. Tune.
+    // 3. Tune: the session owns the loop (reference evaluation, budget,
+    //    stopping); the tuner only proposes and observes. The observer
+    //    streams progress as each trial lands.
     let mut tuner = GpBoTuner::new(10);
-    let history = tuner.run(&mut objective, 25, &mut Rng::new(1));
+    let history = TuningSession::new(&mut objective, &mut tuner, 25, 1)
+        .on_trial(|t| {
+            println!(
+                "  {:<44} {:.5}s{}",
+                t.config.label(),
+                t.wall_clock,
+                if t.failed { "  FAILED" } else { "" }
+            )
+        })
+        .run()
+        .expect("session")
+        .history;
 
     // 4. Report.
     let reference = &history.trials()[0];

@@ -9,10 +9,10 @@
 //! S1 (main effect) and ST (total effect) indices per tuning parameter.
 
 use ranntune::data::{generate_synthetic, SyntheticKind};
-use ranntune::objective::{Constants, Objective, ParamSpace, TuningTask};
+use ranntune::objective::{run_tuner, Constants, Objective, ParamSpace, TuningTask};
 use ranntune::rng::Rng;
 use ranntune::sensitivity::{analyze_trials, PARAM_NAMES};
-use ranntune::tuners::{LhsmduTuner, Tuner};
+use ranntune::tuners::LhsmduTuner;
 
 fn main() {
     let mut rng = Rng::new(5);
@@ -27,7 +27,7 @@ fn main() {
     };
     let mut objective = Objective::new(task, 0);
     let mut sampler = LhsmduTuner::new();
-    let history = sampler.run(&mut objective, 100, &mut Rng::new(1));
+    let history = run_tuner(&mut objective, &mut sampler, 100, 1);
     println!(
         "collected {} samples ({}% failed)",
         history.len(),

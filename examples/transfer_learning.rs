@@ -12,9 +12,9 @@
 use ranntune::cli::figures::collect_source;
 use ranntune::data::{generate_realworld, RealWorldKind};
 use ranntune::db::HistoryDb;
-use ranntune::objective::{Constants, Objective, ParamSpace, TuningTask};
+use ranntune::objective::{run_tuner, Constants, Objective, ParamSpace, TuningTask};
 use ranntune::rng::Rng;
-use ranntune::tuners::{LhsmduTuner, TlaTuner, Tuner};
+use ranntune::tuners::{LhsmduTuner, TlaTuner};
 
 fn main() {
     let constants = Constants { num_repeats: 3, ..Constants::default() };
@@ -65,14 +65,14 @@ fn main() {
         },
         1,
     );
-    let h_tla = tla.run(&mut obj_tla, budget, &mut Rng::new(2));
+    let h_tla = run_tuner(&mut obj_tla, &mut tla, budget, 2);
 
     let mut random = LhsmduTuner::new();
     let mut obj_rnd = Objective::new(
         TuningTask { problem: make_target(), space: ParamSpace::paper(), constants },
         1,
     );
-    let h_rnd = random.run(&mut obj_rnd, budget, &mut Rng::new(2));
+    let h_rnd = run_tuner(&mut obj_rnd, &mut random, budget, 2);
 
     // --- Compare: evaluations needed by TLA to beat random search's final.
     let rnd_final = *h_rnd.best_so_far().last().unwrap();

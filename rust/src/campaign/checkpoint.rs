@@ -6,10 +6,13 @@
 //! atomic write-to-temp-then-rename, so a kill at any instant leaves
 //! either the previous or the next consistent state, never a torn file.
 //! Together with per-cell seed derivation ([`crate::campaign::Cell::seed`])
-//! this gives the resume guarantee: re-running a killed campaign skips
-//! completed cells (their shards are already on disk) and re-executes the
-//! rest with identical streams, producing a merged database bit-identical
-//! to an uninterrupted run under deterministic timing.
+//! and the per-cell session checkpoints (see
+//! [`crate::objective::TuningSession`]) this gives the resume guarantee:
+//! re-running a killed campaign skips completed cells (their shards are
+//! already on disk), resumes the interrupted cell **mid-run** from its
+//! session checkpoint, and re-executes the rest with identical streams,
+//! producing a merged database bit-identical to an uninterrupted run
+//! under deterministic timing.
 
 use crate::json::Json;
 use std::collections::BTreeSet;

@@ -16,16 +16,19 @@
 //!    trial budget, plus execution knobs (evaluation threads, cell
 //!    workers, [`crate::objective::TimingMode`]).
 //! 2. [`Campaign`] (`runner`) — drives every cell (problem × tuner)
-//!    through the existing tuning stack, sharding each cell's history
-//!    into its own [`crate::db::HistoryDb`] file and checkpointing after
-//!    every completed cell. Cells are independent, so `cell_workers > 1`
-//!    fans whole cells out across threads while `eval_threads > 1`
-//!    parallelizes the repeats × batch grid *within* a cell.
+//!    through a [`crate::objective::TuningSession`], sharding each cell's
+//!    history into its own [`crate::db::HistoryDb`] file. Cells are
+//!    independent, so `cell_workers > 1` fans whole cells out across
+//!    threads while `eval_threads > 1` parallelizes the repeats × batch
+//!    grid *within* a cell.
 //! 3. [`Checkpoint`] (`checkpoint`) — a small JSON file recording the
-//!    campaign fingerprint and the completed cell set. A killed campaign
-//!    restarts at the first incomplete cell; because every cell's seeds
-//!    derive only from the spec, a resumed run's merged database is
-//!    *bit-identical* to an uninterrupted one under
+//!    campaign fingerprint and the completed cell set, plus one
+//!    session checkpoint per in-flight cell. Resume granularity is a
+//!    **trial batch**, not a whole cell: a killed campaign restores
+//!    completed cells from their shards and resumes the interrupted cell
+//!    mid-run; because every cell's seeds derive only from the spec and
+//!    session checkpoints are bit-exact, a resumed run's merged database
+//!    is *bit-identical* to an uninterrupted one under
 //!    [`crate::objective::TimingMode::Modeled`].
 //! 4. `report` — per-regime winner tables, best-so-far / ARFE-vs-trials
 //!    curves, and `vec_nnz` clamp warnings, in the same markdown + CSV

@@ -6,10 +6,17 @@
 //!
 //! ```text
 //! out_dir/
-//!   checkpoint.json        # fingerprint + completed cell set (atomic)
-//!   shards/<cell_id>.json  # one HistoryDb per completed cell
-//!   merged.json            # fold of all shards, written when finished
+//!   checkpoint.json         # fingerprint + completed cell set (atomic)
+//!   shards/<cell_id>.json   # one HistoryDb per completed cell
+//!   sessions/<cell_id>.json # mid-run session checkpoint of the cell
+//!                           # currently executing (deleted on commit)
+//!   merged.json             # fold of all shards, written when finished
 //! ```
+//!
+//! Each cell is driven by a [`crate::objective::TuningSession`], which
+//! checkpoints after **every trial batch** — so the campaign's resume
+//! granularity is a trial batch, not a whole cell: a campaign killed
+//! mid-cell resumes that cell mid-run from `sessions/<cell_id>.json`.
 //!
 //! Concurrency: cells are mutually independent (each derives its RNG
 //! streams from the spec alone), so `cell_workers > 1` runs whole cells
@@ -29,9 +36,9 @@ use super::{CampaignSpec, Cell, Checkpoint};
 use crate::data::ProblemSpec;
 use crate::db::HistoryDb;
 use crate::objective::{
-    Constants, History, Objective, ParallelEvaluator, ParamSpace, TuningTask,
+    Constants, History, Objective, ParallelEvaluator, ParamSpace, SessionOutcome,
+    TuningSession, TuningTask,
 };
-use crate::rng::Rng;
 use crate::tuners::SourceSample;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -95,6 +102,12 @@ impl Campaign {
     /// Path of a cell's shard database.
     pub fn shard_path(&self, cell: &Cell) -> PathBuf {
         self.out_dir.join("shards").join(format!("{}.json", cell.id()))
+    }
+
+    /// Path of a cell's mid-run session checkpoint (exists only while the
+    /// cell is incomplete).
+    pub fn session_path(&self, cell: &Cell) -> PathBuf {
+        self.out_dir.join("sessions").join(format!("{}.json", cell.id()))
     }
 
     /// Path of the merged database.
@@ -217,14 +230,36 @@ impl Campaign {
         if to_run.is_empty() {
             return Ok(0);
         }
-        let workers = self.spec.cell_workers.max(1).min(to_run.len());
+        // A per-invocation trial quota serializes execution: the
+        // countdown is shared across cells.
+        let workers = if self.spec.max_trials.is_some() {
+            1
+        } else {
+            self.spec.cell_workers.max(1).min(to_run.len())
+        };
         if workers == 1 {
+            let mut quota = self.spec.max_trials;
+            let mut done = 0;
             for &i in to_run {
                 let cell = &cells[i];
-                let history = run_cell(&self.spec, cell)?;
-                self.commit_cell(cell, &history, ckpt)?;
+                let outcome =
+                    run_cell(&self.spec, cell, &self.session_path(cell), quota)?;
+                let finished = outcome.stop.is_finished();
+                if finished {
+                    self.commit_cell(cell, &outcome.history, ckpt)?;
+                    done += 1;
+                }
+                if let Some(q) = quota.as_mut() {
+                    *q = q.saturating_sub(outcome.new_evaluations);
+                    if *q == 0 {
+                        return Ok(done);
+                    }
+                }
+                if !finished {
+                    return Ok(done);
+                }
             }
-            return Ok(to_run.len());
+            return Ok(done);
         }
 
         // Fan whole cells out: workers pull indices from a shared cursor;
@@ -241,10 +276,10 @@ impl Campaign {
                         break;
                     }
                     let cell = &cells[to_run[u]];
-                    match run_cell(&self.spec, cell) {
-                        Ok(history) => {
+                    match run_cell(&self.spec, cell, &self.session_path(cell), None) {
+                        Ok(outcome) => {
                             let mut c = shared.lock().unwrap();
-                            match self.commit_cell(cell, &history, &mut c) {
+                            match self.commit_cell(cell, &outcome.history, &mut c) {
                                 Ok(()) => {
                                     done.fetch_add(1, Ordering::Relaxed);
                                 }
@@ -264,8 +299,9 @@ impl Campaign {
         Ok(done.load(Ordering::Relaxed))
     }
 
-    /// Persist one completed cell: shard first, checkpoint second, so a
-    /// kill between the two re-runs the cell instead of losing it.
+    /// Persist one completed cell: shard first, checkpoint second, session
+    /// checkpoint removal last — a kill between any two steps re-runs (or
+    /// mid-run-resumes) the cell instead of losing it.
     fn commit_cell(
         &self,
         cell: &Cell,
@@ -276,14 +312,23 @@ impl Campaign {
         shard.record(&cell.id(), cell.problem.m, cell.problem.n, history);
         shard.save(&self.shard_path(cell)).map_err(|e| e.to_string())?;
         ckpt.mark(&cell.id());
-        ckpt.save(&self.checkpoint_path()).map_err(|e| e.to_string())
+        ckpt.save(&self.checkpoint_path()).map_err(|e| e.to_string())?;
+        std::fs::remove_file(self.session_path(cell)).ok();
+        Ok(())
     }
 }
 
 /// Execute one cell: build the problem, assemble the objective (with the
 /// spec's evaluator and timing mode), collect TLA source data if needed,
-/// and run the tuner for the budget.
-fn run_cell(spec: &CampaignSpec, cell: &Cell) -> Result<History, String> {
+/// and drive a [`TuningSession`] for the budget — checkpointing to
+/// `session_path` after every trial batch, resuming from it if it exists,
+/// and pausing once `quota` new trials have run (when set).
+fn run_cell(
+    spec: &CampaignSpec,
+    cell: &Cell,
+    session_path: &Path,
+    quota: Option<usize>,
+) -> Result<SessionOutcome, String> {
     let problem = cell.problem.build()?;
     let constants = Constants {
         num_repeats: spec.num_repeats,
@@ -304,8 +349,13 @@ fn run_cell(spec: &CampaignSpec, cell: &Cell) -> Result<History, String> {
         obj.set_evaluator(Box::new(ParallelEvaluator::new(spec.eval_threads)));
     }
     let mut tuner = cell.tuner.make(constants.num_pilots, source);
-    let history = tuner.run(&mut obj, spec.budget, &mut Rng::new(cell_seed ^ TUNER_SEED_SALT));
-    Ok(history)
+    let mut session =
+        TuningSession::new(&mut obj, tuner.as_mut(), spec.budget, cell_seed ^ TUNER_SEED_SALT)
+            .checkpoint_to(session_path);
+    if let Some(q) = quota {
+        session = session.pause_after(q);
+    }
+    session.run()
 }
 
 /// Pre-collect TLA source samples on a down-scaled sibling of the
@@ -403,6 +453,39 @@ mod tests {
         spec.max_cells = None;
         let err = Campaign::new(spec, &dir).run().unwrap_err();
         assert!(err.contains("different campaign spec"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn max_trials_pauses_mid_cell_and_resume_completes() {
+        // TPE proposes one config per ask after its startup batch, so a
+        // budget past the startup phase gives the quota a batch boundary
+        // to pause at *inside* the cell.
+        let suite = vec![builtin_suite("smoke").unwrap()[0].shrunk(2)];
+        let mut spec = CampaignSpec::new("midcell", suite, vec![TunerKind::Tpe], 14);
+        spec.num_repeats = 1;
+        spec.timing = TimingMode::Modeled;
+        let dir = tmp_dir("midcell");
+        let _ = std::fs::remove_dir_all(&dir);
+
+        // First visit: 12 new trials < budget 14 ⇒ the (only) cell pauses
+        // mid-run; nothing committed, but its session checkpoint exists.
+        let mut boxed = spec.clone();
+        boxed.max_trials = Some(12);
+        let campaign = Campaign::new(boxed, &dir);
+        let first = campaign.run().unwrap();
+        assert!(!first.finished);
+        assert_eq!(first.completed_now, 0);
+        let cell = campaign.spec.cells()[0].clone();
+        assert!(campaign.session_path(&cell).exists());
+
+        // Unbounded revisit: resumes the paused cell mid-run and finishes;
+        // the session checkpoint is cleaned up on commit.
+        let full = Campaign::new(spec, &dir).run().unwrap();
+        assert!(full.finished);
+        assert_eq!(full.completed_now, 1);
+        assert_eq!(full.results[0].history.len(), 14);
+        assert!(!campaign.session_path(&cell).exists());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -136,6 +136,12 @@ pub struct CampaignSpec {
     /// Stop after completing this many *new* cells (kill simulation /
     /// time-boxed runs); `None` runs to the end. Not fingerprinted.
     pub max_cells: Option<usize>,
+    /// Stop after this many *new* trials across the whole invocation —
+    /// the trial-granular kill simulation: an interrupted cell pauses
+    /// **mid-run** via its session checkpoint and resumes bit-identically
+    /// under [`TimingMode::Modeled`]. Forces serial cell execution (the
+    /// countdown is shared across cells). Not fingerprinted.
+    pub max_trials: Option<usize>,
 }
 
 impl CampaignSpec {
@@ -159,6 +165,7 @@ impl CampaignSpec {
             eval_threads: 1,
             cell_workers: 1,
             max_cells: None,
+            max_trials: None,
         }
     }
 
@@ -261,6 +268,7 @@ mod tests {
         b.eval_threads = 8;
         b.cell_workers = 4;
         b.max_cells = Some(1);
+        b.max_trials = Some(7);
         assert_eq!(base.fingerprint(), b.fingerprint());
         let mut c = base.clone();
         c.budget += 1;

@@ -7,7 +7,8 @@
 use crate::bench_harness::write_result;
 use crate::data::{coherence, condition_number, Problem, RealWorldKind, SyntheticKind};
 use crate::objective::{
-    category_index, category_label, Constants, Objective, ParamSpace, TuningTask, N_CATEGORIES,
+    category_index, category_label, run_tuner, Constants, Objective, ParamSpace, TuningTask,
+    N_CATEGORIES,
 };
 use crate::rng::Rng;
 use crate::sap::{SapAlgorithm, SapConfig};
@@ -130,7 +131,7 @@ pub fn collect_source(
 ) -> Vec<SourceSample> {
     let mut obj = objective_for(problem, constants, seed);
     let mut tuner = LhsmduTuner::new();
-    let h = tuner.run(&mut obj, n_samples, &mut Rng::new(seed ^ 0xabcd));
+    let h = run_tuner(&mut obj, &mut tuner, n_samples, seed ^ 0xabcd);
     let ref_value = h.trials()[0].value.max(1e-12);
     h.trials()
         .iter()
@@ -251,7 +252,7 @@ fn grid_landscape(
     let budget = grid.len() + 1;
     let mut obj = objective_for(problem, scale.constants(), 9);
     let mut tuner = GridTuner::new(grid);
-    let h = tuner.run(&mut obj, budget, &mut Rng::new(1));
+    let h = run_tuner(&mut obj, &mut tuner, budget, 1);
 
     // Reference wall-clock (trial 0) for the "safe config is k× slower"
     // headline.
@@ -403,7 +404,7 @@ pub fn tuner_suite(scale: &FigScale, dataset: &str) -> Vec<SuiteRun> {
         for mut tuner in tuners {
             let problem = scale.problem(dataset, 100); // same task every run
             let mut obj = objective_for(problem, scale.constants(), seed);
-            let h = tuner.run(&mut obj, scale.budget, &mut Rng::new(seed * 7919 + 13));
+            let h = run_tuner(&mut obj, tuner.as_mut(), scale.budget, seed * 7919 + 13);
             runs.push(SuiteRun { tuner: tuner.name().to_string(), seed, history: h });
         }
     }
@@ -518,7 +519,7 @@ pub fn fig6(scale: &FigScale, out: &Path) -> String {
                 let mut tuner = TlaTuner::new(source.clone());
                 let problem = scale.problem(target, 100);
                 let mut obj = objective_for(problem, scale.constants(), seed);
-                let h = tuner.run(&mut obj, scale.budget, &mut Rng::new(seed + 31));
+                let h = run_tuner(&mut obj, &mut tuner, scale.budget, seed + 31);
                 finals.push(*h.best_so_far().last().unwrap());
             }
             rows.push(vec![
@@ -565,7 +566,7 @@ pub fn fig7(scale: &FigScale, out: &Path) -> String {
                 let mut tuner = TlaTuner::with_mode(source.clone(), mode);
                 let problem = scale.problem(ds, 100);
                 let mut obj = objective_for(problem, scale.constants(), seed);
-                let h = tuner.run(&mut obj, scale.budget, &mut Rng::new(seed + 77));
+                let h = run_tuner(&mut obj, &mut tuner, scale.budget, seed + 77);
                 finals.push(*h.best_so_far().last().unwrap());
                 acc.push(h.total_eval_time(scale.repeats));
             }
@@ -601,7 +602,7 @@ pub fn table5(scale: &FigScale, out: &Path) -> String {
         let problem = scale.problem(kind.name(), 100);
         let mut obj = objective_for(problem, scale.constants(), 21);
         let mut tuner = LhsmduTuner::new();
-        let h = tuner.run(&mut obj, scale.source_samples.max(30), &mut Rng::new(5));
+        let h = run_tuner(&mut obj, &mut tuner, scale.source_samples.max(30), 5);
         let mut rng = Rng::new(99);
         let res = analyze_trials(h.trials(), &ParamSpace::paper(), scale.saltelli, &mut rng);
         for (i, idx) in res.indices.iter().enumerate() {
@@ -666,7 +667,7 @@ pub fn fig10(scale: &FigScale, out: &Path) -> String {
                 let mut tuner = make();
                 let problem = scale.problem(ds, 100);
                 let mut obj = objective_for(problem, constants.clone(), seed);
-                let h = tuner.run(&mut obj, scale.budget, &mut Rng::new(seed + 4));
+                let h = run_tuner(&mut obj, tuner.as_mut(), scale.budget, seed + 4);
                 finals.push(*h.best_so_far().last().unwrap());
                 failure_rates.push(h.failure_rate());
             }

@@ -91,7 +91,7 @@ ranntune — surrogate-based autotuning for randomized sketching (SAP least squa
 USAGE: ranntune <command> [--flags]
 
 COMMANDS
-  tune         run one tuner on one dataset
+  tune         run one tuning session on one dataset
                --data GA|T5|T3|T1|Musk|CIFAR10|Localization
                --tuner lhsmdu|tpe|gptune|tla   --budget N   --m M --n N
                --seed S  --repeats R  --db results/db.json (record history)
@@ -99,6 +99,13 @@ COMMANDS
                --eval-threads N (run batched evaluations on N threads;
                per-trial ARFE is deterministic, but tuners that adapt to
                measured wall-clock may propose different sequences)
+               --target V (stop once objective <= V)
+               --patience K (stop after K evals without improvement)
+               --max-seconds S (stop once accumulated eval time >= S)
+               --warm-db path (seed the tuner from prior trials of the
+               same dataset name before the first proposal)
+               --session-ckpt path (atomic mid-run checkpoint; rerunning
+               the same command resumes the session from it)
   campaign     sweep a problem suite across a tuner set in one resumable
                run (shards + checkpoint + per-regime report)
                --suite smoke|synthetic|realworld|full
@@ -108,6 +115,8 @@ COMMANDS
                --cell-workers K (run K cells concurrently)
                --shrink F (divide every problem's m,n by F)
                --max-cells C (stop after C new cells; rerun to resume)
+               --max-trials T (stop after T new trials — pauses the
+               in-flight cell mid-run; rerun to resume it mid-cell)
                --modeled-time (deterministic flop-model wall clock:
                kill/resume runs are bit-identical)
   grid         semi-exhaustive grid landscape (Fig. 4/8 ground truth)

@@ -10,8 +10,7 @@
 
 use crate::json::Json;
 use crate::objective::{History, ParamSpace};
-use crate::sap::{SapAlgorithm, SapConfig};
-use crate::sketch::SketchKind;
+use crate::sap::SapConfig;
 use crate::tuners::SourceSample;
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -239,47 +238,30 @@ impl HistoryDb {
     }
 }
 
+/// One encoder for the trial JSON shape: delegate to
+/// [`crate::objective::Trial::to_json`] (object keys are sorted, so the
+/// serialized bytes are identical either way).
 fn trial_to_json(t: &TrialRecord) -> Json {
-    Json::obj(vec![
-        ("alg", Json::Str(t.config.algorithm.name().into())),
-        ("sketch", Json::Str(t.config.sketch.name().into())),
-        ("sf", Json::Num(t.config.sampling_factor)),
-        ("nnz", Json::Num(t.config.vec_nnz as f64)),
-        ("safety", Json::Num(t.config.safety_factor as f64)),
-        ("wall_clock", Json::Num(t.wall_clock)),
-        ("arfe", Json::Num(t.arfe)),
-        ("value", Json::Num(t.value)),
-        ("failed", Json::Bool(t.failed)),
-        ("ref", Json::Bool(t.is_reference)),
-    ])
+    crate::objective::Trial {
+        config: t.config,
+        wall_clock: t.wall_clock,
+        arfe: t.arfe,
+        value: t.value,
+        failed: t.failed,
+        is_reference: t.is_reference,
+    }
+    .to_json()
 }
 
 fn trial_from_json(v: &Json) -> Result<TrialRecord, String> {
-    let alg = v
-        .get("alg")
-        .and_then(|x| x.as_str())
-        .and_then(SapAlgorithm::parse)
-        .ok_or("bad alg")?;
-    let sketch = v
-        .get("sketch")
-        .and_then(|x| x.as_str())
-        .and_then(SketchKind::parse)
-        .ok_or("bad sketch")?;
-    let f = |k: &str| v.get(k).and_then(|x| x.as_f64()).ok_or(format!("bad {k}"));
-    let config = SapConfig {
-        algorithm: alg,
-        sketch,
-        sampling_factor: f("sf")?,
-        vec_nnz: f("nnz")? as usize,
-        safety_factor: f("safety")? as u32,
-    };
+    let t = crate::objective::Trial::from_json(v)?;
     Ok(TrialRecord {
-        config,
-        wall_clock: f("wall_clock")?,
-        arfe: f("arfe")?,
-        value: f("value")?,
-        failed: v.get("failed").and_then(|x| x.as_bool()).unwrap_or(false),
-        is_reference: v.get("ref").and_then(|x| x.as_bool()).unwrap_or(false),
+        config: t.config,
+        wall_clock: t.wall_clock,
+        arfe: t.arfe,
+        value: t.value,
+        failed: t.failed,
+        is_reference: t.is_reference,
     })
 }
 

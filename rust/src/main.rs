@@ -9,7 +9,8 @@ use ranntune::cli::{figures, make_problem, Args, USAGE};
 use ranntune::data::{coherence, condition_number};
 use ranntune::db::HistoryDb;
 use ranntune::objective::{
-    Constants, Objective, ParallelEvaluator, ParamSpace, TimingMode, TuningTask,
+    run_tuner, Constants, History, Objective, ParallelEvaluator, ParamSpace, StopRule,
+    TimingMode, TuningSession, TuningTask,
 };
 use ranntune::rng::Rng;
 use ranntune::runtime::{default_artifacts_dir, SapEngine};
@@ -117,7 +118,61 @@ fn cmd_tune(args: &Args) -> i32 {
         println!("evaluation engine: parallel ({eval_threads} threads)");
     }
     println!("direct solver: {:.4}s", obj.direct_secs);
-    let history = tuner.run(&mut obj, budget, &mut Rng::new(seed));
+
+    // Assemble the session: budget + optional composable stop rules,
+    // warm-start data, and a mid-run checkpoint path.
+    let mut session = TuningSession::new(&mut obj, tuner.as_mut(), budget, seed);
+    if let Some(target) = args.get("target") {
+        match target.parse::<f64>() {
+            Ok(v) => session = session.stop_when(StopRule::TargetValue(v)),
+            Err(_) => {
+                eprintln!("invalid --target {target:?} (expected a number)");
+                return 2;
+            }
+        }
+    }
+    if let Some(p) = args.get("patience") {
+        match p.parse::<usize>() {
+            Ok(v) => session = session.stop_when(StopRule::Patience(v)),
+            Err(_) => {
+                eprintln!("invalid --patience {p:?} (expected an evaluation count)");
+                return 2;
+            }
+        }
+    }
+    if let Some(secs) = args.get("max-seconds") {
+        match secs.parse::<f64>() {
+            Ok(v) => session = session.stop_when(StopRule::WallClockBudget(v)),
+            Err(_) => {
+                eprintln!("invalid --max-seconds {secs:?} (expected seconds)");
+                return 2;
+            }
+        }
+    }
+    if let Some(path) = args.get("warm-db") {
+        let warm_db = HistoryDb::load_or_default(Path::new(path));
+        session = session.warm_start_from_db(&warm_db, &name);
+    }
+    if let Some(ckpt) = args.get("session-ckpt") {
+        session = session.checkpoint_to(Path::new(ckpt));
+    }
+    let outcome = match session.run() {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("session failed: {e}");
+            return 1;
+        }
+    };
+    if outcome.resumed {
+        println!("resumed from session checkpoint ({} trials restored)", outcome.evaluations
+            .saturating_sub(outcome.new_evaluations));
+    }
+    let history = outcome.history;
+    println!("stopped: {:?} after {} evaluations", outcome.stop, outcome.evaluations);
+    if history.is_empty() {
+        println!("no evaluations recorded (budget 0)");
+        return 0;
+    }
 
     for (i, t) in history.trials().iter().enumerate() {
         println!(
@@ -138,13 +193,28 @@ fn cmd_tune(args: &Args) -> i32 {
     );
 
     if let Some(db_path) = args.get("db") {
-        let mut db = HistoryDb::load_or_default(Path::new(db_path));
-        db.record(&name, m, n, &history);
-        if let Err(e) = db.save(Path::new(db_path)) {
-            eprintln!("db save failed: {e}");
-            return 1;
+        if outcome.new_evaluations == 0 {
+            // A resumed-and-already-complete session: recording again
+            // would append a duplicate task record on every rerun.
+            println!("no new trials this run; skipping --db record");
+        } else {
+            // Record only the trials this invocation evaluated: trials
+            // restored from a session checkpoint were recorded by the
+            // invocation that ran them, so re-recording them would
+            // double-weight the task in the crowd database.
+            let restored = history.len() - outcome.new_evaluations;
+            let mut tail = History::new();
+            for t in &history.trials()[restored..] {
+                tail.push(t.clone());
+            }
+            let mut db = HistoryDb::load_or_default(Path::new(db_path));
+            db.record(&name, m, n, &tail);
+            if let Err(e) = db.save(Path::new(db_path)) {
+                eprintln!("db save failed: {e}");
+                return 1;
+            }
+            println!("recorded {} new trials into {db_path}", tail.len());
         }
-        println!("recorded {} trials into {db_path}", history.len());
     }
     0
 }
@@ -189,6 +259,9 @@ fn cmd_campaign(args: &Args) -> i32 {
     }
     if args.has("max-cells") {
         spec.max_cells = Some(args.get_usize("max-cells", 1));
+    }
+    if args.has("max-trials") {
+        spec.max_trials = Some(args.get_usize("max-trials", 1));
     }
 
     let out = PathBuf::from(args.get("out").unwrap_or("results/campaign"));
@@ -281,7 +354,7 @@ fn cmd_sensitivity(args: &Args) -> i32 {
         obj.set_evaluator(Box::new(ParallelEvaluator::new(eval_threads)));
     }
     let mut tuner = LhsmduTuner::new();
-    let h = tuner.run(&mut obj, samples, &mut Rng::new(3));
+    let h = run_tuner(&mut obj, &mut tuner, samples, 3);
     let mut rng = Rng::new(9);
     let res = analyze_trials(h.trials(), &ParamSpace::paper(), saltelli, &mut rng);
     println!("\n{:<18} {:>14} {:>14}", "parameter", "S1 (conf)", "ST (conf)");

@@ -2,7 +2,9 @@
 //! every Figure 5/6/7/9 panel (best-so-far vs number of evaluations and
 //! vs accumulated function-evaluation time).
 
-use crate::sap::SapConfig;
+use crate::json::Json;
+use crate::sap::{SapAlgorithm, SapConfig};
+use crate::sketch::SketchKind;
 
 /// One function evaluation of the objective.
 #[derive(Clone, Debug)]
@@ -20,6 +22,75 @@ pub struct Trial {
     pub failed: bool,
     /// Was this the ARFE_ref-defining reference evaluation?
     pub is_reference: bool,
+}
+
+/// Serialize a configuration into the flat key set (`alg`, `sketch`,
+/// `sf`, `nnz`, `safety`) shared by trial records and the session
+/// checkpoint's pending-batch queue.
+pub(crate) fn config_to_json(c: &SapConfig) -> Json {
+    Json::obj(vec![
+        ("alg", Json::Str(c.algorithm.name().into())),
+        ("sketch", Json::Str(c.sketch.name().into())),
+        ("sf", Json::Num(c.sampling_factor)),
+        ("nnz", Json::Num(c.vec_nnz as f64)),
+        ("safety", Json::Num(c.safety_factor as f64)),
+    ])
+}
+
+/// Parse the configuration keys written by [`config_to_json`] (the keys
+/// may be embedded in a larger object, as in a trial record).
+pub(crate) fn config_from_json(v: &Json) -> Result<SapConfig, String> {
+    let algorithm = v
+        .get("alg")
+        .and_then(|x| x.as_str())
+        .and_then(SapAlgorithm::parse)
+        .ok_or("config: bad alg")?;
+    let sketch = v
+        .get("sketch")
+        .and_then(|x| x.as_str())
+        .and_then(SketchKind::parse)
+        .ok_or("config: bad sketch")?;
+    let f = |k: &str| v.get(k).and_then(|x| x.as_f64()).ok_or(format!("config: bad {k}"));
+    Ok(SapConfig {
+        algorithm,
+        sketch,
+        sampling_factor: f("sf")?,
+        vec_nnz: f("nnz")? as usize,
+        safety_factor: f("safety")? as u32,
+    })
+}
+
+impl Trial {
+    /// Serialize to the same JSON shape the [`crate::db`] trial records
+    /// use (which delegate here, so there is exactly one encoder). Float
+    /// fields round-trip bit-exactly (the JSON writer emits
+    /// shortest-round-trip decimals), which the session checkpoint relies
+    /// on for byte-identical kill/resume.
+    pub fn to_json(&self) -> Json {
+        let mut m = match config_to_json(&self.config) {
+            Json::Obj(m) => m,
+            _ => unreachable!("config_to_json returns an object"),
+        };
+        m.insert("wall_clock".into(), Json::Num(self.wall_clock));
+        m.insert("arfe".into(), Json::Num(self.arfe));
+        m.insert("value".into(), Json::Num(self.value));
+        m.insert("failed".into(), Json::Bool(self.failed));
+        m.insert("ref".into(), Json::Bool(self.is_reference));
+        Json::Obj(m)
+    }
+
+    /// Parse a trial serialized by [`Trial::to_json`].
+    pub fn from_json(v: &Json) -> Result<Trial, String> {
+        let f = |k: &str| v.get(k).and_then(|x| x.as_f64()).ok_or(format!("trial: bad {k}"));
+        Ok(Trial {
+            config: config_from_json(v)?,
+            wall_clock: f("wall_clock")?,
+            arfe: f("arfe")?,
+            value: f("value")?,
+            failed: v.get("failed").and_then(|x| x.as_bool()).unwrap_or(false),
+            is_reference: v.get("ref").and_then(|x| x.as_bool()).unwrap_or(false),
+        })
+    }
 }
 
 /// An ordered record of evaluations (one tuner run).
@@ -169,6 +240,32 @@ mod tests {
         assert!((pairs[1].0 - 15.0).abs() < 1e-12);
         assert_eq!(pairs[1].1, 1.0);
         assert!((h.total_eval_time(5) - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trial_json_round_trip_is_bit_exact() {
+        let t = Trial {
+            config: SapConfig {
+                sampling_factor: 3.337_419_283_4,
+                vec_nnz: 17,
+                safety_factor: 3,
+                ..SapConfig::reference()
+            },
+            wall_clock: 0.123_456_789_012_345_6,
+            arfe: 3.071e-11,
+            value: 0.246_913_578_024_691_2,
+            failed: true,
+            is_reference: false,
+        };
+        let text = t.to_json().to_string();
+        let back = Trial::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.config, t.config);
+        assert_eq!(back.wall_clock.to_bits(), t.wall_clock.to_bits());
+        assert_eq!(back.arfe.to_bits(), t.arfe.to_bits());
+        assert_eq!(back.value.to_bits(), t.value.to_bits());
+        assert_eq!(back.failed, t.failed);
+        assert_eq!(back.is_reference, t.is_reference);
+        assert!(Trial::from_json(&Json::parse("{}").unwrap()).is_err());
     }
 
     #[test]

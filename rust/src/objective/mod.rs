@@ -6,7 +6,7 @@
 //! * [`TuningTask`] — a problem plus its space and constant parameters
 //!   (`num_pilots`, `num_repeats`, `ref_config`, `penalty_factor`,
 //!   `allowance_factor`).
-//! * [`Objective`] — the black-box function the tuners call: queues
+//! * [`Objective`] — the black-box function under tuning: queues
 //!   configurations (ask), executes them through an [`Evaluator`] (tell),
 //!   averages wall-clock time and ARFE over `num_repeats` solver seeds,
 //!   validates against `allowance_factor × ARFE_ref`, and penalizes
@@ -15,15 +15,25 @@
 //!   batch ([`Objective::evaluate_batch`]) — with a [`ParallelEvaluator`]
 //!   the batch's `num_repeats × batch_len` solver runs execute
 //!   concurrently with deterministic per-trial RNG streams.
-//! * [`History`]/[`Trial`] — the per-evaluation record every tuner
+//! * [`TuningSession`] (`session`) — the single driver loop that runs any
+//!   ask/tell [`crate::tuners::Tuner`] against an objective: reference
+//!   evaluation first, composable [`StopRule`]s, warm-starting from a
+//!   [`crate::db::HistoryDb`], per-trial observers, and atomic mid-run
+//!   checkpoints (resumable bit-identically under
+//!   [`TimingMode::Modeled`]).
+//! * [`History`]/[`Trial`] — the per-evaluation record every session
 //!   produces; also the unit stored in the crowd database.
 
 mod evaluator;
 mod history;
+pub mod session;
 mod space;
 
 pub use evaluator::*;
 pub use history::*;
+pub use session::{
+    run_tuner, SessionCtx, SessionOutcome, StopReason, StopRule, TuningSession,
+};
 pub use space::*;
 
 use crate::data::Problem;
@@ -156,9 +166,36 @@ impl Objective {
         self.history.len()
     }
 
+    /// Restore a previously recorded history onto a **fresh** objective
+    /// (the session-checkpoint resume path): re-establishes ARFE_ref from
+    /// the reference trial and appends every trial, so subsequent
+    /// evaluations continue with the correct trial indices — the
+    /// per-(trial, repeat) solver RNG streams of [`repeat_rng`] depend on
+    /// them, which is what makes a resumed session bit-identical to an
+    /// uninterrupted one under [`TimingMode::Modeled`].
+    ///
+    /// Errors if this objective has already evaluated anything, or if a
+    /// non-empty restore carries no reference trial (ARFE_ref would be
+    /// undefined for the evaluations that follow).
+    pub fn restore_trials(&mut self, trials: &[Trial]) -> Result<(), String> {
+        if !self.history.is_empty() || self.arfe_ref.is_some() {
+            return Err("restore_trials requires a fresh objective".into());
+        }
+        for t in trials {
+            if t.is_reference && self.arfe_ref.is_none() {
+                self.arfe_ref = Some(t.arfe.max(f64::MIN_POSITIVE));
+            }
+            self.history.push(t.clone());
+        }
+        if !trials.is_empty() && self.arfe_ref.is_none() {
+            return Err("restored history has no reference trial".into());
+        }
+        Ok(())
+    }
+
     /// Evaluate the reference configuration, establishing ARFE_ref
-    /// (idempotent; every tuner calls this first, per Figure 3 /
-    /// Algorithm 4.1 line 1).
+    /// (idempotent; the [`TuningSession`] driver calls this first, per
+    /// Figure 3 / Algorithm 4.1 line 1).
     pub fn evaluate_reference(&mut self) -> Trial {
         if self.arfe_ref.is_some() {
             // Already established — return the recorded trial.

@@ -1,0 +1,865 @@
+//! The tuning-session driver: the **single** loop that runs any
+//! [`Tuner`] against an [`Objective`].
+//!
+//! This is the inversion-of-control counterpart of the ask/tell tuner
+//! trait ([`crate::tuners::Tuner`]): the session owns everything the
+//! tuners used to own privately — reference evaluation, budget
+//! accounting, stopping, history access — so every capability below
+//! works uniformly for all five tuners:
+//!
+//! * **Stop rules** ([`StopRule`]) compose: an evaluation budget (always
+//!   present), a wall-clock budget over accumulated evaluation seconds
+//!   (modeled or measured, per [`super::TimingMode`]), a target objective
+//!   value, and a no-improvement patience window.
+//! * **Warm starting** injects prior trials (e.g. from a
+//!   [`crate::db::HistoryDb`] shard) into the tuner via `tell` before the
+//!   loop starts — surrogate tuners then skip that much of their random
+//!   startup phase. Warm trials never enter the session's own history, so
+//!   recorded results stay a pure function of the objective's seeds.
+//! * **Observers** receive every trial as it is recorded (streaming
+//!   progress, live dashboards, log sinks).
+//! * **Checkpoints**: after the reference and after every evaluated
+//!   proposal batch, the session atomically persists its full dynamic
+//!   state — recorded trials (bit-exact), the tuner snapshot
+//!   ([`crate::tuners::TunerState`]), the proposal-RNG state, and any
+//!   quota-split batch remainder. A
+//!   killed session rerun with the same inputs resumes **mid-run** and,
+//!   under [`super::TimingMode::Modeled`], produces a history
+//!   bit-identical to an uninterrupted run. The campaign layer builds its
+//!   mid-cell resume guarantee directly on this.
+
+use super::history::{config_from_json, config_to_json};
+use super::{History, Objective, ParamSpace, Trial};
+use crate::json::Json;
+use crate::rng::Rng;
+use crate::sap::SapConfig;
+use crate::tuners::{Proposal, Tuner, TunerState};
+use std::path::{Path, PathBuf};
+
+/// Read-only view of the session a tuner sees when asked for proposals.
+pub struct SessionCtx<'a> {
+    /// The search space of the task under tuning.
+    pub space: &'a ParamSpace,
+    /// Total evaluation budget of the session (reference included).
+    pub budget: usize,
+    /// Evaluations recorded so far (reference included).
+    pub evaluated: usize,
+    /// Evaluations left before the budget is exhausted. Tuners must
+    /// return [`Proposal::Done`] when this is 0; proposal batches longer
+    /// than this are truncated by the driver.
+    pub remaining: usize,
+    /// The session's evaluation history so far (trial 0 is the
+    /// reference). Tuners should rely on [`Tuner::tell`] for their own
+    /// state — warm-start trials appear only there, never here.
+    pub history: &'a History,
+}
+
+/// A composable stopping rule, checked between proposal batches.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StopRule {
+    /// Stop once this many evaluations have been recorded (the reference
+    /// counts as the first, matching the paper's accounting). The
+    /// tightest `EvalBudget` of a session defines `remaining`.
+    EvalBudget(usize),
+    /// Stop once accumulated function-evaluation time — `num_repeats ×
+    /// mean wall-clock` summed over trials, the paper's Figure 5b x-axis
+    /// — reaches this many seconds. Deterministic under
+    /// [`super::TimingMode::Modeled`].
+    WallClockBudget(f64),
+    /// Stop once any trial's objective value is at or below this target.
+    TargetValue(f64),
+    /// Stop after this many consecutive evaluations without improving the
+    /// best objective value.
+    Patience(usize),
+}
+
+/// Why a session's loop ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    /// The evaluation budget is exhausted (the normal completion).
+    BudgetExhausted,
+    /// The tuner returned [`Proposal::Done`] (e.g. grid exhausted).
+    TunerDone,
+    /// A [`StopRule::TargetValue`] was reached.
+    TargetReached,
+    /// A [`StopRule::Patience`] window elapsed without improvement.
+    PatienceExhausted,
+    /// A [`StopRule::WallClockBudget`] was exceeded.
+    WallClockExceeded,
+    /// The per-visit quota ([`TuningSession::pause_after`]) was hit; the
+    /// session is incomplete and can be resumed from its checkpoint.
+    Paused,
+}
+
+impl StopReason {
+    /// Did the session run to a genuine completion (as opposed to
+    /// pausing mid-run for a later resume)?
+    pub fn is_finished(&self) -> bool {
+        *self != StopReason::Paused
+    }
+}
+
+/// What a [`TuningSession::run`] invocation produced.
+pub struct SessionOutcome {
+    /// The full evaluation history (trial 0 is the reference), including
+    /// trials restored from a checkpoint.
+    pub history: History,
+    /// Why the loop ended.
+    pub stop: StopReason,
+    /// Total recorded evaluations (== `history.len()`).
+    pub evaluations: usize,
+    /// Evaluations executed by *this* invocation (excludes restored
+    /// trials).
+    pub new_evaluations: usize,
+    /// True if the session restored mid-run state from a checkpoint.
+    pub resumed: bool,
+}
+
+/// The driver: wires a [`Tuner`] state machine to an [`Objective`] and
+/// runs the ask → evaluate → tell loop under composable stop rules.
+///
+/// Construct with [`TuningSession::new`], chain the builder methods, and
+/// call [`TuningSession::run`].
+pub struct TuningSession<'a> {
+    objective: &'a mut Objective,
+    tuner: &'a mut dyn Tuner,
+    rules: Vec<StopRule>,
+    observers: Vec<Box<dyn FnMut(&Trial) + 'a>>,
+    warm: Vec<Trial>,
+    checkpoint: Option<PathBuf>,
+    seed: u64,
+    rng: Rng,
+    pause_quota: Option<usize>,
+    /// Remainder of a proposal batch split by the pause quota: evaluated
+    /// (without asking the tuner again) before the next `ask`, and
+    /// persisted in the checkpoint so a resumed session finishes the
+    /// batch exactly where the quota cut it.
+    pending: Vec<SapConfig>,
+    /// FNV digest of the problem's matrix data, folded into the
+    /// checkpoint fingerprint (computed once, when a checkpoint path is
+    /// configured).
+    problem_digest: Option<u64>,
+}
+
+impl<'a> TuningSession<'a> {
+    /// A session running `tuner` against `objective` for at most `budget`
+    /// evaluations (the reference counts as the first). `seed` drives the
+    /// tuner's proposal randomness — the objective's solver randomness is
+    /// separate (its own seed), exactly as before the redesign.
+    pub fn new(
+        objective: &'a mut Objective,
+        tuner: &'a mut dyn Tuner,
+        budget: usize,
+        seed: u64,
+    ) -> TuningSession<'a> {
+        TuningSession {
+            objective,
+            tuner,
+            rules: vec![StopRule::EvalBudget(budget)],
+            observers: Vec::new(),
+            warm: Vec::new(),
+            checkpoint: None,
+            seed,
+            rng: Rng::new(seed),
+            pause_quota: None,
+            pending: Vec::new(),
+            problem_digest: None,
+        }
+    }
+
+    /// Add a stop rule (checked between proposal batches, after the one
+    /// always-present evaluation budget).
+    pub fn stop_when(mut self, rule: StopRule) -> TuningSession<'a> {
+        self.rules.push(rule);
+        self
+    }
+
+    /// Inject prior trials into the tuner (via `tell`) before the loop
+    /// starts. They inform the surrogate models and shrink random startup
+    /// phases, but are **not** recorded in the session history and do not
+    /// consume budget.
+    pub fn warm_start(mut self, trials: &[Trial]) -> TuningSession<'a> {
+        self.warm.extend_from_slice(trials);
+        self
+    }
+
+    /// Warm-start from every record of `task_name` (any shape) in a
+    /// history database — the crowd-data reuse workflow of §4.3.
+    pub fn warm_start_from_db(
+        self,
+        db: &crate::db::HistoryDb,
+        task_name: &str,
+    ) -> TuningSession<'a> {
+        let mut trials = Vec::new();
+        for rec in db.tasks_named(task_name) {
+            trials.extend(rec.to_history().trials().iter().cloned());
+        }
+        self.warm_start(&trials)
+    }
+
+    /// Register a per-trial observer, called in evaluation order as each
+    /// trial is recorded (reference included; restored trials are not
+    /// re-announced).
+    pub fn on_trial(mut self, f: impl FnMut(&Trial) + 'a) -> TuningSession<'a> {
+        self.observers.push(Box::new(f));
+        self
+    }
+
+    /// Persist the session state to `path` after the reference and after
+    /// every evaluated batch (atomic write-to-temp-then-rename). If the
+    /// file already exists when [`TuningSession::run`] starts, the
+    /// session **resumes** from it: the objective must be fresh, the
+    /// tuner freshly constructed with the same static arguments, and the
+    /// checkpoint's fingerprint must match. The file is left in place on
+    /// completion (callers like the campaign runner delete it once the
+    /// result is committed elsewhere).
+    pub fn checkpoint_to(mut self, path: &Path) -> TuningSession<'a> {
+        self.problem_digest = Some(problem_digest(self.objective));
+        self.checkpoint = Some(path.to_path_buf());
+        self
+    }
+
+    /// Pause (with [`StopReason::Paused`]) after this many evaluations in
+    /// *this* invocation — the time-boxing / kill-simulation knob. The
+    /// quota is exact: a proposal batch that would overshoot it is split,
+    /// and the unevaluated remainder is carried in the checkpoint (trial
+    /// values depend only on trial indices, so splitting a batch never
+    /// changes recorded numbers). Combine with
+    /// [`TuningSession::checkpoint_to`] to resume later.
+    pub fn pause_after(mut self, evals: usize) -> TuningSession<'a> {
+        self.pause_quota = Some(evals);
+        self
+    }
+
+    /// The tightest evaluation budget among the stop rules.
+    fn eval_budget(&self) -> usize {
+        self.rules
+            .iter()
+            .filter_map(|r| match r {
+                StopRule::EvalBudget(n) => Some(*n),
+                _ => None,
+            })
+            .min()
+            .unwrap_or(usize::MAX)
+    }
+
+    /// Identity of the session for checkpoint compatibility: everything
+    /// that determines recorded numbers — including a digest of the
+    /// problem's actual matrix data, so two same-shaped problems (e.g.
+    /// different `--data-seed`s) can never silently share a checkpoint —
+    /// *except* budgets and stop rules (resuming with a larger budget is
+    /// the "give it more budget later" workflow; the shared prefix stays
+    /// identical).
+    fn fingerprint(&self) -> String {
+        let t = &self.objective.task;
+        format!(
+            "ranntune-session-v1;tuner={};seed={};problem={}:{}x{};data={:016x};repeats={};\
+             timing={:?};penalty={};allowance={}",
+            self.tuner.name(),
+            self.seed,
+            t.problem.name,
+            t.problem.m(),
+            t.problem.n(),
+            self.problem_digest.unwrap_or(0),
+            t.constants.num_repeats,
+            t.constants.timing,
+            t.constants.penalty_factor,
+            t.constants.allowance_factor,
+        )
+    }
+
+    /// Check the non-budget stop rules against the recorded history.
+    fn check_rules(&self) -> Option<StopReason> {
+        let h = self.objective.history();
+        let repeats = self.objective.task.constants.num_repeats.max(1);
+        for rule in &self.rules {
+            match rule {
+                StopRule::EvalBudget(_) => {} // handled via `remaining`
+                StopRule::WallClockBudget(secs) => {
+                    if h.total_eval_time(repeats) >= *secs {
+                        return Some(StopReason::WallClockExceeded);
+                    }
+                }
+                StopRule::TargetValue(target) => {
+                    if h.trials().iter().any(|t| t.value <= *target) {
+                        return Some(StopReason::TargetReached);
+                    }
+                }
+                StopRule::Patience(window) => {
+                    let best = h.best_so_far();
+                    if !best.is_empty() {
+                        let mut last_improve = 0;
+                        for i in 1..best.len() {
+                            if best[i] < best[i - 1] {
+                                last_improve = i;
+                            }
+                        }
+                        if best.len() - 1 - last_improve >= *window {
+                            return Some(StopReason::PatienceExhausted);
+                        }
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    fn notify(observers: &mut [Box<dyn FnMut(&Trial) + 'a>], trials: &[Trial]) {
+        for t in trials {
+            for obs in observers.iter_mut() {
+                obs(t);
+            }
+        }
+    }
+
+    /// Atomically persist trials + tuner snapshot + RNG state.
+    fn write_checkpoint(&self) -> Result<(), String> {
+        let Some(path) = &self.checkpoint else {
+            return Ok(());
+        };
+        let doc = Json::obj(vec![
+            ("format", Json::Str(CKPT_FORMAT.into())),
+            ("fingerprint", Json::Str(self.fingerprint())),
+            (
+                "rng",
+                Json::Arr(
+                    self.rng
+                        .state()
+                        .iter()
+                        .map(|s| Json::Str(format!("{s:016x}")))
+                        .collect(),
+                ),
+            ),
+            (
+                "trials",
+                Json::Arr(
+                    self.objective.history().trials().iter().map(Trial::to_json).collect(),
+                ),
+            ),
+            (
+                "pending",
+                Json::Arr(self.pending.iter().map(config_to_json).collect()),
+            ),
+            ("tuner", self.tuner.snapshot().to_json()),
+        ]);
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+        }
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, doc.to_string_pretty()).map_err(|e| e.to_string())?;
+        std::fs::rename(&tmp, path).map_err(|e| e.to_string())
+    }
+
+    /// Restore from an existing checkpoint file, if any. Returns whether
+    /// a resume happened; a checkpoint written by a different session
+    /// configuration is an error, not a silent restart.
+    fn try_resume(&mut self) -> Result<bool, String> {
+        let Some(path) = self.checkpoint.clone() else {
+            return Ok(false);
+        };
+        if !path.exists() {
+            return Ok(false);
+        }
+        let text = std::fs::read_to_string(&path).map_err(|e| e.to_string())?;
+        let doc = Json::parse(&text)?;
+        let fp = doc
+            .get("fingerprint")
+            .and_then(|x| x.as_str())
+            .ok_or("session checkpoint: missing fingerprint")?;
+        if fp != self.fingerprint() {
+            return Err(format!(
+                "session checkpoint at {} belongs to a different session \
+                 (found {fp:?}); delete it or use a fresh path",
+                path.display()
+            ));
+        }
+        let trials = doc
+            .get("trials")
+            .and_then(|x| x.as_arr())
+            .ok_or("session checkpoint: missing trials")?
+            .iter()
+            .map(Trial::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        self.objective.restore_trials(&trials)?;
+        self.pending = doc
+            .get("pending")
+            .and_then(|x| x.as_arr())
+            .unwrap_or(&[])
+            .iter()
+            .map(config_from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        let tuner_state = TunerState::from_json(
+            doc.get("tuner").ok_or("session checkpoint: missing tuner state")?,
+        )?;
+        self.tuner.restore(&tuner_state)?;
+        let rng_arr = doc
+            .get("rng")
+            .and_then(|x| x.as_arr())
+            .ok_or("session checkpoint: missing rng state")?;
+        if rng_arr.len() != 4 {
+            return Err("session checkpoint: rng state must have 4 words".into());
+        }
+        let mut state = [0u64; 4];
+        for (i, w) in rng_arr.iter().enumerate() {
+            let s = w.as_str().ok_or("session checkpoint: rng word is not a string")?;
+            state[i] = u64::from_str_radix(s, 16)
+                .map_err(|e| format!("session checkpoint: bad rng word: {e}"))?;
+        }
+        self.rng = Rng::from_state(state);
+        Ok(true)
+    }
+
+    /// Run the session to a stop (see [`StopReason`]).
+    ///
+    /// The reference configuration is evaluated first (Figure 3 /
+    /// Algorithm 4.1 line 1), then proposal batches flow through the
+    /// objective's [`super::Evaluator`] — serial or parallel, unchanged —
+    /// until a stop rule fires or the tuner is done. Errors only arise
+    /// from checkpoint I/O or an incompatible resume.
+    ///
+    /// ```
+    /// use ranntune::data::{generate_synthetic, SyntheticKind};
+    /// use ranntune::objective::{
+    ///     Constants, Objective, ParamSpace, StopReason, TuningSession, TuningTask,
+    /// };
+    /// use ranntune::rng::Rng;
+    /// use ranntune::tuners::LhsmduTuner;
+    ///
+    /// let mut rng = Rng::new(1);
+    /// let problem = generate_synthetic(SyntheticKind::GA, 250, 12, &mut rng);
+    /// let task = TuningTask {
+    ///     problem,
+    ///     space: ParamSpace::paper(),
+    ///     constants: Constants { num_repeats: 1, ..Constants::default() },
+    /// };
+    /// let mut objective = Objective::new(task, 0);
+    /// let mut tuner = LhsmduTuner::new();
+    ///
+    /// let mut seen = 0usize;
+    /// let outcome = TuningSession::new(&mut objective, &mut tuner, 4, 7)
+    ///     .on_trial(|_t| seen += 1)
+    ///     .run()
+    ///     .unwrap();
+    /// assert_eq!(outcome.stop, StopReason::BudgetExhausted);
+    /// assert_eq!(outcome.history.len(), 4);
+    /// assert!(outcome.history.trials()[0].is_reference);
+    /// assert_eq!(seen, 4); // the observer saw every trial
+    /// ```
+    pub fn run(mut self) -> Result<SessionOutcome, String> {
+        let budget = self.eval_budget();
+        let resumed = self.try_resume()?;
+        let mut new_evals = 0usize;
+
+        if !resumed {
+            // Warm-start: prior knowledge flows to the tuner only.
+            if !self.warm.is_empty() {
+                let warm = std::mem::take(&mut self.warm);
+                let ctx = SessionCtx {
+                    space: &self.objective.task.space,
+                    budget,
+                    evaluated: 0,
+                    remaining: budget,
+                    history: self.objective.history(),
+                };
+                self.tuner.tell(&ctx, &warm);
+            }
+            // Reference evaluation (line 1) — unless there is no budget
+            // for anything at all, or a zero pause quota forbids even it
+            // (the quota contract is exact, reference included).
+            let quota_allows_ref = self.pause_quota.map_or(true, |q| q > 0);
+            if budget > 0 && quota_allows_ref && self.objective.evaluations() == 0 {
+                let t = self.objective.evaluate_reference();
+                new_evals += 1;
+                Self::notify(&mut self.observers, std::slice::from_ref(&t));
+                let ctx = SessionCtx {
+                    space: &self.objective.task.space,
+                    budget,
+                    evaluated: 1,
+                    remaining: budget.saturating_sub(1),
+                    history: self.objective.history(),
+                };
+                self.tuner.tell(&ctx, std::slice::from_ref(&t));
+                self.write_checkpoint()?;
+            }
+        }
+
+        let stop = loop {
+            let evaluated = self.objective.evaluations();
+            let remaining = budget.saturating_sub(evaluated);
+            if remaining == 0 {
+                break StopReason::BudgetExhausted;
+            }
+            if let Some(reason) = self.check_rules() {
+                break reason;
+            }
+            if let Some(quota) = self.pause_quota {
+                if new_evals >= quota {
+                    break StopReason::Paused;
+                }
+            }
+
+            // A batch split by a previous quota cut is finished first —
+            // without consulting the tuner, which already proposed it.
+            let mut cfgs = if self.pending.is_empty() {
+                let proposal = {
+                    let ctx = SessionCtx {
+                        space: &self.objective.task.space,
+                        budget,
+                        evaluated,
+                        remaining,
+                        history: self.objective.history(),
+                    };
+                    self.tuner.ask(&ctx, &mut self.rng)
+                };
+                match proposal {
+                    Proposal::Done => break StopReason::TunerDone,
+                    Proposal::Configs(c) if c.is_empty() => break StopReason::TunerDone,
+                    Proposal::Configs(c) => c,
+                }
+            } else {
+                std::mem::take(&mut self.pending)
+            };
+            // Budget is never exceeded, even by an overshooting batch.
+            cfgs.truncate(remaining);
+            // The pause quota is exact: split the batch at the quota
+            // boundary and stash the remainder (trial values depend only
+            // on trial indices, so the split changes nothing recorded).
+            if let Some(quota) = self.pause_quota {
+                let allow = quota.saturating_sub(new_evals);
+                if cfgs.len() > allow {
+                    self.pending = cfgs.split_off(allow);
+                }
+            }
+
+            let trials = self.objective.evaluate_batch(&cfgs);
+            new_evals += trials.len();
+            Self::notify(&mut self.observers, &trials);
+            let ctx = SessionCtx {
+                space: &self.objective.task.space,
+                budget,
+                evaluated: self.objective.evaluations(),
+                remaining: budget.saturating_sub(self.objective.evaluations()),
+                history: self.objective.history(),
+            };
+            self.tuner.tell(&ctx, &trials);
+            self.write_checkpoint()?;
+        };
+
+        Ok(SessionOutcome {
+            history: self.objective.history().clone(),
+            stop,
+            evaluations: self.objective.evaluations(),
+            new_evaluations: new_evals,
+            resumed,
+        })
+    }
+}
+
+/// Format tag of the session checkpoint document.
+const CKPT_FORMAT: &str = "ranntune-session-ckpt-v1";
+
+/// FNV-1a over every matrix/vector entry of the objective's problem —
+/// the data-identity component of the checkpoint fingerprint. O(mn),
+/// computed once per checkpointed session (negligible next to the O(mn²)
+/// direct solve the objective already performed).
+fn problem_digest(objective: &Objective) -> u64 {
+    let p = &objective.task.problem;
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut mix = |bits: u64| {
+        h ^= bits;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    for i in 0..p.m() {
+        for &v in p.a.row(i) {
+            mix(v.to_bits());
+        }
+    }
+    for &v in &p.b {
+        mix(v.to_bits());
+    }
+    h
+}
+
+/// One-shot convenience wrapper: run `tuner` on `objective` for `budget`
+/// evaluations with proposal seed `seed` and return the history — the
+/// ask/tell equivalent of the old closed-loop `Tuner::run` call sites
+/// (figure drivers, benches, tests).
+pub fn run_tuner(
+    objective: &mut Objective,
+    tuner: &mut dyn Tuner,
+    budget: usize,
+    seed: u64,
+) -> History {
+    TuningSession::new(objective, tuner, budget, seed)
+        .run()
+        .expect("checkpoint-free session cannot fail")
+        .history
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate_synthetic, SyntheticKind};
+    use crate::db::HistoryDb;
+    use crate::objective::{Constants, TimingMode, TuningTask};
+    use crate::tuners::{GpBoTuner, LhsmduTuner, TpeTuner};
+
+    fn objective(seed: u64, timing: TimingMode) -> Objective {
+        let mut rng = Rng::new(seed);
+        let problem = generate_synthetic(SyntheticKind::GA, 300, 15, &mut rng);
+        let task = TuningTask {
+            problem,
+            space: ParamSpace::paper(),
+            constants: Constants {
+                num_repeats: 1,
+                num_pilots: 4,
+                timing,
+                ..Constants::default()
+            },
+        };
+        Objective::new(task, seed)
+    }
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("ranntune_session_{}_{}", tag, std::process::id()))
+    }
+
+    #[test]
+    fn target_value_rule_stops_early() {
+        let mut obj = objective(1, TimingMode::Modeled);
+        let mut tuner = LhsmduTuner::new();
+        // Any trial satisfies a huge target — stop right after the batch
+        // that contains it (the one-shot design means: after batch 1).
+        let out = TuningSession::new(&mut obj, &mut tuner, 30, 2)
+            .stop_when(StopRule::TargetValue(f64::INFINITY))
+            .run()
+            .unwrap();
+        assert_eq!(out.stop, StopReason::TargetReached);
+        assert!(out.history.len() < 30);
+    }
+
+    #[test]
+    fn wall_clock_budget_rule_stops() {
+        let mut obj = objective(2, TimingMode::Modeled);
+        let mut tuner = TpeTuner::new(2);
+        let out = TuningSession::new(&mut obj, &mut tuner, 40, 3)
+            .stop_when(StopRule::WallClockBudget(1e-12))
+            .run()
+            .unwrap();
+        assert_eq!(out.stop, StopReason::WallClockExceeded);
+        // The reference ran, then the rule fired before the first ask.
+        assert_eq!(out.history.len(), 1);
+    }
+
+    #[test]
+    fn patience_rule_stops_after_stale_window() {
+        let mut obj = objective(3, TimingMode::Modeled);
+        let mut tuner = TpeTuner::new(3);
+        let out = TuningSession::new(&mut obj, &mut tuner, 60, 4)
+            .stop_when(StopRule::Patience(5))
+            .run()
+            .unwrap();
+        assert!(
+            out.stop == StopReason::PatienceExhausted
+                || out.stop == StopReason::BudgetExhausted
+        );
+        if out.stop == StopReason::PatienceExhausted {
+            let best = out.history.best_so_far();
+            let tail = &best[best.len() - 6..];
+            assert!(
+                tail.windows(2).all(|w| w[1] >= w[0] - 1e-18),
+                "stopped while still improving"
+            );
+        }
+    }
+
+    #[test]
+    fn tightest_eval_budget_wins() {
+        let mut obj = objective(4, TimingMode::Modeled);
+        let mut tuner = LhsmduTuner::new();
+        let out = TuningSession::new(&mut obj, &mut tuner, 20, 5)
+            .stop_when(StopRule::EvalBudget(6))
+            .run()
+            .unwrap();
+        assert_eq!(out.history.len(), 6);
+    }
+
+    #[test]
+    fn observers_see_every_trial_in_order() {
+        let mut obj = objective(5, TimingMode::Modeled);
+        let mut tuner = LhsmduTuner::new();
+        let mut values = Vec::new();
+        let out = TuningSession::new(&mut obj, &mut tuner, 7, 6)
+            .on_trial(|t| values.push(t.value))
+            .run()
+            .unwrap();
+        assert_eq!(values.len(), 7);
+        for (v, t) in values.iter().zip(out.history.trials()) {
+            assert_eq!(v.to_bits(), t.value.to_bits());
+        }
+    }
+
+    #[test]
+    fn warm_start_trials_inform_but_are_not_recorded() {
+        // GP-BO with 4 pilots: a warm start of 3 prior trials shrinks the
+        // pilot batch to 1, so by evaluation 3 the session is already in
+        // the model phase. The history still starts at the reference.
+        let prior: Vec<Trial> = {
+            let mut src_obj = objective(77, TimingMode::Modeled);
+            let mut src_tuner = LhsmduTuner::new();
+            run_tuner(&mut src_obj, &mut src_tuner, 4, 1).trials().to_vec()
+        };
+        let mut obj = objective(6, TimingMode::Modeled);
+        let mut tuner = GpBoTuner::new(4);
+        let out = TuningSession::new(&mut obj, &mut tuner, 6, 7)
+            .warm_start(&prior[1..]) // 3 non-reference prior trials
+            .run()
+            .unwrap();
+        assert_eq!(out.history.len(), 6);
+        assert!(out.history.trials()[0].is_reference);
+        // No warm trial leaked into the recorded history: the session
+        // history is identical in length to budget and every recorded
+        // config was evaluated by *this* objective (values are modeled
+        // from this problem's iteration counts, all > 0).
+        assert!(out.history.trials().iter().all(|t| t.wall_clock > 0.0));
+    }
+
+    #[test]
+    fn warm_started_sessions_are_deterministic() {
+        // The warm-start satellite contract: prior trials from a
+        // HistoryDb shard shorten the startup phase, and the recorded
+        // (merged) history stays a pure function of seeds — two identical
+        // warm-started runs agree bitwise under modeled timing.
+        let mut db = HistoryDb::new();
+        let prior = {
+            let mut o = objective(50, TimingMode::Modeled);
+            let mut t = LhsmduTuner::new();
+            run_tuner(&mut o, &mut t, 6, 4)
+        };
+        db.record("GA", 300, 15, &prior);
+
+        let run_once = || {
+            let mut obj = objective(51, TimingMode::Modeled);
+            let mut tuner = TpeTuner::new(4);
+            TuningSession::new(&mut obj, &mut tuner, 8, 5)
+                .warm_start_from_db(&db, "GA")
+                .run()
+                .unwrap()
+                .history
+        };
+        let a = run_once();
+        let b = run_once();
+        assert_eq!(a.len(), 8);
+        for (x, y) in a.trials().iter().zip(b.trials()) {
+            assert_eq!(x.config, y.config);
+            assert_eq!(x.value.to_bits(), y.value.to_bits());
+            assert_eq!(x.wall_clock.to_bits(), y.wall_clock.to_bits());
+        }
+        // 5 warm observations (ref included) cover TPE's 4 startup
+        // samples entirely: after the reference the tuner proposes
+        // singles, so trial 1 is already model-phase — observable as the
+        // absence of a multi-config random batch: the session still
+        // records exactly `budget` trials, none of them warm imports.
+        assert!(a.trials().iter().all(|t| t.wall_clock > 0.0));
+    }
+
+    #[test]
+    fn kill_resume_is_bit_identical_under_modeled_timing() {
+        let dir = tmp("resume");
+        let _ = std::fs::remove_dir_all(&dir);
+        let ckpt = dir.join("sess.json");
+
+        // Uninterrupted run.
+        let mut obj_full = objective(8, TimingMode::Modeled);
+        let mut tuner_full = TpeTuner::new(3);
+        let full = run_tuner(&mut obj_full, &mut tuner_full, 10, 9);
+
+        // Paused after 4 evaluations, then resumed to completion.
+        let mut obj_a = objective(8, TimingMode::Modeled);
+        let mut tuner_a = TpeTuner::new(3);
+        let part = TuningSession::new(&mut obj_a, &mut tuner_a, 10, 9)
+            .checkpoint_to(&ckpt)
+            .pause_after(4)
+            .run()
+            .unwrap();
+        assert_eq!(part.stop, StopReason::Paused);
+        assert!(part.history.len() >= 4 && part.history.len() < 10);
+
+        let mut obj_b = objective(8, TimingMode::Modeled);
+        let mut tuner_b = TpeTuner::new(3);
+        let resumed = TuningSession::new(&mut obj_b, &mut tuner_b, 10, 9)
+            .checkpoint_to(&ckpt)
+            .run()
+            .unwrap();
+        assert!(resumed.resumed);
+        assert_eq!(resumed.stop, StopReason::BudgetExhausted);
+        assert_eq!(resumed.history.len(), full.len());
+        for (a, b) in full.trials().iter().zip(resumed.history.trials()) {
+            assert_eq!(a.config, b.config);
+            assert_eq!(a.value.to_bits(), b.value.to_bits());
+            assert_eq!(a.wall_clock.to_bits(), b.wall_clock.to_bits());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mismatched_checkpoint_is_refused() {
+        let dir = tmp("mismatch");
+        let _ = std::fs::remove_dir_all(&dir);
+        let ckpt = dir.join("sess.json");
+        let mut obj = objective(9, TimingMode::Modeled);
+        let mut tuner = LhsmduTuner::new();
+        TuningSession::new(&mut obj, &mut tuner, 3, 1)
+            .checkpoint_to(&ckpt)
+            .run()
+            .unwrap();
+        // Same path, different tuner kind → error, not a silent restart.
+        let mut obj2 = objective(9, TimingMode::Modeled);
+        let mut tuner2 = TpeTuner::new(2);
+        let err = TuningSession::new(&mut obj2, &mut tuner2, 3, 1)
+            .checkpoint_to(&ckpt)
+            .run()
+            .unwrap_err();
+        assert!(err.contains("different session"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn warm_start_from_db_reads_all_task_shapes() {
+        let mut db = HistoryDb::new();
+        let h = {
+            let mut o = objective(11, TimingMode::Modeled);
+            let mut t = LhsmduTuner::new();
+            run_tuner(&mut o, &mut t, 5, 2)
+        };
+        db.record("GA", 300, 15, &h);
+        let mut obj = objective(12, TimingMode::Modeled);
+        let mut tuner = TpeTuner::new(4);
+        // 4 prior non-ref trials + ref ⇒ startup fully covered: the
+        // session goes ref → model-phase singles, still filling budget.
+        let out = TuningSession::new(&mut obj, &mut tuner, 6, 3)
+            .warm_start_from_db(&db, "GA")
+            .run()
+            .unwrap();
+        assert_eq!(out.history.len(), 6);
+    }
+
+    #[test]
+    fn restore_trials_guards() {
+        let mut obj = objective(13, TimingMode::Modeled);
+        obj.evaluate_reference();
+        let trials = obj.history().trials().to_vec();
+        // Non-fresh objective refuses.
+        assert!(obj.restore_trials(&trials).is_err());
+        // Fresh objective accepts and re-establishes ARFE_ref.
+        let mut fresh = objective(13, TimingMode::Modeled);
+        fresh.restore_trials(&trials).unwrap();
+        assert_eq!(fresh.evaluations(), 1);
+        assert!(fresh.arfe_ref().is_some());
+        // A restore with no reference trial is refused.
+        let mut broken = objective(13, TimingMode::Modeled);
+        let mut t = trials.clone();
+        t[0].is_reference = false;
+        assert!(broken.restore_trials(&t).is_err());
+    }
+}

@@ -1,16 +1,19 @@
 //! GP-based Bayesian optimization — the paper's "GPTune" tuner (§4.2,
 //! Figure 3, no transfer learning).
 //!
-//! Pipeline: reference evaluation → `num_pilots` random samples → loop
-//! { fit GP on all (encoded-config, log-objective) pairs → maximize EI →
-//! evaluate }. The objective is modeled in log-space: SAP wall-clock times
-//! span an order of magnitude across the space (Fig. 4) and the ×penalty
-//! failure inflation is multiplicative, so log brings the surface much
-//! closer to GP-stationarity.
+//! Pipeline: reference evaluation (driven by the session) → one batch of
+//! `num_pilots` LHSMDU samples → loop { fit GP on all (encoded-config,
+//! log-objective) pairs → maximize EI → propose }. The objective is
+//! modeled in log-space: SAP wall-clock times span an order of magnitude
+//! across the space (Fig. 4) and the ×penalty failure inflation is
+//! multiplicative, so log brings the surface much closer to
+//! GP-stationarity. Warm-start trials told before the first `ask` count
+//! against the pilot budget.
 
-use super::Tuner;
+use super::{statejson, Proposal, Tuner, TunerState};
 use crate::gp::{propose_ei, GpModel};
-use crate::objective::{History, Objective, DIMS};
+use crate::json::Json;
+use crate::objective::{SessionCtx, Trial, DIMS};
 use crate::rng::Rng;
 
 /// The GP Bayesian-optimization tuner (paper label "GPTune").
@@ -18,12 +21,23 @@ pub struct GpBoTuner {
     num_pilots: usize,
     /// Nelder–Mead restarts per GP fit.
     fit_starts: usize,
+    /// Has the pilot batch been proposed yet?
+    pilots_issued: bool,
+    /// Observations: encoded configs and log-objective values.
+    xs: Vec<Vec<f64>>,
+    ys: Vec<f64>,
 }
 
 impl GpBoTuner {
     /// Tuner with `num_pilots` random samples before the surrogate loop.
     pub fn new(num_pilots: usize) -> GpBoTuner {
-        GpBoTuner { num_pilots, fit_starts: 3 }
+        GpBoTuner {
+            num_pilots,
+            fit_starts: 3,
+            pilots_issued: false,
+            xs: Vec::new(),
+            ys: Vec::new(),
+        }
     }
 }
 
@@ -32,65 +46,97 @@ impl Tuner for GpBoTuner {
         "GPTune"
     }
 
-    fn run(&mut self, objective: &mut Objective, budget: usize, rng: &mut Rng) -> History {
-        objective.evaluate_reference();
-        let space = objective.task.space.clone();
-
-        let mut xs: Vec<Vec<f64>> = Vec::new();
-        let mut ys: Vec<f64> = Vec::new();
-        let record =
-            |xs: &mut Vec<Vec<f64>>, ys: &mut Vec<f64>, t: &crate::objective::Trial| {
-                xs.push(space_encode(&space, t));
-                ys.push(t.value.max(1e-12).ln());
-            };
-        record(&mut xs, &mut ys, &objective.history().trials()[0]);
-
-        // Pilot phase (random LHS-like samples): the stratified design is
-        // independent of any observation, so submit it as one batch.
-        let pilots = super::lhsmdu_points(self.num_pilots.max(1), DIMS, rng);
-        let n_p = pilots.len().min(budget.saturating_sub(objective.evaluations()));
-        if n_p > 0 {
-            let cfgs: Vec<_> = pilots[..n_p].iter().map(|p| space.decode(p)).collect();
-            for t in objective.evaluate_batch(&cfgs) {
-                record(&mut xs, &mut ys, &t);
+    fn ask(&mut self, ctx: &SessionCtx<'_>, rng: &mut Rng) -> Proposal {
+        if ctx.remaining == 0 {
+            return Proposal::Done;
+        }
+        if !self.pilots_issued {
+            self.pilots_issued = true;
+            // Pilot phase (stratified LHSMDU design, independent of any
+            // observation): one batch, shrunk by warm-start observations.
+            let have = self.ys.len().saturating_sub(1);
+            let need = self.num_pilots.max(1).saturating_sub(have).min(ctx.remaining);
+            if need > 0 {
+                let pilots = super::lhsmdu_points(need, DIMS, rng);
+                return Proposal::Configs(
+                    pilots.iter().map(|p| ctx.space.decode(p)).collect(),
+                );
             }
         }
 
-        // Surrogate loop.
-        while objective.evaluations() < budget {
-            let gp = GpModel::fit(&xs, &ys, self.fit_starts, rng);
-            let (best_idx, f_best) = ys
+        // Surrogate step: one EI-maximizing config.
+        let cfg = if self.ys.len() < 2 {
+            // Not enough data to fit a GP (budget-truncated pilots).
+            ctx.space.sample(rng)
+        } else {
+            let gp = GpModel::fit(&self.xs, &self.ys, self.fit_starts, rng);
+            let (best_idx, f_best) = self
+                .ys
                 .iter()
                 .enumerate()
                 .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
                 .map(|(i, v)| (i, *v))
                 .unwrap();
             let x_next =
-                propose_ei(&gp, DIMS, f_best, Some(&xs[best_idx]), 512, 128, rng);
-            let t = objective.evaluate(&space.decode(&x_next));
-            record(&mut xs, &mut ys, &t);
-        }
-        objective.history().clone()
+                propose_ei(&gp, DIMS, f_best, Some(&self.xs[best_idx]), 512, 128, rng);
+            ctx.space.decode(&x_next)
+        };
+        Proposal::Configs(vec![cfg])
     }
-}
 
-fn space_encode(
-    space: &crate::objective::ParamSpace,
-    t: &crate::objective::Trial,
-) -> Vec<f64> {
-    space.encode(&t.config).to_vec()
+    fn tell(&mut self, ctx: &SessionCtx<'_>, trials: &[Trial]) {
+        for t in trials {
+            self.xs.push(ctx.space.encode(&t.config).to_vec());
+            self.ys.push(t.value.max(1e-12).ln());
+        }
+    }
+
+    fn snapshot(&self) -> TunerState {
+        TunerState {
+            kind: self.name().to_string(),
+            data: Json::obj(vec![
+                ("pilots_issued", Json::Bool(self.pilots_issued)),
+                (
+                    "xs",
+                    Json::Arr(self.xs.iter().map(|x| statejson::floats(x)).collect()),
+                ),
+                ("ys", statejson::floats(&self.ys)),
+            ]),
+        }
+    }
+
+    fn restore(&mut self, state: &TunerState) -> Result<(), String> {
+        let data = state.expect_kind(self.name())?;
+        self.pilots_issued = statejson::bool_field(data, "pilots_issued")?;
+        self.xs = data
+            .get("xs")
+            .and_then(|x| x.as_arr())
+            .ok_or("GPTune state: missing xs")?
+            .iter()
+            .map(|row| statejson::floats_back(row, "xs row"))
+            .collect::<Result<Vec<_>, _>>()?;
+        self.ys = statejson::floats_back(
+            data.get("ys").ok_or("GPTune state: missing ys")?,
+            "ys",
+        )?;
+        if self.xs.len() != self.ys.len() {
+            return Err("GPTune state: xs/ys length mismatch".into());
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::objective::TuningSession;
     use crate::tuners::testutil::tiny_objective;
 
     #[test]
     fn pilot_then_model_phase_counts() {
         let mut tuner = GpBoTuner::new(3);
         let mut obj = tiny_objective(5);
-        let h = tuner.run(&mut obj, 7, &mut Rng::new(1));
+        let h = TuningSession::new(&mut obj, &mut tuner, 7, 1).run().unwrap().history;
         // 1 ref + 3 pilots + 3 model-guided = 7
         assert_eq!(h.len(), 7);
     }
@@ -104,7 +150,10 @@ mod tests {
         for seed in 0..3 {
             let mut tuner = GpBoTuner::new(4);
             let mut obj = tiny_objective(100 + seed);
-            let h = tuner.run(&mut obj, 14, &mut Rng::new(seed));
+            let h = TuningSession::new(&mut obj, &mut tuner, 14, seed)
+                .run()
+                .unwrap()
+                .history;
             let pilot_best = h.trials()[..5]
                 .iter()
                 .map(|t| t.value)

@@ -4,38 +4,43 @@
 //! of ground truth: Figures 4 and 8 plot its output, and the "peak
 //! performance" every other tuner is scored against comes from it.
 
-use super::Tuner;
-use crate::objective::{History, Objective};
+use super::{statejson, Proposal, Tuner, TunerState};
+use crate::json::Json;
+use crate::objective::{SessionCtx, Trial};
 use crate::rng::Rng;
 use crate::sap::{SapAlgorithm, SapConfig};
 use crate::sketch::SketchKind;
 
-/// Evaluates a fixed list of configurations in order (truncated or cycled
-/// to the budget).
+/// One-shot proposer over a fixed configuration list, walked in order.
+/// An empty explicit list falls back to the paper grid.
 pub struct GridTuner {
     grid: Vec<SapConfig>,
+    /// Grid points already proposed (the only dynamic state).
+    cursor: usize,
 }
 
 impl GridTuner {
     /// A grid tuner over an explicit configuration list. An empty list
     /// falls back to the paper grid (possibly truncated by the budget).
     pub fn new(grid: Vec<SapConfig>) -> GridTuner {
-        GridTuner { grid }
+        GridTuner { grid, cursor: 0 }
     }
 
     /// The paper's §5.2 grid: sampling_factor ∈ {1..10} × vec_nnz ∈
     /// {1..10, 20..100 by 10} × safety ∈ {0, 2, 4} × 6 categories
     /// = 3,420 configurations.
     pub fn paper() -> GridTuner {
-        GridTuner { grid: paper_grid() }
+        GridTuner::new(paper_grid())
     }
 
-    /// Number of configurations in the explicit grid.
+    /// Number of configurations in the explicit grid (0 until the paper
+    /// fallback is materialized by the first `ask`).
     pub fn len(&self) -> usize {
         self.grid.len()
     }
 
-    /// Is the explicit grid empty (the paper grid is the fallback)?
+    /// Is the explicit grid empty? The paper grid is materialized as the
+    /// fallback on the first `ask`.
     pub fn is_empty(&self) -> bool {
         self.grid.is_empty()
     }
@@ -71,20 +76,46 @@ impl Tuner for GridTuner {
         "Grid"
     }
 
-    fn run(&mut self, objective: &mut Objective, budget: usize, _rng: &mut Rng) -> History {
-        objective.evaluate_reference();
-        let grid = if self.grid.is_empty() { paper_grid() } else { self.grid.clone() };
-        // Grid points are independent of each other: submit the whole
-        // budget as one batch so a ParallelEvaluator can fan it out.
-        let take = budget.saturating_sub(1).min(grid.len());
-        objective.evaluate_batch(&grid[..take]);
-        objective.history().clone()
+    fn ask(&mut self, ctx: &SessionCtx<'_>, _rng: &mut Rng) -> Proposal {
+        if ctx.remaining == 0 {
+            return Proposal::Done;
+        }
+        if self.grid.is_empty() {
+            // Materialize the paper fallback once, not per ask.
+            self.grid = paper_grid();
+        }
+        if self.cursor >= self.grid.len() {
+            return Proposal::Done;
+        }
+        // Grid points are independent of each other: hand the session as
+        // many as the budget allows in one batch so a ParallelEvaluator
+        // can fan them out.
+        let take = ctx.remaining.min(self.grid.len() - self.cursor);
+        let batch = self.grid[self.cursor..self.cursor + take].to_vec();
+        self.cursor += take;
+        Proposal::Configs(batch)
+    }
+
+    fn tell(&mut self, _ctx: &SessionCtx<'_>, _trials: &[Trial]) {}
+
+    fn snapshot(&self) -> TunerState {
+        TunerState {
+            kind: self.name().to_string(),
+            data: Json::obj(vec![("cursor", Json::Num(self.cursor as f64))]),
+        }
+    }
+
+    fn restore(&mut self, state: &TunerState) -> Result<(), String> {
+        let data = state.expect_kind(self.name())?;
+        self.cursor = statejson::usize_field(data, "cursor")?;
+        Ok(())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::objective::TuningSession;
 
     #[test]
     fn paper_grid_has_3420_points() {
@@ -118,11 +149,33 @@ mod tests {
             .collect();
         let mut tuner = GridTuner::new(cfgs.clone());
         let mut obj = crate::tuners::testutil::tiny_objective(3);
-        let h = tuner.run(&mut obj, 4, &mut Rng::new(0));
+        let h = TuningSession::new(&mut obj, &mut tuner, 4, 0).run().unwrap().history;
         assert_eq!(h.len(), 4);
         // trial 0 = reference, trials 1..4 = first three grid points in order
         for (i, t) in h.trials()[1..].iter().enumerate() {
             assert_eq!(t.config.sampling_factor, cfgs[i].sampling_factor);
         }
+    }
+
+    #[test]
+    fn exhausted_grid_reports_done_and_cursor_snapshots() {
+        let cfgs: Vec<SapConfig> = (1..=2)
+            .map(|sf| SapConfig { sampling_factor: sf as f64, ..SapConfig::reference() })
+            .collect();
+        let mut tuner = GridTuner::new(cfgs);
+        let mut obj = crate::tuners::testutil::tiny_objective(4);
+        // Budget 8 but only 2 grid points: the session ends on TunerDone
+        // with 1 (ref) + 2 evaluations.
+        let out = TuningSession::new(&mut obj, &mut tuner, 8, 0).run().unwrap();
+        assert_eq!(out.history.len(), 3);
+        assert_eq!(out.stop, crate::objective::StopReason::TunerDone);
+        // The cursor round-trips through a snapshot.
+        let snap = tuner.snapshot();
+        let mut fresh = GridTuner::new(vec![SapConfig::reference(); 2]);
+        fresh.restore(&snap).unwrap();
+        assert_eq!(fresh.cursor, 2);
+        // A snapshot from another tuner kind is refused.
+        let alien = TunerState { kind: "TPE".into(), data: crate::json::Json::Null };
+        assert!(fresh.restore(&alien).is_err());
     }
 }

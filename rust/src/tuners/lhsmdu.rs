@@ -8,16 +8,21 @@
 //! spread); (3) rank-transform each coordinate onto LHS strata so every
 //! one-dimensional projection is uniform.
 
-use super::Tuner;
-use crate::objective::{History, Objective, DIMS};
+use super::{statejson, Proposal, Tuner, TunerState};
+use crate::json::Json;
+use crate::objective::{SessionCtx, Trial, DIMS};
 use crate::rng::Rng;
 
 /// Oversampling factor (the reference implementation's default is 5).
 const SCALE: usize = 5;
 
-/// Generate `n` LHSMDU points in [0,1]^dims.
+/// Generate `n` LHSMDU points in [0,1]^dims. A degenerate `n = 0` (e.g. a
+/// fully-consumed tuning budget) yields an empty design rather than a
+/// panic, so budget arithmetic never needs a guard at the call sites.
 pub fn lhsmdu_points(n: usize, dims: usize, rng: &mut Rng) -> Vec<Vec<f64>> {
-    assert!(n > 0);
+    if n == 0 {
+        return Vec::new();
+    }
     let m = n * SCALE;
     let mut pts: Vec<Vec<f64>> =
         (0..m).map(|_| (0..dims).map(|_| rng.uniform()).collect()).collect();
@@ -70,15 +75,18 @@ fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
     a.iter().zip(b.iter()).map(|(x, y)| (x - y) * (x - y)).sum()
 }
 
-/// The LHSMDU random-search tuner: one stratified batch of
-/// (budget − 1) configurations, evaluated in order.
-pub struct LhsmduTuner;
+/// The LHSMDU random-search tuner: a one-shot proposer that hands the
+/// session a single stratified batch filling the remaining budget.
+pub struct LhsmduTuner {
+    /// Has the one-shot design been proposed yet?
+    proposed: bool,
+}
 
 impl LhsmduTuner {
     #[allow(clippy::new_without_default)]
-    /// Construct the (stateless) tuner.
+    /// Construct the tuner (no static configuration).
     pub fn new() -> LhsmduTuner {
-        LhsmduTuner
+        LhsmduTuner { proposed: false }
     }
 }
 
@@ -87,16 +95,29 @@ impl Tuner for LhsmduTuner {
         "LHSMDU"
     }
 
-    fn run(&mut self, objective: &mut Objective, budget: usize, rng: &mut Rng) -> History {
-        objective.evaluate_reference();
-        if budget > 1 {
-            let pts = lhsmdu_points(budget - 1, DIMS, rng);
-            let space = objective.task.space.clone();
-            // The whole stratified design is known up front: one batch.
-            let cfgs: Vec<_> = pts.iter().map(|p| space.decode(p)).collect();
-            objective.evaluate_batch(&cfgs);
+    fn ask(&mut self, ctx: &SessionCtx<'_>, rng: &mut Rng) -> Proposal {
+        if self.proposed || ctx.remaining == 0 {
+            return Proposal::Done;
         }
-        objective.history().clone()
+        self.proposed = true;
+        // The whole stratified design is known up front: one batch.
+        let pts = lhsmdu_points(ctx.remaining, DIMS, rng);
+        Proposal::Configs(pts.iter().map(|p| ctx.space.decode(p)).collect())
+    }
+
+    fn tell(&mut self, _ctx: &SessionCtx<'_>, _trials: &[Trial]) {}
+
+    fn snapshot(&self) -> TunerState {
+        TunerState {
+            kind: self.name().to_string(),
+            data: Json::obj(vec![("proposed", Json::Bool(self.proposed))]),
+        }
+    }
+
+    fn restore(&mut self, state: &TunerState) -> Result<(), String> {
+        let data = state.expect_kind(self.name())?;
+        self.proposed = statejson::bool_field(data, "proposed")?;
+        Ok(())
     }
 }
 
@@ -119,6 +140,15 @@ mod tests {
             }
             assert!(counts.iter().all(|&c| c == 1), "dim {d}: {counts:?}");
         }
+    }
+
+    #[test]
+    fn zero_points_is_an_empty_design_not_a_panic() {
+        let mut rng = Rng::new(5);
+        assert!(lhsmdu_points(0, DIMS, &mut rng).is_empty());
+        // ... and the generator stream is untouched by the degenerate call.
+        let mut fresh = Rng::new(5);
+        assert_eq!(rng.next_u64(), fresh.next_u64());
     }
 
     #[test]
@@ -154,5 +184,29 @@ mod tests {
         for p in lhsmdu_points(30, 5, &mut rng) {
             assert!(p.iter().all(|&v| (0.0..=1.0).contains(&v)));
         }
+    }
+
+    #[test]
+    fn one_shot_proposer_is_done_after_its_batch() {
+        let space = crate::objective::ParamSpace::paper();
+        let history = crate::objective::History::new();
+        let ctx = SessionCtx {
+            space: &space,
+            budget: 6,
+            evaluated: 1,
+            remaining: 5,
+            history: &history,
+        };
+        let mut tuner = LhsmduTuner::new();
+        let mut rng = Rng::new(4);
+        match tuner.ask(&ctx, &mut rng) {
+            Proposal::Configs(batch) => assert_eq!(batch.len(), 5),
+            Proposal::Done => panic!("first ask must propose"),
+        }
+        assert!(tuner.ask(&ctx, &mut rng).is_done());
+        // The proposed flag survives a snapshot round-trip.
+        let mut fresh = LhsmduTuner::new();
+        fresh.restore(&tuner.snapshot()).unwrap();
+        assert!(fresh.ask(&ctx, &mut rng).is_done());
     }
 }

@@ -8,10 +8,24 @@
 //! | [`GpBoTuner`] | "GPTune" (GP Bayesian optimization) | `gp_bo.rs` |
 //! | [`TlaTuner`] | "TLA" (Algorithm 4.1: UCB bandit + LCM) | `tla.rs` |
 //!
-//! All tuners implement [`Tuner`]: given an [`Objective`] and an
-//! evaluation budget, they first evaluate the reference configuration
-//! (establishing ARFE_ref, Figure 3), then spend the remaining budget
-//! their own way, returning the [`History`] of evaluations in order.
+//! Every tuner is an **ask/tell state machine** behind the [`Tuner`]
+//! trait: the driver — [`crate::objective::TuningSession`] — owns the
+//! loop, the budget, the stopping rules, and the evaluation engine, and
+//! the tuner only proposes configurations ([`Tuner::ask`]) and observes
+//! completed trials ([`Tuner::tell`]). The session evaluates the
+//! reference configuration first (establishing ARFE_ref, Figure 3) and
+//! feeds the reference trial through `tell` before the first `ask`, so
+//! every tuner sees the same warm-up protocol as the paper's closed
+//! loops did. Tuner state is serializable ([`Tuner::snapshot`] /
+//! [`Tuner::restore`]), which is what makes mid-run session checkpoints
+//! — and therefore mid-cell campaign resume — possible.
+//!
+//! Grid and LHSMDU are *one-shot proposers* (their whole design is known
+//! up front, so they hand the session a single batch a parallel
+//! [`crate::objective::Evaluator`] can fan out); TPE, GP-BO, and TLA are
+//! *incremental* state machines that adapt each proposal to everything
+//! they have been told — including warm-start trials injected from a
+//! [`crate::db::HistoryDb`] before the session starts.
 
 mod gp_bo;
 mod grid;
@@ -27,24 +41,183 @@ pub use tla::{SourceSample, TlaMode, TlaTuner};
 pub use tpe::TpeTuner;
 pub use ucb::UcbBandit;
 
-use crate::objective::{History, Objective};
+use crate::json::Json;
+use crate::objective::{SessionCtx, Trial};
 use crate::rng::Rng;
+use crate::sap::SapConfig;
 
-/// A budget-bounded tuning algorithm.
+/// What a tuner returns from [`Tuner::ask`].
+#[derive(Clone, Debug)]
+pub enum Proposal {
+    /// Evaluate this batch of configurations next, in order. The driver
+    /// truncates batches that overshoot the remaining evaluation budget.
+    Configs(Vec<SapConfig>),
+    /// The tuner has nothing left to propose (e.g. an exhausted grid).
+    /// Once returned, every subsequent `ask` must return `Done` too.
+    Done,
+}
+
+impl Proposal {
+    /// Is this proposal `Done` (or an empty batch, which the driver
+    /// treats identically to avoid spinning)?
+    pub fn is_done(&self) -> bool {
+        match self {
+            Proposal::Done => true,
+            Proposal::Configs(c) => c.is_empty(),
+        }
+    }
+}
+
+/// Serialized tuner state, captured by [`Tuner::snapshot`] and replayed
+/// by [`Tuner::restore`].
+///
+/// The payload is an opaque JSON value owned by the tuner; `kind` is the
+/// tuner's [`Tuner::name`], checked on restore so a checkpoint cannot be
+/// fed to the wrong algorithm. Only *dynamic* state is captured —
+/// constructor arguments (grids, pilot counts, TLA source samples) must
+/// be reconstructed identically by the caller, which is how the campaign
+/// layer resumes a cell: rebuild the tuner from the (deterministic) spec,
+/// then `restore` the snapshot.
+#[derive(Clone, Debug)]
+pub struct TunerState {
+    /// [`Tuner::name`] of the tuner that produced the snapshot.
+    pub kind: String,
+    /// Tuner-private payload.
+    pub data: Json,
+}
+
+impl TunerState {
+    /// Serialize to a JSON document (embedded in session checkpoints).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::Str(self.kind.clone())),
+            ("data", self.data.clone()),
+        ])
+    }
+
+    /// Parse a snapshot serialized by [`TunerState::to_json`].
+    pub fn from_json(v: &Json) -> Result<TunerState, String> {
+        Ok(TunerState {
+            kind: v
+                .get("kind")
+                .and_then(|x| x.as_str())
+                .ok_or("tuner state: missing kind")?
+                .to_string(),
+            data: v.get("data").cloned().ok_or("tuner state: missing data")?,
+        })
+    }
+
+    /// Guard used by `restore` implementations: error unless the snapshot
+    /// was produced by a tuner with this name.
+    pub fn expect_kind(&self, name: &str) -> Result<&Json, String> {
+        if self.kind == name {
+            Ok(&self.data)
+        } else {
+            Err(format!("tuner state kind {:?} cannot restore a {name:?} tuner", self.kind))
+        }
+    }
+}
+
+/// A budget-free tuning state machine (inversion of control).
+///
+/// The driver loop lives in [`crate::objective::TuningSession`]; a tuner
+/// only answers "what should be measured next?" and digests results:
+///
+/// ```
+/// use ranntune::objective::SessionCtx;
+/// use ranntune::rng::Rng;
+/// use ranntune::sap::SapConfig;
+/// use ranntune::tuners::{GridTuner, Proposal, Tuner};
+///
+/// // A hand-rolled driver, to show the contract (normally you would use
+/// // TuningSession instead of driving ask/tell yourself):
+/// let grid: Vec<SapConfig> = (1..=3)
+///     .map(|sf| SapConfig { sampling_factor: sf as f64, ..SapConfig::reference() })
+///     .collect();
+/// let mut tuner = GridTuner::new(grid);
+/// let mut rng = Rng::new(0);
+/// let space = ranntune::objective::ParamSpace::paper();
+/// let history = ranntune::objective::History::new();
+/// let ctx = SessionCtx {
+///     space: &space,
+///     budget: 8,
+///     evaluated: 1, // the session has already evaluated the reference
+///     remaining: 7,
+///     history: &history,
+/// };
+/// match tuner.ask(&ctx, &mut rng) {
+///     Proposal::Configs(batch) => assert_eq!(batch.len(), 3),
+///     Proposal::Done => unreachable!("grid not exhausted yet"),
+/// }
+/// // ... evaluate the batch, tuner.tell(&ctx, &trials), ask again ...
+/// assert!(tuner.ask(&ctx, &mut rng).is_done(), "grid exhausted after one sweep");
+/// ```
 pub trait Tuner {
-    /// Display name (used in figures and EXPERIMENTS.md).
+    /// Display name (used in figures, EXPERIMENTS.md, and snapshots).
     fn name(&self) -> &str;
 
-    /// Run the tuner for `budget` function evaluations (the reference
-    /// evaluation counts as the first, matching the paper's accounting)
-    /// and return the evaluation history.
-    fn run(&mut self, objective: &mut Objective, budget: usize, rng: &mut Rng) -> History;
+    /// Propose the next batch of configurations, or [`Proposal::Done`].
+    ///
+    /// Contract: when `ctx.remaining == 0` the tuner must return `Done`;
+    /// after returning `Done` once it must keep returning `Done`. The
+    /// driver truncates over-long batches to the remaining budget, so a
+    /// tuner may propose optimistically, but each config it proposes
+    /// within the budget will be evaluated and handed back via
+    /// [`Tuner::tell`] before the next `ask`.
+    fn ask(&mut self, ctx: &SessionCtx<'_>, rng: &mut Rng) -> Proposal;
+
+    /// Observe completed trials: the session's reference evaluation,
+    /// every evaluated proposal batch (in submission order), and any
+    /// warm-start trials injected before the loop starts.
+    fn tell(&mut self, ctx: &SessionCtx<'_>, trials: &[Trial]);
+
+    /// Capture all dynamic state for a mid-run checkpoint.
+    fn snapshot(&self) -> TunerState;
+
+    /// Restore dynamic state from a snapshot taken by the same tuner
+    /// kind (constructed with the same static arguments). After a
+    /// restore, `ask`/`tell` behave exactly as they would have in the
+    /// original process — given the same [`Rng`] state.
+    fn restore(&mut self, state: &TunerState) -> Result<(), String>;
+}
+
+/// Shared snapshot helpers for the tuner implementations.
+pub(crate) mod statejson {
+    use crate::json::Json;
+
+    /// Encode a flat f64 slice.
+    pub fn floats(v: &[f64]) -> Json {
+        Json::Arr(v.iter().map(|&x| Json::Num(x)).collect())
+    }
+
+    /// Decode a flat f64 array.
+    pub fn floats_back(v: &Json, what: &str) -> Result<Vec<f64>, String> {
+        v.as_arr()
+            .ok_or(format!("tuner state: {what} is not an array"))?
+            .iter()
+            .map(|x| x.as_f64().ok_or(format!("tuner state: {what} has a non-number")))
+            .collect()
+    }
+
+    /// Fetch a required bool field.
+    pub fn bool_field(v: &Json, key: &str) -> Result<bool, String> {
+        v.get(key)
+            .and_then(|x| x.as_bool())
+            .ok_or(format!("tuner state: missing bool {key}"))
+    }
+
+    /// Fetch a required usize field.
+    pub fn usize_field(v: &Json, key: &str) -> Result<usize, String> {
+        v.get(key)
+            .and_then(|x| x.as_usize())
+            .ok_or(format!("tuner state: missing count {key}"))
+    }
 }
 
 #[cfg(test)]
 pub(crate) mod testutil {
     use crate::data::{generate_synthetic, Problem, SyntheticKind};
-    use crate::objective::{Constants, Objective, ParamSpace, TuningTask};
+    use crate::objective::{Constants, Objective, ParamSpace, TimingMode, TuningTask};
     use crate::rng::Rng;
 
     /// A small, fast tuning objective for tuner unit tests.
@@ -58,20 +231,55 @@ pub(crate) mod testutil {
         };
         Objective::new(task, seed)
     }
+
+    /// Like [`tiny_objective`] but with the deterministic flop-model
+    /// clock, for bit-identity assertions on full histories.
+    pub fn tiny_modeled_objective(seed: u64) -> Objective {
+        let mut rng = Rng::new(seed);
+        let p: Problem = generate_synthetic(SyntheticKind::GA, 300, 15, &mut rng);
+        let task = TuningTask {
+            problem: p,
+            space: ParamSpace::paper(),
+            constants: Constants {
+                num_repeats: 1,
+                num_pilots: 4,
+                timing: TimingMode::Modeled,
+                ..Constants::default()
+            },
+        };
+        Objective::new(task, seed)
+    }
 }
 
 #[cfg(test)]
 mod tests {
-    use super::testutil::tiny_objective;
+    use super::testutil::{tiny_modeled_objective, tiny_objective};
     use super::*;
+    use crate::objective::{History, ParamSpace, TuningSession};
+
+    /// All five tuners, freshly constructed (TLA with an empty source —
+    /// the degenerate single-task transfer case).
+    fn all_makers() -> Vec<Box<dyn FnMut() -> Box<dyn Tuner>>> {
+        vec![
+            Box::new(|| Box::new(LhsmduTuner::new())),
+            Box::new(|| Box::new(TpeTuner::new(4))),
+            Box::new(|| Box::new(GpBoTuner::new(4))),
+            Box::new(|| Box::new(GridTuner::new(vec![]))),
+            Box::new(|| Box::new(TlaTuner::new(vec![]))),
+        ]
+    }
 
     /// Contract test run against every tuner: respects the budget, first
-    /// trial is the reference, all trials valid configurations.
+    /// trial is the reference, all trials valid configurations, and the
+    /// ask/tell invariants hold (Done stays Done, remaining = 0 ⇒ Done).
     fn check_contract(make: &mut dyn FnMut() -> Box<dyn Tuner>) {
         let mut tuner = make();
         let mut obj = tiny_objective(1);
         let budget = 8;
-        let h = tuner.run(&mut obj, budget, &mut Rng::new(2));
+        let h = TuningSession::new(&mut obj, tuner.as_mut(), budget, 2)
+            .run()
+            .unwrap()
+            .history;
         assert_eq!(h.len(), budget, "{} ignored budget", tuner.name());
         assert!(h.trials()[0].is_reference, "{} must evaluate ref first", tuner.name());
         for t in h.trials() {
@@ -81,18 +289,170 @@ mod tests {
             assert!(t.wall_clock > 0.0);
             assert!(t.value >= t.wall_clock); // penalty only inflates
         }
+
+        // Invariant: with no budget left, ask must return Done — and must
+        // keep returning Done on repeated calls.
+        let space = ParamSpace::paper();
+        let ctx = SessionCtx {
+            space: &space,
+            budget,
+            evaluated: budget,
+            remaining: 0,
+            history: obj.history(),
+        };
+        let mut rng = crate::rng::Rng::new(9);
+        for _ in 0..3 {
+            assert!(
+                tuner.ask(&ctx, &mut rng).is_done(),
+                "{} proposed past an exhausted budget",
+                tuner.name()
+            );
+        }
     }
 
     #[test]
     fn all_tuners_satisfy_contract() {
-        let mut makers: Vec<Box<dyn FnMut() -> Box<dyn Tuner>>> = vec![
-            Box::new(|| Box::new(LhsmduTuner::new())),
-            Box::new(|| Box::new(TpeTuner::new(4))),
-            Box::new(|| Box::new(GpBoTuner::new(4))),
-            Box::new(|| Box::new(GridTuner::new(vec![]))),
-        ];
-        for m in makers.iter_mut() {
+        for m in all_makers().iter_mut() {
             check_contract(m.as_mut());
+        }
+    }
+
+    #[test]
+    fn budget_zero_and_one_edges_for_every_tuner() {
+        for (i, m) in all_makers().iter_mut().enumerate() {
+            // budget 0: nothing runs, not even the reference.
+            let mut t0 = m();
+            let mut obj0 = tiny_objective(40 + i as u64);
+            let out0 = TuningSession::new(&mut obj0, t0.as_mut(), 0, 1).run().unwrap();
+            assert!(out0.history.is_empty(), "{}: budget 0 evaluated", t0.name());
+            // budget 1: exactly the reference evaluation.
+            let mut t1 = m();
+            let mut obj1 = tiny_objective(40 + i as u64);
+            let out1 = TuningSession::new(&mut obj1, t1.as_mut(), 1, 1).run().unwrap();
+            assert_eq!(out1.history.len(), 1, "{}: budget 1", t1.name());
+            assert!(out1.history.trials()[0].is_reference);
+        }
+    }
+
+    /// A test-only tuner that deliberately overshoots the remaining
+    /// budget with every proposal.
+    struct Overshooter;
+    impl Tuner for Overshooter {
+        fn name(&self) -> &str {
+            "Overshooter"
+        }
+        fn ask(&mut self, ctx: &SessionCtx<'_>, rng: &mut crate::rng::Rng) -> Proposal {
+            if ctx.remaining == 0 {
+                return Proposal::Done;
+            }
+            // Always propose 3× what is left.
+            Proposal::Configs(
+                (0..ctx.remaining * 3).map(|_| ctx.space.sample(rng)).collect(),
+            )
+        }
+        fn tell(&mut self, _ctx: &SessionCtx<'_>, _trials: &[Trial]) {}
+        fn snapshot(&self) -> TunerState {
+            TunerState { kind: "Overshooter".into(), data: Json::Null }
+        }
+        fn restore(&mut self, _state: &TunerState) -> Result<(), String> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn driver_truncates_overshooting_proposals_to_the_budget() {
+        let mut tuner = Overshooter;
+        let mut obj = tiny_objective(7);
+        let budget = 5;
+        let out = TuningSession::new(&mut obj, &mut tuner, budget, 3).run().unwrap();
+        assert_eq!(out.history.len(), budget, "budget exceeded by an overshooting batch");
+    }
+
+    #[test]
+    fn snapshot_restore_mid_session_reproduces_the_tail_bitwise() {
+        // For every tuner: pause a checkpointed session after ~4
+        // evaluations (kill simulation), then resume it with a fresh
+        // tuner + objective. The merged history must be bit-identical to
+        // an uninterrupted run of the same budget under modeled timing.
+        for (i, m) in all_makers().iter_mut().enumerate() {
+            let seed = 70 + i as u64;
+            // Uninterrupted run to 9.
+            let mut t_full = m();
+            let mut obj_full = tiny_modeled_objective(seed);
+            let full = TuningSession::new(&mut obj_full, t_full.as_mut(), 9, 5)
+                .run()
+                .unwrap()
+                .history;
+
+            // Same budget, paused mid-run after exactly 4 evaluations —
+            // one-shot proposers get their batch split at the quota, and
+            // the remainder rides along in the checkpoint.
+            let dir = std::env::temp_dir()
+                .join(format!("ranntune_snap_{}_{}", i, std::process::id()));
+            let _ = std::fs::remove_dir_all(&dir);
+            let ckpt = dir.join("session.json");
+            let mut t_a = m();
+            let mut obj_a = tiny_modeled_objective(seed);
+            let part = TuningSession::new(&mut obj_a, t_a.as_mut(), 9, 5)
+                .checkpoint_to(&ckpt)
+                .pause_after(4)
+                .run()
+                .unwrap();
+            assert_eq!(part.stop, crate::objective::StopReason::Paused, "{}", t_a.name());
+            assert_eq!(part.history.len(), 4, "{}: quota must be exact", t_a.name());
+
+            let mut t_b = m();
+            let mut obj_b = tiny_modeled_objective(seed);
+            let resumed = TuningSession::new(&mut obj_b, t_b.as_mut(), 9, 5)
+                .checkpoint_to(&ckpt)
+                .run()
+                .unwrap();
+            assert!(resumed.resumed, "{}: session did not resume", t_b.name());
+            assert_history_bits_eq(&full, &resumed.history, t_b.name());
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+
+    #[test]
+    fn all_tuners_are_deterministic_across_eval_threads() {
+        // Modeled timing ⇒ the full recorded history (values included) is
+        // a pure function of seeds, for every tuner, regardless of the
+        // evaluation engine. Combined with the CI RANNTUNE_THREADS matrix
+        // this pins the acceptance contract: sessions are deterministic
+        // across both --eval-threads and kernel-pool widths.
+        use crate::objective::ParallelEvaluator;
+        for (i, m) in all_makers().iter_mut().enumerate() {
+            let seed = 90 + i as u64;
+            let mut t_serial = m();
+            let mut obj_serial = tiny_modeled_objective(seed);
+            let serial = TuningSession::new(&mut obj_serial, t_serial.as_mut(), 7, 6)
+                .run()
+                .unwrap()
+                .history;
+
+            let mut t_par = m();
+            let mut obj_par = tiny_modeled_objective(seed);
+            obj_par.set_evaluator(Box::new(ParallelEvaluator::new(4)));
+            let par = TuningSession::new(&mut obj_par, t_par.as_mut(), 7, 6)
+                .run()
+                .unwrap()
+                .history;
+            assert_history_bits_eq(&serial, &par, t_par.name());
+        }
+    }
+
+    fn assert_history_bits_eq(a: &History, b: &History, who: &str) {
+        assert_eq!(a.len(), b.len(), "{who}: history lengths differ");
+        for (x, y) in a.trials().iter().zip(b.trials()) {
+            assert_eq!(x.config, y.config, "{who}: configs diverge");
+            assert_eq!(x.value.to_bits(), y.value.to_bits(), "{who}: values diverge");
+            assert_eq!(
+                x.wall_clock.to_bits(),
+                y.wall_clock.to_bits(),
+                "{who}: clocks diverge"
+            );
+            assert_eq!(x.failed, y.failed);
+            assert_eq!(x.is_reference, y.is_reference);
         }
     }
 }

@@ -11,11 +11,20 @@
 //!
 //! Also implements the "Original" baseline of Figure 7: GPTune's built-in
 //! LCM multitask learning over the full 5-d encoded space with no bandit.
+//!
+//! As an ask/tell state machine the tuner walks Algorithm 4.1 in phases:
+//! after the session's reference evaluation it proposes the historical
+//! best from the source (line 2), then — in hybrid mode — one batch
+//! covering every category the bandit has never seen, then one
+//! bandit+LCM-guided configuration per ask (lines 4–6). Target-task
+//! trials arrive via [`Tuner::tell`] (including any warm-start trials,
+//! which immediately enrich both the bandit and the LCM data).
 
-use super::{Tuner, UcbBandit};
+use super::{statejson, Proposal, Tuner, TunerState, UcbBandit};
 use crate::gp::{expected_improvement, stats};
+use crate::json::Json;
 use crate::lcm::{LcmModel, TaskSample};
-use crate::objective::{category_index, History, Objective, N_CATEGORIES, ORDINAL_DIMS};
+use crate::objective::{category_index, SessionCtx, Trial, N_CATEGORIES, ORDINAL_DIMS};
 use crate::rng::Rng;
 use crate::sap::SapConfig;
 
@@ -48,7 +57,10 @@ impl SourceSample {
 pub enum TlaMode {
     /// The paper's TLA: UCB bandit (constant c) over categories + LCM over
     /// ordinals.
-    Hybrid { c: f64 },
+    Hybrid {
+        /// The UCB exploration constant (paper default 4).
+        c: f64,
+    },
     /// GPTune's original LCM multitask learning over the full encoded
     /// space (the "Original" curve of Figure 7).
     OriginalLcm,
@@ -60,6 +72,13 @@ pub struct TlaTuner {
     source: Vec<SourceSample>,
     /// LCM latent GPs (Q).
     q_latent: usize,
+    /// Has the historical-best proposal (line 2) been issued?
+    hist_issued: bool,
+    /// Has the unseen-category sweep batch been issued (hybrid only)?
+    sweep_issued: bool,
+    /// Every target-task trial told so far (reference, session trials,
+    /// warm-start trials).
+    target: Vec<Trial>,
 }
 
 impl TlaTuner {
@@ -70,7 +89,14 @@ impl TlaTuner {
 
     /// TLA with an explicit search mode (Figure 7's variants).
     pub fn with_mode(source: Vec<SourceSample>, mode: TlaMode) -> TlaTuner {
-        TlaTuner { mode, source, q_latent: 2 }
+        TlaTuner {
+            mode,
+            source,
+            q_latent: 2,
+            hist_issued: false,
+            sweep_issued: false,
+            target: Vec::new(),
+        }
     }
 
     /// Best source configuration (lowest source objective) — evaluated
@@ -80,6 +106,107 @@ impl TlaTuner {
             .iter()
             .min_by(|a, b| a.value.partial_cmp(&b.value).unwrap())
             .map(|s| s.config)
+    }
+
+    /// The target task's reward normalizer: the **session's own**
+    /// reference trial. Warm-start trials are told before the session's
+    /// reference and may carry their own (smaller-shape) reference with a
+    /// very different absolute scale, so take the *last* reference-
+    /// flagged trial — the one this session measured.
+    fn target_ref_value(&self) -> f64 {
+        self.target
+            .iter()
+            .rev()
+            .find(|t| t.is_reference)
+            .map(|t| t.value)
+            .or_else(|| self.target.first().map(|t| t.value))
+            .unwrap_or(1.0)
+            .max(1e-12)
+    }
+
+    /// Rebuild the UCB bandit from source rewards + every target trial.
+    /// (Observation is commutative, so rebuilding matches the paper's
+    /// incremental seeding exactly.)
+    fn build_bandit(&self, c: f64) -> UcbBandit {
+        let ref_value = self.target_ref_value();
+        let mut bandit = UcbBandit::new(c);
+        for s in &self.source {
+            bandit.observe(category_index(&s.config), s.reward());
+        }
+        for t in &self.target {
+            bandit.observe(category_index(&t.config), ref_value / t.value.max(1e-12));
+        }
+        bandit
+    }
+
+    /// One hybrid step (lines 4–6): category via UCB, ordinals via LCM
+    /// within the category.
+    fn propose_hybrid(&self, ctx: &SessionCtx<'_>, c: f64, rng: &mut Rng) -> SapConfig {
+        let bandit = self.build_bandit(c);
+        // Line 4: category via UCB.
+        let cat = bandit.choose();
+
+        // Line 5: ordinals via LCM within the category. Source = task 0,
+        // target = task 1; objectives in log-space per task.
+        let mut samples: Vec<TaskSample> = Vec::new();
+        for s in &self.source {
+            if category_index(&s.config) == cat {
+                samples.push(TaskSample {
+                    task: 0,
+                    x: ctx.space.encode_ordinals(&s.config).to_vec(),
+                    y: s.value.max(1e-12).ln(),
+                });
+            }
+        }
+        let mut target_in_cat: Vec<(Vec<f64>, f64)> = Vec::new();
+        for t in &self.target {
+            if category_index(&t.config) == cat {
+                let x = ctx.space.encode_ordinals(&t.config).to_vec();
+                let y = t.value.max(1e-12).ln();
+                samples.push(TaskSample { task: 1, x: x.clone(), y });
+                target_in_cat.push((x, y));
+            }
+        }
+
+        if samples.len() < 2 {
+            // Nothing to model in this category yet: random ordinals.
+            let x: Vec<f64> = (0..ORDINAL_DIMS).map(|_| rng.uniform()).collect();
+            ctx.space.decode_ordinals(cat, &x)
+        } else {
+            let lcm = LcmModel::fit(&samples, 2, self.q_latent, 2, rng);
+            // f_best: best target value seen (global — drives EI scale).
+            let f_best = self
+                .target
+                .iter()
+                .map(|t| t.value.max(1e-12).ln())
+                .fold(f64::INFINITY, f64::min);
+            let x = propose_lcm_ei(&lcm, 1, f_best, &target_in_cat, rng);
+            ctx.space.decode_ordinals(cat, &x)
+        }
+    }
+
+    /// One step of GPTune's original LCM-only transfer over the full 5-d
+    /// space.
+    fn propose_original(&self, ctx: &SessionCtx<'_>, rng: &mut Rng) -> SapConfig {
+        let mut samples: Vec<TaskSample> = Vec::new();
+        for s in &self.source {
+            samples.push(TaskSample {
+                task: 0,
+                x: ctx.space.encode(&s.config).to_vec(),
+                y: s.value.max(1e-12).ln(),
+            });
+        }
+        let mut target: Vec<(Vec<f64>, f64)> = Vec::new();
+        for t in &self.target {
+            let x = ctx.space.encode(&t.config).to_vec();
+            let y = t.value.max(1e-12).ln();
+            samples.push(TaskSample { task: 1, x: x.clone(), y });
+            target.push((x, y));
+        }
+        let lcm = LcmModel::fit(&samples, 2, self.q_latent, 2, rng);
+        let f_best = target.iter().map(|(_, y)| *y).fold(f64::INFINITY, f64::min);
+        let x = propose_lcm_ei(&lcm, 1, f_best, &target, rng);
+        ctx.space.decode(&x)
     }
 }
 
@@ -91,158 +218,83 @@ impl Tuner for TlaTuner {
         }
     }
 
-    fn run(&mut self, objective: &mut Objective, budget: usize, rng: &mut Rng) -> History {
-        // Line 1: reference evaluation (defines ARFE_ref and the reward
-        // normalizer for the target task).
-        let ref_trial = objective.evaluate_reference();
-        let ref_value = ref_trial.value.max(1e-12);
-
-        // Line 2: historical best from the source.
-        if objective.evaluations() < budget {
+    fn ask(&mut self, ctx: &SessionCtx<'_>, rng: &mut Rng) -> Proposal {
+        if ctx.remaining == 0 {
+            return Proposal::Done;
+        }
+        // Line 2: historical best from the source (the session already
+        // evaluated the reference, line 1).
+        if !self.hist_issued {
+            self.hist_issued = true;
             if let Some(best) = self.historical_best() {
-                objective.evaluate(&best);
+                return Proposal::Configs(vec![best]);
             }
         }
-
         match self.mode {
-            TlaMode::Hybrid { c } => self.run_hybrid(objective, budget, ref_value, c, rng),
-            TlaMode::OriginalLcm => self.run_original(objective, budget, rng),
-        }
-        objective.history().clone()
-    }
-}
-
-impl TlaTuner {
-    /// Lines 3–7 of Algorithm 4.1 (hybrid UCB + LCM).
-    fn run_hybrid(
-        &self,
-        objective: &mut Objective,
-        budget: usize,
-        target_ref_value: f64,
-        c: f64,
-        rng: &mut Rng,
-    ) {
-        let space = objective.task.space.clone();
-
-        // Seed the bandit with the source rewards.
-        let mut bandit = UcbBandit::new(c);
-        for s in &self.source {
-            bandit.observe(category_index(&s.config), s.reward());
-        }
-        // ... and with the target evaluations made so far (ref + hist-best).
-        for t in objective.history().trials() {
-            bandit.observe(category_index(&t.config), target_ref_value / t.value.max(1e-12));
-        }
-
-        // Batched exploration: the bandit explores unseen categories first
-        // (in index order), and any category with < 2 in-category samples
-        // gets random ordinals — those proposals are independent of each
-        // other, so submit them as one batch before the sequential
-        // model-guided loop.
-        // (The bandit has observed every source sample and every target
-        // trial above, so an unseen category necessarily has no
-        // in-category data to model — random ordinals are exactly what
-        // the sequential loop would pick for it.)
-        let mut sweep = Vec::new();
-        for cat in 0..N_CATEGORIES {
-            if objective.evaluations() + sweep.len() >= budget {
-                break;
-            }
-            if bandit.count(cat) == 0 {
-                let x: Vec<f64> = (0..ORDINAL_DIMS).map(|_| rng.uniform()).collect();
-                sweep.push(space.decode_ordinals(cat, &x));
-            }
-        }
-        if !sweep.is_empty() {
-            for t in objective.evaluate_batch(&sweep) {
-                bandit.observe(
-                    category_index(&t.config),
-                    target_ref_value / t.value.max(1e-12),
-                );
-            }
-        }
-
-        while objective.evaluations() < budget {
-            // Line 4: category via UCB.
-            let cat = bandit.choose();
-
-            // Line 5: ordinals via LCM within the category. Source = task
-            // 0, target = task 1; objectives in log-space per task.
-            let mut samples: Vec<TaskSample> = Vec::new();
-            for s in &self.source {
-                if category_index(&s.config) == cat {
-                    samples.push(TaskSample {
-                        task: 0,
-                        x: space.encode_ordinals(&s.config).to_vec(),
-                        y: s.value.max(1e-12).ln(),
-                    });
+            TlaMode::Hybrid { c } => {
+                if !self.sweep_issued {
+                    self.sweep_issued = true;
+                    // Batched exploration: any category the bandit has
+                    // never observed gets random ordinals, as one batch —
+                    // those proposals are independent of each other, so a
+                    // parallel evaluator can fan them out before the
+                    // sequential model-guided loop starts.
+                    let bandit = self.build_bandit(c);
+                    let mut sweep = Vec::new();
+                    for cat in 0..N_CATEGORIES {
+                        if sweep.len() >= ctx.remaining {
+                            break;
+                        }
+                        if bandit.count(cat) == 0 {
+                            let x: Vec<f64> =
+                                (0..ORDINAL_DIMS).map(|_| rng.uniform()).collect();
+                            sweep.push(ctx.space.decode_ordinals(cat, &x));
+                        }
+                    }
+                    if !sweep.is_empty() {
+                        return Proposal::Configs(sweep);
+                    }
                 }
+                Proposal::Configs(vec![self.propose_hybrid(ctx, c, rng)])
             }
-            let mut target_in_cat: Vec<(Vec<f64>, f64)> = Vec::new();
-            for t in objective.history().trials() {
-                if category_index(&t.config) == cat {
-                    let x = space.encode_ordinals(&t.config).to_vec();
-                    let y = t.value.max(1e-12).ln();
-                    samples.push(TaskSample { task: 1, x: x.clone(), y });
-                    target_in_cat.push((x, y));
-                }
-            }
-
-            let cfg = if samples.len() < 2 {
-                // Nothing to model in this category yet: random ordinals.
-                let x: Vec<f64> = (0..ORDINAL_DIMS).map(|_| rng.uniform()).collect();
-                space.decode_ordinals(cat, &x)
-            } else {
-                let lcm = LcmModel::fit(&samples, 2, self.q_latent, 2, rng);
-                // f_best: best target value seen (global — drives EI scale),
-                // falling back to the best source value in-category.
-                let f_best = objective
-                    .history()
-                    .trials()
-                    .iter()
-                    .map(|t| t.value.max(1e-12).ln())
-                    .fold(f64::INFINITY, f64::min);
-                let x = propose_lcm_ei(&lcm, 1, f_best, &target_in_cat, rng);
-                space.decode_ordinals(cat, &x)
-            };
-
-            // Line 6: evaluate.
-            let t = objective.evaluate(&cfg);
-            bandit.observe(
-                category_index(&t.config),
-                target_ref_value / t.value.max(1e-12),
-            );
+            TlaMode::OriginalLcm => Proposal::Configs(vec![self.propose_original(ctx, rng)]),
         }
     }
 
-    /// GPTune's original LCM-only transfer over the full 5-d space.
-    fn run_original(&self, objective: &mut Objective, budget: usize, rng: &mut Rng) {
-        let space = objective.task.space.clone();
-        while objective.evaluations() < budget {
-            let mut samples: Vec<TaskSample> = Vec::new();
-            for s in &self.source {
-                samples.push(TaskSample {
-                    task: 0,
-                    x: space.encode(&s.config).to_vec(),
-                    y: s.value.max(1e-12).ln(),
-                });
-            }
-            let mut target: Vec<(Vec<f64>, f64)> = Vec::new();
-            for t in objective.history().trials() {
-                let x = space.encode(&t.config).to_vec();
-                let y = t.value.max(1e-12).ln();
-                samples.push(TaskSample { task: 1, x: x.clone(), y });
-                target.push((x, y));
-            }
-            let lcm = LcmModel::fit(&samples, 2, self.q_latent, 2, rng);
-            let f_best = target
-                .iter()
-                .map(|(_, y)| *y)
-                .fold(f64::INFINITY, f64::min);
-            let x = propose_lcm_ei(&lcm, 1, f_best, &target, rng);
-            let cfg = space.decode(&x);
-            objective.evaluate(&cfg);
+    fn tell(&mut self, _ctx: &SessionCtx<'_>, trials: &[Trial]) {
+        self.target.extend_from_slice(trials);
+    }
+
+    fn snapshot(&self) -> TunerState {
+        // `target` repeats the session trials also stored in the
+        // checkpoint's own trial list — deliberate: snapshots are
+        // self-contained (restore needs no history replay, and warm-start
+        // trials exist nowhere else), and the size is budget-bounded.
+        TunerState {
+            kind: self.name().to_string(),
+            data: Json::obj(vec![
+                ("hist_issued", Json::Bool(self.hist_issued)),
+                ("sweep_issued", Json::Bool(self.sweep_issued)),
+                (
+                    "target",
+                    Json::Arr(self.target.iter().map(Trial::to_json).collect()),
+                ),
+            ]),
         }
+    }
+
+    fn restore(&mut self, state: &TunerState) -> Result<(), String> {
+        let data = state.expect_kind(self.name())?;
+        self.hist_issued = statejson::bool_field(data, "hist_issued")?;
+        self.sweep_issued = statejson::bool_field(data, "sweep_issued")?;
+        self.target = data
+            .get("target")
+            .and_then(|x| x.as_arr())
+            .ok_or("TLA state: missing target")?
+            .iter()
+            .map(Trial::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(())
     }
 }
 
@@ -291,6 +343,7 @@ fn propose_lcm_ei(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::objective::TuningSession;
     use crate::tuners::testutil::tiny_objective;
 
     fn fake_source(best_cfg: SapConfig, n: usize) -> Vec<SourceSample> {
@@ -319,7 +372,7 @@ mod tests {
         };
         let mut tuner = TlaTuner::new(fake_source(best_cfg, 30));
         let mut obj = tiny_objective(7);
-        let h = tuner.run(&mut obj, 6, &mut Rng::new(3));
+        let h = TuningSession::new(&mut obj, &mut tuner, 6, 3).run().unwrap().history;
         assert_eq!(h.len(), 6);
         assert!(h.trials()[0].is_reference);
         // Line 2: second evaluation is the source's historical best.
@@ -338,7 +391,7 @@ mod tests {
         let good_cat = category_index(&best_cfg);
         let mut tuner = TlaTuner::new(fake_source(best_cfg, 60));
         let mut obj = tiny_objective(8);
-        let h = tuner.run(&mut obj, 12, &mut Rng::new(4));
+        let h = TuningSession::new(&mut obj, &mut tuner, 12, 4).run().unwrap().history;
         let in_good = h.trials()[1..]
             .iter()
             .filter(|t| category_index(&t.config) == good_cat)
@@ -354,7 +407,7 @@ mod tests {
         let mut tuner =
             TlaTuner::with_mode(fake_source(best_cfg, 20), TlaMode::OriginalLcm);
         let mut obj = tiny_objective(9);
-        let h = tuner.run(&mut obj, 5, &mut Rng::new(5));
+        let h = TuningSession::new(&mut obj, &mut tuner, 5, 5).run().unwrap().history;
         assert_eq!(h.len(), 5);
         assert_eq!(tuner.name(), "TLA-OriginalLCM");
     }
@@ -365,7 +418,85 @@ mod tests {
         // panic and must still fill the budget.
         let mut tuner = TlaTuner::new(vec![]);
         let mut obj = tiny_objective(10);
-        let h = tuner.run(&mut obj, 5, &mut Rng::new(6));
+        let h = TuningSession::new(&mut obj, &mut tuner, 5, 6).run().unwrap().history;
         assert_eq!(h.len(), 5);
+    }
+
+    #[test]
+    fn warm_target_trials_suppress_the_category_sweep() {
+        use crate::objective::{History, ParamSpace};
+        let space = ParamSpace::paper();
+        let history = History::new();
+        let ctx = SessionCtx {
+            space: &space,
+            budget: 20,
+            evaluated: 1,
+            remaining: 19,
+            history: &history,
+        };
+        let warm_for = |cats: usize| -> Vec<Trial> {
+            (0..cats)
+                .map(|cat| {
+                    let (algorithm, sketch) = crate::objective::category_parts(cat);
+                    Trial {
+                        config: SapConfig {
+                            algorithm,
+                            sketch,
+                            sampling_factor: 2.0,
+                            vec_nnz: 4,
+                            safety_factor: 1,
+                        },
+                        wall_clock: 0.5,
+                        arfe: 1e-9,
+                        value: 0.5,
+                        failed: false,
+                        is_reference: cat == 0,
+                    }
+                })
+                .collect()
+        };
+        let mut rng = Rng::new(5);
+
+        // Cold (no source, only the reference told): the first ask is the
+        // unseen-category sweep — one config per unexplored category.
+        let mut cold = TlaTuner::new(vec![]);
+        cold.tell(&ctx, &warm_for(1));
+        match cold.ask(&ctx, &mut rng) {
+            Proposal::Configs(batch) => {
+                assert_eq!(batch.len(), N_CATEGORIES - 1, "sweep covers unseen categories")
+            }
+            Proposal::Done => panic!("cold TLA must sweep"),
+        }
+
+        // Warm: prior trials already cover every category ⇒ no sweep, the
+        // first ask is a single bandit+LCM-guided config.
+        let mut warm = TlaTuner::new(vec![]);
+        warm.tell(&ctx, &warm_for(N_CATEGORIES));
+        match warm.ask(&ctx, &mut rng) {
+            Proposal::Configs(batch) => assert_eq!(batch.len(), 1, "sweep was suppressed"),
+            Proposal::Done => panic!("warm TLA must propose"),
+        }
+    }
+
+    #[test]
+    fn snapshot_restores_phases_and_target_trials() {
+        let mut tuner = TlaTuner::new(fake_source(SapConfig::reference(), 10));
+        let mut obj = tiny_objective(11);
+        let _ = TuningSession::new(&mut obj, &mut tuner, 5, 7).run().unwrap();
+        let snap = tuner.snapshot();
+        let json = snap.to_json().to_string();
+        let parsed =
+            TunerState::from_json(&crate::json::Json::parse(&json).unwrap()).unwrap();
+        let mut restored = TlaTuner::new(fake_source(SapConfig::reference(), 10));
+        restored.restore(&parsed).unwrap();
+        assert!(restored.hist_issued && restored.sweep_issued);
+        assert_eq!(restored.target.len(), tuner.target.len());
+        for (a, b) in restored.target.iter().zip(&tuner.target) {
+            assert_eq!(a.config, b.config);
+            assert_eq!(a.value.to_bits(), b.value.to_bits());
+        }
+        // A hybrid snapshot cannot restore an OriginalLcm tuner.
+        let mut wrong = TlaTuner::with_mode(vec![], TlaMode::OriginalLcm);
+        assert!(wrong.restore(&parsed).is_err());
     }
 }

@@ -7,9 +7,16 @@
 //! the continuous encoding, with bandwidths from neighbour spacing);
 //! candidates sampled from l(x) are ranked by the acquisition ratio
 //! l(x)/g(x) (equivalent to EI under the TPE derivation).
+//!
+//! As an ask/tell state machine the tuner keeps its observation set
+//! `(xs, ys)` updated via [`Tuner::tell`]; the random startup phase is
+//! one batch whose size shrinks by however many trials the session has
+//! already told it (warm-started sessions therefore skip straight to the
+//! Parzen model once enough prior data exists).
 
-use super::Tuner;
-use crate::objective::{History, Objective, DIMS};
+use super::{statejson, Proposal, Tuner, TunerState};
+use crate::json::Json;
+use crate::objective::{SessionCtx, Trial, DIMS};
 use crate::rng::Rng;
 
 /// γ: fraction of observations labelled "good" (hyperopt default ≈ 0.25).
@@ -20,13 +27,19 @@ const N_CANDIDATES: usize = 24;
 /// The TPE tuner (hyperopt-style Parzen surrogate).
 pub struct TpeTuner {
     n_startup: usize,
+    /// Has the random startup batch been proposed yet?
+    startup_issued: bool,
+    /// Observations in encoded space (filled by `tell`).
+    xs: Vec<[f64; DIMS]>,
+    ys: Vec<f64>,
 }
 
 impl TpeTuner {
     /// `n_startup`: random evaluations before the Parzen model kicks in
-    /// (plays the role of num_pilots).
+    /// (plays the role of num_pilots). Warm-start trials told before the
+    /// first `ask` count against this number.
     pub fn new(n_startup: usize) -> TpeTuner {
-        TpeTuner { n_startup }
+        TpeTuner { n_startup, startup_issued: false, xs: Vec::new(), ys: Vec::new() }
     }
 }
 
@@ -35,63 +48,97 @@ impl Tuner for TpeTuner {
         "TPE"
     }
 
-    fn run(&mut self, objective: &mut Objective, budget: usize, rng: &mut Rng) -> History {
-        objective.evaluate_reference();
-        let space = objective.task.space.clone();
-
-        // Observations in encoded space.
-        let mut xs: Vec<[f64; DIMS]> = Vec::new();
-        let mut ys: Vec<f64> = Vec::new();
-        {
-            let t = &objective.history().trials()[0];
-            xs.push(space.encode(&t.config));
-            ys.push(t.value);
+    fn ask(&mut self, ctx: &SessionCtx<'_>, rng: &mut Rng) -> Proposal {
+        if ctx.remaining == 0 {
+            return Proposal::Done;
         }
-
-        // Startup phase: the random configurations are independent of any
-        // observation, so submit them as one batch (pilot fan-out).
-        let n_start = self.n_startup.min(budget.saturating_sub(objective.evaluations()));
-        if n_start > 0 {
-            let cfgs: Vec<_> = (0..n_start).map(|_| space.sample(rng)).collect();
-            for t in objective.evaluate_batch(&cfgs) {
-                xs.push(space.encode(&t.config));
-                ys.push(t.value);
+        if !self.startup_issued {
+            self.startup_issued = true;
+            // Random startup, one batch (pilot fan-out): its size is
+            // reduced by every observation beyond the reference already
+            // told (the warm-start contract).
+            let have = self.ys.len().saturating_sub(1);
+            let n_start = self.n_startup.saturating_sub(have).min(ctx.remaining);
+            if n_start > 0 {
+                return Proposal::Configs(
+                    (0..n_start).map(|_| ctx.space.sample(rng)).collect(),
+                );
             }
         }
 
-        while objective.evaluations() < budget {
-            let cfg = if ys.len() < 2 {
-                // Degenerate startup (n_startup = 0 or budget-truncated):
-                // the Parzen split needs at least two observations.
-                space.sample(rng)
-            } else {
-                // Split at the γ-quantile.
-                let mut order: Vec<usize> = (0..ys.len()).collect();
-                order.sort_by(|&a, &b| ys[a].partial_cmp(&ys[b]).unwrap());
-                let n_good = ((GAMMA * ys.len() as f64).ceil() as usize).clamp(1, ys.len() - 1);
-                let good: Vec<&[f64; DIMS]> =
-                    order[..n_good].iter().map(|&i| &xs[i]).collect();
-                let bad: Vec<&[f64; DIMS]> =
-                    order[n_good..].iter().map(|&i| &xs[i]).collect();
+        let cfg = if self.ys.len() < 2 {
+            // Degenerate startup (n_startup = 0 or budget-truncated):
+            // the Parzen split needs at least two observations.
+            ctx.space.sample(rng)
+        } else {
+            // Split at the γ-quantile.
+            let mut order: Vec<usize> = (0..self.ys.len()).collect();
+            order.sort_by(|&a, &b| self.ys[a].partial_cmp(&self.ys[b]).unwrap());
+            let n_good =
+                ((GAMMA * self.ys.len() as f64).ceil() as usize).clamp(1, self.ys.len() - 1);
+            let good: Vec<&[f64; DIMS]> =
+                order[..n_good].iter().map(|&i| &self.xs[i]).collect();
+            let bad: Vec<&[f64; DIMS]> =
+                order[n_good..].iter().map(|&i| &self.xs[i]).collect();
 
-                // Sample candidates from l, score by l/g.
-                let mut best_cand: Option<[f64; DIMS]> = None;
-                let mut best_score = f64::NEG_INFINITY;
-                for _ in 0..N_CANDIDATES {
-                    let cand = sample_from_parzen(&good, rng);
-                    let score = log_parzen(&good, &cand) - log_parzen(&bad, &cand);
-                    if score > best_score {
-                        best_score = score;
-                        best_cand = Some(cand);
-                    }
+            // Sample candidates from l, score by l/g.
+            let mut best_cand: Option<[f64; DIMS]> = None;
+            let mut best_score = f64::NEG_INFINITY;
+            for _ in 0..N_CANDIDATES {
+                let cand = sample_from_parzen(&good, rng);
+                let score = log_parzen(&good, &cand) - log_parzen(&bad, &cand);
+                if score > best_score {
+                    best_score = score;
+                    best_cand = Some(cand);
                 }
-                space.decode(&best_cand.unwrap())
-            };
-            let t = objective.evaluate(&cfg);
-            xs.push(space.encode(&t.config));
-            ys.push(t.value);
+            }
+            ctx.space.decode(&best_cand.unwrap())
+        };
+        Proposal::Configs(vec![cfg])
+    }
+
+    fn tell(&mut self, ctx: &SessionCtx<'_>, trials: &[Trial]) {
+        for t in trials {
+            self.xs.push(ctx.space.encode(&t.config));
+            self.ys.push(t.value);
         }
-        objective.history().clone()
+    }
+
+    fn snapshot(&self) -> TunerState {
+        TunerState {
+            kind: self.name().to_string(),
+            data: Json::obj(vec![
+                ("startup_issued", Json::Bool(self.startup_issued)),
+                (
+                    "xs",
+                    Json::Arr(self.xs.iter().map(|x| statejson::floats(x)).collect()),
+                ),
+                ("ys", statejson::floats(&self.ys)),
+            ]),
+        }
+    }
+
+    fn restore(&mut self, state: &TunerState) -> Result<(), String> {
+        let data = state.expect_kind(self.name())?;
+        self.startup_issued = statejson::bool_field(data, "startup_issued")?;
+        self.xs = data
+            .get("xs")
+            .and_then(|x| x.as_arr())
+            .ok_or("TPE state: missing xs")?
+            .iter()
+            .map(|row| {
+                let v = statejson::floats_back(row, "xs row")?;
+                <[f64; DIMS]>::try_from(v).map_err(|_| "TPE state: bad xs width".to_string())
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        self.ys = statejson::floats_back(
+            data.get("ys").ok_or("TPE state: missing ys")?,
+            "ys",
+        )?;
+        if self.xs.len() != self.ys.len() {
+            return Err("TPE state: xs/ys length mismatch".into());
+        }
+        Ok(())
     }
 }
 
@@ -165,6 +212,102 @@ mod tests {
             assert!(s.iter().all(|&v| (0.0..=1.0).contains(&v)));
             // With one tight component, samples concentrate near it.
             assert!((s[2] - 0.5).abs() < 1.0);
+        }
+    }
+
+    #[test]
+    fn startup_batch_shrinks_with_prior_observations() {
+        // The warm-start contract: trials told before the first ask count
+        // against n_startup.
+        let space = crate::objective::ParamSpace::paper();
+        let history = crate::objective::History::new();
+        let ctx = SessionCtx {
+            space: &space,
+            budget: 20,
+            evaluated: 1,
+            remaining: 19,
+            history: &history,
+        };
+        let mut rng = Rng::new(2);
+        let fake = |value: f64, is_reference: bool| Trial {
+            config: crate::sap::SapConfig::reference(),
+            wall_clock: value,
+            arfe: 1e-9,
+            value,
+            failed: false,
+            is_reference,
+        };
+
+        // Cold: ref + nothing else told → full startup batch.
+        let mut cold = TpeTuner::new(6);
+        cold.tell(&ctx, &[fake(1.0, true)]);
+        match cold.ask(&ctx, &mut rng) {
+            Proposal::Configs(b) => assert_eq!(b.len(), 6),
+            Proposal::Done => panic!("cold TPE must propose a startup batch"),
+        }
+
+        // Warm: 4 prior trials + ref → startup shrinks to 2.
+        let mut warm = TpeTuner::new(6);
+        let prior: Vec<Trial> = (0..4).map(|i| fake(1.0 + i as f64, false)).collect();
+        warm.tell(&ctx, &prior);
+        warm.tell(&ctx, &[fake(1.0, true)]);
+        match warm.ask(&ctx, &mut rng) {
+            Proposal::Configs(b) => assert_eq!(b.len(), 2),
+            Proposal::Done => panic!("warm TPE must still propose"),
+        }
+
+        // Saturated: 6+ priors → no startup, straight to the model (one
+        // config at a time).
+        let mut sat = TpeTuner::new(6);
+        let prior: Vec<Trial> = (0..8).map(|i| fake(1.0 + i as f64, false)).collect();
+        sat.tell(&ctx, &prior);
+        sat.tell(&ctx, &[fake(1.0, true)]);
+        match sat.ask(&ctx, &mut rng) {
+            Proposal::Configs(b) => assert_eq!(b.len(), 1),
+            Proposal::Done => panic!("saturated TPE must still propose"),
+        }
+    }
+
+    #[test]
+    fn snapshot_round_trips_observations_bitwise() {
+        let space = crate::objective::ParamSpace::paper();
+        let history = crate::objective::History::new();
+        let ctx = SessionCtx {
+            space: &space,
+            budget: 9,
+            evaluated: 1,
+            remaining: 8,
+            history: &history,
+        };
+        let mut rng = Rng::new(3);
+        let mut tuner = TpeTuner::new(3);
+        let trials: Vec<Trial> = (0..5)
+            .map(|i| Trial {
+                config: space.sample(&mut rng),
+                wall_clock: 0.1 + 0.01 * i as f64,
+                arfe: 1e-9,
+                value: (0.1 + 0.01 * i as f64) * 1.000_000_000_3,
+                failed: false,
+                is_reference: i == 0,
+            })
+            .collect();
+        tuner.tell(&ctx, &trials);
+        let _ = tuner.ask(&ctx, &mut rng);
+
+        let snap = tuner.snapshot();
+        let json = snap.to_json().to_string();
+        let back = TunerState::from_json(&crate::json::Json::parse(&json).unwrap()).unwrap();
+        let mut restored = TpeTuner::new(3);
+        restored.restore(&back).unwrap();
+        assert_eq!(restored.startup_issued, tuner.startup_issued);
+        assert_eq!(restored.ys.len(), tuner.ys.len());
+        for (a, b) in restored.ys.iter().zip(&tuner.ys) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in restored.xs.iter().zip(&tuner.xs) {
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
         }
     }
 

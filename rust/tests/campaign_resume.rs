@@ -83,6 +83,54 @@ fn killed_and_resumed_campaign_merges_bit_identically() {
 }
 
 #[test]
+fn mid_cell_killed_campaign_merges_bit_identically() {
+    // Trial-granular kill simulation: with `max_trials = 1`, every
+    // invocation evaluates at most one trial batch and pauses the
+    // in-flight cell mid-run via its session checkpoint. Resuming over
+    // and over must converge to a merged DB byte-identical to an
+    // uninterrupted run — the strongest form of the resume contract
+    // (checkpoint granularity is a trial batch, not a cell).
+    let dir_full = tmp("midcell_uninterrupted");
+    let dir_kill = tmp("midcell_killed");
+    let _ = std::fs::remove_dir_all(&dir_full);
+    let _ = std::fs::remove_dir_all(&dir_kill);
+
+    let full = Campaign::new(spec(1), &dir_full).run().unwrap();
+    assert!(full.finished);
+    let reference_bytes = std::fs::read(&full.merged_db_path).unwrap();
+
+    let mut boxed = spec(1);
+    boxed.max_trials = Some(1);
+    let mut finished = false;
+    let mut paused_mid_cell = false;
+    for _ in 0..300 {
+        // Fresh Campaign value per invocation, as after a real kill.
+        let campaign = Campaign::new(boxed.clone(), &dir_kill);
+        let out = campaign.run().unwrap();
+        // At least one invocation must leave a cell paused mid-run.
+        paused_mid_cell |= campaign
+            .spec
+            .cells()
+            .iter()
+            .any(|c| campaign.session_path(c).exists());
+        if out.finished {
+            finished = true;
+            break;
+        }
+    }
+    assert!(finished, "trial-quota resume never converged");
+    assert!(paused_mid_cell, "no invocation ever paused a cell mid-run");
+    let resumed_bytes = std::fs::read(dir_kill.join("merged.json")).unwrap();
+    assert_eq!(
+        reference_bytes, resumed_bytes,
+        "mid-cell-resumed merged DB differs from uninterrupted run"
+    );
+
+    std::fs::remove_dir_all(&dir_full).ok();
+    std::fs::remove_dir_all(&dir_kill).ok();
+}
+
+#[test]
 fn eval_thread_count_does_not_change_modeled_results() {
     // The within-cell parallel evaluator must not alter any recorded
     // number under modeled timing — the campaign-level statement of the

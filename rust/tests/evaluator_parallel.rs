@@ -9,11 +9,12 @@
 
 use ranntune::data::{generate_synthetic, SyntheticKind};
 use ranntune::objective::{
-    Constants, History, Objective, ParallelEvaluator, ParamSpace, SerialEvaluator, TuningTask,
+    run_tuner, Constants, History, Objective, ParallelEvaluator, ParamSpace, SerialEvaluator,
+    TuningTask,
 };
 use ranntune::rng::Rng;
 use ranntune::sap::SapConfig;
-use ranntune::tuners::{GridTuner, LhsmduTuner, Tuner};
+use ranntune::tuners::{GridTuner, LhsmduTuner};
 
 fn fixed_task(seed: u64) -> TuningTask {
     let mut rng = Rng::new(seed);
@@ -73,11 +74,11 @@ fn grid_tuner_history_identical_across_evaluators() {
     let budget = grid.len() + 1;
 
     let mut serial_obj = Objective::with_evaluator(fixed_task(1), 7, Box::new(SerialEvaluator));
-    let h_serial = GridTuner::new(grid.clone()).run(&mut serial_obj, budget, &mut Rng::new(3));
+    let h_serial = run_tuner(&mut serial_obj, &mut GridTuner::new(grid.clone()), budget, 3);
 
     let mut par_obj =
         Objective::with_evaluator(fixed_task(1), 7, Box::new(ParallelEvaluator::new(4)));
-    let h_par = GridTuner::new(grid).run(&mut par_obj, budget, &mut Rng::new(3));
+    let h_par = run_tuner(&mut par_obj, &mut GridTuner::new(grid), budget, 3);
 
     assert_histories_equivalent(&h_serial, &h_par);
 }
@@ -88,11 +89,11 @@ fn lhsmdu_tuner_history_identical_across_evaluators() {
     // evaluator-independent; the recorded ARFEs must then match bitwise.
     let budget = 9;
     let mut serial_obj = Objective::new(fixed_task(2), 11);
-    let h_serial = LhsmduTuner::new().run(&mut serial_obj, budget, &mut Rng::new(5));
+    let h_serial = run_tuner(&mut serial_obj, &mut LhsmduTuner::new(), budget, 5);
 
     let mut par_obj =
         Objective::with_evaluator(fixed_task(2), 11, Box::new(ParallelEvaluator::new(4)));
-    let h_par = LhsmduTuner::new().run(&mut par_obj, budget, &mut Rng::new(5));
+    let h_par = run_tuner(&mut par_obj, &mut LhsmduTuner::new(), budget, 5);
 
     assert_histories_equivalent(&h_serial, &h_par);
 }

@@ -6,7 +6,7 @@
 use ranntune::cli::figures::collect_source;
 use ranntune::data::{generate_realworld, generate_synthetic, RealWorldKind, SyntheticKind};
 use ranntune::db::HistoryDb;
-use ranntune::objective::{Constants, Objective, ParamSpace, TuningTask};
+use ranntune::objective::{run_tuner, Constants, Objective, ParamSpace, TuningTask};
 use ranntune::rng::Rng;
 use ranntune::sensitivity::analyze_trials;
 use ranntune::tuners::{GpBoTuner, LhsmduTuner, TlaTuner, TpeTuner, Tuner};
@@ -36,7 +36,7 @@ fn every_tuner_finds_a_config_at_least_as_good_as_reference() {
     ] {
         let mut tuner = tuner;
         let mut obj = small_objective(3);
-        let h = tuner.run(&mut obj, 15, &mut Rng::new(1));
+        let h = run_tuner(&mut obj, tuner.as_mut(), 15, 1);
         let ref_value = h.trials()[0].value;
         let best = h.best().unwrap().value;
         assert!(
@@ -84,7 +84,7 @@ fn full_transfer_pipeline_via_db() {
         1,
     );
     let mut tla = TlaTuner::new(source2);
-    let h = tla.run(&mut obj, 10, &mut Rng::new(2));
+    let h = run_tuner(&mut obj, &mut tla, 10, 2);
     assert_eq!(h.len(), 10);
     assert!(h.best().unwrap().value <= h.trials()[0].value * 1.1);
     let _ = std::fs::remove_dir_all(&dir);
@@ -94,7 +94,7 @@ fn full_transfer_pipeline_via_db() {
 fn sensitivity_runs_on_real_tuning_history() {
     let mut obj = small_objective(6);
     let mut sampler = LhsmduTuner::new();
-    let h = sampler.run(&mut obj, 25, &mut Rng::new(3));
+    let h = run_tuner(&mut obj, &mut sampler, 25, 3);
     let mut rng = Rng::new(7);
     let res = analyze_trials(h.trials(), &ParamSpace::paper(), 256, &mut rng);
     assert_eq!(res.indices.len(), 5);
