@@ -212,6 +212,55 @@ fn main() {
         gv_flops,
     );
 
+    // Blocked compact-WY QR vs the serial unblocked baseline, at the
+    // acceptance shape d×n = 4096×256 (fixed dims so the comparison is
+    // stable across smoke overrides). Three flavours: the SAP hot path
+    // (R + implicit Q, what the preconditioner pays), the same plus an
+    // explicit thin Q (what coherence pays), and the seed algorithm
+    // (serial rank-1 loop that always materialized Q).
+    let (qd, qn) = (4096usize, 256usize);
+    let qa = Mat::from_fn(qd, qn, |_, _| rng.normal());
+    let qr_fact_flops = 2.0 * qd as f64 * (qn * qn) as f64;
+    add(
+        "cmp: qr_thin 4096x256 blocked",
+        time_fn(1, 3, || {
+            std::hint::black_box(ranntune::linalg::qr_thin(&qa));
+        }),
+        qr_fact_flops,
+    );
+    add(
+        "cmp: qr_thin 4096x256 blocked+thinQ",
+        time_fn(1, 3, || {
+            std::hint::black_box(ranntune::linalg::qr_thin(&qa).form_thin_q());
+        }),
+        qr_fact_flops,
+    );
+    add(
+        "cmp: qr_thin 4096x256 unblocked",
+        time_fn(1, 3, || {
+            std::hint::black_box(ranntune::linalg::qr_thin_unblocked(&qa));
+        }),
+        qr_fact_flops,
+    );
+
+    // Direct least-squares reference solve (the per-problem cost the
+    // objective memoizes), blocked implicit-Qᵀb vs the seed path.
+    let lstsq_flops = 2.0 * m as f64 * (n * n) as f64;
+    add(
+        &format!("cmp: lstsq_qr {m}x{n} blocked"),
+        time_fn(1, 3, || {
+            std::hint::black_box(ranntune::linalg::lstsq_qr(a, &problem.b));
+        }),
+        lstsq_flops,
+    );
+    add(
+        &format!("cmp: lstsq_qr {m}x{n} unblocked"),
+        time_fn(1, 3, || {
+            std::hint::black_box(lstsq_unblocked(a, &problem.b));
+        }),
+        lstsq_flops,
+    );
+
     // Sketch apply at bench scale (SJLT, the band-partitioned operator).
     let cmp_op = make_sketch(SketchKind::Sjlt, d, m, 8, &mut rng);
     let cmp_nz = sketch_rows_nz(cmp_op.as_ref());
@@ -276,6 +325,41 @@ fn main() {
     let dir = common::results_dir();
     let _ = std::fs::create_dir_all(&dir);
     let _ = std::fs::write(dir.join("BENCH_hotpath_micro.json"), snapshot.to_string_pretty());
+
+    // Kernel-trajectory snapshot: just the deterministic-factorization
+    // rows (blocked vs unblocked QR, lstsq, full SAP solves) that the CI
+    // bench-smoke job publishes as BENCH_kernels.json at the repo root
+    // and gates against regression.
+    let kernel_rows: Vec<Json> = raw
+        .iter()
+        .filter(|(name, ..)| {
+            name.contains("qr_thin") || name.contains("lstsq_qr") || name.starts_with("SAP solve")
+        })
+        .map(|(name, med, min, gflops)| {
+            Json::obj(vec![
+                ("path", Json::Str(name.clone())),
+                ("median_s", Json::Num(*med)),
+                ("min_s", Json::Num(*min)),
+                ("gflops", Json::Num(*gflops)),
+            ])
+        })
+        .collect();
+    let kernels = Json::obj(vec![
+        ("bench", Json::Str("kernels".into())),
+        ("m", Json::Num(m as f64)),
+        ("n", Json::Num(n as f64)),
+        ("d", Json::Num(d as f64)),
+        ("rows", Json::Arr(kernel_rows)),
+    ]);
+    let _ = std::fs::write(dir.join("BENCH_kernels.json"), kernels.to_string_pretty());
+}
+
+/// x = R⁻¹Qᵀb through the seed QR (explicit thin Q + dense Qᵀb product) —
+/// the pre-blocking `lstsq_qr`, kept as the cmp baseline.
+fn lstsq_unblocked(a: &Mat, b: &[f64]) -> Vec<f64> {
+    let (q, r) = ranntune::linalg::qr_thin_unblocked(a);
+    let qtb = ranntune::linalg::gemv_t(&q, b);
+    ranntune::linalg::solve_upper(&r, &qtb)
 }
 
 // ---- scoped baselines (the pre-pool kernels, for the `cmp:` rows) ----

@@ -10,9 +10,12 @@ use crate::linalg::{qr_thin, svd_thin, Mat};
 ///
 /// The row norms of U equal the diagonal of the range projector and are
 /// therefore basis-independent; we use the thin-QR Q instead of the SVD's
-/// U for speed.
+/// U for speed. This is the one consumer that genuinely needs an
+/// explicit orthonormal basis, so it is the one caller of the blocked
+/// back-accumulation [`crate::linalg::QrFactors::form_thin_q`]; every
+/// solver path applies Q implicitly instead.
 pub fn coherence(a: &Mat) -> f64 {
-    let q = qr_thin(a).q;
+    let q = qr_thin(a).form_thin_q();
     let mut best = 0.0f64;
     for i in 0..q.rows() {
         let r = q.row(i);
@@ -67,7 +70,7 @@ mod tests {
     fn condition_number_of_scaled_orthonormal() {
         let mut rng = Rng::new(3);
         let g = Mat::from_fn(100, 4, |_, _| rng.normal());
-        let q = crate::linalg::qr_thin(&g).q;
+        let q = crate::linalg::qr_thin(&g).form_thin_q();
         // Columns scaled by 1..4 → cond exactly 4.
         let mut a = q.clone();
         for i in 0..100 {

@@ -49,6 +49,31 @@ impl Problem {
         self.a.cols()
     }
 
+    /// FNV-1a digest over every matrix/vector entry bit of (A, b): the
+    /// problem's data identity. O(mn), deliberately cheap next to the
+    /// O(mn²) direct reference solve. Used as the data component of the
+    /// session-checkpoint fingerprint (resume refuses a checkpoint from
+    /// different data) and as the key of the process-wide reference-
+    /// solution memo in [`crate::objective::Objective`] — campaign cells
+    /// and repeated sessions on the same problem pay the direct solve
+    /// once per process.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut mix = |bits: u64| {
+            h ^= bits;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        };
+        for i in 0..self.m() {
+            for &v in self.a.row(i) {
+                mix(v.to_bits());
+            }
+        }
+        for &v in &self.b {
+            mix(v.to_bits());
+        }
+        h
+    }
+
     /// Down-sampled copy with `m_small` rows (and the matching slice of
     /// b) — the paper's transfer-learning source construction ("smaller
     /// matrix with the same generation scheme" for synthetic problems;

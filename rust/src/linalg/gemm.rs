@@ -87,6 +87,64 @@ fn gemm_rows(a: &Mat, b: &Mat, c_band: &mut [f64], row_lo: usize, row_hi: usize)
     }
 }
 
+/// C += Aᵀ · B without materializing the transpose (A is k×m, B is
+/// k×n, C is m×n). This is the `Vᵀ·W` half of the blocked QR trailing
+/// update: A is the tall packed-reflector panel, so transposing it
+/// explicitly per panel would cost an extra O(mk) pass and allocation.
+///
+/// Accumulating like [`gemm_into`]: existing contents of `C` are kept.
+///
+/// ## Determinism
+///
+/// Parallelized over row bands of `C`; every output element's
+/// contraction runs over k in ascending order inside exactly one task,
+/// so band boundaries never reassociate an accumulation — bit-identical
+/// across `RANNTUNE_THREADS` values (same contract as [`gemm_into`];
+/// pinned by `tests/kernel_determinism.rs` through the blocked QR
+/// fingerprints).
+pub fn gemm_tn_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    let (kk, m) = a.shape();
+    let n = b.cols();
+    assert_eq!(b.rows(), kk, "gemm_tn shape mismatch {:?}ᵀx{:?}", a.shape(), b.shape());
+    assert_eq!(c.shape(), (m, n), "gemm_tn output shape");
+
+    let nt = super::num_threads().min(m.max(1));
+    if nt <= 1 || m * n * kk < 64 * 64 * 64 {
+        gemm_tn_rows(a, b, c.as_mut_slice(), 0, m);
+        return;
+    }
+    let rows_per = m.div_ceil(nt);
+    super::run_chunks(c.as_mut_slice(), rows_per * n, &|t, band| {
+        let lo = t * rows_per;
+        let hi = lo + band.len() / n;
+        gemm_tn_rows(a, b, band, lo, hi);
+    });
+}
+
+/// Compute rows [row_lo, row_hi) of C += Aᵀ·B into the band slice.
+fn gemm_tn_rows(a: &Mat, b: &Mat, c_band: &mut [f64], row_lo: usize, row_hi: usize) {
+    let k = a.rows();
+    let n = b.cols();
+    const KB: usize = 256; // k-blocking keeps the B panel in L2
+    for kb in (0..k).step_by(KB) {
+        let kmax = (kb + KB).min(k);
+        for i in row_lo..row_hi {
+            let crow = &mut c_band[(i - row_lo) * n..(i - row_lo + 1) * n];
+            for kk in kb..kmax {
+                let aki = a[(kk, i)];
+                if aki == 0.0 {
+                    continue;
+                }
+                let brow = b.row(kk);
+                // innermost: c[i,:] += a[k,i] * b[k,:]  (contiguous, FMA-friendly)
+                for (cj, bj) in crow.iter_mut().zip(brow.iter()) {
+                    *cj += aki * bj;
+                }
+            }
+        }
+    }
+}
+
 /// y = A · x (threaded over row bands for tall A).
 pub fn gemv(a: &Mat, x: &[f64]) -> Vec<f64> {
     assert_eq!(a.cols(), x.len());
@@ -221,6 +279,25 @@ mod tests {
             let mut diff = c.clone();
             diff.axpy(-1.0, &expect);
             assert!(diff.max_abs() < 1e-9, "m={m} k={k} n={n}: {}", diff.max_abs());
+        }
+    }
+
+    #[test]
+    fn gemm_tn_matches_transposed_gemm() {
+        // Below and above the threading cutoff, and with non-zero C
+        // (the accumulate contract matches gemm_into).
+        let mut r = Rng::new(8);
+        for &(k, m, n) in &[(30usize, 7usize, 11usize), (300, 64, 80)] {
+            let a = Mat::from_fn(k, m, |_, _| r.normal());
+            let b = Mat::from_fn(k, n, |_, _| r.normal());
+            let seed = Mat::from_fn(m, n, |_, _| r.normal());
+            let mut c = seed.clone();
+            gemm_tn_into(&a, &b, &mut c);
+            let mut expect = gemm(&a.transpose(), &b);
+            expect.axpy(1.0, &seed);
+            let mut diff = c.clone();
+            diff.axpy(-1.0, &expect);
+            assert!(diff.max_abs() < 1e-9, "k={k} m={m} n={n}: {}", diff.max_abs());
         }
     }
 

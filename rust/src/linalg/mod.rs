@@ -9,12 +9,16 @@
 //!   park between calls instead of being respawned), plus the per-thread
 //!   [`with_scratch`] buffer.
 //! * [`gemm()`] — blocked, multi-threaded matrix multiply (plus
-//!   [`gemv`], [`gemv_t`]), the workhorse behind sketching,
-//!   preconditioning, and GP fits. Bit-deterministic across thread
-//!   counts.
-//! * [`qr_thin`] — Householder QR (thin), used for the QR-LSQR
+//!   [`gemv`], [`gemv_t`], and the transpose-free [`gemm_tn_into`]),
+//!   the workhorse behind sketching, preconditioning, and GP fits.
+//!   Bit-deterministic across thread counts.
+//! * [`qr_thin`] — blocked compact-WY Householder QR (thin) with
+//!   implicit Q ([`QrFactors`]): the trailing update runs as
+//!   pool-parallel GEMMs and consumers apply Qᵀ/Q through the packed
+//!   reflectors instead of materializing Q. Used for the QR-LSQR
 //!   preconditioner, the direct reference solver ([`lstsq_qr`]), and
-//!   coherence computation.
+//!   coherence computation (the one caller of
+//!   [`QrFactors::form_thin_q`]).
 //! * [`svd_thin`] — one-sided Jacobi SVD (thin), used for the SVD-based
 //!   preconditioners and condition numbers. Jacobi is chosen for its
 //!   simplicity and high relative accuracy; our sketches are small

@@ -32,7 +32,9 @@ pub fn svd_thin(a: &Mat) -> SvdFactors {
     if m * 8 > n * 9 && n > 1 {
         let f = super::qr_thin(a);
         let inner = svd_jacobi(&f.r);
-        return SvdFactors { u: super::gemm(&f.q, &inner.u), s: inner.s, v: inner.v };
+        // U = Q·U_R through the implicit reflectors — thin Q is never
+        // materialized on this path.
+        return SvdFactors { u: f.apply_q_mat(&inner.u), s: inner.s, v: inner.v };
     }
     svd_jacobi(a)
 }
@@ -207,7 +209,7 @@ mod tests {
         // diag(3, 2, 1) embedded in a tall matrix via orthogonal Q.
         let mut r = Rng::new(2);
         let g = Mat::from_fn(30, 3, |_, _| r.normal());
-        let q = crate::linalg::qr_thin(&g).q;
+        let q = crate::linalg::qr_thin(&g).form_thin_q();
         let mut a = q.clone();
         for i in 0..30 {
             a[(i, 0)] *= 3.0;
@@ -224,7 +226,7 @@ mod tests {
     fn cond_of_orthonormal_is_one() {
         let mut r = Rng::new(3);
         let g = Mat::from_fn(50, 8, |_, _| r.normal());
-        let q = crate::linalg::qr_thin(&g).q;
+        let q = crate::linalg::qr_thin(&g).form_thin_q();
         let c = cond(&q);
         assert!((c - 1.0).abs() < 1e-8, "cond {c}");
     }

@@ -214,7 +214,7 @@ impl<'a> TuningSession<'a> {
     /// completion (callers like the campaign runner delete it once the
     /// result is committed elsewhere).
     pub fn checkpoint_to(mut self, path: &Path) -> TuningSession<'a> {
-        self.problem_digest = Some(problem_digest(self.objective));
+        self.problem_digest = Some(self.objective.task.problem.fingerprint());
         self.checkpoint = Some(path.to_path_buf());
         self
     }
@@ -557,28 +557,6 @@ impl<'a> TuningSession<'a> {
 
 /// Format tag of the session checkpoint document.
 const CKPT_FORMAT: &str = "ranntune-session-ckpt-v1";
-
-/// FNV-1a over every matrix/vector entry of the objective's problem —
-/// the data-identity component of the checkpoint fingerprint. O(mn),
-/// computed once per checkpointed session (negligible next to the O(mn²)
-/// direct solve the objective already performed).
-fn problem_digest(objective: &Objective) -> u64 {
-    let p = &objective.task.problem;
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    let mut mix = |bits: u64| {
-        h ^= bits;
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
-    };
-    for i in 0..p.m() {
-        for &v in p.a.row(i) {
-            mix(v.to_bits());
-        }
-    }
-    for &v in &p.b {
-        mix(v.to_bits());
-    }
-    h
-}
 
 /// One-shot convenience wrapper: run `tuner` on `objective` for `budget`
 /// evaluations with proposal seed `seed` and return the history — the

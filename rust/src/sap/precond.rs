@@ -9,25 +9,34 @@
 //!   rank-deficient sketches.
 //!
 //! Both expose the presolve ingredient of Appendix A: the orthonormal
-//! factor of Â·M (Q for QR, U for SVD) so z_sk = (ÂM)ᵀ(Sb) is one GEMV.
+//! factor of Â·M (Q for QR, U for SVD) so z_sk = (ÂM)ᵀ(Sb) is one
+//! orthonormal-factor product — a GEMV for SVD, and an implicit
+//! reflector application for QR (thin Q is never materialized).
 
 use crate::linalg::{
-    gemv_into, gemv_t, gemv_t_into, qr_thin, solve_upper_into, solve_upper_t_into, svd_thin, Mat,
+    gemv_into, gemv_t_into, qr_thin, solve_upper_into, solve_upper_t_into, svd_thin, Mat,
+    QrFactors,
 };
 
 /// A realized preconditioner M (n×r) with its orthonormal sketch factor.
 pub enum Preconditioner {
-    /// M = R⁻¹ from Â = QR. Fields: R (n×n upper-tri), Q (d×n).
-    Qr { r: Mat, q: Mat },
+    /// M = R⁻¹ from Â = QR, with Q kept implicit: the factorization's
+    /// packed V/T reflectors serve the presolve's Qᵀ·(Sb) product, and
+    /// only R is ever extracted — thin Q is never materialized on this
+    /// path.
+    Qr {
+        /// Blocked compact-WY factors of the sketch (R + implicit Q).
+        f: QrFactors,
+    },
     /// M = V·Σ⁻¹ (dense n×rank) from Â = UΣVᵀ. Fields: M, U (d×rank).
     Svd { m: Mat, u: Mat },
 }
 
 impl Preconditioner {
-    /// Build the QR preconditioner from the sketch.
+    /// Build the QR preconditioner from the sketch (R extraction only;
+    /// Q stays implicit in the returned factors).
     pub fn from_qr(sketch: &Mat) -> Preconditioner {
-        let f = qr_thin(sketch);
-        Preconditioner::Qr { r: f.r, q: f.q }
+        Preconditioner::Qr { f: qr_thin(sketch) }
     }
 
     /// Build the SVD preconditioner from the sketch, truncating to the
@@ -55,7 +64,7 @@ impl Preconditioner {
     /// Rank r of the preconditioner (dimension of the z space).
     pub fn rank(&self) -> usize {
         match self {
-            Preconditioner::Qr { r, .. } => r.rows(),
+            Preconditioner::Qr { f } => f.r.rows(),
             Preconditioner::Svd { m, .. } => m.cols(),
         }
     }
@@ -63,7 +72,7 @@ impl Preconditioner {
     /// Output length of [`Preconditioner::apply`] (n for both schemes).
     pub fn out_dim(&self) -> usize {
         match self {
-            Preconditioner::Qr { r, .. } => r.rows(),
+            Preconditioner::Qr { f } => f.r.rows(),
             Preconditioner::Svd { m, .. } => m.rows(),
         }
     }
@@ -79,7 +88,7 @@ impl Preconditioner {
     /// (overwrites `out`; no allocation — the LSQR workspace hot path).
     pub fn apply_into(&self, z: &[f64], out: &mut [f64]) {
         match self {
-            Preconditioner::Qr { r, .. } => solve_upper_into(r, z, out),
+            Preconditioner::Qr { f } => solve_upper_into(&f.r, z, out),
             Preconditioner::Svd { m, .. } => gemv_into(m, z, out),
         }
     }
@@ -95,17 +104,27 @@ impl Preconditioner {
     /// (overwrites `out`; no allocation).
     pub fn apply_t_into(&self, y: &[f64], out: &mut [f64]) {
         match self {
-            Preconditioner::Qr { r, .. } => solve_upper_t_into(r, y, out),
+            Preconditioner::Qr { f } => solve_upper_t_into(&f.r, y, out),
             Preconditioner::Svd { m, .. } => gemv_t_into(m, y, out),
         }
     }
 
     /// z_sk = (ÂM)ᵀ·(Sb): the sketch-and-solve presolve point (Appendix A).
-    /// ÂM is Q (QR) or U (SVD) — column-orthonormal by construction.
+    /// ÂM is Q (QR, applied implicitly through the packed reflectors)
+    /// or U (SVD) — column-orthonormal by construction.
     pub fn presolve(&self, sb: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.rank()];
+        self.presolve_into(sb, &mut out);
+        out
+    }
+
+    /// [`Preconditioner::presolve`] into a preallocated buffer of length
+    /// [`Self::rank`] (overwrites `out`; the workspace-reuse hot path of
+    /// `solve_sap_ws`).
+    pub fn presolve_into(&self, sb: &[f64], out: &mut [f64]) {
         match self {
-            Preconditioner::Qr { q, .. } => gemv_t(q, sb),
-            Preconditioner::Svd { u, .. } => gemv_t(u, sb),
+            Preconditioner::Qr { f } => f.apply_qt_into(sb, out),
+            Preconditioner::Svd { u, .. } => gemv_t_into(u, sb, out),
         }
     }
 }
@@ -195,6 +214,10 @@ mod tests {
             let mut g = vec![1.0; p.rank()];
             p.apply_t_into(&y, &mut g);
             assert_eq!(g, p.apply_t(&y));
+            let sb: Vec<f64> = (0..35).map(|_| rng.normal()).collect();
+            let mut z_sk = vec![1.0; p.rank()];
+            p.presolve_into(&sb, &mut z_sk);
+            assert_eq!(z_sk, p.presolve(&sb));
         }
     }
 
@@ -214,7 +237,7 @@ mod tests {
                 res[i] -= sb[i];
             }
             let g = match &p {
-                Preconditioner::Qr { q, .. } => crate::linalg::gemv_t(q, &res),
+                Preconditioner::Qr { f } => f.apply_qt(&res),
                 Preconditioner::Svd { u, .. } => crate::linalg::gemv_t(u, &res),
             };
             assert!(crate::linalg::norm2(&g) < 1e-9);

@@ -7,7 +7,7 @@
 
 use std::time::Instant;
 
-use crate::linalg::{axpy, gemv, norm2, Mat};
+use crate::linalg::{axpy, gemv, gemv_into, norm2, Mat};
 use crate::rng::Rng;
 use crate::sap::{
     lsqr_preconditioned_ws, pgd_preconditioned, LsqrWorkspace, Preconditioner, SapAlgorithm,
@@ -23,6 +23,12 @@ use crate::sketch::make_sketch;
 #[derive(Default)]
 pub struct SapWorkspace {
     lsqr: LsqrWorkspace,
+    /// Presolve point z_sk (length rank) — doubles as the z0 buffer.
+    z_sk: Vec<f64>,
+    /// x = M·z_sk intermediate (length n).
+    presolve_x: Vec<f64>,
+    /// A·(M·z_sk), then the presolve residual b − A·M·z_sk (length m).
+    presolve_r: Vec<f64>,
 }
 
 impl SapWorkspace {
@@ -120,25 +126,35 @@ pub fn solve_sap_ws(
     let rank = precond.rank();
 
     // --- Presolve (Appendix A): start from z_sk when it beats zero.
+    // Every buffer lives in the workspace, so repeated trials on
+    // same-shaped problems run this phase allocation-free.
     let t = Instant::now();
-    let z_sk = precond.presolve(&sb);
+    ws.z_sk.resize(rank, 0.0);
+    precond.presolve_into(&sb, &mut ws.z_sk);
     let presolve_used = {
-        let ax = gemv(a, &precond.apply(&z_sk));
-        let mut r = b.to_vec();
-        axpy(-1.0, &ax, &mut r);
-        norm2(&r) < norm2(b)
+        ws.presolve_x.resize(n, 0.0);
+        precond.apply_into(&ws.z_sk, &mut ws.presolve_x);
+        ws.presolve_r.resize(m, 0.0);
+        gemv_into(a, &ws.presolve_x, &mut ws.presolve_r);
+        // r ← b − A·M·z_sk in place, then compare against ‖b‖.
+        for (ri, bi) in ws.presolve_r.iter_mut().zip(b.iter()) {
+            *ri = bi - *ri;
+        }
+        norm2(&ws.presolve_r) < norm2(b)
     };
-    let z0 = if presolve_used { z_sk } else { vec![0.0; rank] };
+    if !presolve_used {
+        ws.z_sk.fill(0.0);
+    }
 
     // --- Step 4: iterative method (TO3) with tolerance ρ = 10^{−(6+s)}.
     let rho = cfg.tolerance();
     let (x, iterations, converged, termination_value) = match cfg.algorithm {
         SapAlgorithm::QrLsqr | SapAlgorithm::SvdLsqr => {
-            let r = lsqr_preconditioned_ws(a, b, &precond, &z0, rho, MAX_ITERS, &mut ws.lsqr);
+            let r = lsqr_preconditioned_ws(a, b, &precond, &ws.z_sk, rho, MAX_ITERS, &mut ws.lsqr);
             (r.x, r.iterations, r.converged, r.termination_value)
         }
         SapAlgorithm::SvdPgd => {
-            let r = pgd_preconditioned(a, b, &precond, &z0, rho, MAX_ITERS);
+            let r = pgd_preconditioned(a, b, &precond, &ws.z_sk, rho, MAX_ITERS);
             (r.x, r.iterations, r.converged, r.termination_value)
         }
     };

@@ -17,7 +17,7 @@
 use std::collections::BTreeMap;
 use std::process::Command;
 
-use ranntune::linalg::{gemm, gemv, gemv_t, Mat};
+use ranntune::linalg::{gemm, gemv, gemv_t, qr_thin, Mat, QR_PANEL};
 use ranntune::rng::Rng;
 use ranntune::sap::{solve_sap, SapAlgorithm, SapConfig};
 use ranntune::sketch::{LessUniform, SketchKind, SketchOp, Sjlt, Srht};
@@ -108,6 +108,23 @@ fn child_suite() {
     let a_srht = Mat::from_fn(1500, 48, |_, _| rng.normal());
     let s = Srht::sample(64, 1500, &mut rng.fork(7));
     emit_mat("srht_d64", &s.apply(&a_srht));
+
+    // --- blocked QR at panel-boundary widths: the compact-WY trailing
+    // update runs through the pool-parallel GEMM kernels, so R, the
+    // implicit Qᵀb application, and the back-accumulated thin Q must all
+    // be bit-identical across widths. n straddles the panel width
+    // (1, panel−1, panel, panel+1, two panels + tail) so both the
+    // serial-cutoff and threaded GEMM paths are exercised.
+    let mut rng = Rng::new(5);
+    for n in [1usize, QR_PANEL - 1, QR_PANEL, QR_PANEL + 1, 2 * QR_PANEL + 3] {
+        let m = 2048;
+        let a = Mat::from_fn(m, n, |_, _| rng.normal());
+        let b: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let f = qr_thin(&a);
+        emit_mat(&format!("qr_r_n{n}"), &f.r);
+        emit_slice(&format!("qr_qtb_n{n}"), &f.apply_qt(&b));
+        emit_mat(&format!("qr_thinq_n{n}"), &f.form_thin_q());
+    }
 
     // --- full SAP solves: the end-to-end pipeline over the kernels above
     // (timings are excluded — only the solution and iteration count are

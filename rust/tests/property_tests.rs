@@ -14,7 +14,9 @@
 //! * encode/decode: ParamSpace round-trips every valid config;
 //! * DB: record/serialize/load round-trip preserves sample rewards.
 
-use ranntune::linalg::{gemm, gemv, norm2, qr_thin, solve_upper, svd_thin, Mat};
+use ranntune::linalg::{
+    gemm, gemv, norm2, qr_thin, qr_thin_unblocked, solve_upper, svd_thin, Mat, QR_PANEL,
+};
 use ranntune::objective::{category_index, category_parts, History, ParamSpace, Trial};
 use ranntune::proptest_lite::{forall, Config};
 use ranntune::sap::SapConfig;
@@ -26,12 +28,96 @@ fn qr_reconstruction_and_orthogonality() {
         let (m, n) = rng.tall_shape(60, 12);
         let a = rng.tall_matrix(m, n);
         let f = qr_thin(&a);
-        let mut rec = gemm(&f.q, &f.r);
+        let q = f.form_thin_q();
+        let mut rec = gemm(&q, &f.r);
         rec.axpy(-1.0, &a);
         assert!(rec.max_abs() < 1e-9, "QR reconstruction {}", rec.max_abs());
-        let mut qtq = gemm(&f.q.transpose(), &f.q);
+        let mut qtq = gemm(&q.transpose(), &q);
         qtq.axpy(-1.0, &Mat::eye(n));
         assert!(qtq.max_abs() < 1e-9, "orthogonality {}", qtq.max_abs());
+    });
+}
+
+#[test]
+fn blocked_qr_matches_unblocked_reference_on_random_inputs() {
+    // Full-rank tall random inputs (well-conditioned with overwhelming
+    // probability): the blocked factorization must agree with the serial
+    // rank-1 reference entrywise — R, implicit Qᵀb, and explicit thin Q —
+    // to 1e-10. Shapes are drawn to straddle the panel width so every
+    // panel/tail combination gets hit across the case budget.
+    forall(Config::cases(16), |rng| {
+        let n = 1 + (rng.next_u64() as usize) % (2 * QR_PANEL + 8);
+        let m = n + 8 + (rng.next_u64() as usize) % 120;
+        let a = rng.tall_matrix(m, n);
+        let f = qr_thin(&a);
+        let (q0, r0) = qr_thin_unblocked(&a);
+        let mut dr = f.r.clone();
+        dr.axpy(-1.0, &r0);
+        assert!(dr.max_abs() < 1e-10, "{m}x{n}: R delta {}", dr.max_abs());
+        let mut dq = f.form_thin_q();
+        dq.axpy(-1.0, &q0);
+        assert!(dq.max_abs() < 1e-10, "{m}x{n}: Q delta {}", dq.max_abs());
+        let b: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let qtb = f.apply_qt(&b);
+        let qtb0: Vec<f64> = (0..n)
+            .map(|j| (0..m).map(|i| q0[(i, j)] * b[i]).sum::<f64>())
+            .collect();
+        for (u, w) in qtb.iter().zip(qtb0.iter()) {
+            assert!((u - w).abs() < 1e-10, "{m}x{n}: Qᵀb {u} vs {w}");
+        }
+    });
+}
+
+#[test]
+fn blocked_qr_matches_unblocked_reference_on_rank_deficient_inputs() {
+    // Rank-deficient inputs: past a zero pivot the reflector direction
+    // is rounding-determined, so Q/R entries are not individually
+    // comparable between algorithms — but both must still satisfy the
+    // defining invariants (A = QR, QᵀQ = I) to 1e-10, and their R
+    // factors must agree on the well-defined leading block.
+    forall(Config::cases(10), |rng| {
+        let r = 1 + (rng.next_u64() as usize) % 4;
+        let n = r + 1 + (rng.next_u64() as usize) % (QR_PANEL / 2);
+        let m = n + 10 + (rng.next_u64() as usize) % 80;
+        let left = rng.tall_matrix(m, r);
+        // Leading r×r block is a well-conditioned diagonal so the
+        // rank-determined leading rows of R stay comparable at 1e-10
+        // (the trailing n−r columns are random combinations — rank r).
+        let right = Mat::from_fn(r, n, |i, j| {
+            if j < r {
+                if i == j {
+                    2.0 + rng.uniform()
+                } else {
+                    0.0
+                }
+            } else {
+                rng.normal()
+            }
+        });
+        let a = gemm(&left, &right); // rank ≤ r < n
+        let f = qr_thin(&a);
+        let q = f.form_thin_q();
+        let mut rec = gemm(&q, &f.r);
+        rec.axpy(-1.0, &a);
+        assert!(rec.max_abs() < 1e-10, "{m}x{n} rank {r}: A−QR {}", rec.max_abs());
+        let mut qtq = gemm(&q.transpose(), &q);
+        qtq.axpy(-1.0, &Mat::eye(n));
+        assert!(qtq.max_abs() < 1e-10, "{m}x{n} rank {r}: QᵀQ−I {}", qtq.max_abs());
+        let (q0, r0) = qr_thin_unblocked(&a);
+        let mut rec0 = gemm(&q0, &r0);
+        rec0.axpy(-1.0, &a);
+        assert!(rec0.max_abs() < 1e-10, "reference A−QR {}", rec0.max_abs());
+        // Leading r×n block of R is rank-determined: compare directly.
+        for i in 0..r {
+            for j in 0..n {
+                assert!(
+                    (f.r[(i, j)] - r0[(i, j)]).abs() < 1e-10,
+                    "{m}x{n} rank {r}: R[{i},{j}] {} vs {}",
+                    f.r[(i, j)],
+                    r0[(i, j)]
+                );
+            }
+        }
     });
 }
 
