@@ -44,7 +44,7 @@ fn main() {
 
     // --- AOT solve (PJRT)
     let t = Instant::now();
-    let (x_aot, phibar) = engine.solve(&problem.a, &problem.b, &plan).expect("AOT solve");
+    let (x_aot, phibar) = engine.solve(problem.dense(), problem.b(), &plan).expect("AOT solve");
     let aot_secs = t.elapsed().as_secs_f64();
 
     // --- Native Rust solve with an equivalent configuration
@@ -56,16 +56,16 @@ fn main() {
         safety_factor: 0,
     };
     let t = Instant::now();
-    let native = solve_sap(&problem.a, &problem.b, &cfg, &mut Rng::new(3));
+    let native = solve_sap(problem.dense(), problem.b(), &cfg, &mut Rng::new(3));
     let native_secs = t.elapsed().as_secs_f64();
 
     // --- Direct baseline
     let t = Instant::now();
-    let x_star = lstsq_qr(&problem.a, &problem.b);
+    let x_star = lstsq_qr(problem.dense(), problem.b());
     let direct_secs = t.elapsed().as_secs_f64();
 
-    let err_aot = arfe(&problem.a, &problem.b, &x_aot, &x_star);
-    let err_native = arfe(&problem.a, &problem.b, &native.x, &x_star);
+    let err_aot = arfe(problem.dense(), problem.b(), &x_aot, &x_star);
+    let err_native = arfe(problem.dense(), problem.b(), &native.x, &x_star);
     println!("\n{:<28} {:>10} {:>12}", "solver", "time", "ARFE");
     println!("{:<28} {:>9.4}s {:>12.2e}", "AOT (JAX+Pallas via PJRT)", aot_secs, err_aot);
     println!("{:<28} {:>9.4}s {:>12.2e}", "native Rust SAP", native_secs, err_native);

@@ -165,11 +165,11 @@ fn main() {
             let op = LessUniform::sample(meta.d, dm, meta.k, &mut rng);
             let plan = op.row_plan(meta.k).unwrap();
             let t = std::time::Instant::now();
-            match engine.solve(&problem.a, &problem.b, &plan) {
+            match engine.solve(problem.dense(), problem.b(), &plan) {
                 Ok((x, _)) => {
                     let aot_secs = t.elapsed().as_secs_f64();
-                    let x_star = ranntune::linalg::lstsq_qr(&problem.a, &problem.b);
-                    let err = ranntune::sap::arfe(&problem.a, &problem.b, &x, &x_star);
+                    let x_star = ranntune::linalg::lstsq_qr(problem.dense(), problem.b());
+                    let err = ranntune::sap::arfe(problem.dense(), problem.b(), &x, &x_star);
                     println!(
                         "      AOT solve {:.4}s, ARFE {:.2e} -> {}",
                         aot_secs,

@@ -19,7 +19,7 @@ fn main() {
     let d = 4 * n;
     let mut rng = Rng::new(11);
     let problem = generate_synthetic(SyntheticKind::T3, m, n, &mut rng);
-    let a: &Mat = &problem.a;
+    let a: &Mat = problem.dense();
     println!("== sketch-operator ablation (T3, m={m}, n={n}, d={d}) ==\n");
 
     let ops: Vec<(&str, Box<dyn SketchOp>)> = vec![
@@ -37,12 +37,12 @@ fn main() {
         let sketch = op.apply(a);
         let p = Preconditioner::from_qr(&sketch);
         let z0 = vec![0.0; p.rank()];
-        let res = lsqr_preconditioned(a, &problem.b, &p, &z0, 1e-8, 400);
+        let res = lsqr_preconditioned(a, problem.b(), &p, &z0, 1e-8, 400);
         let total_stats = time_fn(1, 3, || {
             let sk = op.apply(a);
             let p = Preconditioner::from_qr(&sk);
             let z0 = vec![0.0; p.rank()];
-            std::hint::black_box(lsqr_preconditioned(a, &problem.b, &p, &z0, 1e-8, 400));
+            std::hint::black_box(lsqr_preconditioned(a, problem.b(), &p, &z0, 1e-8, 400));
         });
         rows.push(vec![
             name.to_string(),

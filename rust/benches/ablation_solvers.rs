@@ -24,7 +24,7 @@ fn main() {
     let mut rows = Vec::new();
     for (regime, d) in [("strong sketch (d=4n)", 4 * n), ("weak sketch (d=3n/2)", 3 * n / 2)] {
         let op = make_sketch(SketchKind::Sjlt, d, m, 8, &mut rng);
-        let sketch = op.apply(&problem.a);
+        let sketch = op.apply(problem.dense());
         let p = Preconditioner::from_svd(&sketch);
         let z0 = vec![0.0; p.rank()];
         let bounds = default_spectrum_bounds(d, n);
@@ -34,22 +34,22 @@ fn main() {
         type Runner<'a> = Box<dyn Fn() -> (usize, bool) + 'a>;
         let variants: Vec<(&str, Runner)> = vec![
             ("LSQR", Box::new(|| {
-                let r = lsqr_preconditioned(&problem.a, &problem.b, &p, &z0, tol, iters);
+                let r = lsqr_preconditioned(problem.dense(), problem.b(), &p, &z0, tol, iters);
                 (r.iterations, r.converged)
             })),
             ("PGD", Box::new(|| {
-                let r = pgd_preconditioned(&problem.a, &problem.b, &p, &z0, tol, iters);
+                let r = pgd_preconditioned(problem.dense(), problem.b(), &p, &z0, tol, iters);
                 (r.iterations, r.converged)
             })),
             ("PGD+momentum", Box::new(|| {
                 let r = pgd_momentum_preconditioned(
-                    &problem.a, &problem.b, &p, &z0, bounds, tol, iters,
+                    problem.dense(), problem.b(), &p, &z0, bounds, tol, iters,
                 );
                 (r.iterations, r.converged)
             })),
             ("Chebyshev", Box::new(|| {
                 let r = chebyshev_preconditioned(
-                    &problem.a, &problem.b, &p, &z0, bounds, tol, iters,
+                    problem.dense(), problem.b(), &p, &z0, bounds, tol, iters,
                 );
                 (r.iterations, r.converged)
             })),

@@ -30,7 +30,7 @@ fn main() {
     let mut rows = Vec::new();
 
     let stats = time_fn(2, 8, || {
-        std::hint::black_box(engine.solve(&problem.a, &problem.b, &plan).unwrap());
+        std::hint::black_box(engine.solve(problem.dense(), problem.b(), &plan).unwrap());
     });
     rows.push(vec![
         "AOT PJRT (fixed 30 iters, f32)".into(),
@@ -47,7 +47,7 @@ fn main() {
     };
     let stats = time_fn(2, 8, || {
         let mut r = Rng::new(9);
-        std::hint::black_box(solve_sap(&problem.a, &problem.b, &cfg, &mut r));
+        std::hint::black_box(solve_sap(problem.dense(), problem.b(), &cfg, &mut r));
     });
     rows.push(vec![
         "native Rust SAP (adaptive, f64)".into(),
@@ -56,7 +56,7 @@ fn main() {
     ]);
 
     let stats = time_fn(1, 5, || {
-        std::hint::black_box(lstsq_qr(&problem.a, &problem.b));
+        std::hint::black_box(lstsq_qr(problem.dense(), problem.b()));
     });
     rows.push(vec!["direct QR (f64)".into(), fmt_secs(stats.median), fmt_secs(stats.min)]);
 

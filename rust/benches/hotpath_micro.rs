@@ -34,7 +34,7 @@ fn main() {
     println!("== hot-path micro benches (m={m}, n={n}, d={d}) ==\n");
 
     let problem = generate_synthetic(SyntheticKind::GA, m, n, &mut rng);
-    let a = &problem.a;
+    let a = problem.dense();
     // (name, median_s, min_s, gflops) — gflops 0.0 when no flop count
     // applies. The display table is derived from this after the runs.
     let mut raw: Vec<(String, f64, f64, f64)> = Vec::new();
@@ -83,7 +83,7 @@ fn main() {
     let stats = time_fn(1, 5, || {
         std::hint::black_box(ranntune::sap::lsqr_preconditioned(
             a,
-            &problem.b,
+            problem.b(),
             &precond,
             &z0,
             0.0,
@@ -119,7 +119,7 @@ fn main() {
     ] {
         let stats = time_fn(1, 5, || {
             let mut r = Rng::new(9);
-            std::hint::black_box(solve_sap(a, &problem.b, &cfg, &mut r));
+            std::hint::black_box(solve_sap(a, problem.b(), &cfg, &mut r));
         });
         add(label, stats, 0.0);
     }
@@ -249,14 +249,14 @@ fn main() {
     add(
         &format!("cmp: lstsq_qr {m}x{n} blocked"),
         time_fn(1, 3, || {
-            std::hint::black_box(ranntune::linalg::lstsq_qr(a, &problem.b));
+            std::hint::black_box(ranntune::linalg::lstsq_qr(a, problem.b()));
         }),
         lstsq_flops,
     );
     add(
         &format!("cmp: lstsq_qr {m}x{n} unblocked"),
         time_fn(1, 3, || {
-            std::hint::black_box(lstsq_unblocked(a, &problem.b));
+            std::hint::black_box(lstsq_unblocked(a, problem.b()));
         }),
         lstsq_flops,
     );
@@ -279,6 +279,48 @@ fn main() {
         }),
         sk_flops,
     );
+
+    // --- out-of-core paths: multi-leaf TSQR plus the blockwise sketch
+    // apply, streamed vs in-memory at identical flop counts. The tall
+    // default (2^20 × 64) runs ~64 leaves under the default block policy;
+    // the CI smoke override shrinks it through the same env knobs.
+    {
+        use ranntune::data::{DenseSource, MatSource};
+        let tm = env_dim("RANNTUNE_BENCH_M", 1 << 20);
+        let tn = env_dim("RANNTUNE_BENCH_N", 64).min(tm);
+        let mut trng = Rng::new(17);
+        let ta = Mat::from_fn(tm, tn, |_, _| trng.normal());
+        let tb: Vec<f64> = (0..tm).map(|_| trng.normal()).collect();
+        let src = DenseSource::new(ta);
+        let leaves = tm.div_ceil(src.block_rows().max(tn));
+        add(
+            &format!("tsqr {tm}x{tn} ({leaves} leaves)"),
+            time_fn(1, 3, || {
+                std::hint::black_box(ranntune::linalg::tsqr(&src, &tb));
+            }),
+            2.0 * tm as f64 * (tn * tn) as f64,
+        );
+
+        let st_op = make_sketch(SketchKind::Sjlt, d, m, 8, &mut rng);
+        let st_src = DenseSource::new(a.clone());
+        let st_flops = 2.0 * st_op.nnz() as f64 * n as f64;
+        add(
+            "cmp: sketch_stream SJLT k=8 in-memory",
+            time_fn(2, 8, || {
+                std::hint::black_box(st_op.apply(a));
+            }),
+            st_flops,
+        );
+        add(
+            "cmp: sketch_stream SJLT k=8 blocked",
+            time_fn(2, 8, || {
+                let mut out = Mat::zeros(d, n);
+                st_op.apply_blocks(&st_src, &mut out);
+                std::hint::black_box(out);
+            }),
+            st_flops,
+        );
+    }
 
     let rows: Vec<Vec<String>> = raw
         .iter()
@@ -333,7 +375,11 @@ fn main() {
     let kernel_rows: Vec<Json> = raw
         .iter()
         .filter(|(name, ..)| {
-            name.contains("qr_thin") || name.contains("lstsq_qr") || name.starts_with("SAP solve")
+            name.contains("qr_thin")
+                || name.contains("lstsq_qr")
+                || name.contains("tsqr")
+                || name.contains("sketch_stream")
+                || name.starts_with("SAP solve")
         })
         .map(|(name, med, min, gflops)| {
             Json::obj(vec![

@@ -108,7 +108,7 @@ COMMANDS
                the same command resumes the session from it)
   campaign     sweep a problem suite across a tuner set in one resumable
                run (shards + checkpoint + per-regime report)
-               --suite smoke|synthetic|realworld|full
+               --suite smoke|synthetic|realworld|streaming|full
                --tuners lhsmdu,tpe,gptune[,grid,tla]   --budget N
                --repeats R  --seed S  --out results/campaign
                --eval-threads N (within-cell parallel evaluation)

@@ -15,72 +15,134 @@
 //! * `suite` — the problem-suite registry: named, reproducible lists of
 //!   [`ProblemSpec`]s tagged by landscape regime, consumed by the
 //!   multi-problem campaign runner ([`crate::campaign`]).
+//! * `source` — out-of-core row-block access ([`MatSource`]): dense,
+//!   on-disk and head-view sources with a size-derived block policy, the
+//!   storage abstraction behind [`Problem`].
 
 mod diagnostics;
 mod realworld;
+mod source;
 mod suite;
 mod synthetic;
 
 pub use diagnostics::*;
 pub use realworld::*;
+pub use source::*;
 pub use suite::*;
 pub use synthetic::*;
+
+use std::sync::{Arc, OnceLock};
 
 use crate::linalg::Mat;
 
 /// A least-squares problem instance: minimize ‖A·x − b‖₂.
+///
+/// The design matrix lives behind a [`MatSource`], so A may stream from
+/// disk in row blocks instead of occupying m×n memory. In-memory
+/// consumers go through [`Problem::dense`], an escape hatch that borrows
+/// the underlying [`Mat`] when the source is dense and materializes (and
+/// caches) it once otherwise.
 pub struct Problem {
-    /// The m×n design matrix (m ≫ n in every paper workload).
-    pub a: Mat,
+    /// Row-block access to the m×n design matrix.
+    source: Arc<dyn MatSource>,
+    /// Lazily-materialized dense A for sources that are not in-memory.
+    dense_cache: OnceLock<Mat>,
     /// The length-m response vector.
-    pub b: Vec<f64>,
+    b: Vec<f64>,
     /// Human-readable name, e.g. "GA", "T1", "Localization-sim".
     pub name: String,
 }
 
 impl Problem {
+    /// Build a problem over an in-memory design matrix.
+    pub fn from_dense(a: Mat, b: Vec<f64>, name: impl Into<String>) -> Problem {
+        assert_eq!(a.rows(), b.len(), "A and b row counts differ");
+        Problem {
+            source: Arc::new(DenseSource::new(a)),
+            dense_cache: OnceLock::new(),
+            b,
+            name: name.into(),
+        }
+    }
+
+    /// Build a problem over any row-block source (e.g. a [`FileSource`]).
+    pub fn from_source(
+        source: Arc<dyn MatSource>,
+        b: Vec<f64>,
+        name: impl Into<String>,
+    ) -> Problem {
+        assert_eq!(source.rows(), b.len(), "A and b row counts differ");
+        Problem { source, dense_cache: OnceLock::new(), b, name: name.into() }
+    }
+
     /// Number of rows of A.
     pub fn m(&self) -> usize {
-        self.a.rows()
+        self.source.rows()
     }
 
     /// Number of columns of A.
     pub fn n(&self) -> usize {
-        self.a.cols()
+        self.source.cols()
+    }
+
+    /// Row-block access to the design matrix — the streaming-first API.
+    pub fn source(&self) -> &dyn MatSource {
+        self.source.as_ref()
+    }
+
+    /// The dense design matrix. Borrows the backing [`Mat`] directly for
+    /// in-memory sources; otherwise materializes the source once into a
+    /// per-problem cache. Panics only when a non-dense source cannot be
+    /// materialized (e.g. an I/O failure mid-read).
+    pub fn dense(&self) -> &Mat {
+        if let Some(a) = self.source.as_dense() {
+            return a;
+        }
+        self.dense_cache.get_or_init(|| materialize(self.source.as_ref()))
+    }
+
+    /// The length-m response vector.
+    pub fn b(&self) -> &[f64] {
+        &self.b
     }
 
     /// FNV-1a digest over every matrix/vector entry bit of (A, b): the
-    /// problem's data identity. O(mn), deliberately cheap next to the
-    /// O(mn²) direct reference solve. Used as the data component of the
-    /// session-checkpoint fingerprint (resume refuses a checkpoint from
-    /// different data) and as the key of the process-wide reference-
+    /// problem's data identity. Streams A row-block by row-block through
+    /// the [`MatSource`] — the hash walks entries in row-major order, so
+    /// the value is independent of the block policy and identical to the
+    /// digest of the materialized matrix. O(mn), deliberately cheap next
+    /// to the O(mn²) direct reference solve. Used as the data component
+    /// of the session-checkpoint fingerprint (resume refuses a checkpoint
+    /// from different data) and as the key of the process-wide reference-
     /// solution memo in [`crate::objective::Objective`] — campaign cells
     /// and repeated sessions on the same problem pay the direct solve
     /// once per process.
     pub fn fingerprint(&self) -> u64 {
-        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-        let mut mix = |bits: u64| {
-            h ^= bits;
-            h = h.wrapping_mul(0x0000_0100_0000_01b3);
-        };
-        for i in 0..self.m() {
-            for &v in self.a.row(i) {
-                mix(v.to_bits());
-            }
+        fn mix(h: &mut u64, bits: u64) {
+            *h ^= bits;
+            *h = h.wrapping_mul(0x0000_0100_0000_01b3);
         }
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for_each_block(self.source.as_ref(), |_, block| {
+            for &v in block.as_slice() {
+                mix(&mut h, v.to_bits());
+            }
+        });
         for &v in &self.b {
-            mix(v.to_bits());
+            mix(&mut h, v.to_bits());
         }
         h
     }
 
-    /// Down-sampled copy with `m_small` rows (and the matching slice of
+    /// Down-sampled view with `m_small` rows (and the matching slice of
     /// b) — the paper's transfer-learning source construction ("smaller
     /// matrix with the same generation scheme" for synthetic problems;
-    /// "down-sampled problem" for real data, §1.3/§5.4).
+    /// "down-sampled problem" for real data, §1.3/§5.4). The view is a
+    /// [`HeadSource`] over the parent's storage: no matrix copy.
     pub fn downsample(&self, m_small: usize) -> Problem {
         Problem {
-            a: self.a.head_rows(m_small),
+            source: Arc::new(HeadSource::new(Arc::clone(&self.source), m_small)),
+            dense_cache: OnceLock::new(),
             b: self.b[..m_small.min(self.b.len())].to_vec(),
             name: format!("{}@{}", self.name, m_small),
         }

@@ -127,7 +127,7 @@ pub fn generate_realworld(kind: RealWorldKind, m: usize, n: usize, rng: &mut Rng
     for v in b.iter_mut() {
         *v += 0.1 * b_std * rng.normal();
     }
-    Problem { a, b, name: kind.name().to_string() }
+    Problem::from_dense(a, b, kind.name())
 }
 
 #[cfg(test)]
@@ -151,10 +151,11 @@ mod tests {
         // Localization-sim should be the most coherent, CIFAR-sim least.
         let mut rng = Rng::new(2);
         let (m, n) = (2000, 40);
-        let mu_musk = coherence(&generate_realworld(RealWorldKind::Musk, m, n, &mut rng).a);
-        let mu_cifar = coherence(&generate_realworld(RealWorldKind::Cifar10, m, n, &mut rng).a);
+        let mu_musk = coherence(generate_realworld(RealWorldKind::Musk, m, n, &mut rng).dense());
+        let mu_cifar =
+            coherence(generate_realworld(RealWorldKind::Cifar10, m, n, &mut rng).dense());
         let mu_loc =
-            coherence(&generate_realworld(RealWorldKind::Localization, m, n, &mut rng).a);
+            coherence(generate_realworld(RealWorldKind::Localization, m, n, &mut rng).dense());
         assert!(mu_cifar < mu_loc, "CIFAR {mu_cifar} !< Localization {mu_loc}");
         assert!(mu_musk < 1.0 && mu_musk > 0.0);
         // All are "moderately" coherent: above a pure Gaussian baseline.
@@ -171,7 +172,7 @@ mod tests {
     fn spectrum_decays() {
         let mut rng = Rng::new(3);
         let p = generate_realworld(RealWorldKind::Cifar10, 600, 25, &mut rng);
-        let r = crate::linalg::qr_thin(&p.a).r;
+        let r = crate::linalg::qr_thin(p.dense()).r;
         let s = crate::linalg::svd_thin(&r).s;
         // Fast decay: top singular value ≫ median.
         assert!(s[0] / s[12] > 5.0, "spectrum too flat: {:?}", &s[..5]);

@@ -1,0 +1,393 @@
+//! Out-of-core row-block matrix sources (ROADMAP item 2).
+//!
+//! A [`MatSource`] yields a tall matrix one **row block** at a time, so
+//! consumers (streaming sketch applies, TSQR, fingerprints) never need
+//! the full m×n array in memory. The block size is part of the
+//! determinism contract: it is derived from the matrix *size* alone
+//! (never the thread count), so every accumulation order downstream is
+//! fixed by the data shape — the same bit-determinism guarantee the
+//! dense kernels make across `RANNTUNE_THREADS` values.
+//!
+//! Three sources are provided:
+//!
+//! * [`DenseSource`] — wraps an in-memory [`Mat`]; the zero-cost bridge
+//!   for every existing workload.
+//! * [`FileSource`] — an on-disk row-major f64 little-endian file with a
+//!   24-byte header, read block-by-block via positioned reads.
+//! * [`HeadSource`] — a head-rows *view* of another source, used by
+//!   `Problem::downsample` so transfer-learning sources never copy the
+//!   parent matrix.
+
+use std::fs::File;
+use std::io::{Read, Write};
+use std::os::unix::fs::FileExt;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, OnceLock};
+
+use crate::linalg::Mat;
+
+/// Magic bytes opening every [`FileSource`] file.
+pub const FILE_MAGIC: [u8; 8] = *b"RANNMAT1";
+
+/// Header length in bytes: magic + rows (u64 LE) + cols (u64 LE).
+const HEADER_LEN: usize = 24;
+
+/// Floor on the derived block size, in rows. Every paper-scale test
+/// problem (m ≤ a few thousand) therefore fits in a single block, which
+/// keeps the streaming paths bit-identical to the in-memory ones by
+/// construction on existing workloads.
+const MIN_BLOCK_ROWS: usize = 8192;
+
+/// Target bytes of f64 data per block for the size-derived policy.
+const TARGET_BLOCK_BYTES: usize = 8 << 20;
+
+/// Process-latched `RANNTUNE_BLOCK_ROWS` override (like
+/// `RANNTUNE_THREADS`, read once so the policy cannot drift mid-run).
+fn env_block_rows() -> Option<usize> {
+    static CELL: OnceLock<Option<usize>> = OnceLock::new();
+    *CELL.get_or_init(|| {
+        std::env::var("RANNTUNE_BLOCK_ROWS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&v| v > 0)
+    })
+}
+
+/// The fixed, size-derived row-block policy: ~[`TARGET_BLOCK_BYTES`] of
+/// f64s per block, floored at [`MIN_BLOCK_ROWS`] rows and capped at the
+/// matrix height. Depends only on (rows, cols) and the process-latched
+/// `RANNTUNE_BLOCK_ROWS` override — never on the thread count, so block
+/// boundaries (and therefore every streaming accumulation order) are a
+/// pure function of the data shape.
+pub fn default_block_rows(rows: usize, cols: usize) -> usize {
+    let rows = rows.max(1);
+    if let Some(bs) = env_block_rows() {
+        return bs.min(rows).max(1);
+    }
+    let target = TARGET_BLOCK_BYTES / (8 * cols.max(1));
+    target.max(MIN_BLOCK_ROWS).min(rows)
+}
+
+/// A tall matrix held behind row-block access.
+///
+/// Implementations must be cheap to share across threads; all reads are
+/// positioned (`&self`), so a source can serve concurrent readers.
+pub trait MatSource: Send + Sync {
+    /// Number of rows m.
+    fn rows(&self) -> usize;
+
+    /// Number of columns n.
+    fn cols(&self) -> usize;
+
+    /// The fixed row-block size consumers must iterate by. Defaults to
+    /// the size-derived policy [`default_block_rows`]; overriding it is
+    /// allowed only with values that stay a pure function of the data
+    /// (tests use explicit block sizes to exercise multi-block paths on
+    /// small matrices).
+    fn block_rows(&self) -> usize {
+        default_block_rows(self.rows(), self.cols())
+    }
+
+    /// Fill `out` with rows `row0 .. row0 + out.rows()`. `out` must have
+    /// exactly [`MatSource::cols`] columns and the range must be in
+    /// bounds. Panics on I/O failure — sources are read-only inputs, so
+    /// a mid-stream read error is unrecoverable corruption.
+    fn read_rows_into(&self, row0: usize, out: &mut Mat);
+
+    /// Borrow the whole matrix if this source already holds it densely
+    /// in memory (the [`DenseSource`] fast path). `None` for out-of-core
+    /// or view sources.
+    fn as_dense(&self) -> Option<&Mat> {
+        None
+    }
+}
+
+/// Walk `src` block-by-block in row order, calling `f(row0, block)` for
+/// each block. One buffer is reused across blocks; blocks arrive in
+/// ascending row order with sizes fixed by [`MatSource::block_rows`].
+pub fn for_each_block(src: &dyn MatSource, mut f: impl FnMut(usize, &Mat)) {
+    let (m, n) = (src.rows(), src.cols());
+    let bs = src.block_rows().max(1);
+    let mut buf = Mat::zeros(bs.min(m), n);
+    let mut row0 = 0;
+    while row0 < m {
+        let rows = bs.min(m - row0);
+        if buf.rows() != rows {
+            buf = Mat::zeros(rows, n);
+        }
+        src.read_rows_into(row0, &mut buf);
+        f(row0, &buf);
+        row0 += rows;
+    }
+}
+
+/// Materialize a source into a freshly allocated dense [`Mat`].
+pub fn materialize(src: &dyn MatSource) -> Mat {
+    if let Some(a) = src.as_dense() {
+        return a.clone();
+    }
+    let mut out = Mat::zeros(src.rows(), src.cols());
+    if src.rows() > 0 {
+        src.read_rows_into(0, &mut out);
+    }
+    out
+}
+
+/// A [`MatSource`] over an in-memory [`Mat`].
+pub struct DenseSource {
+    mat: Mat,
+    block_rows: Option<usize>,
+}
+
+impl DenseSource {
+    /// Wrap a dense matrix with the default block policy.
+    pub fn new(mat: Mat) -> DenseSource {
+        DenseSource { mat, block_rows: None }
+    }
+
+    /// Wrap a dense matrix with an explicit block size (tests use this
+    /// to exercise multi-block streaming on small matrices without
+    /// touching the process-wide `RANNTUNE_BLOCK_ROWS` latch).
+    pub fn with_block_rows(mat: Mat, block_rows: usize) -> DenseSource {
+        assert!(block_rows > 0, "block_rows must be positive");
+        DenseSource { mat, block_rows: Some(block_rows) }
+    }
+}
+
+impl MatSource for DenseSource {
+    fn rows(&self) -> usize {
+        self.mat.rows()
+    }
+
+    fn cols(&self) -> usize {
+        self.mat.cols()
+    }
+
+    fn block_rows(&self) -> usize {
+        self.block_rows
+            .unwrap_or_else(|| default_block_rows(self.mat.rows(), self.mat.cols()))
+    }
+
+    fn read_rows_into(&self, row0: usize, out: &mut Mat) {
+        assert_eq!(out.cols(), self.mat.cols(), "column mismatch");
+        assert!(row0 + out.rows() <= self.mat.rows(), "row range out of bounds");
+        for r in 0..out.rows() {
+            out.row_mut(r).copy_from_slice(self.mat.row(row0 + r));
+        }
+    }
+
+    fn as_dense(&self) -> Option<&Mat> {
+        Some(&self.mat)
+    }
+}
+
+/// A [`MatSource`] over an on-disk row-major f64 little-endian file.
+///
+/// Layout: 8 magic bytes [`FILE_MAGIC`], rows as u64 LE, cols as u64 LE,
+/// then rows·cols f64 LE values in row-major order. Reads use positioned
+/// I/O (`read_exact_at`), so a single open handle serves any number of
+/// concurrent block readers.
+pub struct FileSource {
+    file: File,
+    path: PathBuf,
+    rows: usize,
+    cols: usize,
+    block_rows: Option<usize>,
+}
+
+impl FileSource {
+    /// Open an existing matrix file, validating magic and length.
+    pub fn open(path: &Path) -> std::io::Result<FileSource> {
+        let mut file = File::open(path)?;
+        let mut header = [0u8; HEADER_LEN];
+        file.read_exact(&mut header)?;
+        if header[..8] != FILE_MAGIC {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("{}: bad magic (not a ranntune matrix file)", path.display()),
+            ));
+        }
+        let rows = u64::from_le_bytes(header[8..16].try_into().unwrap()) as usize;
+        let cols = u64::from_le_bytes(header[16..24].try_into().unwrap()) as usize;
+        let expect = HEADER_LEN as u64 + 8 * rows as u64 * cols as u64;
+        let actual = file.metadata()?.len();
+        if actual != expect {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!(
+                    "{}: truncated matrix file ({actual} bytes, header says {expect})",
+                    path.display()
+                ),
+            ));
+        }
+        Ok(FileSource { file, path: path.to_path_buf(), rows, cols, block_rows: None })
+    }
+
+    /// Replace the block policy with an explicit size (tests only).
+    pub fn with_block_rows(mut self, block_rows: usize) -> FileSource {
+        assert!(block_rows > 0, "block_rows must be positive");
+        self.block_rows = Some(block_rows);
+        self
+    }
+
+    /// Write `a` to `path` in [`FileSource`] layout, overwriting any
+    /// existing file.
+    pub fn write_mat(path: &Path, a: &Mat) -> std::io::Result<()> {
+        let mut file = File::create(path)?;
+        let mut header = Vec::with_capacity(HEADER_LEN);
+        header.extend_from_slice(&FILE_MAGIC);
+        header.extend_from_slice(&(a.rows() as u64).to_le_bytes());
+        header.extend_from_slice(&(a.cols() as u64).to_le_bytes());
+        file.write_all(&header)?;
+        let mut bytes = Vec::with_capacity(8 * a.cols());
+        for i in 0..a.rows() {
+            bytes.clear();
+            for &v in a.row(i) {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+            file.write_all(&bytes)?;
+        }
+        file.sync_all()
+    }
+
+    /// The path this source reads from.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl MatSource for FileSource {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    fn block_rows(&self) -> usize {
+        self.block_rows.unwrap_or_else(|| default_block_rows(self.rows, self.cols))
+    }
+
+    fn read_rows_into(&self, row0: usize, out: &mut Mat) {
+        assert_eq!(out.cols(), self.cols, "column mismatch");
+        assert!(row0 + out.rows() <= self.rows, "row range out of bounds");
+        let count = out.rows() * self.cols;
+        let mut bytes = vec![0u8; 8 * count];
+        let offset = HEADER_LEN as u64 + 8 * (row0 as u64) * self.cols as u64;
+        self.file
+            .read_exact_at(&mut bytes, offset)
+            .unwrap_or_else(|e| panic!("{}: read failed: {e}", self.path.display()));
+        for (dst, chunk) in out.as_mut_slice().iter_mut().zip(bytes.chunks_exact(8)) {
+            *dst = f64::from_le_bytes(chunk.try_into().unwrap());
+        }
+    }
+}
+
+/// A head-rows view of another source: the first `rows` rows, sharing
+/// the parent's storage (no copy). Used by `Problem::downsample`.
+pub struct HeadSource {
+    inner: Arc<dyn MatSource>,
+    rows: usize,
+}
+
+impl HeadSource {
+    /// View the first `rows` rows of `inner`.
+    pub fn new(inner: Arc<dyn MatSource>, rows: usize) -> HeadSource {
+        assert!(rows <= inner.rows(), "head view larger than parent");
+        HeadSource { inner, rows }
+    }
+}
+
+impl MatSource for HeadSource {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn cols(&self) -> usize {
+        self.inner.cols()
+    }
+
+    fn block_rows(&self) -> usize {
+        // Delegate so an explicit parent policy (tests) carries through;
+        // still a pure function of the data, never the thread count.
+        self.inner.block_rows()
+    }
+
+    fn read_rows_into(&self, row0: usize, out: &mut Mat) {
+        assert!(row0 + out.rows() <= self.rows, "row range out of bounds");
+        self.inner.read_rows_into(row0, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_mat(m: usize, n: usize) -> Mat {
+        Mat::from_fn(m, n, |i, j| (i * n + j) as f64 * 0.25 - 3.0)
+    }
+
+    #[test]
+    fn block_policy_is_size_derived_and_floored() {
+        // Small matrices: one block covering everything.
+        assert_eq!(default_block_rows(400, 16), 400);
+        assert_eq!(default_block_rows(8192, 64), 8192);
+        // Large: ~8 MiB of rows, never below the floor.
+        let bs = default_block_rows(1 << 22, 64);
+        assert_eq!(bs, TARGET_BLOCK_BYTES / (8 * 64));
+        assert!(bs >= MIN_BLOCK_ROWS);
+    }
+
+    #[test]
+    fn dense_source_blocks_reassemble_exactly() {
+        let a = sample_mat(37, 5);
+        let src = DenseSource::with_block_rows(a.clone(), 8);
+        assert_eq!(src.block_rows(), 8);
+        let mut seen = Mat::zeros(37, 5);
+        let mut blocks = 0;
+        for_each_block(&src, |row0, block| {
+            blocks += 1;
+            for r in 0..block.rows() {
+                seen.row_mut(row0 + r).copy_from_slice(block.row(r));
+            }
+        });
+        assert_eq!(blocks, 5); // 8+8+8+8+5
+        assert_eq!(seen.as_slice(), a.as_slice());
+        assert_eq!(materialize(&src).as_slice(), a.as_slice());
+    }
+
+    #[test]
+    fn file_source_round_trips_bits() {
+        let a = sample_mat(23, 7);
+        let path =
+            std::env::temp_dir().join(format!("ranntune_src_test_{}.mat", std::process::id()));
+        FileSource::write_mat(&path, &a).expect("write");
+        let src = FileSource::open(&path).expect("open").with_block_rows(6);
+        assert_eq!((src.rows(), src.cols()), (23, 7));
+        assert!(src.as_dense().is_none());
+        let back = materialize(&src);
+        assert_eq!(back.as_slice(), a.as_slice());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn file_source_rejects_bad_magic() {
+        let path =
+            std::env::temp_dir().join(format!("ranntune_src_bad_{}.mat", std::process::id()));
+        std::fs::write(&path, b"NOTAMAT!aaaaaaaabbbbbbbb").expect("write");
+        assert!(FileSource::open(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn head_source_is_a_prefix_view() {
+        let a = sample_mat(30, 4);
+        let src: Arc<dyn MatSource> = Arc::new(DenseSource::with_block_rows(a.clone(), 7));
+        let head = HeadSource::new(Arc::clone(&src), 12);
+        assert_eq!(head.rows(), 12);
+        assert_eq!(head.block_rows(), 7);
+        let got = materialize(&head);
+        assert_eq!(got.as_slice(), a.head_rows(12).as_slice());
+    }
+}

@@ -38,6 +38,9 @@ pub enum Regime {
     TallAspect,
     /// Simulated real-world profile: decaying spectrum + leverage tail.
     RealWorld,
+    /// Out-of-core scale (m past the row-block threshold): the streaming
+    /// MatSource/TSQR paths carry the reference solve and fingerprints.
+    Streaming,
 }
 
 impl Regime {
@@ -49,6 +52,7 @@ impl Regime {
             Regime::HighCoherence => "high-coherence",
             Regime::TallAspect => "tall-aspect",
             Regime::RealWorld => "real-world",
+            Regime::Streaming => "streaming",
         }
     }
 }
@@ -123,7 +127,7 @@ pub fn build_problem(name: &str, m: usize, n: usize, seed: u64) -> Result<Proble
 }
 
 /// Names of the built-in suites, in documentation order.
-pub const SUITE_NAMES: [&str; 4] = ["smoke", "synthetic", "realworld", "full"];
+pub const SUITE_NAMES: [&str; 5] = ["smoke", "synthetic", "realworld", "streaming", "full"];
 
 /// Look up a built-in suite by name.
 ///
@@ -132,6 +136,10 @@ pub const SUITE_NAMES: [&str; 4] = ["smoke", "synthetic", "realworld", "full"];
 /// * `synthetic` — the §5.1 families GA/T5/T3/T1 sweeping coherence, plus
 ///   two very tall variants that shift cost into the sketch apply.
 /// * `realworld` — the three simulated §5.4 datasets at reduced scale.
+/// * `streaming` — large-m problems past the default row-block threshold,
+///   so the reference solve and fingerprints run through the streaming
+///   MatSource/TSQR paths. Sized for `--modeled-time` campaigns (shapes
+///   are minutes of deterministic work, not wall-clock measurement).
 /// * `full` — `synthetic` + `realworld`.
 pub fn builtin_suite(name: &str) -> Option<Vec<ProblemSpec>> {
     use Regime::*;
@@ -153,6 +161,13 @@ pub fn builtin_suite(name: &str) -> Option<Vec<ProblemSpec>> {
             ProblemSpec::new("Musk", 1200, 64, 1201, RealWorld),
             ProblemSpec::new("CIFAR10", 1600, 64, 1202, RealWorld),
             ProblemSpec::new("Localization", 2000, 48, 1203, RealWorld),
+        ]),
+        // m well past the 8192-row block floor: every problem streams
+        // through multi-leaf TSQR and blockwise sketch applies.
+        "streaming" => Some(vec![
+            ProblemSpec::new("GA", 1 << 18, 32, 1301, Streaming),
+            ProblemSpec::new("T3", 1 << 18, 32, 1302, Streaming),
+            ProblemSpec::new("T1", 1 << 19, 24, 1303, Streaming),
         ]),
         "full" => {
             let mut v = builtin_suite("synthetic").unwrap();
@@ -192,8 +207,8 @@ mod tests {
         let spec = ProblemSpec::new("T3", 200, 12, 42, Regime::ModerateCoherence);
         let a = spec.build().unwrap();
         let b = spec.build().unwrap();
-        assert_eq!(a.a.as_slice(), b.a.as_slice());
-        assert_eq!(a.b, b.b);
+        assert_eq!(a.dense().as_slice(), b.dense().as_slice());
+        assert_eq!(a.b(), b.b());
     }
 
     #[test]

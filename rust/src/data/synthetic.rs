@@ -118,7 +118,7 @@ pub fn generate_synthetic(kind: SyntheticKind, m: usize, n: usize, rng: &mut Rng
     for v in b.iter_mut() {
         *v += NOISE_STD * rng.normal();
     }
-    Problem { a, b, name: kind.name().to_string() }
+    Problem::from_dense(a, b, kind.name())
 }
 
 #[cfg(test)]
@@ -181,8 +181,8 @@ mod tests {
     fn problem_b_is_near_planted_prediction() {
         let mut rng = Rng::new(3);
         let p = generate_synthetic(SyntheticKind::GA, 500, 30, &mut rng);
-        let pred = crate::linalg::gemv(&p.a, &planted_x(30));
-        let mut resid = p.b.clone();
+        let pred = crate::linalg::gemv(p.dense(), &planted_x(30));
+        let mut resid = p.b().to_vec();
         for i in 0..resid.len() {
             resid[i] -= pred[i];
         }
@@ -198,7 +198,16 @@ mod tests {
         let q = p.downsample(50);
         assert_eq!(q.m(), 50);
         assert_eq!(q.n(), 10);
-        assert_eq!(q.a.row(7), p.a.row(7));
-        assert_eq!(q.b[7], p.b[7]);
+        assert_eq!(q.dense().row(7), p.dense().row(7));
+        assert_eq!(q.b()[7], p.b()[7]);
+    }
+
+    #[test]
+    fn downsample_changes_fingerprint() {
+        let mut rng = Rng::new(5);
+        let p = generate_synthetic(SyntheticKind::GA, 200, 10, &mut rng);
+        let q = p.downsample(50);
+        assert_eq!(q.name, "GA@50");
+        assert_ne!(q.fingerprint(), p.fingerprint());
     }
 }

@@ -35,8 +35,8 @@ pub struct TaskSample {
 pub struct LcmModel {
     n_tasks: usize,
     q: usize,
-    /// Mixing coefficients a[i][q].
-    a: Vec<Vec<f64>>,
+    /// Mixing coefficients mix[i][q] (the matrix A of §4.3).
+    mix: Vec<Vec<f64>>,
     kernels: Vec<ArdKernel>,
     /// Per-task noise variances.
     noise: Vec<f64>,
@@ -131,7 +131,7 @@ impl LcmModel {
         LcmModel {
             n_tasks,
             q,
-            a,
+            mix: a,
             kernels,
             noise,
             samples: samples.to_vec(),
@@ -162,16 +162,16 @@ impl LcmModel {
 
     fn cross_cov(&self, ti: usize, tj: usize, x: &[f64], y: &[f64]) -> f64 {
         (0..self.q)
-            .map(|q| self.a[ti][q] * self.a[tj][q] * self.kernels[q].eval(x, y))
+            .map(|q| self.mix[ti][q] * self.mix[tj][q] * self.kernels[q].eval(x, y))
             .sum()
     }
 
     /// Inter-task correlation implied by the mixing matrix (for tests and
     /// diagnostics): corr(i, j) = Σq a_iq a_jq / √(Σ a_iq² · Σ a_jq²).
     pub fn task_correlation(&self, i: usize, j: usize) -> f64 {
-        let num: f64 = (0..self.q).map(|q| self.a[i][q] * self.a[j][q]).sum();
-        let di: f64 = (0..self.q).map(|q| self.a[i][q] * self.a[i][q]).sum();
-        let dj: f64 = (0..self.q).map(|q| self.a[j][q] * self.a[j][q]).sum();
+        let num: f64 = (0..self.q).map(|q| self.mix[i][q] * self.mix[j][q]).sum();
+        let di: f64 = (0..self.q).map(|q| self.mix[i][q] * self.mix[i][q]).sum();
+        let dj: f64 = (0..self.q).map(|q| self.mix[j][q] * self.mix[j][q]).sum();
         if di <= 0.0 || dj <= 0.0 {
             return 0.0;
         }

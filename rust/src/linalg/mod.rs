@@ -19,6 +19,11 @@
 //!   preconditioner, the direct reference solver ([`lstsq_qr`]), and
 //!   coherence computation (the one caller of
 //!   [`QrFactors::form_thin_q`]).
+//! * [`tsqr`] — communication-avoiding tall-skinny QR over a row-block
+//!   [`crate::data::MatSource`]: leaves are factored with [`qr_thin`],
+//!   R factors combine pairwise up a binary tree whose shape depends
+//!   only on (m, block size), with Qᵀ·b fused into the sweep
+//!   ([`lstsq_tsqr`] is the out-of-core reference solve).
 //! * [`svd_thin`] — one-sided Jacobi SVD (thin), used for the SVD-based
 //!   preconditioners and condition numbers. Jacobi is chosen for its
 //!   simplicity and high relative accuracy; our sketches are small

@@ -32,6 +32,7 @@
 //! at panel-boundary shapes).
 
 use super::{dot, gemm_into, gemm_tn_into, norm2, with_scratch, Mat};
+use crate::data::MatSource;
 
 /// Fixed panel width of the blocked factorization. A constant (never a
 /// function of the worker count) so the reflector set, the T factors,
@@ -461,6 +462,105 @@ pub fn lstsq_qr(a: &Mat, b: &[f64]) -> Vec<f64> {
     x
 }
 
+/// Result of a communication-avoiding TSQR ([`tsqr`]): the triangular
+/// factor plus the fused Qᵀ·b — together everything the least-squares
+/// reference solve and the SAP preconditioner path need, without ever
+/// holding Q (or A) in memory.
+pub struct TsqrResult {
+    /// Upper-triangular n×n factor R with non-negative diagonal — the
+    /// same normalization [`qr_thin`] applies, so for full-rank input it
+    /// matches the flat factorization's R up to roundoff.
+    pub r: Mat,
+    /// Thin Qᵀ·b (length n), threaded through the tree alongside the R
+    /// combines so Q is never materialized or retained.
+    pub qtb: Vec<f64>,
+}
+
+/// Communication-avoiding tall-skinny QR (TSQR) over a row-block
+/// source, fused with the Qᵀ·b application.
+///
+/// Each leaf row block is factored with the blocked compact-WY kernel
+/// ([`qr_thin`]); the per-leaf n×n R factors are then combined pairwise
+/// up a binary tree — stack two R's into a 2n×n matrix, factor the
+/// stack — until a single R remains. b rides along: each leaf
+/// contributes cᵢ = Qᵢᵀ·bᵢ, each combine maps its stacked pair of c's
+/// through the combine's own Qᵀ, and the root c is the thin Qᵀ·b of the
+/// full matrix.
+///
+/// ## Determinism
+///
+/// Leaf boundaries come from [`MatSource::block_rows`] (size-derived; a
+/// tail shorter than n merges into the preceding leaf) and the tree is
+/// reduced level-by-level in leaf order — the shape is a pure function
+/// of (m, block size), never the thread count. Every flop runs through
+/// [`qr_thin`] and [`QrFactors::apply_qt`], which are bit-identical
+/// across `RANNTUNE_THREADS`, hence so is the whole tree. When the
+/// source fits in a single block — every in-memory paper workload under
+/// the default policy — the computation *is* `qr_thin` + `apply_qt`,
+/// bit-for-bit.
+pub fn tsqr(src: &dyn MatSource, b: &[f64]) -> TsqrResult {
+    let (m, n) = (src.rows(), src.cols());
+    assert!(m >= n && n > 0, "tsqr requires tall input, got {m}x{n}");
+    assert_eq!(b.len(), m, "tsqr: b length");
+    let step = src.block_rows().max(n);
+
+    // Leaves, in row order: (R_i, c_i) per block.
+    let mut level: Vec<(Mat, Vec<f64>)> = Vec::new();
+    let mut row0 = 0usize;
+    while row0 < m {
+        let mut hi = (row0 + step).min(m);
+        if hi < m && m - hi < n {
+            hi = m; // a tail shorter than n merges into this leaf
+        }
+        let rows = hi - row0;
+        let mut block = Mat::zeros(rows, n);
+        src.read_rows_into(row0, &mut block);
+        let f = qr_thin(&block);
+        let c = f.apply_qt(&b[row0..hi]);
+        level.push((f.r, c));
+        row0 = hi;
+    }
+
+    // Pairwise combines, level by level; an odd factor passes through.
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len().div_ceil(2));
+        let mut it = level.into_iter();
+        while let Some((r_top, c_top)) = it.next() {
+            let Some((r_bot, c_bot)) = it.next() else {
+                next.push((r_top, c_top));
+                break;
+            };
+            let mut stacked = Mat::zeros(2 * n, n);
+            for i in 0..n {
+                stacked.row_mut(i).copy_from_slice(r_top.row(i));
+                stacked.row_mut(n + i).copy_from_slice(r_bot.row(i));
+            }
+            let f = qr_thin(&stacked);
+            let mut bc = c_top;
+            bc.extend_from_slice(&c_bot);
+            let c = f.apply_qt(&bc);
+            next.push((f.r, c));
+        }
+        level = next;
+    }
+    let (r, qtb) = level.pop().expect("tsqr: at least one leaf");
+    TsqrResult { r, qtb }
+}
+
+/// Streaming least-squares solve min ‖Ax − b‖₂ through [`tsqr`]:
+/// x = R⁻¹·(Qᵀb) with both factors built from row blocks. For a source
+/// whose block policy yields a single leaf this is bit-identical to
+/// [`lstsq_qr`] on the materialized matrix — which is how the objective
+/// layer's reference solve streams through [`MatSource`] without
+/// perturbing any existing ARFE value.
+pub fn lstsq_tsqr(src: &dyn MatSource, b: &[f64]) -> Vec<f64> {
+    let res = tsqr(src, b);
+    let n = res.r.rows();
+    let mut x = vec![0.0; n];
+    super::solve_upper_into(&res.r, &res.qtb, &mut x);
+    x
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -594,6 +694,55 @@ mod tests {
         let x = lstsq_qr(&a, &b);
         for i in 0..8 {
             assert!((x[i] - x_true[i]).abs() < 1e-9, "{:?}", x);
+        }
+    }
+
+    #[test]
+    fn tsqr_single_leaf_is_bitwise_lstsq_qr() {
+        use crate::data::{DenseSource, MatSource as _};
+        let mut r = Rng::new(12);
+        let a = Mat::from_fn(300, QR_PANEL + 5, |_, _| r.normal());
+        let b: Vec<f64> = (0..300).map(|_| r.normal()).collect();
+        let src = DenseSource::new(a.clone());
+        // Default policy on an in-memory small matrix: one block.
+        assert_eq!(src.block_rows(), 300);
+        let res = tsqr(&src, &b);
+        let f = qr_thin(&a);
+        assert_eq!(res.r.as_slice(), f.r.as_slice());
+        assert_eq!(res.qtb, f.apply_qt(&b));
+        assert_eq!(lstsq_tsqr(&src, &b), lstsq_qr(&a, &b));
+    }
+
+    #[test]
+    fn tsqr_multi_leaf_matches_flat_qr() {
+        use crate::data::DenseSource;
+        let mut rng = Rng::new(13);
+        // Block sizes straddle the leaf boundaries: dividing, non-dividing,
+        // short-tail-merge, and a leaf count forcing an odd pass-through.
+        for &(m, n, bs) in &[
+            (256usize, 12usize, 64usize),
+            (300, 12, 64),
+            (257, 12, 64),
+            (320, 12, 64),
+            (200, QR_PANEL + 3, 48),
+        ] {
+            let a = Mat::from_fn(m, n, |_, _| rng.normal());
+            let b: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+            let src = DenseSource::with_block_rows(a.clone(), bs);
+            let res = tsqr(&src, &b);
+            let f = qr_thin(&a);
+            let mut dr = res.r.clone();
+            dr.axpy(-1.0, &f.r);
+            assert!(dr.max_abs() < 1e-10, "{m}x{n} bs={bs}: R delta {}", dr.max_abs());
+            let qtb = f.apply_qt(&b);
+            for (u, w) in res.qtb.iter().zip(qtb.iter()) {
+                assert!((u - w).abs() < 1e-10, "{m}x{n} bs={bs}: Qᵀb {u} vs {w}");
+            }
+            let xs = lstsq_tsqr(&src, &b);
+            let xf = lstsq_qr(&a, &b);
+            for (u, w) in xs.iter().zip(xf.iter()) {
+                assert!((u - w).abs() < 1e-9, "{m}x{n} bs={bs}: x {u} vs {w}");
+            }
         }
     }
 

@@ -391,7 +391,7 @@ fn cmd_deploy(args: &Args) -> i32 {
     let plan = op.row_plan(meta.k).unwrap();
 
     let t = std::time::Instant::now();
-    let (x, phibar) = match engine.solve(&problem.a, &problem.b, &plan) {
+    let (x, phibar) = match engine.solve(problem.dense(), problem.b(), &plan) {
         Ok(r) => r,
         Err(e) => {
             eprintln!("solve failed: {e:#}");
@@ -401,9 +401,9 @@ fn cmd_deploy(args: &Args) -> i32 {
     let aot_secs = t.elapsed().as_secs_f64();
 
     let t = std::time::Instant::now();
-    let x_star = ranntune::linalg::lstsq_qr(&problem.a, &problem.b);
+    let x_star = ranntune::linalg::lstsq_tsqr(problem.source(), problem.b());
     let direct_secs = t.elapsed().as_secs_f64();
-    let err = ranntune::sap::arfe(&problem.a, &problem.b, &x, &x_star);
+    let err = ranntune::sap::arfe(problem.dense(), problem.b(), &x, &x_star);
     println!("AOT solve:   {aot_secs:.4}s   residual estimate (phibar) {phibar:.4}");
     println!("direct solve: {direct_secs:.4}s");
     println!("ARFE vs direct: {err:.3e}");
@@ -425,8 +425,8 @@ fn cmd_props(args: &Args) -> i32 {
         }
     };
     println!("dataset {} ({}x{})", problem.name, problem.m(), problem.n());
-    println!("coherence:        {:.4}", coherence(&problem.a));
-    println!("condition number: {:.4}", condition_number(&problem.a));
+    println!("coherence:        {:.4}", coherence(problem.dense()));
+    println!("condition number: {:.4}", condition_number(problem.dense()));
     0
 }
 

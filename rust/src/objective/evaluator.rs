@@ -157,8 +157,10 @@ fn run_repeat_ws(
     let mut rng = repeat_rng(ctx.base_seed, job.trial_index, repeat);
     // `total_secs` is measured inside solve_sap, so both evaluators agree
     // on what "wall clock" means regardless of scheduling overhead here.
-    let sol = solve_sap_ws(&ctx.problem.a, &ctx.problem.b, &job.config, &mut rng, ws);
-    let err = arfe(&ctx.problem.a, &ctx.problem.b, &sol.x, ctx.x_star);
+    let a = ctx.problem.dense();
+    let b = ctx.problem.b();
+    let sol = solve_sap_ws(a, b, &job.config, &mut rng, ws);
+    let err = arfe(a, b, &sol.x, ctx.x_star);
     let secs = match ctx.constants.timing {
         TimingMode::Measured => sol.stats.total_secs,
         TimingMode::Modeled => modeled_secs(
@@ -191,7 +193,7 @@ fn reduce(times: &[f64], errors: &[f64]) -> RawEval {
 ///
 /// let mut rng = Rng::new(1);
 /// let problem = generate_synthetic(SyntheticKind::GA, 200, 10, &mut rng);
-/// let x_star = ranntune::linalg::lstsq_qr(&problem.a, &problem.b);
+/// let x_star = ranntune::linalg::lstsq_tsqr(problem.source(), problem.b());
 /// let constants = Constants { num_repeats: 2, ..Constants::default() };
 /// let ctx = EvalContext {
 ///     problem: &problem,
@@ -330,7 +332,7 @@ mod tests {
     fn tiny_ctx_parts() -> (Problem, Constants, Vec<f64>) {
         let mut rng = Rng::new(1);
         let problem = generate_synthetic(SyntheticKind::GA, 250, 12, &mut rng);
-        let x_star = crate::linalg::lstsq_qr(&problem.a, &problem.b);
+        let x_star = crate::linalg::lstsq_tsqr(problem.source(), problem.b());
         let constants = Constants { num_repeats: 2, ..Constants::default() };
         (problem, constants, x_star)
     }

@@ -37,7 +37,7 @@ pub use session::{
 pub use space::*;
 
 use crate::data::Problem;
-use crate::linalg::lstsq_qr;
+use crate::linalg::lstsq_tsqr;
 use crate::sap::SapConfig;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
@@ -66,7 +66,12 @@ fn reference_solution(problem: &Problem) -> (Arc<Vec<f64>>, f64) {
     let slot = cache.lock().unwrap().entry(key).or_default().clone();
     slot.get_or_init(|| {
         let t = Instant::now();
-        let x_star = Arc::new(lstsq_qr(&problem.a, &problem.b));
+        // Streams A through the problem's MatSource: TSQR factors row
+        // blocks and combines R up the tree, so the reference solve never
+        // needs the materialized matrix. For in-memory problems the
+        // default block policy yields a single leaf, making this
+        // bit-identical to the former dense `lstsq_qr` path.
+        let x_star = Arc::new(lstsq_tsqr(problem.source(), problem.b()));
         (x_star, t.elapsed().as_secs_f64())
     })
     .clone()

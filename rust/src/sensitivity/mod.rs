@@ -77,8 +77,8 @@ pub fn sobol_analysis(
     rng: &mut Rng,
 ) -> SensitivityResult {
     let design = saltelli_design(dims, n_base);
-    let f_a: Vec<f64> = design.a.iter().map(|x| model(x)).collect();
-    let f_b: Vec<f64> = design.b.iter().map(|x| model(x)).collect();
+    let f_a: Vec<f64> = design.mat_a.iter().map(|x| model(x)).collect();
+    let f_b: Vec<f64> = design.mat_b.iter().map(|x| model(x)).collect();
     let f_ab: Vec<Vec<f64>> = design
         .ab
         .iter()

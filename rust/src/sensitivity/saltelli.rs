@@ -11,9 +11,9 @@ use super::SobolSeq;
 /// The Saltelli design matrices.
 pub struct SaltelliDesign {
     /// Base matrix A (N×d points in [0,1]^d).
-    pub a: Vec<Vec<f64>>,
+    pub mat_a: Vec<Vec<f64>>,
     /// Resample matrix B (independent N×d points).
-    pub b: Vec<Vec<f64>>,
+    pub mat_b: Vec<Vec<f64>>,
     /// ab[i] = A with column i replaced by B's column i.
     pub ab: Vec<Vec<Vec<f64>>>,
 }
@@ -39,7 +39,7 @@ pub fn saltelli_design(dims: usize, n: usize) -> SaltelliDesign {
         }
         ab.push(m);
     }
-    SaltelliDesign { a, b, ab }
+    SaltelliDesign { mat_a: a, mat_b: b, ab }
 }
 
 #[cfg(test)]
@@ -49,11 +49,11 @@ mod tests {
     #[test]
     fn design_shapes() {
         let d = saltelli_design(5, 64);
-        assert_eq!(d.a.len(), 64);
-        assert_eq!(d.b.len(), 64);
+        assert_eq!(d.mat_a.len(), 64);
+        assert_eq!(d.mat_b.len(), 64);
         assert_eq!(d.ab.len(), 5);
         assert_eq!(d.ab[2].len(), 64);
-        assert_eq!(d.a[0].len(), 5);
+        assert_eq!(d.mat_a[0].len(), 5);
     }
 
     #[test]
@@ -63,9 +63,9 @@ mod tests {
             for j in 0..32 {
                 for k in 0..4 {
                     if k == i {
-                        assert_eq!(d.ab[i][j][k], d.b[j][k]);
+                        assert_eq!(d.ab[i][j][k], d.mat_b[j][k]);
                     } else {
-                        assert_eq!(d.ab[i][j][k], d.a[j][k]);
+                        assert_eq!(d.ab[i][j][k], d.mat_a[j][k]);
                     }
                 }
             }
@@ -77,7 +77,7 @@ mod tests {
         let d = saltelli_design(3, 16);
         let mut any_diff = false;
         for j in 0..16 {
-            if d.a[j] != d.b[j] {
+            if d.mat_a[j] != d.mat_b[j] {
                 any_diff = true;
             }
         }
@@ -88,8 +88,8 @@ mod tests {
     fn marginals_cover_the_unit_interval() {
         let d = saltelli_design(5, 128);
         for dim in 0..5 {
-            let lo = d.a.iter().map(|p| p[dim]).fold(f64::INFINITY, f64::min);
-            let hi = d.a.iter().map(|p| p[dim]).fold(0.0f64, f64::max);
+            let lo = d.mat_a.iter().map(|p| p[dim]).fold(f64::INFINITY, f64::min);
+            let hi = d.mat_a.iter().map(|p| p[dim]).fold(0.0f64, f64::max);
             assert!(lo < 0.15 && hi > 0.85, "dim {dim}: [{lo}, {hi}]");
         }
     }

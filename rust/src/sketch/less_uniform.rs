@@ -61,22 +61,31 @@ impl SketchOp for LessUniform {
         self.cols.len()
     }
 
-    /// Â[i, :] = Σ_k vals[i,k] · A[cols[i,k], :] — a gather-accumulate per
-    /// output row, parallelized over row bands on the shared
-    /// [`crate::linalg::pool()`] with no shared writes. Each output row is
-    /// computed by exactly the same gather order regardless of banding,
-    /// so results are bit-identical across `RANNTUNE_THREADS` values.
+    /// Â = S·A — allocates and delegates to [`SketchOp::apply_into`].
     fn apply(&self, a: &Mat) -> Mat {
+        let mut out = Mat::zeros(self.d, a.cols());
+        self.apply_into(a, &mut out);
+        out
+    }
+
+    /// Â[i, :] = Σ_k vals[i,k] · A[cols[i,k], :] — a gather-accumulate per
+    /// output row (overwriting `out`), parallelized over row bands on the
+    /// shared [`crate::linalg::pool()`] with no shared writes. Each output
+    /// row is computed by exactly the same gather order regardless of
+    /// banding, so results are bit-identical across `RANNTUNE_THREADS`
+    /// values.
+    fn apply_into(&self, a: &Mat, out: &mut Mat) {
         assert_eq!(a.rows(), self.m, "LessUniform expects {}-row input", self.m);
         let n = a.cols();
-        let mut out = Mat::zeros(self.d, n);
+        assert_eq!(out.shape(), (self.d, n), "LessUniform output must be {}x{n}", self.d);
+        out.as_mut_slice().fill(0.0);
         let nt = crate::linalg::num_threads().min(self.d);
         let work = self.d * self.k * n;
         if nt <= 1 || work < 1 << 18 {
             for i in 0..self.d {
                 self.fill_row(a, out.row_mut(i), i);
             }
-            return out;
+            return;
         }
         let rows_per = self.d.div_ceil(nt);
         crate::linalg::run_chunks(out.as_mut_slice(), rows_per * n, &|t, band| {
@@ -85,7 +94,56 @@ impl SketchOp for LessUniform {
                 self.fill_row(a, orow, lo + r);
             }
         });
-        out
+    }
+
+    /// Streaming S·A. The in-memory gather visits each output row's k
+    /// source rows in **stored** order, which a row-ordered block stream
+    /// cannot reproduce directly — so each stored non-zero's term
+    /// `vals[p]·A[cols[p], :]` is captured into a d·k·n buffer as its
+    /// source row streams past, and the final reduction sums each output
+    /// row's k terms in stored order. The term products and the addition
+    /// sequence are exactly those of [`SketchOp::apply`], so the result
+    /// is bit-identical for any block policy and any thread count. The
+    /// buffer is proportional to the operator's d·k non-zeros (times n),
+    /// never to m.
+    fn apply_blocks(&self, src: &dyn crate::data::MatSource, out: &mut Mat) {
+        assert_eq!(src.rows(), self.m, "LessUniform expects {}-row input", self.m);
+        let n = src.cols();
+        assert_eq!(out.shape(), (self.d, n), "LessUniform output must be {}x{n}", self.d);
+        let nnz = self.cols.len();
+        let mut terms = vec![0.0f64; nnz * n];
+        // Stored positions ordered by source row, so each streamed block
+        // fills a contiguous run (blocks arrive in ascending row order).
+        let mut order: Vec<u32> = (0..nnz as u32).collect();
+        order.sort_by_key(|&p| self.cols[p as usize]);
+        let mut cursor = 0usize;
+        crate::data::for_each_block(src, |row0, block| {
+            let hi = row0 + block.rows();
+            while cursor < nnz {
+                let p = order[cursor] as usize;
+                let j = self.cols[p] as usize;
+                if j >= hi {
+                    break;
+                }
+                let v = self.vals[p];
+                let arow = block.row(j - row0);
+                let term = &mut terms[p * n..(p + 1) * n];
+                for (t, &x) in term.iter_mut().zip(arow) {
+                    *t = v * x;
+                }
+                cursor += 1;
+            }
+        });
+        for i in 0..self.d {
+            let orow = out.row_mut(i);
+            orow.fill(0.0);
+            for p in i * self.k..(i + 1) * self.k {
+                let term = &terms[p * n..(p + 1) * n];
+                for (o, &t) in orow.iter_mut().zip(term) {
+                    *o += t;
+                }
+            }
+        }
     }
 
     fn apply_vec(&self, b: &[f64]) -> Vec<f64> {

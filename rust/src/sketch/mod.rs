@@ -30,6 +30,7 @@ pub use plan::RowPlan;
 pub use sjlt::Sjlt;
 pub use srht::{GaussianSketch, Srht};
 
+use crate::data::MatSource;
 use crate::linalg::Mat;
 use crate::rng::Rng;
 
@@ -93,6 +94,29 @@ pub trait SketchOp: Send + Sync {
     /// assert!(diff.max_abs() < 1e-12);
     /// ```
     fn apply(&self, a: &Mat) -> Mat;
+    /// Â = S·A written into a caller-provided d×n `out`, overwriting its
+    /// contents — the allocation-free form of [`SketchOp::apply`]. The
+    /// default computes `apply` and copies; the built-in operators
+    /// override it with their real kernels and implement `apply` as a
+    /// thin allocate-then-`apply_into` wrapper.
+    fn apply_into(&self, a: &Mat, out: &mut Mat) {
+        let sk = self.apply(a);
+        assert_eq!(out.shape(), sk.shape(), "apply_into: output shape mismatch");
+        out.as_mut_slice().copy_from_slice(sk.as_slice());
+    }
+    /// Â = S·A streamed from a row-block [`MatSource`], written into a
+    /// caller-provided d×n `out` — each block contributes without A ever
+    /// being materialized. Implementations must be **bit-identical** to
+    /// the in-memory [`SketchOp::apply`]: per-output-element accumulation
+    /// order is fixed by the source's block policy (a pure function of
+    /// the data shape), never by the thread count. The default impl
+    /// materializes the source and delegates to [`SketchOp::apply_into`],
+    /// which keeps third-party operators compiling (and trivially
+    /// bit-identical) at the cost of m×n memory.
+    fn apply_blocks(&self, src: &dyn MatSource, out: &mut Mat) {
+        let a = crate::data::materialize(src);
+        self.apply_into(&a, out);
+    }
     /// S·b for a vector b of length m.
     fn apply_vec(&self, b: &[f64]) -> Vec<f64>;
     /// Materialize S as a dense d×m matrix (tests / small problems only).
@@ -160,6 +184,39 @@ mod tests {
                 for i in 0..20 {
                     assert!((sb[i] - sb_dense[i]).abs() < 1e-12);
                 }
+            }
+        }
+    }
+
+    /// Streaming contract: `apply_blocks` over a row-block source is
+    /// bit-identical to `apply` on the materialized matrix, for every
+    /// operator and several block sizes (including non-dividing ones).
+    #[test]
+    fn streaming_apply_is_bit_identical_to_in_memory() {
+        use crate::data::DenseSource;
+        let mut rng = Rng::new(9);
+        let (m, n) = (257usize, 9usize);
+        let a = Mat::from_fn(m, n, |_, _| rng.normal());
+        let ops: Vec<(&str, Box<dyn SketchOp>)> = vec![
+            ("sjlt", Box::new(Sjlt::sample(40, m, 5, &mut rng))),
+            ("less_uniform", Box::new(LessUniform::sample(40, m, 5, &mut rng))),
+            ("srht", Box::new(Srht::sample(40, m, &mut rng))),
+            ("gaussian", Box::new(GaussianSketch::sample(40, m, &mut rng))),
+        ];
+        for (name, op) in &ops {
+            let dense = op.apply(&a);
+            let mut into = Mat::zeros(op.d(), n);
+            op.apply_into(&a, &mut into);
+            assert_eq!(dense.as_slice(), into.as_slice(), "{name}: apply_into differs");
+            for bs in [1usize, 7, 64, 257, 1000] {
+                let src = DenseSource::with_block_rows(a.clone(), bs);
+                let mut streamed = Mat::zeros(op.d(), n);
+                op.apply_blocks(&src, &mut streamed);
+                assert_eq!(
+                    dense.as_slice(),
+                    streamed.as_slice(),
+                    "{name}: streamed apply differs at block_rows={bs}"
+                );
             }
         }
     }

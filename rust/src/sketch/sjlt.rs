@@ -69,22 +69,30 @@ impl SketchOp for Sjlt {
         self.rows.len()
     }
 
-    /// Â = S·A. Â[r, :] += S[r, j]·A[j, :] for every stored non-zero
-    /// (r, j). Parallelized by partitioning sketch rows into bands, one
-    /// task per band on the shared [`crate::linalg::pool()`]: each task
-    /// walks all of A but only accumulates non-zeros whose target row
-    /// falls in its band, so no synchronization is needed — and every
-    /// output row's accumulation order (ascending input row j) is
-    /// independent of the band split, keeping the result bit-identical
-    /// across `RANNTUNE_THREADS` values.
+    /// Â = S·A — allocates and delegates to [`SketchOp::apply_into`].
     fn apply(&self, a: &Mat) -> Mat {
+        let mut out = Mat::zeros(self.d, a.cols());
+        self.apply_into(a, &mut out);
+        out
+    }
+
+    /// Â[r, :] += S[r, j]·A[j, :] for every stored non-zero (r, j),
+    /// overwriting `out`. Parallelized by partitioning sketch rows into
+    /// bands, one task per band on the shared [`crate::linalg::pool()`]:
+    /// each task walks all of A but only accumulates non-zeros whose
+    /// target row falls in its band, so no synchronization is needed —
+    /// and every output row's accumulation order (ascending input row j)
+    /// is independent of the band split, keeping the result bit-identical
+    /// across `RANNTUNE_THREADS` values.
+    fn apply_into(&self, a: &Mat, out: &mut Mat) {
         assert_eq!(a.rows(), self.m, "SJLT expects {}-row input", self.m);
         let n = a.cols();
-        let mut out = Mat::zeros(self.d, n);
+        assert_eq!(out.shape(), (self.d, n), "SJLT output must be {}x{n}", self.d);
+        out.as_mut_slice().fill(0.0);
         let nt = crate::linalg::num_threads().min(self.d);
         if nt <= 1 || self.m * self.k * n < 1 << 18 {
-            self.apply_band(a, &mut out, 0, self.d);
-            return out;
+            self.apply_band(a, out, 0, self.d);
+            return;
         }
         let rows_per = self.d.div_ceil(nt);
         let out_cols = n;
@@ -103,7 +111,29 @@ impl SketchOp for Sjlt {
                 }
             }
         });
-        out
+    }
+
+    /// Streaming S·A: each row block contributes its input rows j in
+    /// ascending order — exactly the per-output-row accumulation order of
+    /// the in-memory apply — so the result is bit-identical to
+    /// [`SketchOp::apply`] on the materialized matrix, for any block
+    /// policy and any thread count.
+    fn apply_blocks(&self, src: &dyn crate::data::MatSource, out: &mut Mat) {
+        assert_eq!(src.rows(), self.m, "SJLT expects {}-row input", self.m);
+        let n = src.cols();
+        assert_eq!(out.shape(), (self.d, n), "SJLT output must be {}x{n}", self.d);
+        out.as_mut_slice().fill(0.0);
+        crate::data::for_each_block(src, |row0, block| {
+            for r in 0..block.rows() {
+                let j = row0 + r;
+                let arow = block.row(r);
+                let idx = &self.rows[j * self.k..(j + 1) * self.k];
+                let vchunk = &self.vals[j * self.k..(j + 1) * self.k];
+                for (&rr, &v) in idx.iter().zip(vchunk) {
+                    crate::linalg::axpy(v, arow, out.row_mut(rr as usize));
+                }
+            }
+        });
     }
 
     fn apply_vec(&self, b: &[f64]) -> Vec<f64> {

@@ -99,12 +99,19 @@ impl SketchOp for Srht {
         self.d * self.m
     }
 
+    /// Â = S·A — allocates and delegates to [`SketchOp::apply_into`].
     fn apply(&self, a: &Mat) -> Mat {
+        let mut out = Mat::zeros(self.d, a.cols());
+        self.apply_into(a, &mut out);
+        out
+    }
+
+    fn apply_into(&self, a: &Mat, out: &mut Mat) {
         assert_eq!(a.rows(), self.m);
         let n = a.cols();
+        assert_eq!(out.shape(), (self.d, n), "SRHT output must be {}x{n}", self.d);
         let scale = self.scale();
         let d = self.d;
-        let mut out = Mat::zeros(d, n);
         // Each column j of A is independent: FWHT the signed, padded
         // column once, then gather the sampled rows. The FWHT buffer
         // comes from the per-worker scratch, so parked pool workers (and
@@ -119,7 +126,7 @@ impl SketchOp for Srht {
                     }
                 }
             });
-            return out;
+            return;
         }
         // Pooled: tasks own disjoint column blocks, each writing its own
         // contiguous column-major slab (row-major `out` interleaves
@@ -146,7 +153,39 @@ impl SketchOp for Srht {
                 out[(r, j)] = v;
             }
         }
-        out
+    }
+
+    /// Streaming S·A. The Hadamard transform mixes every input row into
+    /// every output row, so SRHT is the documented materialization
+    /// exception among the streaming applies: the row blocks are
+    /// assembled into the signed, zero-padded column-major slab
+    /// (m̂×n floats) the in-memory kernel would build per column, then the
+    /// identical per-column FWHT + gather runs over it — bit-identical to
+    /// [`SketchOp::apply`] by construction. Memory is m̂·n (the padded
+    /// input), not the source's block size; callers streaming matrices
+    /// too large for that belong on the sparse operators.
+    fn apply_blocks(&self, src: &dyn crate::data::MatSource, out: &mut Mat) {
+        assert_eq!(src.rows(), self.m);
+        let n = src.cols();
+        assert_eq!(out.shape(), (self.d, n), "SRHT output must be {}x{n}", self.d);
+        let scale = self.scale();
+        let mut slab = vec![0.0f64; self.m_pad * n];
+        crate::data::for_each_block(src, |row0, block| {
+            for r in 0..block.rows() {
+                let i = row0 + r;
+                let s = self.signs[i];
+                for (j, &v) in block.row(r).iter().enumerate() {
+                    slab[j * self.m_pad + i] = s * v;
+                }
+            }
+        });
+        for j in 0..n {
+            let col = &mut slab[j * self.m_pad..(j + 1) * self.m_pad];
+            Self::fwht(col);
+            for (r, &src_ix) in self.rows.iter().enumerate() {
+                out[(r, j)] = scale * col[src_ix as usize];
+            }
+        }
     }
 
     fn apply_vec(&self, b: &[f64]) -> Vec<f64> {

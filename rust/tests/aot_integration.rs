@@ -55,18 +55,18 @@ fn aot_engine_matches_direct_solver() {
     let op = LessUniform::sample(meta.d, m0, meta.k, &mut rng);
     let plan = op.row_plan(meta.k).expect("plan fits");
 
-    let (x, phibar) = engine.solve(&problem.a, &problem.b, &plan).expect("solve");
+    let (x, phibar) = engine.solve(problem.dense(), problem.b(), &plan).expect("solve");
     assert_eq!(x.len(), n0);
 
-    let x_star = lstsq_qr(&problem.a, &problem.b);
-    let err = arfe(&problem.a, &problem.b, &x, &x_star);
+    let x_star = lstsq_qr(problem.dense(), problem.b());
+    let err = arfe(problem.dense(), problem.b(), &x, &x_star);
     // f32 pipeline, 30 iterations: comfortably better than 1e-3.
     assert!(err < 1e-3, "AOT ARFE {err}");
 
     // phibar must approximate the true residual norm.
-    let mut r = gemv(&problem.a, &x);
+    let mut r = gemv(problem.dense(), &x);
     for i in 0..r.len() {
-        r[i] -= problem.b[i];
+        r[i] -= problem.b()[i];
     }
     let resid = norm2(&r);
     assert!(
@@ -87,31 +87,31 @@ fn aot_engine_agrees_with_native_rust_solver() {
 
     let op = LessUniform::sample(meta.d, m0, meta.k, &mut rng);
     let plan = op.row_plan(meta.k).unwrap();
-    let (x_aot, _) = engine.solve(&problem.a, &problem.b, &plan).unwrap();
+    let (x_aot, _) = engine.solve(problem.dense(), problem.b(), &plan).unwrap();
 
     // Native solve with the SAME sketch realization: build the
     // preconditioner from the identical sketch and run LSQR to the same
     // iteration count.
     use ranntune::sketch::SketchOp;
-    let sketch = op.apply(&problem.a);
+    let sketch = op.apply(problem.dense());
     let precond = ranntune::sap::Preconditioner::from_qr(&sketch);
-    let sb = op.apply_vec(&problem.b);
+    let sb = op.apply_vec(problem.b());
     let z_sk = precond.presolve(&sb);
     let z0 = {
-        let ax = gemv(&problem.a, &precond.apply(&z_sk));
-        let mut r = problem.b.clone();
+        let ax = gemv(problem.dense(), &precond.apply(&z_sk));
+        let mut r = problem.b().to_vec();
         for i in 0..r.len() {
             r[i] -= ax[i];
         }
-        if norm2(&r) < norm2(&problem.b) {
+        if norm2(&r) < norm2(problem.b()) {
             z_sk
         } else {
             vec![0.0; precond.rank()]
         }
     };
     let native = ranntune::sap::lsqr_preconditioned(
-        &problem.a,
-        &problem.b,
+        problem.dense(),
+        problem.b(),
         &precond,
         &z0,
         0.0, // run the full fixed iteration count like the artifact
@@ -120,9 +120,9 @@ fn aot_engine_agrees_with_native_rust_solver() {
 
     // Same algorithm, same sketch, same iterations — differences come only
     // from f32 vs f64 arithmetic.
-    let x_star = lstsq_qr(&problem.a, &problem.b);
-    let err_aot = arfe(&problem.a, &problem.b, &x_aot, &x_star);
-    let err_native = arfe(&problem.a, &problem.b, &native.x, &x_star);
+    let x_star = lstsq_qr(problem.dense(), problem.b());
+    let err_aot = arfe(problem.dense(), problem.b(), &x_aot, &x_star);
+    let err_native = arfe(problem.dense(), problem.b(), &native.x, &x_star);
     assert!(err_aot < 1e-3, "AOT ARFE {err_aot}");
     assert!(err_native < err_aot.max(1e-9) * 10.0 + 1e-9 || err_native < 1e-6);
     // Solutions themselves agree to f32 resolution.
@@ -142,5 +142,5 @@ fn engine_rejects_mismatched_plan() {
     let problem = generate_synthetic(SyntheticKind::GA, 500, 50, &mut rng);
     let op = LessUniform::sample(64, 500, 4, &mut rng); // wrong d
     let plan = op.row_plan(4).unwrap();
-    assert!(engine.solve(&problem.a, &problem.b, &plan).is_err());
+    assert!(engine.solve(problem.dense(), problem.b(), &plan).is_err());
 }

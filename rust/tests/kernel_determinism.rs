@@ -109,6 +109,28 @@ fn child_suite() {
     let s = Srht::sample(64, 1500, &mut rng.fork(7));
     emit_mat("srht_d64", &s.apply(&a_srht));
 
+    // --- streaming (blockwise) sketch applies: the out-of-core path must
+    // produce the same bits as the in-memory apply regardless of thread
+    // count AND block size; fingerprint a non-trivial block split of each
+    // operator so both invariances are pinned by the same transcript.
+    {
+        use ranntune::data::DenseSource;
+        let mut rng_mat = rng.fork(21);
+        let a_st = Mat::from_fn(1200, 32, |_, _| rng_mat.normal());
+        let mut rng_st = rng.fork(22);
+        let sjlt = Sjlt::sample(96, 1200, 8, &mut rng_st);
+        let lu = LessUniform::sample(96, 1200, 8, &mut rng_st);
+        let srht = Srht::sample(96, 1200, &mut rng_st);
+        let src = DenseSource::with_block_rows(a_st.clone(), 257);
+        let ops: [(&str, &dyn SketchOp); 3] =
+            [("sjlt", &sjlt), ("less_uniform", &lu), ("srht", &srht)];
+        for (name, op) in ops {
+            let mut out = Mat::zeros(96, 32);
+            op.apply_blocks(&src, &mut out);
+            emit_mat(&format!("stream_{name}_bs257"), &out);
+        }
+    }
+
     // --- blocked QR at panel-boundary widths: the compact-WY trailing
     // update runs through the pool-parallel GEMM kernels, so R, the
     // implicit Qᵀb application, and the back-accumulated thin Q must all
@@ -124,6 +146,23 @@ fn child_suite() {
         emit_mat(&format!("qr_r_n{n}"), &f.r);
         emit_slice(&format!("qr_qtb_n{n}"), &f.apply_qt(&b));
         emit_mat(&format!("qr_thinq_n{n}"), &f.form_thin_q());
+    }
+
+    // --- multi-leaf TSQR: leaves factor through the pooled blocked QR,
+    // then R factors combine up a tree whose shape is fixed by (m, block
+    // size) alone — R and the fused Qᵀb must be bit-identical across
+    // thread counts.
+    {
+        use ranntune::data::DenseSource;
+        use ranntune::linalg::tsqr;
+        let mut rng = Rng::new(6);
+        let (m, n) = (2100, 24);
+        let a = Mat::from_fn(m, n, |_, _| rng.normal());
+        let b: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let src = DenseSource::with_block_rows(a, 512);
+        let res = tsqr(&src, &b);
+        emit_mat("tsqr_r_2100x24_bs512", &res.r);
+        emit_slice("tsqr_qtb_2100x24_bs512", &res.qtb);
     }
 
     // --- full SAP solves: the end-to-end pipeline over the kernels above

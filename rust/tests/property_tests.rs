@@ -122,6 +122,40 @@ fn blocked_qr_matches_unblocked_reference_on_rank_deficient_inputs() {
 }
 
 #[test]
+fn tsqr_matches_flat_qr_at_block_boundaries() {
+    // TSQR over a blocked source must agree with the flat factorization
+    // to 1e-10 on R and Qᵀb at shapes that straddle every leaf-boundary
+    // case: m a multiple of the block size, one row over, one row under
+    // (short tail merged into the previous leaf), and m below one block.
+    use ranntune::data::DenseSource;
+    use ranntune::linalg::{lstsq_qr, lstsq_tsqr, tsqr};
+    forall(Config::cases(12), |rng| {
+        let n = 2 + rng.below(10);
+        let bs = n + rng.below(24);
+        let leaves = 1 + rng.below(5);
+        let edge = [0usize, 1, bs.saturating_sub(1).max(n)][rng.below(3)];
+        let m = (bs * leaves + edge).max(n + 1);
+        let a = rng.tall_matrix(m, n);
+        let b: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let src = DenseSource::with_block_rows(a.clone(), bs);
+        let res = tsqr(&src, &b);
+        let f = qr_thin(&a);
+        let mut dr = res.r.clone();
+        dr.axpy(-1.0, &f.r);
+        assert!(dr.max_abs() < 1e-10, "m={m} n={n} bs={bs}: R delta {}", dr.max_abs());
+        let qtb = f.apply_qt(&b);
+        for (u, w) in res.qtb.iter().zip(qtb.iter()) {
+            assert!((u - w).abs() < 1e-10, "m={m} n={n} bs={bs}: Qᵀb {u} vs {w}");
+        }
+        let x_t = lstsq_tsqr(&src, &b);
+        let x_q = lstsq_qr(&a, &b);
+        for (u, w) in x_t.iter().zip(x_q.iter()) {
+            assert!((u - w).abs() < 1e-9, "m={m} n={n} bs={bs}: x {u} vs {w}");
+        }
+    });
+}
+
+#[test]
 fn svd_singular_values_bound_operator_norm() {
     forall(Config::cases(16), |rng| {
         let (m, n) = rng.tall_shape(40, 8);
@@ -222,7 +256,7 @@ fn oversubscribed_nested_evaluator_batches_complete() {
     // execution and finish with the serial evaluator's exact results.
     let mut rng = ranntune::rng::Rng::new(1);
     let problem = generate_synthetic(SyntheticKind::GA, 150, 8, &mut rng);
-    let x_star = ranntune::linalg::lstsq_qr(&problem.a, &problem.b);
+    let x_star = ranntune::linalg::lstsq_qr(problem.dense(), problem.b());
     let constants = Constants { num_repeats: 2, ..Constants::default() };
     let ctx =
         EvalContext { problem: &problem, constants: &constants, x_star: &x_star, base_seed: 3 };

@@ -1,0 +1,106 @@
+//! Out-of-core round trip: a problem written to the on-disk matrix
+//! format and read back through [`ranntune::data::FileSource`] must be
+//! indistinguishable — bit for bit — from the in-memory problem it came
+//! from, through every layer that touches the matrix: raw blocks, the
+//! Problem fingerprint, streaming sketch applies, the TSQR reference
+//! solve, and the full SAP pipeline's ARFE.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use ranntune::data::{generate_synthetic, FileSource, Problem, SyntheticKind};
+use ranntune::linalg::lstsq_tsqr;
+use ranntune::rng::Rng;
+use ranntune::sap::{arfe, solve_sap, SapConfig};
+use ranntune::sketch::{LessUniform, SketchOp, Sjlt, Srht};
+
+/// Temp file that cleans up after itself even when an assert fires.
+struct TempMat(PathBuf);
+
+impl TempMat {
+    fn new(tag: &str) -> TempMat {
+        TempMat(
+            std::env::temp_dir().join(format!("ranntune_stream_{tag}_{}.mat", std::process::id())),
+        )
+    }
+}
+
+impl Drop for TempMat {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.0);
+    }
+}
+
+#[test]
+fn file_backed_problem_is_bit_identical_to_in_memory() {
+    let mut rng = Rng::new(31);
+    let mem = generate_synthetic(SyntheticKind::T3, 700, 24, &mut rng);
+    let tmp = TempMat::new("problem");
+    FileSource::write_mat(&tmp.0, mem.dense()).expect("write matrix");
+    // Small blocks force genuinely multi-block streaming on a 700-row
+    // matrix (the default policy would read it in one block).
+    let src = FileSource::open(&tmp.0).expect("open matrix").with_block_rows(96);
+    assert_eq!((src.rows(), src.cols()), (700, 24));
+    let file = Problem::from_source(Arc::new(src), mem.b().to_vec(), mem.name.clone());
+
+    // The dense materialization round-trips every bit,
+    assert_eq!(file.dense().as_slice(), mem.dense().as_slice());
+    // and the streamed fingerprint cannot tell the two apart.
+    assert_eq!(file.fingerprint(), mem.fingerprint());
+}
+
+#[test]
+fn streaming_sketch_applies_match_in_memory_on_file_source() {
+    let mut rng = Rng::new(32);
+    let mem = generate_synthetic(SyntheticKind::GA, 500, 16, &mut rng);
+    let tmp = TempMat::new("sketch");
+    FileSource::write_mat(&tmp.0, mem.dense()).expect("write matrix");
+    let src = FileSource::open(&tmp.0).expect("open matrix").with_block_rows(77);
+
+    let sjlt = Sjlt::sample(64, 500, 6, &mut rng);
+    let lu = LessUniform::sample(64, 500, 6, &mut rng);
+    let srht = Srht::sample(64, 500, &mut rng);
+    let ops: [(&str, &dyn SketchOp); 3] = [("sjlt", &sjlt), ("less_uniform", &lu), ("srht", &srht)];
+    for (name, op) in ops {
+        let dense = op.apply(mem.dense());
+        let mut streamed = ranntune::linalg::Mat::zeros(op.d(), 16);
+        op.apply_blocks(&src, &mut streamed);
+        let same = dense
+            .as_slice()
+            .iter()
+            .zip(streamed.as_slice())
+            .all(|(x, y)| x.to_bits() == y.to_bits());
+        assert!(same, "{name}: streamed apply differs from in-memory bits");
+    }
+}
+
+#[test]
+fn streaming_solve_sap_arfe_equals_in_memory_bit_for_bit() {
+    let mut rng = Rng::new(33);
+    let mem = generate_synthetic(SyntheticKind::T1, 600, 20, &mut rng);
+    let tmp = TempMat::new("solve");
+    FileSource::write_mat(&tmp.0, mem.dense()).expect("write matrix");
+    let src = FileSource::open(&tmp.0).expect("open matrix").with_block_rows(128);
+    let file = Problem::from_source(Arc::new(src), mem.b().to_vec(), mem.name.clone());
+
+    // Reference solves: in-memory single-leaf TSQR vs file-backed
+    // multi-leaf TSQR. Identical up to the tree shape; compare to 1e-10
+    // and then pin the end-to-end ARFE bits, which is what the objective
+    // layer consumes.
+    let x_mem = lstsq_tsqr(mem.source(), mem.b());
+    let x_file = lstsq_tsqr(file.source(), file.b());
+    for (u, w) in x_mem.iter().zip(x_file.iter()) {
+        assert!((u - w).abs() < 1e-10, "reference solve drifted: {u} vs {w}");
+    }
+
+    let cfg = SapConfig::reference();
+    let sol_mem = solve_sap(mem.dense(), mem.b(), &cfg, &mut Rng::new(7));
+    let sol_file = solve_sap(file.dense(), file.b(), &cfg, &mut Rng::new(7));
+    let err_mem = arfe(mem.dense(), mem.b(), &sol_mem.x, &x_mem);
+    let err_file = arfe(file.dense(), file.b(), &sol_file.x, &x_mem);
+    assert_eq!(
+        err_mem.to_bits(),
+        err_file.to_bits(),
+        "streaming ARFE {err_file} != in-memory ARFE {err_mem}"
+    );
+}
