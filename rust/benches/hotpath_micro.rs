@@ -13,7 +13,7 @@ mod common;
 use ranntune::bench_harness::{fmt_secs, markdown_table, time_fn};
 use ranntune::data::{generate_synthetic, SyntheticKind};
 use ranntune::gp::GpModel;
-use ranntune::linalg::{gemm, Mat};
+use ranntune::linalg::{gemm, gemm_into_unblocked, gemm_packed_into, Mat};
 use ranntune::rng::Rng;
 use ranntune::sap::{solve_sap, Preconditioner, SapConfig};
 use ranntune::sketch::{make_sketch, SketchKind, SketchOp};
@@ -192,6 +192,35 @@ fn main() {
         gemm_flops,
     );
 
+    // Packed BLIS-style GEMM vs the unblocked row-band kernel at the QR
+    // trailing-update shape, driven through the always-packed /
+    // always-unblocked entry points so the dispatch cutoff cannot blur
+    // the comparison (fixed dims so it is stable across smoke
+    // overrides). Both rows land in BENCH_kernels.json; CI gates
+    // packed ≤ 1.0× unblocked.
+    let (pm, pk, pn) = (4096usize, 256usize, 256usize);
+    let pa = Mat::from_fn(pm, pk, |_, _| rng.normal());
+    let pb = Mat::from_fn(pk, pn, |_, _| rng.normal());
+    let mut pc = Mat::zeros(pm, pn);
+    let packed_flops = 2.0 * (pm * pk * pn) as f64;
+    add(
+        "cmp: gemm 4096x256x256 packed",
+        time_fn(1, 5, || {
+            gemm_packed_into(&pa, &pb, &mut pc);
+            std::hint::black_box(&pc);
+        }),
+        packed_flops,
+    );
+    let mut pc = Mat::zeros(pm, pn);
+    add(
+        "cmp: gemm 4096x256x256 unblocked",
+        time_fn(1, 5, || {
+            gemm_into_unblocked(&pa, &pb, &mut pc);
+            std::hint::black_box(&pc);
+        }),
+        packed_flops,
+    );
+
     // GEMV above the threading cutoff (fixed dims so the comparison is
     // stable across RANNTUNE_BENCH_M/N smoke overrides).
     let gv_a = Mat::from_fn(2048, 1024, |_, _| rng.normal());
@@ -368,10 +397,10 @@ fn main() {
     let _ = std::fs::create_dir_all(&dir);
     let _ = std::fs::write(dir.join("BENCH_hotpath_micro.json"), snapshot.to_string_pretty());
 
-    // Kernel-trajectory snapshot: just the deterministic-factorization
-    // rows (blocked vs unblocked QR, lstsq, full SAP solves) that the CI
-    // bench-smoke job publishes as BENCH_kernels.json at the repo root
-    // and gates against regression.
+    // Kernel-trajectory snapshot: just the deterministic-kernel rows
+    // (blocked vs unblocked QR, packed vs unblocked GEMM, lstsq, full
+    // SAP solves) that the CI bench-smoke job publishes as
+    // BENCH_kernels.json at the repo root and gates against regression.
     let kernel_rows: Vec<Json> = raw
         .iter()
         .filter(|(name, ..)| {
@@ -379,6 +408,7 @@ fn main() {
                 || name.contains("lstsq_qr")
                 || name.contains("tsqr")
                 || name.contains("sketch_stream")
+                || name.contains("gemm 4096x256x256")
                 || name.starts_with("SAP solve")
         })
         .map(|(name, med, min, gflops)| {

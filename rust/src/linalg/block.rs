@@ -1,0 +1,109 @@
+//! Size-only blocking policy for the dense kernels.
+//!
+//! Every dense kernel that partitions work — the packed GEMM's register
+//! tiles and cache blocks, and the `gemv_t` reduction tree — takes its
+//! sizes from this one module, and every size here is a function of the
+//! *problem* (or a compile-time constant), **never** of the worker
+//! count. That is the root of the crate's determinism contract: task
+//! structure may follow `RANNTUNE_THREADS` freely only where it cannot
+//! change any output element's floating-point accumulation order, and
+//! wherever the order *is* shaped by a block size (the `gemv_t` partial
+//! -sum tree), that size is pinned here as a constant.
+//!
+//! Two kinds of knobs live here, with different contracts:
+//!
+//! * **Bits-free blocking** ([`gemm_kc`], [`GEMM_MC`], [`GEMM_NC`],
+//!   [`GEMM_MR`], [`GEMM_NR`]): the packed GEMM accumulates each output
+//!   element over k in ascending order inside exactly one task no matter
+//!   how the loops are tiled, so these sizes tune cache behaviour only —
+//!   changing them can never change a result bit. `RANNTUNE_GEMM_KC` is
+//!   therefore safe to expose as an env override.
+//! * **Bit-contract blocking** ([`GEMV_T_CHUNK`]): the `gemv_t` chunk
+//!   tree *reassociates* a reduction, so its shape is part of the
+//!   crate's fingerprint contract. It is derived from the same policy
+//!   family (`2 × GEMM_KC_DEFAULT`) but deliberately pinned to the
+//!   *default* KC, never the env override — `RANNTUNE_GEMM_KC` must not
+//!   be able to change bits.
+
+use std::sync::OnceLock;
+
+/// Register-tile rows of the packed GEMM microkernel: each inner-kernel
+/// invocation owns an `GEMM_MR × GEMM_NR` block of C held in explicit
+/// unrolled accumulators. 8×4 keeps the accumulators plus one broadcast
+/// A value and one B row inside 16 vector registers on any 256-bit SIMD
+/// target the autovectorizer hits.
+pub const GEMM_MR: usize = 8;
+
+/// Register-tile columns of the packed GEMM microkernel (see
+/// [`GEMM_MR`]); 4 lanes = one 256-bit vector of f64.
+pub const GEMM_NR: usize = 4;
+
+/// Default k-extent of a packed panel pair: one `GEMM_MR × KC` A-panel
+/// and one `KC × GEMM_NR` B-panel are streamed per microkernel call, so
+/// KC bounds the panel working set (~16 KiB at 256) to L1-friendly
+/// sizes. Overridable at run time via `RANNTUNE_GEMM_KC` ([`gemm_kc`]).
+pub const GEMM_KC_DEFAULT: usize = 256;
+
+/// Row extent of a packed A block: `GEMM_MC × KC` doubles (256 KiB at
+/// the defaults) live in the per-thread A pack buffer and are reused
+/// across every NR-panel of B — sized to sit in L2. Always a multiple
+/// of [`GEMM_MR`].
+pub const GEMM_MC: usize = 128;
+
+/// Column extent of a packed B block: `KC × GEMM_NC` doubles (1 MiB at
+/// the defaults) live in the per-thread B pack buffer and are reused
+/// across every MR-panel of A. Always a multiple of [`GEMM_NR`].
+pub const GEMM_NC: usize = 512;
+
+/// Fixed row-chunk length of the [`crate::linalg::gemv_t`] partial-sum
+/// reduction tree, derived from the same blocking family as the GEMM
+/// cache blocks (`2 × GEMM_KC_DEFAULT`). Unlike the GEMM blocks this
+/// size shapes a floating-point *reassociation*, so it is part of the
+/// bit-determinism contract: it is pinned to the default KC (never the
+/// `RANNTUNE_GEMM_KC` override) and its value is regression-locked at
+/// 512 — the historical constant — by `tests/gemm_conformance.rs`, so
+/// the `gemv_t` m=513 boundary fingerprint in
+/// `tests/kernel_determinism.rs` can never silently move.
+pub const GEMV_T_CHUNK: usize = 2 * GEMM_KC_DEFAULT;
+
+// Structural invariants the packing code relies on: cache blocks tile
+// evenly into register tiles, and the bit-contract chunk is exactly the
+// historical 512 the determinism fingerprints were recorded against.
+const _: () = assert!(GEMM_MC % GEMM_MR == 0);
+const _: () = assert!(GEMM_NC % GEMM_NR == 0);
+const _: () = assert!(GEMV_T_CHUNK == 512);
+
+/// Effective k-extent of the packed GEMM's cache blocking: the
+/// `RANNTUNE_GEMM_KC` env override (clamped to 16..=1024, latched once
+/// per process like `RANNTUNE_THREADS`) or [`GEMM_KC_DEFAULT`].
+///
+/// This knob is **bits-free**: the packed kernels accumulate every
+/// output element over k in ascending order within one task regardless
+/// of where the KC boundaries fall, so overriding it tunes cache reuse
+/// only and can never change a result bit (pinned by
+/// `tests/gemm_conformance.rs`, which compares packed against the
+/// unblocked kernel bit-for-bit).
+pub fn gemm_kc() -> usize {
+    static KC: OnceLock<usize> = OnceLock::new();
+    *KC.get_or_init(|| {
+        std::env::var("RANNTUNE_GEMM_KC")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .map(|v| v.clamp(16, 1024))
+            .unwrap_or(GEMM_KC_DEFAULT)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_invariants() {
+        assert_eq!(GEMM_MC % GEMM_MR, 0);
+        assert_eq!(GEMM_NC % GEMM_NR, 0);
+        assert_eq!(GEMV_T_CHUNK, 2 * GEMM_KC_DEFAULT);
+        let kc = gemm_kc();
+        assert!((16..=1024).contains(&kc));
+    }
+}

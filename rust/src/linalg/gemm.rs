@@ -1,24 +1,46 @@
-//! Blocked, multi-threaded GEMM / GEMV on the persistent worker pool.
+//! Packed BLIS-style GEMM / GEMV on the persistent worker pool.
 //!
-//! This is the dense-compute workhorse: `SA` for dense comparisons, `Q·R`
-//! checks, `AM` products in tests, GP covariance assembly. The kernel is a
-//! cache-blocked i-k-j loop (row-major friendly: innermost loop streams a
-//! row of B and a row of C), parallelized over row bands of A dispatched
-//! to the shared [`crate::linalg::pool()`] — workers park between calls,
-//! so the per-call thread spawn/join the scoped kernels used to pay is
-//! gone. No SIMD intrinsics — autovectorization of the innermost FMA loop
-//! gets within a small factor of peak, which is all we need (§Perf in
-//! EXPERIMENTS.md has measurements).
+//! This is the dense-compute workhorse: every hot path — the compact-WY
+//! QR trailing updates, TSQR leaf factorizations, dense sketch checks,
+//! GP covariance assembly — funnels through [`gemm_into`] /
+//! [`gemm_tn_into`]. The kernel is a BLIS-style blocked multiply:
+//! fixed [`GEMM_MR`]`×`[`GEMM_NR`] register tiles with explicit unrolled
+//! accumulators, KC/MC/NC cache blocking from the size-only policy in
+//! `linalg::block`, A packed into column-major MR-panels and B into
+//! row-major NR-panels through the per-thread [`with_pack_scratch`]
+//! buffers, and masked edge tiles for remainder rows/columns. No SIMD
+//! intrinsics — the microkernel's fixed-shape accumulator arrays are
+//! what the autovectorizer needs to hold the tile in vector registers.
+//!
+//! The pre-packing row-band kernel survives as [`gemm_into_unblocked`] /
+//! [`gemm_tn_into_unblocked`]: it is the conformance reference (packed
+//! must match it **bit for bit**, see `tests/gemm_conformance.rs`) and
+//! the `cmp:` bench baseline that CI gates the packed kernel against.
 //!
 //! ## Determinism
 //!
 //! Every kernel here is bit-deterministic across `RANNTUNE_THREADS`
-//! values: band splits never change an output element's accumulation
-//! order ([`gemm_into`], [`gemv_into`]), and where a cross-band reduction
-//! exists ([`gemv_t`]) its tree shape is fixed by the problem size alone,
-//! never by the worker count. Pinned by `tests/kernel_determinism.rs`.
+//! values *and* across the packed/unblocked paths, by one invariant:
+//! **each output element is accumulated over k in ascending order, one
+//! `c += a·b` at a time, inside exactly one task**. Cache-block
+//! boundaries (KC/MC/NC, incl. the `RANNTUNE_GEMM_KC` override) only
+//! decide when the C tile is parked in memory between partial sweeps —
+//! an exact store/reload — and row-band splits only decide which task
+//! owns an element, so neither can reassociate a sum. Where a genuine
+//! cross-band reduction exists ([`gemv_t`]) its tree shape is the
+//! pinned policy constant [`GEMV_T_CHUNK`], fixed by problem size
+//! alone. Pinned by `tests/kernel_determinism.rs` (across thread
+//! counts) and `tests/gemm_conformance.rs` (packed vs unblocked bits).
 
-use super::Mat;
+use super::{
+    gemm_kc, with_pack_scratch, Mat, GEMM_MC, GEMM_MR, GEMM_NC, GEMM_NR, GEMV_T_CHUNK,
+};
+
+/// Serial cutoff (in madds): below this a single-threaded row sweep
+/// beats both the pool dispatch and the packing pass. Tiny products are
+/// common in the GP inner loops, so the cutoff is load-bearing for the
+/// tuner's own speed, not just the kernels'.
+const GEMM_SERIAL_CUTOFF: usize = 64 * 64 * 64;
 
 /// C = A · B.
 pub fn gemm(a: &Mat, b: &Mat) -> Mat {
@@ -38,23 +60,69 @@ pub fn gemm(a: &Mat, b: &Mat) -> Mat {
 /// defined behaviour and means "add"; callers that reuse a buffer for a
 /// pure product must clear it first (as [`gemm`] does). Pinned by the
 /// `gemm_into_accumulates_into_nonzero_c` regression test.
+///
+/// Dispatch: products under the serial cutoff run a single-threaded row
+/// sweep; everything else goes through the packed path
+/// ([`gemm_packed_into`]). Both produce identical bits (see the module
+/// docs), so the cutoff is a pure performance decision.
 pub fn gemm_into(a: &Mat, b: &Mat, c: &mut Mat) {
     let (m, kk) = a.shape();
     let n = b.cols();
     assert_eq!(b.rows(), kk);
     assert_eq!(c.shape(), (m, n));
+    if m * n * kk < GEMM_SERIAL_CUTOFF {
+        gemm_rows(a, b, c.as_mut_slice(), 0, m);
+        return;
+    }
+    gemm_packed_into(a, b, c);
+}
 
+/// C += A · B through the packed BLIS-style kernels unconditionally
+/// (no serial-cutoff dispatch) — [`gemm_into`] is the entry point that
+/// callers want; this one is public so `tests/gemm_conformance.rs` and
+/// the benches can drive the packed path directly at shapes below the
+/// cutoff and straddling every blocking boundary.
+pub fn gemm_packed_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    let (m, kk) = a.shape();
+    let n = b.cols();
+    assert_eq!(b.rows(), kk);
+    assert_eq!(c.shape(), (m, n));
+    if m == 0 || n == 0 || kk == 0 {
+        return; // C += 0-extent product is a no-op
+    }
+    let nt = super::num_threads().min(m);
+    if nt <= 1 {
+        packed_band(a, b, c.as_mut_slice(), 0, m, kk, pack_a_rows);
+        return;
+    }
+    // Disjoint row bands of C, one pool task each, rounded up to whole
+    // MR tiles so bands split on register-tile boundaries. Band widths
+    // follow the worker count freely: boundaries never alter any
+    // element's accumulation order, so the split is bits-free.
+    let rows_per = m.div_ceil(nt).div_ceil(GEMM_MR) * GEMM_MR;
+    super::run_chunks(c.as_mut_slice(), rows_per * n, &|t, band| {
+        let lo = t * rows_per;
+        let hi = lo + band.len() / n;
+        packed_band(a, b, band, lo, hi, kk, pack_a_rows);
+    });
+}
+
+/// C += A · B through the pre-packing row-band kernel (cache-blocked
+/// i-k-j sweep, threaded over row bands of C). Kept as the conformance
+/// reference — the packed path must reproduce its bits exactly — and as
+/// the `cmp:` bench baseline the CI smoke job gates against. Same
+/// accumulate contract and determinism guarantees as [`gemm_into`].
+pub fn gemm_into_unblocked(a: &Mat, b: &Mat, c: &mut Mat) {
+    let (m, kk) = a.shape();
+    let n = b.cols();
+    assert_eq!(b.rows(), kk);
+    assert_eq!(c.shape(), (m, n));
     let nt = super::num_threads().min(m.max(1));
-    // Serial cutoff: tiny products are common in the GP inner loops, and
-    // even a parked-pool dispatch is not free.
-    if nt <= 1 || m * n * kk < 64 * 64 * 64 {
+    if nt <= 1 || m * n * kk < GEMM_SERIAL_CUTOFF {
         gemm_rows(a, b, c.as_mut_slice(), 0, m);
         return;
     }
     let rows_per = m.div_ceil(nt);
-    // Disjoint row bands of C, one pool task each. Band boundaries do not
-    // alter any entry's accumulation order, so the split width is free to
-    // follow the worker count without costing determinism.
     super::run_chunks(c.as_mut_slice(), rows_per * n, &|t, band| {
         let lo = t * rows_per;
         let hi = lo + band.len() / n;
@@ -62,21 +130,24 @@ pub fn gemm_into(a: &Mat, b: &Mat, c: &mut Mat) {
     });
 }
 
-/// Compute rows [row_lo, row_hi) of C += A·B into the band slice.
+/// Compute rows [row_lo, row_hi) of C += A·B into the band slice — the
+/// unpacked reference sweep. KC-blocked so the touched B panel stays in
+/// L2, with each element still accumulated in globally ascending k
+/// order (KC boundaries only re-park the C row between partial sweeps).
+/// There is deliberately no skip of zero A entries: the packed
+/// microkernel adds every `a·b` term, and bit-equality between the two
+/// paths must hold for inputs containing exact zeros too.
 fn gemm_rows(a: &Mat, b: &Mat, c_band: &mut [f64], row_lo: usize, row_hi: usize) {
     let k = a.cols();
     let n = b.cols();
-    const KB: usize = 256; // k-blocking keeps the B panel in L2
-    for kb in (0..k).step_by(KB) {
-        let kmax = (kb + KB).min(k);
+    let kc_max = gemm_kc();
+    for kb in (0..k).step_by(kc_max) {
+        let kmax = (kb + kc_max).min(k);
         for i in row_lo..row_hi {
             let arow = a.row(i);
             let crow = &mut c_band[(i - row_lo) * n..(i - row_lo + 1) * n];
             for kk in kb..kmax {
                 let aik = arow[kk];
-                if aik == 0.0 {
-                    continue;
-                }
                 let brow = b.row(kk);
                 // innermost: c[i,:] += a[i,k] * b[k,:]  (contiguous, FMA-friendly)
                 for (cj, bj) in crow.iter_mut().zip(brow.iter()) {
@@ -93,23 +164,56 @@ fn gemm_rows(a: &Mat, b: &Mat, c_band: &mut [f64], row_lo: usize, row_hi: usize)
 /// explicitly per panel would cost an extra O(mk) pass and allocation.
 ///
 /// Accumulating like [`gemm_into`]: existing contents of `C` are kept.
-///
-/// ## Determinism
-///
-/// Parallelized over row bands of `C`; every output element's
-/// contraction runs over k in ascending order inside exactly one task,
-/// so band boundaries never reassociate an accumulation — bit-identical
-/// across `RANNTUNE_THREADS` values (same contract as [`gemm_into`];
-/// pinned by `tests/kernel_determinism.rs` through the blocked QR
-/// fingerprints).
+/// Same dispatch (serial cutoff, else packed) and the same determinism
+/// contract — only the A packing differs (panels gather A *columns*,
+/// which are contiguous per packed row because A is row-major k×m).
 pub fn gemm_tn_into(a: &Mat, b: &Mat, c: &mut Mat) {
     let (kk, m) = a.shape();
     let n = b.cols();
     assert_eq!(b.rows(), kk, "gemm_tn shape mismatch {:?}ᵀx{:?}", a.shape(), b.shape());
     assert_eq!(c.shape(), (m, n), "gemm_tn output shape");
+    if m * n * kk < GEMM_SERIAL_CUTOFF {
+        gemm_tn_rows(a, b, c.as_mut_slice(), 0, m);
+        return;
+    }
+    gemm_tn_packed_into(a, b, c);
+}
 
+/// C += Aᵀ · B through the packed kernels unconditionally — the
+/// transpose-free analogue of [`gemm_packed_into`], public for the
+/// conformance battery and benches. See [`gemm_tn_into`] for the
+/// contract.
+pub fn gemm_tn_packed_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    let (kk, m) = a.shape();
+    let n = b.cols();
+    assert_eq!(b.rows(), kk, "gemm_tn shape mismatch {:?}ᵀx{:?}", a.shape(), b.shape());
+    assert_eq!(c.shape(), (m, n), "gemm_tn output shape");
+    if m == 0 || n == 0 || kk == 0 {
+        return;
+    }
+    let nt = super::num_threads().min(m);
+    if nt <= 1 {
+        packed_band(a, b, c.as_mut_slice(), 0, m, kk, pack_a_cols);
+        return;
+    }
+    let rows_per = m.div_ceil(nt).div_ceil(GEMM_MR) * GEMM_MR;
+    super::run_chunks(c.as_mut_slice(), rows_per * n, &|t, band| {
+        let lo = t * rows_per;
+        let hi = lo + band.len() / n;
+        packed_band(a, b, band, lo, hi, kk, pack_a_cols);
+    });
+}
+
+/// C += Aᵀ · B through the pre-packing row-band kernel — the
+/// conformance reference and bench baseline for [`gemm_tn_into`], same
+/// role as [`gemm_into_unblocked`].
+pub fn gemm_tn_into_unblocked(a: &Mat, b: &Mat, c: &mut Mat) {
+    let (kk, m) = a.shape();
+    let n = b.cols();
+    assert_eq!(b.rows(), kk, "gemm_tn shape mismatch {:?}ᵀx{:?}", a.shape(), b.shape());
+    assert_eq!(c.shape(), (m, n), "gemm_tn output shape");
     let nt = super::num_threads().min(m.max(1));
-    if nt <= 1 || m * n * kk < 64 * 64 * 64 {
+    if nt <= 1 || m * n * kk < GEMM_SERIAL_CUTOFF {
         gemm_tn_rows(a, b, c.as_mut_slice(), 0, m);
         return;
     }
@@ -121,20 +225,19 @@ pub fn gemm_tn_into(a: &Mat, b: &Mat, c: &mut Mat) {
     });
 }
 
-/// Compute rows [row_lo, row_hi) of C += Aᵀ·B into the band slice.
+/// Compute rows [row_lo, row_hi) of C += Aᵀ·B into the band slice (the
+/// unpacked reference sweep; see [`gemm_rows`] for the zero-entry and
+/// accumulation-order notes, which apply identically here).
 fn gemm_tn_rows(a: &Mat, b: &Mat, c_band: &mut [f64], row_lo: usize, row_hi: usize) {
     let k = a.rows();
     let n = b.cols();
-    const KB: usize = 256; // k-blocking keeps the B panel in L2
-    for kb in (0..k).step_by(KB) {
-        let kmax = (kb + KB).min(k);
+    let kc_max = gemm_kc();
+    for kb in (0..k).step_by(kc_max) {
+        let kmax = (kb + kc_max).min(k);
         for i in row_lo..row_hi {
             let crow = &mut c_band[(i - row_lo) * n..(i - row_lo + 1) * n];
             for kk in kb..kmax {
                 let aki = a[(kk, i)];
-                if aki == 0.0 {
-                    continue;
-                }
                 let brow = b.row(kk);
                 // innermost: c[i,:] += a[k,i] * b[k,:]  (contiguous, FMA-friendly)
                 for (cj, bj) in crow.iter_mut().zip(brow.iter()) {
@@ -144,6 +247,204 @@ fn gemm_tn_rows(a: &Mat, b: &Mat, c_band: &mut [f64], row_lo: usize, row_hi: usi
         }
     }
 }
+
+// ---- the packed path -------------------------------------------------
+
+/// Packing routine signature: gather the (`ic`, `mc`, `pc`, `kc`) block
+/// of A into column-major MR-panels in `ap` (zero-padded to whole
+/// tiles). One implementation reads A as m×k rows ([`pack_a_rows`]),
+/// the other as k×m columns for the transpose-free path
+/// ([`pack_a_cols`]).
+type PackAFn = fn(&Mat, usize, usize, usize, usize, &mut [f64]);
+
+/// Compute rows [row_lo, row_hi) of C += op(A)·B through the packed
+/// macro/micro kernels. One pool task runs exactly one call, so every
+/// element of the band is accumulated here start to finish: the
+/// jc → pc → ic loop nest keeps the per-element term order globally
+/// k-ascending (pc outer-to-inner over ascending k, and jc/ic only
+/// partition disjoint elements).
+fn packed_band(
+    a: &Mat,
+    b: &Mat,
+    c_band: &mut [f64],
+    row_lo: usize,
+    row_hi: usize,
+    k_dim: usize,
+    pack_a: PackAFn,
+) {
+    let n = b.cols();
+    let kc_max = gemm_kc();
+    with_pack_scratch(GEMM_MC * kc_max, kc_max * GEMM_NC, |ap, bp| {
+        for jc in (0..n).step_by(GEMM_NC) {
+            let nc = GEMM_NC.min(n - jc);
+            for pc in (0..k_dim).step_by(kc_max) {
+                let kc = kc_max.min(k_dim - pc);
+                pack_b(b, pc, kc, jc, nc, bp);
+                for ic in (row_lo..row_hi).step_by(GEMM_MC) {
+                    let mc = GEMM_MC.min(row_hi - ic);
+                    pack_a(a, ic, mc, pc, kc, ap);
+                    let c_blk = &mut c_band[(ic - row_lo) * n + jc..];
+                    macro_kernel(ap, bp, kc, mc, nc, c_blk, n);
+                }
+            }
+        }
+    });
+}
+
+/// Pack rows [ic, ic+mc) × cols [pc, pc+kc) of row-major m×k `a` into
+/// column-major MR-panels: panel `ir` holds `ap[p·MR + i] =
+/// a[ic + ir·MR + i, pc + p]`, with rows past `mc` zero-padded so the
+/// microkernel never branches on k.
+fn pack_a_rows(a: &Mat, ic: usize, mc: usize, pc: usize, kc: usize, ap: &mut [f64]) {
+    let panels = mc.div_ceil(GEMM_MR);
+    for (ir, panel) in ap.chunks_exact_mut(kc * GEMM_MR).take(panels).enumerate() {
+        for i in 0..GEMM_MR {
+            let row = ir * GEMM_MR + i;
+            if row < mc {
+                let arow = &a.row(ic + row)[pc..pc + kc];
+                for (p, &v) in arow.iter().enumerate() {
+                    panel[p * GEMM_MR + i] = v;
+                }
+            } else {
+                for slot in panel[i..].iter_mut().step_by(GEMM_MR) {
+                    *slot = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// Pack columns [ic, ic+mc) × rows [pc, pc+kc) of row-major k×m `a`
+/// (i.e. rows of Aᵀ) into column-major MR-panels. Because `a` is
+/// row-major, each packed k-slice is a contiguous read of `a.row(pc+p)`
+/// — the transpose falls out of the packing for free.
+fn pack_a_cols(a: &Mat, ic: usize, mc: usize, pc: usize, kc: usize, ap: &mut [f64]) {
+    let panels = mc.div_ceil(GEMM_MR);
+    for (ir, panel) in ap.chunks_exact_mut(kc * GEMM_MR).take(panels).enumerate() {
+        let i0 = ic + ir * GEMM_MR;
+        let width = GEMM_MR.min(ic + mc - i0);
+        for p in 0..kc {
+            let arow = &a.row(pc + p)[i0..i0 + width];
+            let out = &mut panel[p * GEMM_MR..(p + 1) * GEMM_MR];
+            out[..width].copy_from_slice(arow);
+            out[width..].fill(0.0);
+        }
+    }
+}
+
+/// Pack rows [pc, pc+kc) × cols [jc, jc+nc) of row-major k×n `b` into
+/// row-major NR-panels: panel `jr` holds `bp[p·NR + j] =
+/// b[pc + p, jc + jr·NR + j]`, columns past `nc` zero-padded.
+fn pack_b(b: &Mat, pc: usize, kc: usize, jc: usize, nc: usize, bp: &mut [f64]) {
+    let panels = nc.div_ceil(GEMM_NR);
+    for (jr, panel) in bp.chunks_exact_mut(kc * GEMM_NR).take(panels).enumerate() {
+        let j0 = jc + jr * GEMM_NR;
+        let width = GEMM_NR.min(jc + nc - j0);
+        for p in 0..kc {
+            let brow = &b.row(pc + p)[j0..j0 + width];
+            let out = &mut panel[p * GEMM_NR..(p + 1) * GEMM_NR];
+            out[..width].copy_from_slice(brow);
+            out[width..].fill(0.0);
+        }
+    }
+}
+
+/// Sweep every MR×NR register tile of one packed (`mc` × `nc`) block:
+/// full interior tiles take the unconditional microkernel, remainder
+/// rows/columns take the masked edge kernel. `c` starts at the block's
+/// top-left element and is indexed with the full row stride `ldc`.
+#[allow(clippy::too_many_arguments)]
+fn macro_kernel(
+    ap: &[f64],
+    bp: &[f64],
+    kc: usize,
+    mc: usize,
+    nc: usize,
+    c: &mut [f64],
+    ldc: usize,
+) {
+    let jr_panels = nc.div_ceil(GEMM_NR);
+    let ir_panels = mc.div_ceil(GEMM_MR);
+    for (jr, bpanel) in bp.chunks_exact(kc * GEMM_NR).take(jr_panels).enumerate() {
+        let j0 = jr * GEMM_NR;
+        let nr = GEMM_NR.min(nc - j0);
+        for (ir, apanel) in ap.chunks_exact(kc * GEMM_MR).take(ir_panels).enumerate() {
+            let i0 = ir * GEMM_MR;
+            let mr = GEMM_MR.min(mc - i0);
+            let ct = &mut c[i0 * ldc + j0..];
+            if mr == GEMM_MR && nr == GEMM_NR {
+                kernel_full(kc, apanel, bpanel, ct, ldc);
+            } else {
+                kernel_edge(kc, apanel, bpanel, ct, ldc, mr, nr);
+            }
+        }
+    }
+}
+
+/// The MR×NR microkernel: load the C tile into the unrolled accumulator
+/// array, stream the two packed panels adding `a·b` terms for k
+/// ascending, store the tile back. Loading C *first* (rather than
+/// summing into fresh accumulators and adding at the end) is what keeps
+/// the per-element operation sequence identical to the unpacked sweep —
+/// `((c + p₀) + p₁) + …` — and therefore bit-exact against it.
+#[inline(always)]
+fn kernel_full(kc: usize, apanel: &[f64], bpanel: &[f64], c: &mut [f64], ldc: usize) {
+    let mut acc = [[0.0f64; GEMM_NR]; GEMM_MR];
+    for (i, row) in acc.iter_mut().enumerate() {
+        row.copy_from_slice(&c[i * ldc..i * ldc + GEMM_NR]);
+    }
+    for (av, bv) in apanel.chunks_exact(GEMM_MR).zip(bpanel.chunks_exact(GEMM_NR)).take(kc) {
+        let av: &[f64; GEMM_MR] = av.try_into().expect("MR panel chunk");
+        let bv: &[f64; GEMM_NR] = bv.try_into().expect("NR panel chunk");
+        for (row, &ai) in acc.iter_mut().zip(av.iter()) {
+            for (cj, &bj) in row.iter_mut().zip(bv.iter()) {
+                *cj += ai * bj;
+            }
+        }
+    }
+    for (i, row) in acc.iter().enumerate() {
+        c[i * ldc..i * ldc + GEMM_NR].copy_from_slice(row);
+    }
+}
+
+/// Masked microkernel for remainder tiles: only the `mr`×`nr` valid
+/// region of C is loaded and stored; the accumulate sweep still runs
+/// the full padded MR×NR shape (padding lanes multiply packed zeros and
+/// are discarded), so valid elements see exactly the same k-ascending
+/// operation sequence as [`kernel_full`].
+#[allow(clippy::too_many_arguments)]
+fn kernel_edge(
+    kc: usize,
+    apanel: &[f64],
+    bpanel: &[f64],
+    c: &mut [f64],
+    ldc: usize,
+    mr: usize,
+    nr: usize,
+) {
+    let mut acc = [[0.0f64; GEMM_NR]; GEMM_MR];
+    for (i, row) in acc.iter_mut().enumerate().take(mr) {
+        for (j, cj) in row.iter_mut().enumerate().take(nr) {
+            *cj = c[i * ldc + j];
+        }
+    }
+    for (av, bv) in apanel.chunks_exact(GEMM_MR).zip(bpanel.chunks_exact(GEMM_NR)).take(kc) {
+        let av: &[f64; GEMM_MR] = av.try_into().expect("MR panel chunk");
+        let bv: &[f64; GEMM_NR] = bv.try_into().expect("NR panel chunk");
+        for (row, &ai) in acc.iter_mut().zip(av.iter()) {
+            for (cj, &bj) in row.iter_mut().zip(bv.iter()) {
+                *cj += ai * bj;
+            }
+        }
+    }
+    for (i, row) in acc.iter().enumerate().take(mr) {
+        for (j, &cj) in row.iter().enumerate().take(nr) {
+            c[i * ldc + j] = cj;
+        }
+    }
+}
+
+// ---- GEMV ------------------------------------------------------------
 
 /// y = A · x (threaded over row bands for tall A).
 pub fn gemv(a: &Mat, x: &[f64]) -> Vec<f64> {
@@ -177,16 +478,12 @@ pub fn gemv_into(a: &Mat, x: &[f64], y: &mut [f64]) {
     });
 }
 
-/// Fixed row-chunk length of the [`gemv_t`] reduction tree. The
-/// partial-sum structure must not depend on the worker count, or
-/// different `RANNTUNE_THREADS` values would reassociate the final
-/// reduction and change low-order bits; chunking by a constant keeps
-/// y = Σ_chunks (Σ_rows-in-chunk xᵢ·A[i,:]) bit-identical from 1 thread
-/// to N.
-const GEMV_T_CHUNK: usize = 512;
-
 /// y = Aᵀ · x without materializing Aᵀ (row-major A streamed once,
 /// threaded over fixed-size row chunks with per-chunk accumulators).
+/// The chunk length is the blocking-policy constant [`GEMV_T_CHUNK`]:
+/// the partial-sum tree must not depend on the worker count, or
+/// different `RANNTUNE_THREADS` values would reassociate the final
+/// reduction and change low-order bits.
 pub fn gemv_t(a: &Mat, x: &[f64]) -> Vec<f64> {
     let mut y = vec![0.0; a.cols()];
     gemv_t_into(a, x, &mut y);
@@ -260,6 +557,24 @@ mod tests {
         let mut diff = c.clone();
         diff.axpy(-1.0, &c0);
         assert!(diff.max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn packed_path_matches_naive_at_blocking_boundaries() {
+        // Straddles MR/NR edge tiles and an MC-crossing row extent; the
+        // direct packed entry skips the serial-cutoff dispatch so the
+        // microkernel runs even at these modest sizes.
+        let mut r = Rng::new(9);
+        for &(m, k, n) in &[(GEMM_MC + 3, 40, GEMM_NR + 1), (GEMM_MR + 1, 300, 64), (9, 17, 5)] {
+            let a = Mat::from_fn(m, k, |_, _| r.normal());
+            let b = Mat::from_fn(k, n, |_, _| r.normal());
+            let mut c = Mat::zeros(m, n);
+            gemm_packed_into(&a, &b, &mut c);
+            let c0 = naive_gemm(&a, &b);
+            let mut diff = c.clone();
+            diff.axpy(-1.0, &c0);
+            assert!(diff.max_abs() < 1e-10, "m={m} k={k} n={n}: {}", diff.max_abs());
+        }
     }
 
     #[test]

@@ -8,10 +8,13 @@
 //!   kernel (sized by `RANNTUNE_THREADS` via [`num_threads()`]; workers
 //!   park between calls instead of being respawned), plus the per-thread
 //!   [`with_scratch`] buffer.
-//! * [`gemm()`] — blocked, multi-threaded matrix multiply (plus
-//!   [`gemv`], [`gemv_t`], and the transpose-free [`gemm_tn_into`]),
-//!   the workhorse behind sketching, preconditioning, and GP fits.
-//!   Bit-deterministic across thread counts.
+//! * [`gemm()`] — packed BLIS-style blocked matrix multiply (plus
+//!   [`gemv`], [`gemv_t`], and the transpose-free [`gemm_tn_into`]):
+//!   MR×NR register tiles over KC/MC/NC cache blocks from the size-only
+//!   blocking policy in `block` ([`gemm_kc`] and friends), the
+//!   workhorse behind sketching, preconditioning, and GP fits.
+//!   Bit-deterministic across thread counts *and* across the packed vs
+//!   [`gemm_into_unblocked`] reference paths.
 //! * [`qr_thin`] — blocked compact-WY Householder QR (thin) with
 //!   implicit Q ([`QrFactors`]): the trailing update runs as
 //!   pool-parallel GEMMs and consumers apply Qᵀ/Q through the packed
@@ -33,6 +36,7 @@
 //! * [`solve_upper`]/[`solve_lower`] — triangular solves (vector and
 //!   multiple-RHS variants).
 
+mod block;
 mod chol;
 mod gemm;
 mod mat;
@@ -41,6 +45,7 @@ mod qr;
 mod solve;
 mod svd;
 
+pub use block::*;
 pub use chol::*;
 pub use gemm::*;
 pub use mat::*;

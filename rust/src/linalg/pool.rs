@@ -18,6 +18,10 @@
 //!   task a disjoint `&mut` chunk of an output slice.
 //! * [`with_scratch`] — reusable per-thread scratch buffer for kernels
 //!   that need a temporary per task (e.g. the SRHT's FWHT column buffer).
+//! * [`with_pack_scratch`] — the packed GEMM's pair of reusable,
+//!   cache-line-aligned per-thread pack buffers (A MR-panels /
+//!   B NR-panels), latched at the blocking high-water size so packing
+//!   allocates nothing per call.
 //!
 //! ## Nesting and contention
 //!
@@ -297,6 +301,8 @@ pub fn run_chunks(data: &mut [f64], chunk_len: usize, f: &(dyn Fn(usize, &mut [f
 
 thread_local! {
     static SCRATCH: std::cell::RefCell<Vec<f64>> = const { std::cell::RefCell::new(Vec::new()) };
+    static PACK: std::cell::RefCell<(Vec<f64>, Vec<f64>)> =
+        const { std::cell::RefCell::new((Vec::new(), Vec::new())) };
 }
 
 /// Run `f` on a zeroed per-thread scratch buffer of length `len`.
@@ -316,6 +322,54 @@ pub fn with_scratch<R>(len: usize, f: impl FnOnce(&mut [f64]) -> R) -> R {
             f(slice)
         }
         Err(_) => f(&mut vec![0.0; len]),
+    })
+}
+
+/// Number of f64 elements in one cache line — the alignment unit of the
+/// pack-buffer scratch handed out by [`with_pack_scratch`].
+const PACK_ALIGN_ELEMS: usize = 8;
+
+/// Return a 64-byte (cache-line) aligned `len`-element view of `buf`,
+/// growing it once to `len + 7` elements so an aligned start always
+/// fits. Growth latches: after the first call at a kernel's high-water
+/// size the buffer is only ever re-sliced, never reallocated.
+fn aligned_slice(buf: &mut Vec<f64>, len: usize) -> &mut [f64] {
+    if buf.len() < len + PACK_ALIGN_ELEMS {
+        buf.resize(len + PACK_ALIGN_ELEMS, 0.0);
+    }
+    // align_offset counts in elements for a *const f64; an 8-byte-aligned
+    // allocation always reaches a 64-byte boundary within 8 elements (the
+    // `min` is a belt-and-braces clamp for the documented MAX case).
+    let off = buf.as_ptr().align_offset(64).min(PACK_ALIGN_ELEMS);
+    &mut buf[off..off + len]
+}
+
+/// Run `f` on the calling thread's two reusable, 64-byte-aligned GEMM
+/// pack buffers (`a_len` elements for the packed-A MR-panels, `b_len`
+/// for the packed-B NR-panels).
+///
+/// Unlike [`with_scratch`] the contents are **not** zeroed — the packing
+/// routines overwrite every element of the region they use (including
+/// edge-tile zero padding), so re-clearing `KC·MC + KC·NC` doubles per
+/// macro-block would be pure waste. The buffers are owned by the thread
+/// and sized once at the kernel's blocking high-water mark (latched), so
+/// steady-state packing allocates nothing per call. Reentrant use (the
+/// closure itself calling [`with_pack_scratch`]) falls back to fresh
+/// allocations rather than aliasing the buffers; the separate
+/// [`with_scratch`] buffer is untouched, so pack-buffer users can nest
+/// freely inside `with_scratch` callers (e.g. GEMM inside the QR
+/// applies) without forcing either onto the fallback path.
+pub fn with_pack_scratch<R>(
+    a_len: usize,
+    b_len: usize,
+    f: impl FnOnce(&mut [f64], &mut [f64]) -> R,
+) -> R {
+    PACK.with(|cell| match cell.try_borrow_mut() {
+        Ok(mut bufs) => {
+            let (a_buf, b_buf) = &mut *bufs;
+            f(aligned_slice(a_buf, a_len), aligned_slice(b_buf, b_len))
+        }
+        Err(_) => f(&mut vec![0.0; a_len], &mut vec![0.0; b_len]),
     })
 }
 
@@ -386,6 +440,33 @@ mod tests {
         for (i, x) in data.iter().enumerate() {
             assert_eq!(*x, i as f64, "element {i}");
         }
+    }
+
+    #[test]
+    fn pack_scratch_is_aligned_reused_and_reentrant_safe() {
+        let (p1, q1) = with_pack_scratch(96, 64, |a, b| {
+            a[0] = 1.0;
+            b[0] = 2.0;
+            assert_eq!(a.as_ptr() as usize % 64, 0, "A pack buffer not 64B-aligned");
+            assert_eq!(b.as_ptr() as usize % 64, 0, "B pack buffer not 64B-aligned");
+            (a.as_ptr() as usize, b.as_ptr() as usize)
+        });
+        // Smaller request reuses the same latched allocations (contents
+        // deliberately NOT re-zeroed — packing overwrites its region).
+        let (p2, q2) = with_pack_scratch(32, 16, |a, b| {
+            assert_eq!(a[0], 1.0, "pack scratch must not be cleared between calls");
+            assert_eq!(b[0], 2.0);
+            (a.as_ptr() as usize, b.as_ptr() as usize)
+        });
+        assert_eq!((p1, q1), (p2, q2), "pack buffers not reused on the same thread");
+        // Reentrant use falls back to fresh buffers instead of aliasing.
+        with_pack_scratch(8, 8, |a, _| {
+            a[0] = 7.0;
+            with_pack_scratch(8, 8, |inner, _| {
+                inner[0] = 9.0;
+            });
+            assert_eq!(a[0], 7.0, "reentrant call aliased the pack buffer");
+        });
     }
 
     #[test]

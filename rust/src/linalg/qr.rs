@@ -37,7 +37,8 @@ use crate::data::MatSource;
 /// Fixed panel width of the blocked factorization. A constant (never a
 /// function of the worker count) so the reflector set, the T factors,
 /// and every accumulation order depend on the problem shape alone —
-/// the same determinism contract as `GEMV_T_CHUNK` in the GEMM module.
+/// the same bit-contract rule as [`super::GEMV_T_CHUNK`] in the
+/// `linalg::block` blocking-policy module.
 pub const QR_PANEL: usize = 32;
 
 /// Thin QR of an m×n matrix with m ≥ n, held in implicit compact-WY

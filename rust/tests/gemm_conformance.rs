@@ -1,0 +1,193 @@
+//! Packed-GEMM conformance battery: the packed BLIS-style kernels must
+//! reproduce the unblocked row-band reference **bit for bit** at every
+//! blocking boundary.
+//!
+//! This is the enforcement arm of the crate's strongest kernel claim:
+//! packed vs unblocked is not "numerically close", it is the *same*
+//! floating-point program (each output element accumulated over k in
+//! ascending order, one mul-add at a time) executed under a different
+//! loop tiling. The sweep straddles every boundary the tiling
+//! introduces — register tiles (MR, NR), cache blocks (KC, MC), the
+//! serial-dispatch cutoff, zero-extent degenerate shapes — and checks
+//! plain gemm, the transpose-free gemm_tn, and the accumulate-into-
+//! nonzero-C contract at each shape. It also locks the one
+//! bit-contract blocking size ([`GEMV_T_CHUNK`]) to its historical
+//! value and tree shape.
+
+use ranntune::linalg::{
+    axpy, gemm_into, gemm_into_unblocked, gemm_packed_into, gemm_tn_into_unblocked,
+    gemm_tn_packed_into, gemv_t, Mat, GEMM_KC_DEFAULT, GEMM_MC, GEMM_MR, GEMM_NR, GEMV_T_CHUNK,
+};
+use ranntune::rng::Rng;
+
+/// Exact bit equality (f64 `==` would conflate -0.0 with +0.0 and is
+/// exactly the kind of discrepancy the zero-handling rules must not
+/// introduce).
+fn assert_bits_eq(got: &Mat, want: &Mat, what: &str, m: usize, k: usize, n: usize) {
+    assert_eq!(got.shape(), want.shape());
+    for (idx, (g, w)) in got.as_slice().iter().zip(want.as_slice().iter()).enumerate() {
+        assert!(
+            g.to_bits() == w.to_bits(),
+            "{what} m={m} k={k} n={n}: bit mismatch at flat index {idx}: {g:e} vs {w:e}"
+        );
+    }
+}
+
+/// Run the full packed-vs-unblocked comparison set at one (m, k, n):
+/// gemm and gemm_tn, each from a zero C and accumulating into a random
+/// non-zero C.
+fn check_shape(m: usize, k: usize, n: usize, r: &mut Rng) {
+    let a = Mat::from_fn(m, k, |_, _| r.normal());
+    let b = Mat::from_fn(k, n, |_, _| r.normal());
+    let seed = Mat::from_fn(m, n, |_, _| r.normal());
+
+    let mut c_p = Mat::zeros(m, n);
+    gemm_packed_into(&a, &b, &mut c_p);
+    let mut c_u = Mat::zeros(m, n);
+    gemm_into_unblocked(&a, &b, &mut c_u);
+    assert_bits_eq(&c_p, &c_u, "gemm (zero C)", m, k, n);
+
+    let mut c_p = seed.clone();
+    gemm_packed_into(&a, &b, &mut c_p);
+    let mut c_u = seed.clone();
+    gemm_into_unblocked(&a, &b, &mut c_u);
+    assert_bits_eq(&c_p, &c_u, "gemm (accumulate)", m, k, n);
+
+    let at = Mat::from_fn(k, m, |i, j| a[(j, i)]);
+
+    let mut c_p = Mat::zeros(m, n);
+    gemm_tn_packed_into(&at, &b, &mut c_p);
+    let mut c_u = Mat::zeros(m, n);
+    gemm_tn_into_unblocked(&at, &b, &mut c_u);
+    assert_bits_eq(&c_p, &c_u, "gemm_tn (zero C)", m, k, n);
+
+    let mut c_p = seed.clone();
+    gemm_tn_packed_into(&at, &b, &mut c_p);
+    let mut c_u = seed;
+    gemm_tn_into_unblocked(&at, &b, &mut c_u);
+    assert_bits_eq(&c_p, &c_u, "gemm_tn (accumulate)", m, k, n);
+}
+
+#[test]
+fn register_tile_boundary_sweep() {
+    // Full cross product of the small boundary dims: every combination
+    // of interior/edge MR and NR tiles, single rows/columns, and the
+    // widths right at the tile edges.
+    let small = [1, GEMM_NR - 1, GEMM_NR + 1, GEMM_MR - 1, GEMM_MR, GEMM_MR + 1];
+    let mut r = Rng::new(0x5eed);
+    for &m in &small {
+        for &k in &small {
+            for &n in &small {
+                check_shape(m, k, n, &mut r);
+            }
+        }
+    }
+}
+
+#[test]
+fn cache_block_boundary_sweep() {
+    // One dim at a time takes each cache-blocking boundary value while
+    // the others sit on register-tile edges, so a KC or MC off-by-one
+    // cannot hide behind a matching bug in another dimension.
+    let big = [
+        GEMM_KC_DEFAULT - 1,
+        GEMM_KC_DEFAULT,
+        GEMM_KC_DEFAULT + 1,
+        GEMM_MC,
+        GEMM_MC + 3,
+    ];
+    let mut r = Rng::new(0xb10c);
+    for &v in &big {
+        check_shape(v, 17, GEMM_NR + 1, &mut r);
+        check_shape(GEMM_MR + 1, v, 9, &mut r);
+        check_shape(9, 17, v, &mut r);
+    }
+    // Multiple boundaries crossed at once (also crosses the serial
+    // cutoff, so the threaded band split of both paths is in play).
+    check_shape(GEMM_MC + 3, GEMM_KC_DEFAULT + 1, GEMM_NR + 1, &mut r);
+    check_shape(GEMM_MR + 1, GEMM_KC_DEFAULT - 1, GEMM_MC + 3, &mut r);
+    check_shape(GEMM_KC_DEFAULT + 1, GEMM_MC + 3, GEMM_MR + 1, &mut r);
+}
+
+#[test]
+fn degenerate_shapes() {
+    let mut r = Rng::new(0xdead);
+    // Zero-extent in each position: both paths must be exact no-ops on C.
+    check_shape(0, 5, 4, &mut r);
+    check_shape(5, 0, 4, &mut r);
+    check_shape(5, 4, 0, &mut r);
+    // 1×1 output with a long k reduction: the whole product is one
+    // accumulation chain, maximally sensitive to any reassociation.
+    check_shape(1, 2 * GEMM_KC_DEFAULT + 3, 1, &mut r);
+}
+
+#[test]
+fn exact_zero_entries_do_not_split_the_paths() {
+    // Inputs dense in exact ±0.0: a kernel that skips zero A entries
+    // (as an "optimization") would diverge from the packed path on
+    // signed-zero outputs, since -0.0 + 0.0 = +0.0 changes bits. Both
+    // kernels must add every term unconditionally.
+    let mut r = Rng::new(0x0f);
+    for &(m, k, n) in &[(GEMM_MR + 1, 33, GEMM_NR + 1), (40, GEMM_KC_DEFAULT + 1, 13)] {
+        let a = Mat::from_fn(m, k, |i, j| match (i + j) % 3 {
+            0 => 0.0,
+            1 => -0.0,
+            _ => r.normal(),
+        });
+        let b = Mat::from_fn(k, n, |i, j| if (i + j) % 2 == 0 { -0.0 } else { r.normal() });
+        let mut c_p = Mat::zeros(m, n);
+        gemm_packed_into(&a, &b, &mut c_p);
+        let mut c_u = Mat::zeros(m, n);
+        gemm_into_unblocked(&a, &b, &mut c_u);
+        assert_bits_eq(&c_p, &c_u, "gemm (signed zeros)", m, k, n);
+    }
+}
+
+#[test]
+fn public_entry_dispatch_is_bit_consistent() {
+    // gemm_into routes small products to a serial sweep and large ones
+    // to the packed path; whichever side of the cutoff a shape lands
+    // on, the public entry must agree bitwise with both named paths.
+    let mut r = Rng::new(0xd15);
+    for &(m, k, n) in &[(20, 15, 9), (GEMM_MC + 3, GEMM_KC_DEFAULT + 1, 65)] {
+        let a = Mat::from_fn(m, k, |_, _| r.normal());
+        let b = Mat::from_fn(k, n, |_, _| r.normal());
+        let mut c = Mat::zeros(m, n);
+        gemm_into(&a, &b, &mut c);
+        let mut c_p = Mat::zeros(m, n);
+        gemm_packed_into(&a, &b, &mut c_p);
+        let mut c_u = Mat::zeros(m, n);
+        gemm_into_unblocked(&a, &b, &mut c_u);
+        assert_bits_eq(&c, &c_p, "gemm_into vs packed", m, k, n);
+        assert_bits_eq(&c, &c_u, "gemm_into vs unblocked", m, k, n);
+    }
+}
+
+#[test]
+fn gemv_t_chunk_tree_is_locked_at_512() {
+    // GEMV_T_CHUNK shapes a genuine reassociation (the partial-sum
+    // tree), so it is part of the fingerprint contract: pin the value
+    // and the exact tree at the first boundary (m = 513 ⇒ two chunks
+    // of 512 + 1 rows, reduced in chunk order).
+    assert_eq!(GEMV_T_CHUNK, 512);
+    let (m, n) = (513, 2048); // m·n ≥ 2^20 forces the chunked path
+    let mut r = Rng::new(0x513);
+    let a = Mat::from_fn(m, n, |_, _| r.normal());
+    let x: Vec<f64> = (0..m).map(|_| r.normal()).collect();
+    let y = gemv_t(&a, &x);
+    let mut p0 = vec![0.0; n];
+    for (i, &xi) in x.iter().enumerate().take(512) {
+        axpy(xi, a.row(i), &mut p0);
+    }
+    let mut p1 = vec![0.0; n];
+    axpy(x[512], a.row(512), &mut p1);
+    let mut want = vec![0.0; n];
+    axpy(1.0, &p0, &mut want);
+    axpy(1.0, &p1, &mut want);
+    for (j, (g, w)) in y.iter().zip(want.iter()).enumerate() {
+        assert!(
+            g.to_bits() == w.to_bits(),
+            "gemv_t m=513 tree changed shape at col {j}: {g:e} vs {w:e}"
+        );
+    }
+}

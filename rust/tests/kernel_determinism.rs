@@ -3,9 +3,10 @@
 //!
 //! The campaign layer promises byte-identical kill/resume results, so the
 //! threading runtime must guarantee determinism at the kernel level, not
-//! just the evaluator level: band splits must never change an output
-//! element's accumulation order, and cross-band reductions (`gemv_t`)
-//! must use a tree shape fixed by the problem size alone.
+//! just the evaluator level: band splits (including the packed GEMM's
+//! MR-rounded bands and its KC/MC/NC cache blocking) must never change
+//! an output element's accumulation order, and cross-band reductions
+//! (`gemv_t`) must use a tree shape fixed by the problem size alone.
 //!
 //! The pool width is latched once per process (`RANNTUNE_THREADS` is read
 //! by a `OnceLock`), so cross-thread-count comparison is necessarily
@@ -17,7 +18,10 @@
 use std::collections::BTreeMap;
 use std::process::Command;
 
-use ranntune::linalg::{gemm, gemv, gemv_t, qr_thin, Mat, QR_PANEL};
+use ranntune::linalg::{
+    gemm, gemm_packed_into, gemm_tn_packed_into, gemv, gemv_t, qr_thin, Mat, GEMM_KC_DEFAULT,
+    GEMM_MC, GEMM_MR, GEMM_NR, QR_PANEL,
+};
 use ranntune::rng::Rng;
 use ranntune::sap::{solve_sap, SapAlgorithm, SapConfig};
 use ranntune::sketch::{LessUniform, SketchKind, SketchOp, Sjlt, Srht};
@@ -80,6 +84,29 @@ fn child_suite() {
     let a_bulk = Mat::from_fn(300, 80, |_, _| rng.normal());
     let b_bulk = Mat::from_fn(80, 64, |_, _| rng.normal());
     emit_mat("gemm_bulk", &gemm(&a_bulk, &b_bulk));
+
+    // --- packed GEMM driven directly (no serial-cutoff dispatch): edge
+    // register tiles and an MC/KC-crossing shape, for both gemm and the
+    // transpose-free gemm_tn, each accumulating into a non-zero C. The
+    // packed band split rounds to whole MR tiles and follows the worker
+    // count, so these fingerprints pin the claim that the microkernel
+    // path's split is bits-free too.
+    let mut rng = Rng::new(7);
+    for (m, k, n) in [
+        (GEMM_MR + 1, 100, GEMM_NR + 1),
+        (GEMM_MR - 1, 64, GEMM_NR - 1),
+        (GEMM_MC + 3, GEMM_KC_DEFAULT + 1, 65),
+    ] {
+        let a = Mat::from_fn(m, k, |_, _| rng.normal());
+        let b = Mat::from_fn(k, n, |_, _| rng.normal());
+        let mut c = Mat::from_fn(m, n, |_, _| rng.normal());
+        gemm_packed_into(&a, &b, &mut c);
+        emit_mat(&format!("gemm_packed_{m}x{k}x{n}"), &c);
+        let at = Mat::from_fn(k, m, |_, _| rng.normal());
+        let mut ct = Mat::from_fn(m, n, |_, _| rng.normal());
+        gemm_tn_packed_into(&at, &b, &mut ct);
+        emit_mat(&format!("gemm_tn_packed_{m}x{k}x{n}"), &ct);
+    }
 
     // --- gemv / gemv_t at threaded scale (m·n = 2^20 crosses the cutoff).
     let mut rng = Rng::new(2);
@@ -187,6 +214,40 @@ fn child_suite() {
         h.push(sol.stats.iterations as u64);
         h.push_f64s(&sol.x);
         println!("{PREFIX} solve_sap_{label} {:016x}", h.0);
+    }
+
+    // --- packed-engaging end-to-end shapes: a multi-leaf TSQR whose
+    // leaf QRs (n = 64 > QR_PANEL) push trailing-update GEMMs over the
+    // serial cutoff, and a solve_sap big enough (d = 384, n = 96) that
+    // the preconditioner QR and sketch products run the packed kernels
+    // — pinning the downstream contract on top of the microkernel path.
+    {
+        use ranntune::data::DenseSource;
+        use ranntune::linalg::tsqr;
+        let mut rng = Rng::new(8);
+        let (m, n) = (2600, 64);
+        let a = Mat::from_fn(m, n, |_, _| rng.normal());
+        let b: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let src = DenseSource::with_block_rows(a, 640);
+        let res = tsqr(&src, &b);
+        emit_mat("tsqr_r_2600x64_bs640", &res.r);
+        emit_slice("tsqr_qtb_2600x64_bs640", &res.qtb);
+
+        let mut rng_sap = Rng::new(9);
+        let a2 = Mat::from_fn(2000, 96, |_, _| rng_sap.normal());
+        let b2: Vec<f64> = (0..2000).map(|_| rng_sap.normal()).collect();
+        let cfg = SapConfig {
+            algorithm: SapAlgorithm::QrLsqr,
+            sketch: SketchKind::Sjlt,
+            sampling_factor: 4.0,
+            vec_nnz: 8,
+            safety_factor: 1,
+        };
+        let sol = solve_sap(&a2, &b2, &cfg, &mut Rng::new(12));
+        let mut h = Fnv::new();
+        h.push(sol.stats.iterations as u64);
+        h.push_f64s(&sol.x);
+        println!("{PREFIX} solve_sap_packed_2000x96 {:016x}", h.0);
     }
 }
 
