@@ -73,15 +73,12 @@ impl Checkpoint {
         Ok(Checkpoint { fingerprint, completed })
     }
 
-    /// Atomically persist: write `<path>.tmp`, then rename over `path`.
-    /// A kill between the two leaves the previous checkpoint intact.
+    /// Durably and atomically persist via [`crate::fsio::write_atomic`]:
+    /// writer-unique temp file, fsync, rename, fsync the directory. A
+    /// kill at any instant leaves either the previous or the next
+    /// consistent checkpoint on stable storage, never a torn file.
     pub fn save(&self, path: &Path) -> std::io::Result<()> {
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
-        }
-        let tmp = path.with_extension("json.tmp");
-        std::fs::write(&tmp, self.to_json().to_string_pretty())?;
-        std::fs::rename(&tmp, path)
+        crate::fsio::write_atomic(path, &self.to_json().to_string_pretty())
     }
 
     /// Load a checkpoint file.
@@ -124,6 +121,27 @@ mod tests {
         // Overwrite keeps it loadable.
         c.mark("cell-2");
         c.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap().completed.len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_tmp_leftover_does_not_break_resume() {
+        // A writer killed between temp-write and rename leaves a
+        // truncated `.tmp` behind. Loading must ignore it, and the next
+        // save must sweep it and land cleanly.
+        let dir = std::env::temp_dir().join(format!("ranntune_torn_{}", std::process::id()));
+        let path = dir.join("checkpoint.json");
+        let mut c = Checkpoint::new("fp-torn".into());
+        c.mark("cell-1");
+        c.save(&path).unwrap();
+        let torn = dir.join("checkpoint.json.12345.7.tmp");
+        std::fs::write(&torn, "{\"format\":\"ranntune-campaign-ck").unwrap();
+        // Resume reads only the final name — the torn temp is invisible.
+        assert_eq!(Checkpoint::load(&path).unwrap(), c);
+        c.mark("cell-2");
+        c.save(&path).unwrap();
+        assert!(!torn.exists(), "stale temp file not swept on save");
         assert_eq!(Checkpoint::load(&path).unwrap().completed.len(), 2);
         std::fs::remove_dir_all(&dir).ok();
     }

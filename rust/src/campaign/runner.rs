@@ -33,13 +33,9 @@
 //! modeled timing — pinned by `tests/campaign_resume.rs`.
 
 use super::{CampaignSpec, Cell, Checkpoint};
-use crate::data::ProblemSpec;
 use crate::db::HistoryDb;
-use crate::objective::{
-    Constants, History, Objective, ParallelEvaluator, ParamSpace, SessionOutcome,
-    TuningSession, TuningTask,
-};
-use crate::tuners::SourceSample;
+use crate::objective::{Constants, History, SessionOutcome};
+use crate::serve::scheduler::{drive_session, SessionSpec, SliceLimits};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -76,12 +72,6 @@ pub struct Campaign {
     pub spec: CampaignSpec,
     out_dir: PathBuf,
 }
-
-/// Salt separating the tuner's proposal RNG from the objective's solver
-/// streams within a cell.
-const TUNER_SEED_SALT: u64 = 0x7454_4e52_u64;
-/// Salt separating TLA source collection from everything else.
-const SOURCE_SEED_SALT: u64 = 0x5059_4c0a_u64;
 
 impl Campaign {
     /// Bind a spec to an output directory (created on [`Campaign::run`]).
@@ -318,64 +308,34 @@ impl Campaign {
     }
 }
 
-/// Execute one cell: build the problem, assemble the objective (with the
-/// spec's evaluator and timing mode), collect TLA source data if needed,
-/// and drive a [`TuningSession`] for the budget — checkpointing to
-/// `session_path` after every trial batch, resuming from it if it exists,
-/// and pausing once `quota` new trials have run (when set).
+/// Execute one cell by handing the shared session driver
+/// ([`crate::serve::scheduler::drive_session`]) the cell's spec —
+/// checkpointing to `session_path` after every trial batch, resuming
+/// from it if it exists, and pausing once `quota` new trials have run
+/// (when set). Seed derivation, TLA source collection, and evaluator
+/// assembly all live in the driver now; this wrapper only translates
+/// campaign vocabulary into a [`SessionSpec`].
 fn run_cell(
     spec: &CampaignSpec,
     cell: &Cell,
     session_path: &Path,
     quota: Option<usize>,
 ) -> Result<SessionOutcome, String> {
-    let problem = cell.problem.build()?;
-    let constants = Constants {
-        num_repeats: spec.num_repeats,
-        timing: spec.timing,
-        ..Constants::default()
+    let session = SessionSpec {
+        problem: cell.problem.clone(),
+        tuner: cell.tuner,
+        budget: spec.budget,
+        session_seed: cell.seed(spec.seed),
+        constants: Constants {
+            num_repeats: spec.num_repeats,
+            timing: spec.timing,
+            ..Constants::default()
+        },
+        eval_threads: spec.eval_threads,
+        source_samples: spec.source_samples,
     };
-    let cell_seed = cell.seed(spec.seed);
-
-    let source = if cell.tuner.needs_source() {
-        collect_cell_source(spec, &cell.problem, &constants, cell_seed)?
-    } else {
-        Vec::new()
-    };
-
-    let task = TuningTask { problem, space: ParamSpace::paper(), constants: constants.clone() };
-    let mut obj = Objective::new(task, cell_seed);
-    if spec.eval_threads > 1 {
-        obj.set_evaluator(Box::new(ParallelEvaluator::new(spec.eval_threads)));
-    }
-    let mut tuner = cell.tuner.make(constants.num_pilots, source);
-    let mut session =
-        TuningSession::new(&mut obj, tuner.as_mut(), spec.budget, cell_seed ^ TUNER_SEED_SALT)
-            .checkpoint_to(session_path);
-    if let Some(q) = quota {
-        session = session.pause_after(q);
-    }
-    session.run()
-}
-
-/// Pre-collect TLA source samples on a down-scaled sibling of the
-/// problem: same generator family, m/4 rows (floored at n + 50), shifted
-/// data seed — the paper's §5.3.1 source protocol, fully determined by
-/// the spec.
-fn collect_cell_source(
-    spec: &CampaignSpec,
-    p: &ProblemSpec,
-    constants: &Constants,
-    cell_seed: u64,
-) -> Result<Vec<SourceSample>, String> {
-    let src_m = (p.m / 4).max(p.n + 50).min(p.m);
-    let src_problem = crate::data::build_problem(&p.dataset, src_m, p.n, p.data_seed + 400)?;
-    Ok(crate::cli::figures::collect_source(
-        src_problem,
-        constants.clone(),
-        spec.source_samples,
-        cell_seed ^ SOURCE_SEED_SALT,
-    ))
+    let limits = SliceLimits { max_new_evals: quota, max_batches: None };
+    drive_session(&session, session_path, limits, &[], None)
 }
 
 #[cfg(test)]

@@ -126,6 +126,20 @@ COMMANDS
                [--eval-threads N]
   deploy       run the AOT (JAX+Pallas→PJRT) artifact vs the native solver
                --variant sap_small [--m 900 --n 100]
+  serve        tuning-as-a-service daemon: accept jobs over HTTP/JSON,
+               time-slice their sessions across a worker pool, fold every
+               completed job into one crowd history db (kill-safe; SIGTERM
+               drains gracefully)
+               --state DIR (jobs/sessions/shards/crowd.json/addr)
+               [--port P (0 = OS-assigned; addr written to <state>/addr)]
+               [--serve-workers N]  [--tenant-cap K (concurrent slices
+               per tenant)]  [--slice-batches B (batches per time slice)]
+  client       pure-std client for a running daemon; daemon address from
+               --addr HOST:PORT or --state DIR (reads its addr file)
+               exactly one action flag:
+               --health | --submit manifest.json|'{inline json}' |
+               --status [job-id] | --wait job-id [--timeout-secs S] |
+               --trials job-id | --db [out.json] | --drain
   props        dataset diagnostics: coherence, condition number (Table 3)
                --data ... --m --n
   figures      regenerate paper tables/figures into results/

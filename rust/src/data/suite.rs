@@ -55,6 +55,20 @@ impl Regime {
             Regime::Streaming => "streaming",
         }
     }
+
+    /// Inverse of [`Regime::name`] — used by the serving daemon's job
+    /// manifests, which carry the regime tag as its report label.
+    pub fn parse(s: &str) -> Option<Regime> {
+        match s {
+            "low-coherence" => Some(Regime::LowCoherence),
+            "moderate-coherence" => Some(Regime::ModerateCoherence),
+            "high-coherence" => Some(Regime::HighCoherence),
+            "tall-aspect" => Some(Regime::TallAspect),
+            "real-world" => Some(Regime::RealWorld),
+            "streaming" => Some(Regime::Streaming),
+            _ => None,
+        }
+    }
 }
 
 /// One reproducible problem in a suite: a named generator family at a

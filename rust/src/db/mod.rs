@@ -214,12 +214,12 @@ impl HistoryDb {
         Ok(db)
     }
 
-    /// Pretty-print to `path`, creating parent directories as needed.
+    /// Pretty-print to `path` (parent directories created as needed),
+    /// durably and atomically — the crowd DB is rewritten by the serving
+    /// daemon while clients read it, so readers must never observe a
+    /// partially-written file.
     pub fn save(&self, path: &Path) -> std::io::Result<()> {
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
-        }
-        std::fs::write(path, self.to_json().to_string_pretty())
+        crate::fsio::write_atomic(path, &self.to_json().to_string_pretty())
     }
 
     /// Load a database file.

@@ -1,0 +1,190 @@
+//! Durable atomic file writes shared by every persistence path.
+//!
+//! Checkpoints ([`crate::campaign::Checkpoint`], the session checkpoint in
+//! [`crate::objective::TuningSession`]), the history database
+//! ([`crate::db::HistoryDb`]) and the serving daemon's job-state files all
+//! persist through [`write_atomic`]. The previous write-tmp-then-rename
+//! idiom had two holes a long-running server turns fatal:
+//!
+//! * **No durability.** `rename` orders the directory update but nothing
+//!   forced the *data* to disk first, so a power loss shortly after the
+//!   rename could surface a zero-length or truncated file on ext4-like
+//!   filesystems — exactly the file a resume depends on. [`write_atomic`]
+//!   fsyncs the temp file before the rename and fsyncs the parent
+//!   directory after it, so once the call returns the new contents are on
+//!   stable storage under the final name.
+//! * **Colliding temp names.** A fixed `<path>.json.tmp` name means two
+//!   writers checkpointing the same path concurrently (two scheduler
+//!   workers, or a daemon restarted while its predecessor lingers)
+//!   clobber each other's in-flight temp file. Temp names here embed the
+//!   process id and a process-wide counter, so every write gets a
+//!   private temp file.
+//!
+//! A crash *between* the write and the rename leaves a stale `.tmp` file
+//! behind; readers never look at temp files (they load only the final
+//! name), so leftovers are harmless and are swept opportunistically by
+//! the next [`write_atomic`] to the same path.
+
+use std::fs::File;
+use std::io::Write as _;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotonic per-process counter making concurrent temp names unique even
+/// within one process.
+static WRITE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Durably and atomically replace `path` with `contents`.
+///
+/// Creates parent directories as needed, writes a writer-unique temp file
+/// (`<name>.<pid>.<seq>.tmp`) in the same directory, fsyncs it, renames
+/// it over `path`, then fsyncs the parent directory (best-effort on
+/// platforms where directories cannot be opened). A kill or power loss
+/// at any instant leaves either the complete previous contents or the
+/// complete new contents under `path` — never a torn file.
+pub fn write_atomic(path: &Path, contents: &str) -> std::io::Result<()> {
+    let dir = match path.parent() {
+        Some(d) if !d.as_os_str().is_empty() => {
+            std::fs::create_dir_all(d)?;
+            Some(d.to_path_buf())
+        }
+        _ => None,
+    };
+    let name = path
+        .file_name()
+        .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidInput, "no file name"))?
+        .to_string_lossy()
+        .into_owned();
+    let seq = WRITE_SEQ.fetch_add(1, Ordering::Relaxed);
+    let tmp_name = format!("{name}.{}.{seq}.tmp", std::process::id());
+    let tmp = match &dir {
+        Some(d) => d.join(&tmp_name),
+        None => std::path::PathBuf::from(&tmp_name),
+    };
+    sweep_stale_tmp(dir.as_deref(), &name);
+    let result = (|| {
+        let mut f = File::create(&tmp)?;
+        f.write_all(contents.as_bytes())?;
+        // Data must be durable before the rename publishes the name.
+        f.sync_all()?;
+        drop(f);
+        std::fs::rename(&tmp, path)?;
+        sync_dir(dir.as_deref());
+        Ok(())
+    })();
+    if result.is_err() {
+        // Never leave our own temp file behind on a failed write.
+        let _ = std::fs::remove_file(&tmp);
+    }
+    result
+}
+
+/// Remove stale `<name>.*.tmp` leftovers from crashed writers of the same
+/// target file. Best-effort: a racing live writer's temp file may be
+/// removed, in which case that writer's rename fails and it retries at
+/// its next checkpoint — resume correctness never depends on a single
+/// checkpoint write landing.
+fn sweep_stale_tmp(dir: Option<&Path>, name: &str) {
+    let dir = dir.unwrap_or(Path::new("."));
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return;
+    };
+    let prefix = format!("{name}.");
+    for entry in entries.flatten() {
+        let fname = entry.file_name();
+        let fname = fname.to_string_lossy();
+        if fname.starts_with(&prefix) && fname.ends_with(".tmp") {
+            let _ = std::fs::remove_file(entry.path());
+        }
+    }
+}
+
+/// fsync a directory so a rename inside it is durable. Directories cannot
+/// be opened for writing on all platforms; failures are ignored (the
+/// rename itself already happened — this only narrows the crash window).
+fn sync_dir(dir: Option<&Path>) {
+    let dir = dir.unwrap_or(Path::new("."));
+    if let Ok(f) = File::open(dir) {
+        let _ = f.sync_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("ranntune_fsio_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn writes_and_replaces() {
+        let dir = tmpdir("basic");
+        let path = dir.join("state.json");
+        write_atomic(&path, "{\"v\":1}").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "{\"v\":1}");
+        write_atomic(&path, "{\"v\":2}").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "{\"v\":2}");
+        // No temp litter after successful writes.
+        let stray: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".tmp"))
+            .collect();
+        assert!(stray.is_empty(), "temp files left behind");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn creates_parent_dirs() {
+        let dir = tmpdir("parents");
+        let path = dir.join("a/b/c.json");
+        write_atomic(&path, "x").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "x");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stale_tmp_from_torn_write_is_swept_and_harmless() {
+        let dir = tmpdir("torn");
+        let path = dir.join("ckpt.json");
+        write_atomic(&path, "good").unwrap();
+        // Simulate a writer that died between write and rename, leaving a
+        // truncated temp file behind.
+        std::fs::write(dir.join("ckpt.json.99999.0.tmp"), "trunc").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "good");
+        write_atomic(&path, "newer").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "newer");
+        assert!(
+            !dir.join("ckpt.json.99999.0.tmp").exists(),
+            "stale tmp not swept"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn concurrent_writers_never_tear() {
+        let dir = tmpdir("race");
+        let path = dir.join("shared.json");
+        let path_ref = &path;
+        std::thread::scope(|s| {
+            for w in 0..4u32 {
+                s.spawn(move || {
+                    let body = format!("{}", "x".repeat(512 + w as usize));
+                    for _ in 0..25 {
+                        // Racing renames may sweep each other's temp file;
+                        // individual write errors are fine, torn reads are
+                        // not.
+                        let _ = write_atomic(path_ref, &body);
+                    }
+                });
+            }
+        });
+        let got = std::fs::read_to_string(&path).unwrap();
+        assert!(got.len() >= 512, "torn file: {} bytes", got.len());
+        assert!(got.bytes().all(|b| b == b'x'));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -41,10 +41,18 @@ impl Json {
         }
     }
 
-    /// Numeric value, if this is a number.
+    /// Numeric value, if this is a number — or one of the non-finite
+    /// sentinel strings `"NaN"` / `"Inf"` / `"-Inf"` that [`Json::Num`]
+    /// serializes to (JSON itself has no non-finite literals).
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
+            Json::Str(s) => match s.as_str() {
+                "NaN" => Some(f64::NAN),
+                "Inf" => Some(f64::INFINITY),
+                "-Inf" => Some(f64::NEG_INFINITY),
+                _ => None,
+            },
             _ => None,
         }
     }
@@ -171,10 +179,13 @@ impl Json {
 }
 
 fn write_num(out: &mut String, x: f64) {
-    if !x.is_finite() {
-        // JSON has no Inf/NaN; encode as null (we never store these on
-        // purpose — penalized objectives are finite by construction).
-        out.push_str("null");
+    if x.is_nan() {
+        // JSON has no Inf/NaN literals. A trial whose ARFE diverged (LSQR
+        // blow-up) must still round-trip through checkpoints, so encode
+        // non-finite values as sentinel strings that `as_f64` maps back.
+        out.push_str("\"NaN\"");
+    } else if x.is_infinite() {
+        out.push_str(if x > 0.0 { "\"Inf\"" } else { "\"-Inf\"" });
     } else if x == x.trunc() && x.abs() < 1e15 {
         let _ = write!(out, "{}", x as i64);
     } else {
@@ -433,6 +444,23 @@ mod tests {
         // writer emits parsable exponent form for non-integers
         let s = Json::Num(0.000123).to_string();
         assert!((Json::parse(&s).unwrap().as_f64().unwrap() - 0.000123).abs() < 1e-18);
+    }
+
+    #[test]
+    fn non_finite_numbers_round_trip_via_sentinels() {
+        for (x, sentinel) in [
+            (f64::NAN, "\"NaN\""),
+            (f64::INFINITY, "\"Inf\""),
+            (f64::NEG_INFINITY, "\"-Inf\""),
+        ] {
+            let s = Json::Num(x).to_string();
+            assert_eq!(s, sentinel);
+            let back = Json::parse(&s).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "bit-exact for {sentinel}");
+        }
+        // Ordinary strings are still not numbers.
+        assert_eq!(Json::Str("nan".into()).as_f64(), None);
+        assert_eq!(Json::Str("Infinity".into()).as_f64(), None);
     }
 
     #[test]

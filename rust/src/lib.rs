@@ -32,6 +32,7 @@ pub mod campaign;
 pub mod cli;
 pub mod data;
 pub mod db;
+pub mod fsio;
 pub mod gp;
 pub mod json;
 pub mod lcm;
@@ -42,5 +43,6 @@ pub mod rng;
 pub mod runtime;
 pub mod sap;
 pub mod sensitivity;
+pub mod serve;
 pub mod sketch;
 pub mod tuners;

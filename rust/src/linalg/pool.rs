@@ -47,7 +47,26 @@
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+
+/// Lock the job slot, recovering from mutex poisoning.
+///
+/// A panicking task unwinds through [`exec_task`] *outside* the lock, but
+/// a panic raised anywhere while a guard is held (e.g. a future
+/// refactor, or an allocator abort turned unwind) would poison the
+/// process-wide mutex and brick every subsequent kernel call — fatal for
+/// a long-running daemon. The guarded state (claim counters + panic
+/// slot) is updated in small all-or-nothing steps and is therefore
+/// always consistent, so recovery via [`std::sync::PoisonError::into_inner`]
+/// is sound.
+fn lock_slot<'a>(m: &'a Mutex<JobSlot>) -> MutexGuard<'a, JobSlot> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// [`Condvar::wait`] with the same poison recovery as [`lock_slot`].
+fn wait_slot<'a>(cv: &Condvar, guard: MutexGuard<'a, JobSlot>) -> MutexGuard<'a, JobSlot> {
+    cv.wait(guard).unwrap_or_else(|e| e.into_inner())
+}
 
 /// Number of worker threads for the dense kernels (the pool width).
 /// Initialized once from `RANNTUNE_THREADS` or available parallelism.
@@ -186,7 +205,7 @@ impl Pool {
             std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(task)
         };
         {
-            let mut slot = self.shared.slot.lock().unwrap();
+            let mut slot = lock_slot(&self.shared.slot);
             debug_assert!(slot.active == 0 && slot.panic.is_none());
             slot.task = Some(TaskRef(task_static));
             slot.next = 0;
@@ -197,7 +216,7 @@ impl Pool {
         // The submitter claims and runs tasks like any worker.
         loop {
             let claimed = {
-                let mut slot = self.shared.slot.lock().unwrap();
+                let mut slot = lock_slot(&self.shared.slot);
                 loop {
                     if slot.next >= slot.tasks {
                         break None;
@@ -208,7 +227,7 @@ impl Pool {
                         slot.active += 1;
                         break Some(i);
                     }
-                    slot = self.shared.work_cv.wait(slot).unwrap();
+                    slot = wait_slot(&self.shared.work_cv, slot);
                 }
             };
             match claimed {
@@ -218,9 +237,9 @@ impl Pool {
         }
         // Wait for straggler workers, then retire the job.
         let panic = {
-            let mut slot = self.shared.slot.lock().unwrap();
+            let mut slot = lock_slot(&self.shared.slot);
             while slot.active > 0 {
-                slot = self.shared.done_cv.wait(slot).unwrap();
+                slot = wait_slot(&self.shared.done_cv, slot);
             }
             slot.task = None;
             slot.panic.take()
@@ -236,7 +255,7 @@ impl Pool {
 fn exec_task(shared: &Shared, task: &(dyn Fn(usize) + Sync), idx: usize) {
     let result = catch_unwind(AssertUnwindSafe(|| task(idx)));
     let (finished, capped) = {
-        let mut slot = shared.slot.lock().unwrap();
+        let mut slot = lock_slot(&shared.slot);
         slot.active -= 1;
         if let Err(payload) = result {
             // Poison the job: no further tasks are handed out; the
@@ -263,7 +282,7 @@ fn exec_task(shared: &Shared, task: &(dyn Fn(usize) + Sync), idx: usize) {
 fn worker_loop(shared: Arc<Shared>) {
     loop {
         let (task, idx) = {
-            let mut slot = shared.slot.lock().unwrap();
+            let mut slot = lock_slot(&shared.slot);
             loop {
                 if let Some(t) = slot.task {
                     if slot.next < slot.tasks && slot.active < slot.cap {
@@ -273,7 +292,7 @@ fn worker_loop(shared: Arc<Shared>) {
                         break (t, i);
                     }
                 }
-                slot = shared.work_cv.wait(slot).unwrap();
+                slot = wait_slot(&shared.work_cv, slot);
             }
         };
         exec_task(&shared, task.0, idx);
@@ -294,7 +313,9 @@ pub fn run_chunks(data: &mut [f64], chunk_len: usize, f: &(dyn Fn(usize, &mut [f
     }
     let chunks: Vec<Mutex<&mut [f64]>> = data.chunks_mut(chunk_len).map(Mutex::new).collect();
     pool().run(chunks.len(), &|t| {
-        let mut chunk = chunks[t].lock().unwrap();
+        // Chunk mutexes are claimed exactly once; recover from poisoning
+        // anyway so a panicked sibling task can't brick the dispatch.
+        let mut chunk = chunks[t].lock().unwrap_or_else(|e| e.into_inner());
         f(t, &mut chunk);
     });
 }
@@ -426,6 +447,46 @@ mod tests {
             count.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(count.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn poisoned_pool_mutex_recovers_and_pool_is_reusable() {
+        // Panic while holding the job-slot guard: the classic way a
+        // long-running daemon bricks its process-wide pool. State under
+        // the guard is untouched (consistent), so recovery must work.
+        let poison = catch_unwind(AssertUnwindSafe(|| {
+            let _guard = lock_slot(&pool().shared.slot);
+            panic!("poison the pool mutex");
+        }));
+        assert!(poison.is_err());
+        // Every pool entry point must still work against the poisoned
+        // mutex: plain run, capped run, and chunk dispatch.
+        let count = AtomicUsize::new(0);
+        pool().run(16, &|_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 16);
+        let mut data = vec![0.0f64; 32];
+        run_chunks(&mut data, 8, &|t, chunk| {
+            for x in chunk.iter_mut() {
+                *x = t as f64 + 1.0;
+            }
+        });
+        assert!(data.iter().all(|&x| x >= 1.0));
+        // A panicking task still propagates, and the pool survives again.
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool().run(4, &|t| {
+                if t == 1 {
+                    panic!("task boom after poison");
+                }
+            });
+        }));
+        assert!(caught.is_err());
+        let again = AtomicUsize::new(0);
+        pool().run(8, &|_| {
+            again.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(again.load(Ordering::Relaxed), 8);
     }
 
     #[test]

@@ -15,6 +15,7 @@ use ranntune::objective::{
 use ranntune::rng::Rng;
 use ranntune::runtime::{default_artifacts_dir, SapEngine};
 use ranntune::sensitivity::{analyze_trials, PARAM_NAMES};
+use ranntune::serve;
 use ranntune::sketch::LessUniform;
 use ranntune::tuners::{GpBoTuner, GridTuner, LhsmduTuner, TlaTuner, TpeTuner, Tuner};
 use std::path::{Path, PathBuf};
@@ -30,6 +31,8 @@ fn main() {
         "deploy" => cmd_deploy(&args),
         "props" => cmd_props(&args),
         "figures" => cmd_figures(&args),
+        "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
         "help" | "" => {
             println!("{USAGE}");
             0
@@ -413,6 +416,74 @@ fn cmd_deploy(args: &Args) -> i32 {
     } else {
         eprintln!("FAIL: ARFE too high");
         1
+    }
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let Some(state) = args.get("state") else {
+        eprintln!("serve: missing --state DIR");
+        return 2;
+    };
+    let opts = serve::ServeOpts {
+        state: PathBuf::from(state),
+        port: args.get_u64("port", 7311) as u16,
+        workers: args.get_usize("serve-workers", 2),
+        config: serve::ServeConfig {
+            tenant_cap: args.get_usize("tenant-cap", 2),
+            slice_batches: args.get_usize("slice-batches", 1),
+        },
+    };
+    match serve::run(&opts) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("serve: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_client(args: &Args) -> i32 {
+    // A bare flag parses as "true"; treat that as "flag present, no
+    // value" for the flags whose operand is optional.
+    let val = |key: &str| -> Option<String> {
+        args.get(key).map(|v| if v == "true" { String::new() } else { v.to_string() })
+    };
+    let action = if args.has("health") {
+        serve::ClientAction::Health
+    } else if let Some(spec) = val("submit") {
+        serve::ClientAction::Submit(spec)
+    } else if let Some(id) = val("status") {
+        serve::ClientAction::Status(id)
+    } else if let Some(id) = val("wait") {
+        serve::ClientAction::Wait(id)
+    } else if let Some(id) = val("trials") {
+        serve::ClientAction::Trials(id)
+    } else if let Some(out) = val("db") {
+        serve::ClientAction::Db(if out.is_empty() { None } else { Some(PathBuf::from(out)) })
+    } else if args.has("drain") {
+        serve::ClientAction::Drain
+    } else {
+        eprintln!("client: need one of --health --submit --status --wait --trials --db --drain");
+        return 2;
+    };
+    let addr = match serve::resolve_addr(args.get("addr"), args.get("state").map(Path::new)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("client: {e}");
+            return 2;
+        }
+    };
+    let opts = serve::ClientOpts {
+        addr,
+        action,
+        wait_timeout: std::time::Duration::from_secs(args.get_u64("timeout-secs", 600)),
+    };
+    match serve::run_client(&opts) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("client: {e}");
+            1
+        }
     }
 }
 

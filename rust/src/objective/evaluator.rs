@@ -89,6 +89,26 @@ pub enum TimingMode {
     Modeled,
 }
 
+impl TimingMode {
+    /// Stable lower-case label used on the serving daemon's job-manifest
+    /// wire format.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TimingMode::Measured => "measured",
+            TimingMode::Modeled => "modeled",
+        }
+    }
+
+    /// Inverse of [`TimingMode::name`].
+    pub fn parse(s: &str) -> Option<TimingMode> {
+        match s {
+            "measured" => Some(TimingMode::Measured),
+            "modeled" => Some(TimingMode::Modeled),
+            _ => None,
+        }
+    }
+}
+
 /// Deterministic pseudo-seconds for one solver run: a flop-count model at
 /// a nominal 1 GFLOP/s.
 ///

@@ -269,6 +269,33 @@ mod tests {
     }
 
     #[test]
+    fn non_finite_trial_round_trips_bit_exactly() {
+        // A diverged LSQR run records arfe = NaN (and a penalized value
+        // that can be Inf); the checkpoint round-trip must preserve the
+        // bits instead of silently mutating them to null (the pre-fix
+        // behaviour of the JSON writer).
+        for (arfe, value) in [
+            (f64::NAN, f64::INFINITY),
+            (f64::INFINITY, f64::NEG_INFINITY),
+            (f64::NAN, f64::NAN),
+        ] {
+            let t = Trial {
+                config: SapConfig::reference(),
+                wall_clock: 0.25,
+                arfe,
+                value,
+                failed: true,
+                is_reference: false,
+            };
+            let text = t.to_json().to_string();
+            let back = Trial::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back.arfe.to_bits(), t.arfe.to_bits(), "arfe bits for {arfe}");
+            assert_eq!(back.value.to_bits(), t.value.to_bits(), "value bits for {value}");
+            assert_eq!(back.wall_clock.to_bits(), t.wall_clock.to_bits());
+        }
+    }
+
+    #[test]
     fn empty_history_is_safe() {
         let h = History::new();
         assert!(h.best().is_none());

@@ -130,6 +130,7 @@ pub struct TuningSession<'a> {
     seed: u64,
     rng: Rng,
     pause_quota: Option<usize>,
+    batch_quota: Option<usize>,
     /// Remainder of a proposal batch split by the pause quota: evaluated
     /// (without asking the tuner again) before the next `ask`, and
     /// persisted in the checkpoint so a resumed session finishes the
@@ -162,6 +163,7 @@ impl<'a> TuningSession<'a> {
             seed,
             rng: Rng::new(seed),
             pause_quota: None,
+            batch_quota: None,
             pending: Vec::new(),
             problem_digest: None,
         }
@@ -206,7 +208,8 @@ impl<'a> TuningSession<'a> {
     }
 
     /// Persist the session state to `path` after the reference and after
-    /// every evaluated batch (atomic write-to-temp-then-rename). If the
+    /// every evaluated batch (durable atomic replace via
+    /// [`crate::fsio::write_atomic`]). If the
     /// file already exists when [`TuningSession::run`] starts, the
     /// session **resumes** from it: the objective must be fresh, the
     /// tuner freshly constructed with the same static arguments, and the
@@ -228,6 +231,19 @@ impl<'a> TuningSession<'a> {
     /// [`TuningSession::checkpoint_to`] to resume later.
     pub fn pause_after(mut self, evals: usize) -> TuningSession<'a> {
         self.pause_quota = Some(evals);
+        self
+    }
+
+    /// Pause (with [`StopReason::Paused`]) after this many evaluated
+    /// *batches* in this invocation — the non-blocking step API the
+    /// serving scheduler time-slices sessions with. The reference
+    /// evaluation counts as the first batch; every batch is followed by a
+    /// checkpoint write, so a paused session is always resumable at
+    /// exactly the point it yielded. Unlike [`TuningSession::pause_after`]
+    /// no proposal batch is ever split, so a time-sliced run asks the
+    /// tuner the identical question sequence an uninterrupted run would.
+    pub fn pause_after_batches(mut self, batches: usize) -> TuningSession<'a> {
+        self.batch_quota = Some(batches);
         self
     }
 
@@ -342,12 +358,7 @@ impl<'a> TuningSession<'a> {
             ),
             ("tuner", self.tuner.snapshot().to_json()),
         ]);
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
-        }
-        let tmp = path.with_extension("json.tmp");
-        std::fs::write(&tmp, doc.to_string_pretty()).map_err(|e| e.to_string())?;
-        std::fs::rename(&tmp, path).map_err(|e| e.to_string())
+        crate::fsio::write_atomic(path, &doc.to_string_pretty()).map_err(|e| e.to_string())
     }
 
     /// Restore from an existing checkpoint file, if any. Returns whether
@@ -449,6 +460,7 @@ impl<'a> TuningSession<'a> {
         let budget = self.eval_budget();
         let resumed = self.try_resume()?;
         let mut new_evals = 0usize;
+        let mut new_batches = 0usize;
 
         if !resumed {
             // Warm-start: prior knowledge flows to the tuner only.
@@ -466,10 +478,12 @@ impl<'a> TuningSession<'a> {
             // Reference evaluation (line 1) — unless there is no budget
             // for anything at all, or a zero pause quota forbids even it
             // (the quota contract is exact, reference included).
-            let quota_allows_ref = self.pause_quota.map_or(true, |q| q > 0);
+            let quota_allows_ref = self.pause_quota.map_or(true, |q| q > 0)
+                && self.batch_quota.map_or(true, |q| q > 0);
             if budget > 0 && quota_allows_ref && self.objective.evaluations() == 0 {
                 let t = self.objective.evaluate_reference();
                 new_evals += 1;
+                new_batches += 1;
                 Self::notify(&mut self.observers, std::slice::from_ref(&t));
                 let ctx = SessionCtx {
                     space: &self.objective.task.space,
@@ -494,6 +508,11 @@ impl<'a> TuningSession<'a> {
             }
             if let Some(quota) = self.pause_quota {
                 if new_evals >= quota {
+                    break StopReason::Paused;
+                }
+            }
+            if let Some(quota) = self.batch_quota {
+                if new_batches >= quota {
                     break StopReason::Paused;
                 }
             }
@@ -533,6 +552,7 @@ impl<'a> TuningSession<'a> {
 
             let trials = self.objective.evaluate_batch(&cfgs);
             new_evals += trials.len();
+            new_batches += 1;
             Self::notify(&mut self.observers, &trials);
             let ctx = SessionCtx {
                 space: &self.objective.task.space,
@@ -773,6 +793,46 @@ mod tests {
         assert_eq!(resumed.stop, StopReason::BudgetExhausted);
         assert_eq!(resumed.history.len(), full.len());
         for (a, b) in full.trials().iter().zip(resumed.history.trials()) {
+            assert_eq!(a.config, b.config);
+            assert_eq!(a.value.to_bits(), b.value.to_bits());
+            assert_eq!(a.wall_clock.to_bits(), b.wall_clock.to_bits());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn batch_sliced_run_is_bit_identical_to_uninterrupted() {
+        // The serving scheduler's time-slice primitive: run one batch per
+        // invocation (pause_after_batches(1)), resuming from the
+        // checkpoint each time, until the session finishes. The recorded
+        // history must match an uninterrupted run bitwise.
+        let dir = tmp("batch_slice");
+        let _ = std::fs::remove_dir_all(&dir);
+        let ckpt = dir.join("sess.json");
+
+        let mut obj_full = objective(21, TimingMode::Modeled);
+        let mut tuner_full = TpeTuner::new(3);
+        let full = run_tuner(&mut obj_full, &mut tuner_full, 9, 13);
+
+        let mut slices = 0usize;
+        let sliced = loop {
+            let mut obj = objective(21, TimingMode::Modeled);
+            let mut tuner = TpeTuner::new(3);
+            let out = TuningSession::new(&mut obj, &mut tuner, 9, 13)
+                .checkpoint_to(&ckpt)
+                .pause_after_batches(1)
+                .run()
+                .unwrap();
+            slices += 1;
+            assert!(slices < 50, "slicing failed to make progress");
+            if out.stop.is_finished() {
+                break out;
+            }
+            assert_eq!(out.stop, StopReason::Paused);
+        };
+        assert!(slices > 1, "budget 9 should need several slices");
+        assert_eq!(sliced.history.len(), full.len());
+        for (a, b) in full.trials().iter().zip(sliced.history.trials()) {
             assert_eq!(a.config, b.config);
             assert_eq!(a.value.to_bits(), b.value.to_bits());
             assert_eq!(a.wall_clock.to_bits(), b.wall_clock.to_bits());

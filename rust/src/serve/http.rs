@@ -1,0 +1,222 @@
+//! Minimal pure-std HTTP/1.1 plumbing for the tuning daemon.
+//!
+//! The crate has a no-dependency policy, so this is a deliberately tiny
+//! subset of HTTP — exactly what `ranntune serve` and its CI client
+//! need: one request per connection (`Connection: close`), JSON bodies,
+//! `Content-Length` framing, no chunked encoding, no keep-alive, no
+//! TLS. Both sides of the conversation live here so the daemon and the
+//! client can never disagree about framing.
+
+use crate::json::Json;
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// Cap on accepted request bodies (a tuning manifest is < 1 KiB; this
+/// bound keeps a misbehaving client from ballooning daemon memory).
+const MAX_BODY: usize = 1 << 20;
+
+/// A parsed inbound HTTP request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// Request method, upper-case (`GET`, `POST`, …).
+    pub method: String,
+    /// Decoded path without the query string, e.g. `/v1/jobs`.
+    pub path: String,
+    /// Parsed query parameters (`?since=5` ⇒ `{"since": "5"}`).
+    pub query: BTreeMap<String, String>,
+    /// Raw request body (empty when none was sent).
+    pub body: String,
+}
+
+impl Request {
+    /// The request body parsed as JSON.
+    pub fn json(&self) -> Result<Json, String> {
+        Json::parse(&self.body)
+    }
+}
+
+/// Read and parse one HTTP request from a connection. Returns an error
+/// on malformed framing, over-long bodies, or I/O failure; the caller
+/// just drops the connection.
+pub fn read_request(stream: &mut TcpStream) -> Result<Request, String> {
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .map_err(|e| e.to_string())?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).map_err(|e| e.to_string())?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().ok_or("empty request line")?.to_ascii_uppercase();
+    let target = parts.next().ok_or("request line has no target")?;
+    let (path, query_str) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
+    let mut query = BTreeMap::new();
+    for pair in query_str.split('&').filter(|s| !s.is_empty()) {
+        let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+        query.insert(k.to_string(), v.to_string());
+    }
+    let mut content_len = 0usize;
+    loop {
+        let mut header = String::new();
+        reader.read_line(&mut header).map_err(|e| e.to_string())?;
+        let header = header.trim_end();
+        if header.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = header.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_len = value
+                    .trim()
+                    .parse::<usize>()
+                    .map_err(|_| format!("bad content-length {value:?}"))?;
+            }
+        }
+    }
+    if content_len > MAX_BODY {
+        return Err(format!("request body of {content_len} bytes exceeds cap"));
+    }
+    let mut body = vec![0u8; content_len];
+    reader.read_exact(&mut body).map_err(|e| e.to_string())?;
+    Ok(Request {
+        method,
+        path: path.to_string(),
+        query,
+        body: String::from_utf8(body).map_err(|_| "request body is not UTF-8")?,
+    })
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        409 => "Conflict",
+        _ => "Internal Server Error",
+    }
+}
+
+/// Write a JSON response and flush. Errors are returned for logging but
+/// the connection is closed either way.
+pub fn respond(stream: &mut TcpStream, status: u16, body: &Json) -> std::io::Result<()> {
+    let text = body.to_string_pretty();
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        reason(status),
+        text.len(),
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(text.as_bytes())?;
+    stream.flush()
+}
+
+/// Client side: send one request to `addr` (`host:port`) and return
+/// `(status, parsed JSON body)`. Used by `ranntune client` and the CI
+/// smoke test; retries are the caller's business.
+pub fn client_request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&Json>,
+) -> Result<(u16, Json), String> {
+    let mut stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .map_err(|e| e.to_string())?;
+    let payload = body.map(|b| b.to_string_pretty()).unwrap_or_default();
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        payload.len(),
+    );
+    stream.write_all(head.as_bytes()).map_err(|e| e.to_string())?;
+    stream.write_all(payload.as_bytes()).map_err(|e| e.to_string())?;
+    stream.flush().map_err(|e| e.to_string())?;
+
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).map_err(|e| e.to_string())?;
+    let status = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| format!("bad status line {status_line:?}"))?;
+    let mut content_len: Option<usize> = None;
+    loop {
+        let mut header = String::new();
+        reader.read_line(&mut header).map_err(|e| e.to_string())?;
+        let header = header.trim_end();
+        if header.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = header.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_len = value.trim().parse::<usize>().ok();
+            }
+        }
+    }
+    let mut body = Vec::new();
+    match content_len {
+        Some(len) => {
+            body.resize(len, 0);
+            reader.read_exact(&mut body).map_err(|e| e.to_string())?;
+        }
+        None => {
+            reader.read_to_end(&mut body).map_err(|e| e.to_string())?;
+        }
+    }
+    let text = String::from_utf8(body).map_err(|_| "response body is not UTF-8")?;
+    let json = if text.trim().is_empty() { Json::Null } else { Json::parse(&text)? };
+    Ok((status, json))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    /// One round trip through both halves of the plumbing: the client
+    /// writer feeds the server parser and vice versa.
+    #[test]
+    fn request_and_response_round_trip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (mut conn, _) = listener.accept().unwrap();
+            let req = read_request(&mut conn).unwrap();
+            assert_eq!(req.method, "POST");
+            assert_eq!(req.path, "/v1/echo");
+            assert_eq!(req.query.get("since").map(String::as_str), Some("5"));
+            let doc = req.json().unwrap();
+            respond(&mut conn, 200, &doc).unwrap();
+        });
+        let body = Json::obj(vec![("x", Json::Num(7.0))]);
+        let (status, echoed) =
+            client_request(&addr, "POST", "/v1/echo?since=5", Some(&body)).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(echoed.to_string_pretty(), body.to_string_pretty());
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn bodyless_get_parses() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (mut conn, _) = listener.accept().unwrap();
+            let req = read_request(&mut conn).unwrap();
+            assert_eq!(req.method, "GET");
+            assert!(req.body.is_empty());
+            respond(&mut conn, 404, &Json::Str("no such job".into())).unwrap();
+        });
+        let (status, body) = client_request(&addr, "GET", "/v1/jobs/job-9", None).unwrap();
+        assert_eq!(status, 404);
+        assert_eq!(body.as_str(), Some("no such job"));
+        server.join().unwrap();
+    }
+}

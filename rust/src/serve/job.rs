@@ -1,0 +1,500 @@
+//! Job manifests and on-disk job state of the serving daemon.
+//!
+//! A **job manifest** (`ranntune-job-v1`) is the wire format a tenant
+//! submits to `POST /v1/jobs`: a problem fingerprint (dataset, shape,
+//! data seed — exactly the [`crate::data::ProblemSpec`] identity), a
+//! tuner, a budget, and the execution knobs. Serialization goes through
+//! [`crate::json::Json`], whose objects are `BTreeMap`s — key order is
+//! sorted and therefore stable across versions and writers.
+//!
+//! A **job state** file (`ranntune-jobstate-v1`, one per job under
+//! `<state>/jobs/`) is the daemon's durable record: the manifest, the
+//! lifecycle status, and the warm-start trial snapshot taken from the
+//! crowd database at submission time. Snapshotting at submission — not
+//! at first slice — makes a job's results a pure function of its state
+//! file: a daemon killed and restarted re-runs the job with the identical
+//! warm set, which the byte-identical-restart guarantee depends on.
+
+use crate::campaign::{Cell, TunerKind};
+use crate::data::{ProblemSpec, Regime};
+use crate::json::Json;
+use crate::objective::{TimingMode, Trial};
+use std::path::{Path, PathBuf};
+
+/// Format tag of the submitted manifest document.
+pub const JOB_FORMAT: &str = "ranntune-job-v1";
+/// Format tag of the daemon's per-job state file.
+pub const JOBSTATE_FORMAT: &str = "ranntune-jobstate-v1";
+
+/// A tuning-job request, as submitted by a tenant.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobManifest {
+    /// Fair-share accounting unit; jobs of one tenant never hold more
+    /// than the daemon's per-tenant cap of concurrent slices.
+    pub tenant: String,
+    /// Dataset name accepted by [`crate::data::build_problem`].
+    pub dataset: String,
+    /// Rows of A.
+    pub m: usize,
+    /// Columns of A.
+    pub n: usize,
+    /// Seed of the data-generation stream (part of the problem identity).
+    pub data_seed: u64,
+    /// Regime tag carried through to reports (not result-relevant).
+    pub regime: Regime,
+    /// Which tuner to run.
+    pub tuner: TunerKind,
+    /// Evaluation budget (the reference counts as the first).
+    pub budget: usize,
+    /// Job seed; the session's streams derive from it exactly like a
+    /// campaign cell's ([`Cell::seed`]).
+    pub seed: u64,
+    /// Solver repeats averaged per evaluation.
+    pub repeats: usize,
+    /// Measured (the paper's objective) or deterministic modeled timing.
+    pub timing: TimingMode,
+    /// Warm-start the tuner from the crowd database's records of this
+    /// problem fingerprint (any shape), snapshotted at submission.
+    pub warm: bool,
+    /// TLA only: LHSMDU samples pre-collected on the source sibling.
+    pub source_samples: usize,
+    /// Threads for within-session batch evaluation (1 = serial).
+    pub eval_threads: usize,
+}
+
+impl JobManifest {
+    /// A manifest with the service defaults for everything but the
+    /// problem identity and tuner.
+    pub fn new(dataset: &str, m: usize, n: usize, tuner: TunerKind) -> JobManifest {
+        JobManifest {
+            tenant: "anon".into(),
+            dataset: dataset.into(),
+            m,
+            n,
+            data_seed: 1,
+            regime: Regime::LowCoherence,
+            tuner,
+            budget: 20,
+            seed: 0,
+            repeats: 3,
+            timing: TimingMode::Measured,
+            warm: false,
+            source_samples: 30,
+            eval_threads: 1,
+        }
+    }
+
+    /// The problem spec this job tunes (identity = dataset + shape +
+    /// data seed, the conventional `"{dataset}-{m}x{n}-s{seed}"` id).
+    pub fn problem(&self) -> ProblemSpec {
+        ProblemSpec::new(&self.dataset, self.m, self.n, self.data_seed, self.regime)
+    }
+
+    /// The problem fingerprint keying this job's trials in the crowd
+    /// database — later jobs on the same fingerprint warm-start from
+    /// them and TLA transfer-learns.
+    pub fn problem_id(&self) -> String {
+        self.problem().id
+    }
+
+    /// Deterministic seed of the job's session streams: the campaign
+    /// cell derivation ([`Cell::seed`]) applied to (problem, tuner,
+    /// job seed), so a job's recorded trials depend only on its
+    /// manifest — never on scheduling.
+    pub fn session_seed(&self) -> u64 {
+        Cell { problem: self.problem(), tuner: self.tuner }.seed(self.seed)
+    }
+
+    /// Serialize to the `ranntune-job-v1` wire document.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::Str(JOB_FORMAT.into())),
+            ("tenant", Json::Str(self.tenant.clone())),
+            ("dataset", Json::Str(self.dataset.clone())),
+            ("m", Json::Num(self.m as f64)),
+            ("n", Json::Num(self.n as f64)),
+            ("data_seed", Json::Num(self.data_seed as f64)),
+            ("regime", Json::Str(self.regime.name().into())),
+            ("tuner", Json::Str(self.tuner.name().to_ascii_lowercase())),
+            ("budget", Json::Num(self.budget as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("repeats", Json::Num(self.repeats as f64)),
+            ("timing", Json::Str(self.timing.name().into())),
+            ("warm", Json::Bool(self.warm)),
+            ("source_samples", Json::Num(self.source_samples as f64)),
+            ("eval_threads", Json::Num(self.eval_threads as f64)),
+        ])
+    }
+
+    /// Parse a manifest. Only the problem identity (`dataset`, `m`, `n`)
+    /// and `tuner` are required; every other field defaults as in
+    /// [`JobManifest::new`]. An unknown `format` tag is refused so a
+    /// future v2 document is never silently half-read.
+    pub fn from_json(v: &Json) -> Result<JobManifest, String> {
+        if let Some(f) = v.get("format").and_then(|x| x.as_str()) {
+            if f != JOB_FORMAT {
+                return Err(format!("unsupported job format {f:?} (want {JOB_FORMAT})"));
+            }
+        }
+        let dataset =
+            v.get("dataset").and_then(|x| x.as_str()).ok_or("job: missing dataset")?;
+        let m = v.get("m").and_then(|x| x.as_usize()).ok_or("job: missing m")?;
+        let n = v.get("n").and_then(|x| x.as_usize()).ok_or("job: missing n")?;
+        let tuner = v
+            .get("tuner")
+            .and_then(|x| x.as_str())
+            .and_then(TunerKind::parse)
+            .ok_or("job: missing or unknown tuner")?;
+        let mut job = JobManifest::new(dataset, m, n, tuner);
+        if let Some(t) = v.get("tenant").and_then(|x| x.as_str()) {
+            job.tenant = t.to_string();
+        }
+        if let Some(s) = v.get("data_seed").and_then(|x| x.as_f64()) {
+            job.data_seed = s as u64;
+        }
+        if let Some(r) = v.get("regime").and_then(|x| x.as_str()) {
+            job.regime = Regime::parse(r).ok_or_else(|| format!("job: unknown regime {r:?}"))?;
+        }
+        if let Some(b) = v.get("budget").and_then(|x| x.as_usize()) {
+            job.budget = b;
+        }
+        if let Some(s) = v.get("seed").and_then(|x| x.as_f64()) {
+            job.seed = s as u64;
+        }
+        if let Some(r) = v.get("repeats").and_then(|x| x.as_usize()) {
+            job.repeats = r;
+        }
+        if let Some(t) = v.get("timing").and_then(|x| x.as_str()) {
+            job.timing =
+                TimingMode::parse(t).ok_or_else(|| format!("job: unknown timing {t:?}"))?;
+        }
+        if let Some(w) = v.get("warm").and_then(|x| x.as_bool()) {
+            job.warm = w;
+        }
+        if let Some(s) = v.get("source_samples").and_then(|x| x.as_usize()) {
+            job.source_samples = s;
+        }
+        if let Some(e) = v.get("eval_threads").and_then(|x| x.as_usize()) {
+            job.eval_threads = e;
+        }
+        if job.budget == 0 {
+            return Err("job: budget must be at least 1".into());
+        }
+        if job.n == 0 || job.m <= job.n {
+            return Err(format!("job: need m > n > 0, got {}x{}", job.m, job.n));
+        }
+        Ok(job)
+    }
+}
+
+/// Lifecycle of a job inside the daemon.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobStatus {
+    /// Accepted; waiting for a scheduler slice.
+    Queued,
+    /// At least one slice has run; the session checkpoint tracks progress.
+    Running,
+    /// Completed; its shard is folded into the crowd database.
+    Done,
+    /// The session errored (e.g. an unbuildable dataset).
+    Failed,
+}
+
+impl JobStatus {
+    /// Stable lower-case label (wire format and state files).
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobStatus::Queued => "queued",
+            JobStatus::Running => "running",
+            JobStatus::Done => "done",
+            JobStatus::Failed => "failed",
+        }
+    }
+
+    /// Inverse of [`JobStatus::name`].
+    pub fn parse(s: &str) -> Option<JobStatus> {
+        match s {
+            "queued" => Some(JobStatus::Queued),
+            "running" => Some(JobStatus::Running),
+            "done" => Some(JobStatus::Done),
+            "failed" => Some(JobStatus::Failed),
+            _ => None,
+        }
+    }
+
+    /// Has the job reached a terminal state?
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobStatus::Done | JobStatus::Failed)
+    }
+}
+
+/// Durable record of one accepted job.
+#[derive(Clone, Debug)]
+pub struct JobState {
+    /// Zero-padded sequence id (`job-000001`); doubles as the shard file
+    /// name and — being sortable — the deterministic crowd-fold order.
+    pub id: String,
+    /// The submitted manifest.
+    pub manifest: JobManifest,
+    /// Lifecycle status.
+    pub status: JobStatus,
+    /// Error text when `status` is [`JobStatus::Failed`].
+    pub error: Option<String>,
+    /// Warm-start trials snapshotted from the crowd database at
+    /// submission (empty when the manifest's `warm` is false).
+    pub warm_trials: Vec<Trial>,
+}
+
+impl JobState {
+    /// Serialize to the `ranntune-jobstate-v1` document with the live
+    /// in-memory status — what the HTTP API returns.
+    pub fn to_json(&self) -> Json {
+        self.json_with_status(self.status)
+    }
+
+    /// Serialize for the durable state file. An in-memory
+    /// [`JobStatus::Running`] persists as `queued`: a restarted daemon
+    /// cannot distinguish the two (both mean "resume from the session
+    /// checkpoint"), so the state file never claims more than it knows.
+    fn disk_json(&self) -> Json {
+        let disk_status = match self.status {
+            JobStatus::Running => JobStatus::Queued,
+            s => s,
+        };
+        self.json_with_status(disk_status)
+    }
+
+    fn json_with_status(&self, disk_status: JobStatus) -> Json {
+        let mut pairs = vec![
+            ("format", Json::Str(JOBSTATE_FORMAT.into())),
+            ("id", Json::Str(self.id.clone())),
+            ("manifest", self.manifest.to_json()),
+            ("status", Json::Str(disk_status.name().into())),
+            (
+                "warm_trials",
+                Json::Arr(self.warm_trials.iter().map(Trial::to_json).collect()),
+            ),
+        ];
+        if let Some(e) = &self.error {
+            pairs.push(("error", Json::Str(e.clone())));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Parse a state document.
+    pub fn from_json(v: &Json) -> Result<JobState, String> {
+        let id = v
+            .get("id")
+            .and_then(|x| x.as_str())
+            .ok_or("job state: missing id")?
+            .to_string();
+        let manifest =
+            JobManifest::from_json(v.get("manifest").ok_or("job state: missing manifest")?)?;
+        let status = v
+            .get("status")
+            .and_then(|x| x.as_str())
+            .and_then(JobStatus::parse)
+            .ok_or("job state: missing status")?;
+        let warm_trials = v
+            .get("warm_trials")
+            .and_then(|x| x.as_arr())
+            .unwrap_or(&[])
+            .iter()
+            .map(Trial::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        let error = v.get("error").and_then(|x| x.as_str()).map(str::to_string);
+        Ok(JobState { id, manifest, status, error, warm_trials })
+    }
+
+    /// Durably persist under the daemon's state directory.
+    pub fn save(&self, dirs: &StateDirs) -> Result<(), String> {
+        crate::fsio::write_atomic(&dirs.job_path(&self.id), &self.disk_json().to_string_pretty())
+            .map_err(|e| e.to_string())
+    }
+}
+
+/// The daemon's on-disk layout, rooted at `--state`:
+///
+/// ```text
+/// <state>/
+///   jobs/<job-id>.json      # durable job state (manifest + status + warm set)
+///   sessions/<job-id>.json  # mid-run session checkpoint (batch granular)
+///   shards/<job-id>.json    # per-job HistoryDb, written on completion
+///   crowd.json              # fold of done-job shards, in job-id order
+///   addr                    # "host:port" of the live daemon (for clients)
+/// ```
+#[derive(Clone, Debug)]
+pub struct StateDirs {
+    root: PathBuf,
+}
+
+impl StateDirs {
+    /// Bind to a state root (directories are created by [`StateDirs::init`]).
+    pub fn new(root: &Path) -> StateDirs {
+        StateDirs { root: root.to_path_buf() }
+    }
+
+    /// The state root.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Create the layout's directories.
+    pub fn init(&self) -> Result<(), String> {
+        for d in ["jobs", "sessions", "shards"] {
+            std::fs::create_dir_all(self.root.join(d)).map_err(|e| e.to_string())?;
+        }
+        Ok(())
+    }
+
+    /// Path of a job's durable state file.
+    pub fn job_path(&self, id: &str) -> PathBuf {
+        self.root.join("jobs").join(format!("{id}.json"))
+    }
+
+    /// Path of a job's mid-run session checkpoint.
+    pub fn session_path(&self, id: &str) -> PathBuf {
+        self.root.join("sessions").join(format!("{id}.json"))
+    }
+
+    /// Path of a job's completed-trials shard.
+    pub fn shard_path(&self, id: &str) -> PathBuf {
+        self.root.join("shards").join(format!("{id}.json"))
+    }
+
+    /// Path of the shared crowd database.
+    pub fn crowd_path(&self) -> PathBuf {
+        self.root.join("crowd.json")
+    }
+
+    /// Path of the live daemon's address file.
+    pub fn addr_path(&self) -> PathBuf {
+        self.root.join("addr")
+    }
+
+    /// Load every persisted job state, sorted by job id.
+    pub fn load_jobs(&self) -> Result<Vec<JobState>, String> {
+        let dir = self.root.join("jobs");
+        let mut out = Vec::new();
+        let Ok(entries) = std::fs::read_dir(&dir) else {
+            return Ok(out);
+        };
+        let mut paths: Vec<PathBuf> = entries
+            .flatten()
+            .map(|e| e.path())
+            .filter(|p| p.extension().is_some_and(|e| e == "json"))
+            .collect();
+        paths.sort();
+        for p in paths {
+            let text = std::fs::read_to_string(&p).map_err(|e| e.to_string())?;
+            out.push(JobState::from_json(&crate::json::Json::parse(&text)?)?);
+        }
+        Ok(out)
+    }
+
+    /// Allocate the next job id: one past the highest persisted sequence
+    /// number, zero-padded so lexicographic order is submission order.
+    pub fn next_job_id(&self) -> String {
+        let mut max = 0u64;
+        if let Ok(entries) = std::fs::read_dir(self.root.join("jobs")) {
+            for e in entries.flatten() {
+                let name = e.file_name();
+                let name = name.to_string_lossy();
+                if let Some(seq) = name
+                    .strip_prefix("job-")
+                    .and_then(|s| s.strip_suffix(".json"))
+                    .and_then(|s| s.parse::<u64>().ok())
+                {
+                    max = max.max(seq);
+                }
+            }
+        }
+        format!("job-{:06}", max + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_round_trips_and_defaults_apply() {
+        let mut m = JobManifest::new("GA", 300, 15, TunerKind::Tpe);
+        m.tenant = "team-a".into();
+        m.budget = 8;
+        m.timing = TimingMode::Modeled;
+        m.warm = true;
+        let back = JobManifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(back, m);
+        // Minimal document: only problem identity + tuner required.
+        let minimal =
+            Json::parse(r#"{"dataset":"GA","m":200,"n":10,"tuner":"lhsmdu"}"#).unwrap();
+        let j = JobManifest::from_json(&minimal).unwrap();
+        assert_eq!(j.tenant, "anon");
+        assert_eq!(j.budget, 20);
+        assert_eq!(j.timing, TimingMode::Measured);
+        assert_eq!(j.problem_id(), "GA-200x10-s1");
+    }
+
+    #[test]
+    fn manifest_rejects_bad_documents() {
+        for bad in [
+            r#"{"m":200,"n":10,"tuner":"lhsmdu"}"#,
+            r#"{"dataset":"GA","m":200,"n":10,"tuner":"nope"}"#,
+            r#"{"dataset":"GA","m":200,"n":10,"tuner":"tpe","budget":0}"#,
+            r#"{"dataset":"GA","m":10,"n":10,"tuner":"tpe"}"#,
+            r#"{"dataset":"GA","m":200,"n":10,"tuner":"tpe","timing":"warp"}"#,
+            r#"{"format":"ranntune-job-v9","dataset":"GA","m":200,"n":10,"tuner":"tpe"}"#,
+        ] {
+            assert!(JobManifest::from_json(&Json::parse(bad).unwrap()).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn session_seed_matches_campaign_cell_derivation() {
+        let m = JobManifest::new("GA", 300, 15, TunerKind::Tpe);
+        let cell = Cell { problem: m.problem(), tuner: TunerKind::Tpe };
+        assert_eq!(m.session_seed(), cell.seed(m.seed));
+        // Seed depends on the problem identity and tuner.
+        let mut other = m.clone();
+        other.data_seed += 1;
+        assert_ne!(m.session_seed(), other.session_seed());
+    }
+
+    #[test]
+    fn job_state_round_trips_and_running_persists_as_queued() {
+        let dirs_root =
+            std::env::temp_dir().join(format!("ranntune_jobstate_{}", std::process::id()));
+        let dirs = StateDirs::new(&dirs_root);
+        dirs.init().unwrap();
+        let state = JobState {
+            id: "job-000001".into(),
+            manifest: JobManifest::new("GA", 300, 15, TunerKind::Lhsmdu),
+            status: JobStatus::Running,
+            error: None,
+            warm_trials: Vec::new(),
+        };
+        state.save(&dirs).unwrap();
+        let loaded = dirs.load_jobs().unwrap();
+        assert_eq!(loaded.len(), 1);
+        assert_eq!(loaded[0].id, "job-000001");
+        // Running collapses to queued on disk: a restart must re-drive it.
+        assert_eq!(loaded[0].status, JobStatus::Queued);
+        assert_eq!(dirs.next_job_id(), "job-000002");
+        std::fs::remove_dir_all(&dirs_root).ok();
+    }
+
+    #[test]
+    fn job_ids_sort_in_submission_order() {
+        let dirs_root =
+            std::env::temp_dir().join(format!("ranntune_jobids_{}", std::process::id()));
+        let dirs = StateDirs::new(&dirs_root);
+        dirs.init().unwrap();
+        assert_eq!(dirs.next_job_id(), "job-000001");
+        for i in 1..=11u64 {
+            std::fs::write(dirs.job_path(&format!("job-{i:06}")), "{}").unwrap();
+        }
+        assert_eq!(dirs.next_job_id(), "job-000012");
+        std::fs::remove_dir_all(&dirs_root).ok();
+    }
+}

@@ -1,0 +1,442 @@
+//! Tuning-as-a-service: the `ranntune serve` daemon and its client.
+//!
+//! The paper frames surrogate autotuning as something a *facility* runs
+//! continuously, not a one-shot script: GPTune's history database is
+//! explicitly a crowd resource that later users' tunings draw from
+//! (§2.3, §5.3). This module is that deployment shape for the crate's
+//! pipeline — a long-running daemon that accepts tuning jobs over
+//! HTTP/JSON, time-slices their sessions across a small worker pool
+//! with per-tenant fair-share caps, and folds every completed job into
+//! one shared crowd [`crate::db::HistoryDb`] keyed by problem
+//! fingerprint, so later submissions warm-start from earlier tenants'
+//! evaluations and TLA transfer-learns across them.
+//!
+//! Everything is pure std, like the rest of the crate: the HTTP layer
+//! ([`http`]) is a deliberately tiny one-request-per-connection subset,
+//! job manifests ([`job`]) are versioned hand-rolled JSON with
+//! `BTreeMap`-sorted keys, and the scheduler ([`scheduler`]) reuses the
+//! pausable [`crate::objective::TuningSession`] checkpoints as its
+//! time-slice mechanism.
+//!
+//! ## Crash and drain story
+//!
+//! Every slice ends on an atomically-written session checkpoint and
+//! every state transition on an atomically-written job file, so
+//! `kill -9` at any instant loses at most the current in-flight batch:
+//! a restarted daemon requeues every non-terminal job and resumes each
+//! session from its checkpoint, asking the tuner the identical question
+//! sequence (batch slicing never splits a proposal batch). `SIGTERM`
+//! (or `POST /v1/drain`) is the graceful version — stop accepting
+//! jobs, let workers finish their current slice, checkpoint, exit.
+//!
+//! ## Routes
+//!
+//! | method & path              | meaning                                |
+//! |----------------------------|----------------------------------------|
+//! | `GET /v1/healthz`          | liveness + drain flag                  |
+//! | `POST /v1/jobs`            | submit a job manifest → job state      |
+//! | `GET /v1/jobs`             | list all jobs                          |
+//! | `GET /v1/jobs/ID`          | one job's state                        |
+//! | `GET /v1/jobs/ID/trials`   | recorded trials so far (`?since=K`)    |
+//! | `GET /v1/db`               | the crowd history database             |
+//! | `POST /v1/drain`           | graceful drain (also `/v1/shutdown`)   |
+
+pub mod http;
+pub mod job;
+pub mod scheduler;
+
+pub use job::{JobManifest, JobState, JobStatus, StateDirs};
+pub use scheduler::{drive_session, Scheduler, ServeConfig, SessionSpec, SliceLimits};
+
+use crate::json::Json;
+use http::Request;
+use std::io::ErrorKind;
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+/// Daemon options, filled from `ranntune serve` flags.
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    /// State directory (jobs, sessions, shards, crowd db, addr file).
+    pub state: PathBuf,
+    /// TCP port to listen on (0 = OS-assigned; the bound address is
+    /// printed and written to `<state>/addr` either way).
+    pub port: u16,
+    /// Scheduler worker threads.
+    pub workers: usize,
+    /// Fair-share and slicing tunables.
+    pub config: ServeConfig,
+}
+
+/// Set by the SIGTERM/SIGINT handler; polled by the accept loop.
+static TERM_FLAG: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+fn install_term_handler() {
+    extern "C" fn on_term(_sig: i32) {
+        // Only async-signal-safe work here: set the flag, nothing else.
+        TERM_FLAG.store(true, Ordering::Release);
+    }
+    extern "C" {
+        // std already links libc; bind `signal` directly rather than
+        // growing a dependency for one syscall.
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> isize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGTERM, on_term);
+        signal(SIGINT, on_term);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_term_handler() {}
+
+/// Run the daemon: open the scheduler over the state directory (resuming
+/// any jobs a previous process left non-terminal), bind the listener,
+/// write `<state>/addr`, and serve until drained.
+pub fn run(opts: &ServeOpts) -> Result<(), String> {
+    install_term_handler();
+    let sched = Scheduler::open(StateDirs::new(&opts.state), opts.config.clone())?;
+    let listener = TcpListener::bind(("127.0.0.1", opts.port))
+        .map_err(|e| format!("bind 127.0.0.1:{}: {e}", opts.port))?;
+    listener.set_nonblocking(true).map_err(|e| e.to_string())?;
+    let addr = listener.local_addr().map_err(|e| e.to_string())?;
+    crate::fsio::write_atomic(&sched.dirs().addr_path(), &addr.to_string())
+        .map_err(|e| e.to_string())?;
+    println!("ranntune serve: listening on {addr} (state {})", opts.state.display());
+
+    std::thread::scope(|s| {
+        let sref = &sched;
+        let workers = s.spawn(move || sref.run_until_drained(opts.workers));
+        loop {
+            if TERM_FLAG.load(Ordering::Acquire) {
+                sched.drain();
+            }
+            if sched.is_draining() {
+                break;
+            }
+            match listener.accept() {
+                Ok((mut conn, _)) => handle_conn(&sched, &mut conn),
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(50)),
+            }
+        }
+        workers.join().ok();
+    });
+    std::fs::remove_file(sched.dirs().addr_path()).ok();
+    println!("ranntune serve: drained, exiting");
+    Ok(())
+}
+
+fn handle_conn(sched: &Scheduler, conn: &mut TcpStream) {
+    let req = match http::read_request(conn) {
+        Ok(r) => r,
+        Err(_) => return, // malformed request: just drop the connection
+    };
+    let (status, body) = route(sched, &req);
+    let _ = http::respond(conn, status, &body);
+}
+
+fn err_json(msg: &str) -> Json {
+    Json::obj(vec![("error", Json::Str(msg.into()))])
+}
+
+/// Dispatch one request against the scheduler.
+fn route(sched: &Scheduler, req: &Request) -> (u16, Json) {
+    let path = req.path.trim_matches('/').to_string();
+    let segs: Vec<&str> = path.split('/').collect();
+    match (req.method.as_str(), segs.as_slice()) {
+        ("GET", ["v1", "healthz"]) => (
+            200,
+            Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("draining", Json::Bool(sched.is_draining())),
+            ]),
+        ),
+        ("POST", ["v1", "jobs"]) => {
+            let submitted = req
+                .json()
+                .and_then(|doc| JobManifest::from_json(&doc))
+                .and_then(|m| sched.submit(m));
+            match submitted {
+                Ok(state) => (202, state.to_json()),
+                Err(e) => (400, err_json(&e)),
+            }
+        }
+        ("GET", ["v1", "jobs"]) => (
+            200,
+            Json::obj(vec![(
+                "jobs",
+                Json::Arr(sched.jobs().iter().map(JobState::to_json).collect()),
+            )]),
+        ),
+        ("GET", ["v1", "jobs", id]) => match sched.job(id) {
+            Some(state) => (200, state.to_json()),
+            None => (404, err_json(&format!("unknown job {id:?}"))),
+        },
+        ("GET", ["v1", "jobs", id, "trials"]) => {
+            let since = req
+                .query
+                .get("since")
+                .and_then(|s| s.parse::<usize>().ok())
+                .unwrap_or(0);
+            match sched.trials_json(id) {
+                Ok(trials) => {
+                    let total = trials.len();
+                    let tail: Vec<Json> = trials.into_iter().skip(since).collect();
+                    (
+                        200,
+                        Json::obj(vec![
+                            ("total", Json::Num(total as f64)),
+                            ("trials", Json::Arr(tail)),
+                        ]),
+                    )
+                }
+                Err(e) => (404, err_json(&e)),
+            }
+        }
+        ("GET", ["v1", "db"]) => (200, sched.crowd().to_json()),
+        ("POST", ["v1", "drain"]) | ("POST", ["v1", "shutdown"]) => {
+            sched.drain();
+            (202, Json::obj(vec![("draining", Json::Bool(true))]))
+        }
+        _ => (404, err_json(&format!("no route {} {}", req.method, req.path))),
+    }
+}
+
+// ---- client ----
+
+/// What `ranntune client` should do against a running daemon.
+#[derive(Clone, Debug)]
+pub enum ClientAction {
+    /// `GET /v1/healthz`, print the response.
+    Health,
+    /// Submit a manifest (inline JSON text or a path to a JSON file);
+    /// prints the accepted job state (its `id` field names the job).
+    Submit(String),
+    /// Print one job's state (or all jobs when the id is empty).
+    Status(String),
+    /// Poll a job until it reaches a terminal status; print the final
+    /// state. Exits with an error if the job failed or the timeout hit.
+    Wait(String),
+    /// Print a job's recorded trials so far.
+    Trials(String),
+    /// Fetch the crowd database; print it, or write it to the path.
+    Db(Option<PathBuf>),
+    /// Ask the daemon to drain gracefully.
+    Drain,
+}
+
+/// Client options, filled from `ranntune client` flags.
+#[derive(Clone, Debug)]
+pub struct ClientOpts {
+    /// Daemon address, `host:port`.
+    pub addr: String,
+    /// The one action to perform.
+    pub action: ClientAction,
+    /// Poll timeout for [`ClientAction::Wait`].
+    pub wait_timeout: Duration,
+}
+
+/// Resolve the daemon address: an explicit `--addr` wins; otherwise read
+/// the `<state>/addr` file the daemon writes on startup.
+pub fn resolve_addr(addr: Option<&str>, state: Option<&Path>) -> Result<String, String> {
+    if let Some(a) = addr {
+        return Ok(a.to_string());
+    }
+    let Some(root) = state else {
+        return Err("need --addr HOST:PORT or --state DIR (to read its addr file)".into());
+    };
+    let path = StateDirs::new(root).addr_path();
+    std::fs::read_to_string(&path)
+        .map(|s| s.trim().to_string())
+        .map_err(|e| format!("read {}: {e}", path.display()))
+}
+
+fn expect_ok(status: u16, body: &Json) -> Result<(), String> {
+    if (200..300).contains(&status) {
+        return Ok(());
+    }
+    let msg = body.get("error").and_then(|x| x.as_str()).unwrap_or("unknown error");
+    Err(format!("daemon returned {status}: {msg}"))
+}
+
+/// Run one client action against the daemon; prints the daemon's JSON
+/// answer to stdout (CI parses it with `python3 -c "import json,…"`).
+pub fn run_client(opts: &ClientOpts) -> Result<(), String> {
+    let addr = opts.addr.as_str();
+    match &opts.action {
+        ClientAction::Health => {
+            let (status, body) = http::client_request(addr, "GET", "/v1/healthz", None)?;
+            expect_ok(status, &body)?;
+            println!("{}", body.to_string_pretty());
+        }
+        ClientAction::Submit(spec) => {
+            let text = if Path::new(spec).is_file() {
+                std::fs::read_to_string(spec).map_err(|e| format!("read {spec}: {e}"))?
+            } else {
+                spec.clone()
+            };
+            let doc = Json::parse(&text)?;
+            let (status, body) = http::client_request(addr, "POST", "/v1/jobs", Some(&doc))?;
+            expect_ok(status, &body)?;
+            println!("{}", body.to_string_pretty());
+        }
+        ClientAction::Status(id) => {
+            let path =
+                if id.is_empty() { "/v1/jobs".to_string() } else { format!("/v1/jobs/{id}") };
+            let (status, body) = http::client_request(addr, "GET", &path, None)?;
+            expect_ok(status, &body)?;
+            println!("{}", body.to_string_pretty());
+        }
+        ClientAction::Wait(id) => {
+            if id.is_empty() {
+                return Err("--wait needs a job id".into());
+            }
+            let deadline = Instant::now() + opts.wait_timeout;
+            loop {
+                let (status, body) =
+                    http::client_request(addr, "GET", &format!("/v1/jobs/{id}"), None)?;
+                expect_ok(status, &body)?;
+                let st = body.get("status").and_then(|x| x.as_str()).unwrap_or("");
+                if st == "done" {
+                    println!("{}", body.to_string_pretty());
+                    return Ok(());
+                }
+                if st == "failed" {
+                    let why = body.get("error").and_then(|x| x.as_str()).unwrap_or("?");
+                    return Err(format!("job {id} failed: {why}"));
+                }
+                if Instant::now() >= deadline {
+                    return Err(format!("timed out waiting for job {id} (last status {st:?})"));
+                }
+                std::thread::sleep(Duration::from_millis(200));
+            }
+        }
+        ClientAction::Trials(id) => {
+            if id.is_empty() {
+                return Err("--trials needs a job id".into());
+            }
+            let (status, body) =
+                http::client_request(addr, "GET", &format!("/v1/jobs/{id}/trials"), None)?;
+            expect_ok(status, &body)?;
+            println!("{}", body.to_string_pretty());
+        }
+        ClientAction::Db(out) => {
+            let (status, body) = http::client_request(addr, "GET", "/v1/db", None)?;
+            expect_ok(status, &body)?;
+            match out {
+                Some(path) => {
+                    crate::fsio::write_atomic(path, &body.to_string_pretty())
+                        .map_err(|e| e.to_string())?;
+                    println!("wrote crowd db to {}", path.display());
+                }
+                None => println!("{}", body.to_string_pretty()),
+            }
+        }
+        ClientAction::Drain => {
+            let (status, body) = http::client_request(addr, "POST", "/v1/drain", None)?;
+            expect_ok(status, &body)?;
+            println!("{}", body.to_string_pretty());
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::TunerKind;
+    use crate::objective::TimingMode;
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("ranntune_serve_{tag}_{}", std::process::id()))
+    }
+
+    /// End-to-end over real sockets: submit two jobs through the route
+    /// table, drive them, and read state/trials/db back out.
+    #[test]
+    fn routes_cover_the_job_lifecycle() {
+        let dir = tmp("routes");
+        let _ = std::fs::remove_dir_all(&dir);
+        let sched =
+            Scheduler::open(StateDirs::new(&dir), ServeConfig::default()).unwrap();
+
+        let mut manifest = JobManifest::new("GA", 240, 10, TunerKind::Lhsmdu);
+        manifest.budget = 3;
+        manifest.repeats = 1;
+        manifest.timing = TimingMode::Modeled;
+        let submit = Request {
+            method: "POST".into(),
+            path: "/v1/jobs".into(),
+            query: Default::default(),
+            body: manifest.to_json().to_string_pretty(),
+        };
+        let (status, body) = route(&sched, &submit);
+        assert_eq!(status, 202, "{body:?}");
+        let id = body.get("id").and_then(|x| x.as_str()).unwrap().to_string();
+        assert_eq!(body.get("status").and_then(|x| x.as_str()), Some("queued"));
+
+        sched.run_until_idle(1);
+
+        let get = |path: &str| {
+            route(
+                &sched,
+                &Request {
+                    method: "GET".into(),
+                    path: path.into(),
+                    query: Default::default(),
+                    body: String::new(),
+                },
+            )
+        };
+        let (status, state) = get(&format!("/v1/jobs/{id}"));
+        assert_eq!(status, 200);
+        assert_eq!(state.get("status").and_then(|x| x.as_str()), Some("done"));
+        let (status, trials) = get(&format!("/v1/jobs/{id}/trials"));
+        assert_eq!(status, 200);
+        assert_eq!(trials.get("total").and_then(|x| x.as_f64()), Some(3.0));
+        let (status, db) = get("/v1/db");
+        assert_eq!(status, 200);
+        assert!(db.get("tasks").is_some());
+        let (status, list) = get("/v1/jobs");
+        assert_eq!(status, 200);
+        assert_eq!(list.get("jobs").and_then(|x| x.as_arr()).unwrap().len(), 1);
+        let (status, _) = get("/v1/jobs/job-999999");
+        assert_eq!(status, 404);
+        let (status, health) = get("/v1/healthz");
+        assert_eq!(status, 200);
+        assert_eq!(health.get("ok").and_then(|x| x.as_bool()), Some(true));
+
+        // Drain via the route; further submissions are refused.
+        let drain = Request {
+            method: "POST".into(),
+            path: "/v1/drain".into(),
+            query: Default::default(),
+            body: String::new(),
+        };
+        assert_eq!(route(&sched, &drain).0, 202);
+        let (status, body) = route(&sched, &submit);
+        assert_eq!(status, 400, "{body:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resolve_addr_prefers_flag_then_state_file() {
+        let dir = tmp("addr");
+        let _ = std::fs::remove_dir_all(&dir);
+        assert_eq!(resolve_addr(Some("1.2.3.4:80"), None).unwrap(), "1.2.3.4:80");
+        assert!(resolve_addr(None, None).is_err());
+        let dirs = StateDirs::new(&dir);
+        dirs.init().unwrap();
+        crate::fsio::write_atomic(&dirs.addr_path(), "127.0.0.1:4567\n").unwrap();
+        assert_eq!(resolve_addr(None, Some(&dir)).unwrap(), "127.0.0.1:4567");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,682 @@
+//! The session scheduler: one reusable driver for tuning sessions
+//! ([`drive_session`], extracted from `campaign::runner`) plus the
+//! daemon's fair-share [`Scheduler`] that time-slices many concurrent
+//! jobs onto it.
+//!
+//! ## The extracted driver
+//!
+//! PR 4 made sessions pausable ask/tell state machines with atomic
+//! checkpoints precisely so a scheduler could time-slice them. The
+//! assembly around a session — build the problem, derive the seed
+//! streams, collect TLA source data, attach the checkpoint — used to
+//! live inside the campaign runner; [`drive_session`] hoists it into a
+//! shared primitive consumed by both the campaign (whole-session or
+//! `--max-trials`-limited visits) and the serving daemon (batch-granular
+//! slices via [`SliceLimits::max_batches`]). Seed derivation is
+//! unchanged down to the salt constants, so campaign results are
+//! byte-identical to the pre-extraction code.
+//!
+//! ## The serving scheduler
+//!
+//! [`Scheduler`] owns the daemon's job table. Jobs run as round-robin
+//! time slices at **trial-batch granularity**: a worker claims the
+//! longest-waiting ready job (skipping tenants at their concurrent-slice
+//! cap — the fair-share policy), resumes its session from the checkpoint
+//! for [`ServeConfig::slice_batches`] batches, and requeues it. Because a
+//! sliced session asks its tuner the identical question sequence an
+//! uninterrupted run would (no batch is ever split), a job's recorded
+//! trials are a pure function of its state file — never of worker count
+//! or interleaving.
+//!
+//! Completed jobs commit like campaign cells: shard first, job state
+//! second, crowd fold third, session-checkpoint removal last. The crowd
+//! database is always rebuilt by re-reading done-job shards in job-id
+//! order, so `crowd.json` is byte-identical across worker counts and
+//! across kill/restart cycles — pinned by `tests/serve_scheduler.rs`.
+
+use super::job::{JobManifest, JobState, JobStatus, StateDirs};
+use crate::campaign::TunerKind;
+use crate::data::ProblemSpec;
+use crate::db::HistoryDb;
+use crate::json::Json;
+use crate::objective::{
+    Constants, History, Objective, ParallelEvaluator, ParamSpace, SessionOutcome, StopReason,
+    Trial, TuningSession, TuningTask,
+};
+use crate::tuners::SourceSample;
+use std::collections::{BTreeMap, VecDeque};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+/// Salt separating the tuner's proposal RNG from the objective's solver
+/// streams within a session (moved verbatim from `campaign::runner`).
+const TUNER_SEED_SALT: u64 = 0x7454_4e52_u64;
+/// Salt separating TLA source collection from everything else.
+const SOURCE_SEED_SALT: u64 = 0x5059_4c0a_u64;
+
+/// Everything that determines a session's recorded trials: the problem,
+/// the tuner, the budget, the derived seed, and the objective constants.
+/// Both the campaign runner and the serving scheduler build one of these
+/// and hand it to [`drive_session`].
+#[derive(Clone, Debug)]
+pub struct SessionSpec {
+    /// The problem to tune.
+    pub problem: ProblemSpec,
+    /// The tuner to run on it.
+    pub tuner: TunerKind,
+    /// Evaluation budget (reference included).
+    pub budget: usize,
+    /// The session's base seed (a campaign cell seed, or
+    /// [`JobManifest::session_seed`]); objective, tuner, and source
+    /// streams are salted off it exactly as the campaign always did.
+    pub session_seed: u64,
+    /// Objective constants (repeats, timing mode, penalty/allowance).
+    pub constants: Constants,
+    /// Threads for within-session batch evaluation (1 = serial).
+    pub eval_threads: usize,
+    /// TLA only: source samples collected on the down-scaled sibling.
+    pub source_samples: usize,
+}
+
+impl SessionSpec {
+    /// The session spec of a job manifest.
+    pub fn from_manifest(m: &JobManifest) -> SessionSpec {
+        SessionSpec {
+            problem: m.problem(),
+            tuner: m.tuner,
+            budget: m.budget,
+            session_seed: m.session_seed(),
+            constants: Constants {
+                num_repeats: m.repeats,
+                timing: m.timing,
+                ..Constants::default()
+            },
+            eval_threads: m.eval_threads,
+            source_samples: m.source_samples,
+        }
+    }
+}
+
+/// How much of the session one [`drive_session`] invocation may run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SliceLimits {
+    /// Pause after this many new evaluations (the campaign's
+    /// `--max-trials` countdown; proposal batches are split exactly).
+    pub max_new_evals: Option<usize>,
+    /// Pause after this many evaluated batches (the daemon's time-slice
+    /// unit; batches are never split).
+    pub max_batches: Option<usize>,
+}
+
+impl SliceLimits {
+    /// No limits: run the session to a genuine stop.
+    pub fn none() -> SliceLimits {
+        SliceLimits::default()
+    }
+}
+
+/// Assemble and run (or resume) one tuning session: build the problem,
+/// derive the seed streams, collect TLA source data when the tuner needs
+/// it, attach the checkpoint at `ckpt_path` (resuming from it if it
+/// exists), inject `warm` trials into the tuner, and drive the ask/tell
+/// loop until a stop rule or a [`SliceLimits`] quota fires.
+///
+/// `observer` (when given) sees every newly recorded trial in order —
+/// the daemon's per-batch progress stream hook.
+pub fn drive_session(
+    spec: &SessionSpec,
+    ckpt_path: &Path,
+    limits: SliceLimits,
+    warm: &[Trial],
+    observer: Option<&mut dyn FnMut(&Trial)>,
+) -> Result<SessionOutcome, String> {
+    let problem = spec.problem.build()?;
+    let source = if spec.tuner.needs_source() {
+        collect_session_source(spec)?
+    } else {
+        Vec::new()
+    };
+    let task =
+        TuningTask { problem, space: ParamSpace::paper(), constants: spec.constants.clone() };
+    let mut obj = Objective::new(task, spec.session_seed);
+    if spec.eval_threads > 1 {
+        obj.set_evaluator(Box::new(ParallelEvaluator::new(spec.eval_threads)));
+    }
+    let mut tuner = spec.tuner.make(spec.constants.num_pilots, source);
+    let mut session = TuningSession::new(
+        &mut obj,
+        tuner.as_mut(),
+        spec.budget,
+        spec.session_seed ^ TUNER_SEED_SALT,
+    )
+    .checkpoint_to(ckpt_path);
+    if !warm.is_empty() {
+        session = session.warm_start(warm);
+    }
+    if let Some(q) = limits.max_new_evals {
+        session = session.pause_after(q);
+    }
+    if let Some(b) = limits.max_batches {
+        session = session.pause_after_batches(b);
+    }
+    if let Some(obs) = observer {
+        session = session.on_trial(move |t| obs(t));
+    }
+    session.run()
+}
+
+/// Pre-collect TLA source samples on a down-scaled sibling of the
+/// problem: same generator family, m/4 rows (floored at n + 50), shifted
+/// data seed — the paper's §5.3.1 source protocol, fully determined by
+/// the spec (moved verbatim from `campaign::runner`).
+fn collect_session_source(spec: &SessionSpec) -> Result<Vec<SourceSample>, String> {
+    let p = &spec.problem;
+    let src_m = (p.m / 4).max(p.n + 50).min(p.m);
+    let src_problem = crate::data::build_problem(&p.dataset, src_m, p.n, p.data_seed + 400)?;
+    Ok(crate::cli::figures::collect_source(
+        src_problem,
+        spec.constants.clone(),
+        spec.source_samples,
+        spec.session_seed ^ SOURCE_SEED_SALT,
+    ))
+}
+
+/// Scheduler tunables.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Max concurrent slices per tenant (the fair-share cap).
+    pub tenant_cap: usize,
+    /// Trial batches per scheduling slice (1 = finest-grained rotation).
+    pub slice_batches: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig { tenant_cap: 2, slice_batches: 1 }
+    }
+}
+
+/// Mutable scheduler state behind the lock.
+struct SchedInner {
+    /// All known jobs, keyed by id (sorted ⇒ deterministic fold order).
+    jobs: BTreeMap<String, JobState>,
+    /// Round-robin ready queue of non-terminal job ids.
+    queue: VecDeque<String>,
+    /// Concurrent slices in flight per tenant.
+    tenant_active: BTreeMap<String, usize>,
+    /// Total slices in flight.
+    in_flight: usize,
+    /// Next job sequence number.
+    next_seq: u64,
+    /// In-memory copy of the crowd database (mirrors `crowd.json`).
+    crowd: HistoryDb,
+}
+
+/// The daemon's job scheduler: accepts jobs, time-slices their sessions
+/// across worker threads with per-tenant fair-share caps, and folds
+/// completed jobs into the shared crowd [`HistoryDb`].
+pub struct Scheduler {
+    dirs: StateDirs,
+    config: ServeConfig,
+    inner: Mutex<SchedInner>,
+    cv: Condvar,
+    draining: AtomicBool,
+}
+
+fn lock_inner<'s>(m: &'s Mutex<SchedInner>) -> MutexGuard<'s, SchedInner> {
+    // Scheduler state is updated in small consistent steps; recover from
+    // poisoning like the kernel pool does (fatal-for-a-daemon otherwise).
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl Scheduler {
+    /// Open (or create) a scheduler over a state directory, restoring
+    /// every persisted job: terminal jobs keep their status, all others
+    /// are requeued — their sessions resume mid-run from their
+    /// checkpoints. The crowd database is rebuilt from done-job shards.
+    pub fn open(dirs: StateDirs, config: ServeConfig) -> Result<Scheduler, String> {
+        dirs.init()?;
+        let jobs_vec = dirs.load_jobs()?;
+        let mut jobs = BTreeMap::new();
+        let mut queue = VecDeque::new();
+        let mut next_seq = 1u64;
+        for j in jobs_vec {
+            if let Some(seq) =
+                j.id.strip_prefix("job-").and_then(|s| s.parse::<u64>().ok())
+            {
+                next_seq = next_seq.max(seq + 1);
+            }
+            if !j.status.is_terminal() {
+                queue.push_back(j.id.clone());
+            } else {
+                // A kill between job-state write and checkpoint removal
+                // leaves an orphan session file; sweep it.
+                std::fs::remove_file(dirs.session_path(&j.id)).ok();
+            }
+            jobs.insert(j.id.clone(), j);
+        }
+        let crowd = fold_crowd(&dirs, &jobs)?;
+        crowd.save(&dirs.crowd_path()).map_err(|e| e.to_string())?;
+        Ok(Scheduler {
+            dirs,
+            config,
+            inner: Mutex::new(SchedInner {
+                jobs,
+                queue,
+                tenant_active: BTreeMap::new(),
+                in_flight: 0,
+                next_seq,
+                crowd,
+            }),
+            cv: Condvar::new(),
+            draining: AtomicBool::new(false),
+        })
+    }
+
+    /// The scheduler's state directory.
+    pub fn dirs(&self) -> &StateDirs {
+        &self.dirs
+    }
+
+    /// Accept a job: snapshot its warm-start trials from the current
+    /// crowd database (determinism anchor — the snapshot is persisted in
+    /// the job state, so a restarted daemon re-runs the job with the
+    /// identical warm set), persist, and enqueue. Refused while draining.
+    pub fn submit(&self, manifest: JobManifest) -> Result<JobState, String> {
+        if self.draining.load(Ordering::Acquire) {
+            return Err("daemon is draining; job refused".into());
+        }
+        let mut inner = lock_inner(&self.inner);
+        let id = format!("job-{:06}", inner.next_seq);
+        inner.next_seq += 1;
+        let warm_trials = if manifest.warm {
+            let mut trials = Vec::new();
+            for rec in inner.crowd.tasks_named(&manifest.problem_id()) {
+                trials.extend(rec.to_history().trials().iter().cloned());
+            }
+            trials
+        } else {
+            Vec::new()
+        };
+        let state = JobState {
+            id: id.clone(),
+            manifest,
+            status: JobStatus::Queued,
+            error: None,
+            warm_trials,
+        };
+        state.save(&self.dirs)?;
+        inner.jobs.insert(id.clone(), state.clone());
+        inner.queue.push_back(id);
+        drop(inner);
+        self.cv.notify_all();
+        Ok(state)
+    }
+
+    /// Snapshot of one job's state.
+    pub fn job(&self, id: &str) -> Option<JobState> {
+        lock_inner(&self.inner).jobs.get(id).cloned()
+    }
+
+    /// Snapshot of every job, in id (= submission) order.
+    pub fn jobs(&self) -> Vec<JobState> {
+        lock_inner(&self.inner).jobs.values().cloned().collect()
+    }
+
+    /// Snapshot of the crowd database.
+    pub fn crowd(&self) -> HistoryDb {
+        lock_inner(&self.inner).crowd.clone()
+    }
+
+    /// Begin a graceful drain: no new jobs are accepted, workers finish
+    /// their current slice (each slice ends on a fresh checkpoint) and
+    /// exit. Safe to call from a signal-adjacent context.
+    pub fn drain(&self) {
+        self.draining.store(true, Ordering::Release);
+        self.cv.notify_all();
+    }
+
+    /// Is a drain in progress?
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::Acquire)
+    }
+
+    /// Run `workers` scheduler threads until every known job is terminal
+    /// (then return) or a drain is requested. The calling thread hosts
+    /// one of the workers.
+    pub fn run_until_idle(&self, workers: usize) {
+        self.run_workers(workers, true);
+    }
+
+    /// Run `workers` scheduler threads until [`Scheduler::drain`] is
+    /// called — the daemon's serving loop. The calling thread hosts one
+    /// of the workers.
+    pub fn run_until_drained(&self, workers: usize) {
+        self.run_workers(workers, false);
+    }
+
+    fn run_workers(&self, workers: usize, until_idle: bool) {
+        let workers = workers.max(1);
+        std::thread::scope(|s| {
+            for _ in 1..workers {
+                s.spawn(move || self.worker_loop(until_idle));
+            }
+            self.worker_loop(until_idle);
+        });
+    }
+
+    fn worker_loop(&self, until_idle: bool) {
+        while let Some(id) = self.claim(until_idle) {
+            let sliced = self.run_slice(&id);
+            self.retire_slice(&id, sliced);
+        }
+    }
+
+    /// Claim the longest-waiting ready job whose tenant is under the
+    /// fair-share cap; block until one exists. Returns `None` once the
+    /// loop should exit (drain requested, or — in until-idle mode —
+    /// nothing left to run).
+    fn claim(&self, until_idle: bool) -> Option<String> {
+        let mut inner = lock_inner(&self.inner);
+        loop {
+            if self.draining.load(Ordering::Acquire) {
+                return None;
+            }
+            let cap = self.config.tenant_cap.max(1);
+            let pos = inner.queue.iter().position(|id| {
+                let tenant = &inner.jobs[id].manifest.tenant;
+                inner.tenant_active.get(tenant).copied().unwrap_or(0) < cap
+            });
+            if let Some(p) = pos {
+                let id = inner.queue.remove(p).expect("position came from the queue");
+                let tenant = inner.jobs[&id].manifest.tenant.clone();
+                *inner.tenant_active.entry(tenant).or_insert(0) += 1;
+                inner.in_flight += 1;
+                if let Some(j) = inner.jobs.get_mut(&id) {
+                    j.status = JobStatus::Running;
+                }
+                return Some(id);
+            }
+            if until_idle && inner.queue.is_empty() && inner.in_flight == 0 {
+                // Wake siblings so they observe idleness and exit too.
+                self.cv.notify_all();
+                return None;
+            }
+            inner = self.cv.wait(inner).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Run one time slice of a job's session (outside the lock).
+    fn run_slice(&self, id: &str) -> Result<SessionOutcome, String> {
+        let (spec, warm) = {
+            let inner = lock_inner(&self.inner);
+            let j = inner.jobs.get(id).ok_or("job vanished from the table")?;
+            (SessionSpec::from_manifest(&j.manifest), j.warm_trials.clone())
+        };
+        drive_session(
+            &spec,
+            &self.dirs.session_path(id),
+            SliceLimits { max_new_evals: None, max_batches: Some(self.config.slice_batches) },
+            &warm,
+            None,
+        )
+    }
+
+    /// Fold the slice outcome back into the job table: requeue on pause,
+    /// commit on completion, record failures.
+    fn retire_slice(&self, id: &str, sliced: Result<SessionOutcome, String>) {
+        let mut inner = lock_inner(&self.inner);
+        if let Some(j) = inner.jobs.get(id) {
+            let tenant = j.manifest.tenant.clone();
+            if let Some(a) = inner.tenant_active.get_mut(&tenant) {
+                *a = a.saturating_sub(1);
+            }
+        }
+        inner.in_flight = inner.in_flight.saturating_sub(1);
+        let result = match sliced {
+            Ok(out) if out.stop == StopReason::Paused => {
+                inner.queue.push_back(id.to_string());
+                Ok(())
+            }
+            Ok(out) => self.commit_job(&mut inner, id, &out.history),
+            Err(e) => Err(e),
+        };
+        if let Err(e) = result {
+            if let Some(j) = inner.jobs.get_mut(id) {
+                j.status = JobStatus::Failed;
+                j.error = Some(e);
+                let _ = j.save(&self.dirs);
+            }
+        }
+        drop(inner);
+        self.cv.notify_all();
+    }
+
+    /// Commit a completed job, mirroring the campaign's kill-safe order:
+    /// shard first, job state second, crowd fold third, session
+    /// checkpoint removal last. A kill between any two steps re-runs the
+    /// remaining steps idempotently on restart (the resumed session
+    /// replays to the identical history from its checkpoint).
+    fn commit_job(
+        &self,
+        inner: &mut SchedInner,
+        id: &str,
+        history: &History,
+    ) -> Result<(), String> {
+        let manifest = inner.jobs.get(id).ok_or("job vanished from the table")?.manifest.clone();
+        let mut shard = HistoryDb::new();
+        shard.record(&manifest.problem_id(), manifest.m, manifest.n, history);
+        shard.save(&self.dirs.shard_path(id)).map_err(|e| e.to_string())?;
+        if let Some(j) = inner.jobs.get_mut(id) {
+            j.status = JobStatus::Done;
+            j.error = None;
+            j.save(&self.dirs)?;
+        }
+        let crowd = fold_crowd(&self.dirs, &inner.jobs)?;
+        crowd.save(&self.dirs.crowd_path()).map_err(|e| e.to_string())?;
+        inner.crowd = crowd;
+        std::fs::remove_file(self.dirs.session_path(id)).ok();
+        Ok(())
+    }
+
+    /// A job's recorded trials so far, as JSON values: from its shard
+    /// once done, else from its live session checkpoint — the per-batch
+    /// progress stream behind `GET /v1/jobs/<id>/trials`.
+    pub fn trials_json(&self, id: &str) -> Result<Vec<Json>, String> {
+        let Some(job) = self.job(id) else {
+            return Err(format!("unknown job {id:?}"));
+        };
+        if job.status == JobStatus::Done {
+            let shard = HistoryDb::load(&self.dirs.shard_path(id))?;
+            let rec = shard
+                .all_tasks()
+                .into_iter()
+                .next()
+                .ok_or_else(|| format!("shard for {id} is empty"))?;
+            return Ok(rec.to_history().trials().iter().map(Trial::to_json).collect());
+        }
+        let path = self.dirs.session_path(id);
+        if !path.exists() {
+            return Ok(Vec::new());
+        }
+        let text = std::fs::read_to_string(&path).map_err(|e| e.to_string())?;
+        let doc = Json::parse(&text)?;
+        Ok(doc
+            .get("trials")
+            .and_then(|x| x.as_arr())
+            .map(|a| a.to_vec())
+            .unwrap_or_default())
+    }
+}
+
+/// Rebuild the crowd database from done-job shards, folded in job-id
+/// (= submission) order — deterministic regardless of which worker
+/// finished which job when.
+fn fold_crowd(dirs: &StateDirs, jobs: &BTreeMap<String, JobState>) -> Result<HistoryDb, String> {
+    let mut db = HistoryDb::new();
+    for (id, j) in jobs {
+        if j.status == JobStatus::Done {
+            db.merge_from(&HistoryDb::load(&dirs.shard_path(id))?);
+        }
+    }
+    Ok(db)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objective::TimingMode;
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("ranntune_sched_{tag}_{}", std::process::id()))
+    }
+
+    fn modeled_job(tuner: TunerKind, budget: usize, seed: u64) -> JobManifest {
+        let mut m = JobManifest::new("GA", 260, 12, tuner);
+        m.budget = budget;
+        m.seed = seed;
+        m.repeats = 1;
+        m.timing = TimingMode::Modeled;
+        m
+    }
+
+    #[test]
+    fn drive_session_runs_and_slices_resumably() {
+        let dir = tmp("drive");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let spec = SessionSpec::from_manifest(&modeled_job(TunerKind::Lhsmdu, 5, 3));
+        let ckpt = dir.join("sess.json");
+
+        // Full run in one go.
+        let full = drive_session(&spec, &ckpt, SliceLimits::none(), &[], None).unwrap();
+        assert_eq!(full.history.len(), 5);
+        std::fs::remove_file(&ckpt).unwrap();
+
+        // Batch-sliced run, one batch per call, with a progress observer.
+        let mut seen = 0usize;
+        let sliced = loop {
+            let mut obs = |_: &Trial| seen += 1;
+            let out = drive_session(
+                &spec,
+                &ckpt,
+                SliceLimits { max_new_evals: None, max_batches: Some(1) },
+                &[],
+                Some(&mut obs),
+            )
+            .unwrap();
+            if out.stop.is_finished() {
+                break out;
+            }
+        };
+        assert_eq!(sliced.history.len(), 5);
+        assert_eq!(seen, 5, "observer must see every new trial exactly once");
+        for (a, b) in full.history.trials().iter().zip(sliced.history.trials()) {
+            assert_eq!(a.config, b.config);
+            assert_eq!(a.value.to_bits(), b.value.to_bits());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn scheduler_completes_jobs_and_folds_crowd() {
+        let dir = tmp("basic");
+        let _ = std::fs::remove_dir_all(&dir);
+        let sched =
+            Scheduler::open(StateDirs::new(&dir), ServeConfig::default()).unwrap();
+        let a = sched.submit(modeled_job(TunerKind::Lhsmdu, 4, 1)).unwrap();
+        let b = sched.submit(modeled_job(TunerKind::Tpe, 5, 2)).unwrap();
+        assert_eq!(a.id, "job-000001");
+        assert_eq!(b.id, "job-000002");
+        sched.run_until_idle(2);
+        for j in sched.jobs() {
+            assert_eq!(j.status, JobStatus::Done, "{:?}", j.error);
+        }
+        let crowd = HistoryDb::load(&sched.dirs().crowd_path()).unwrap();
+        // Both jobs tune the same problem fingerprint ⇒ one crowd task
+        // holding 4 + 5 trials.
+        assert_eq!(crowd.len(), 1);
+        assert_eq!(crowd.source_samples("GA-260x12-s1", 260, 12).len(), 9);
+        assert_eq!(sched.trials_json(&a.id).unwrap().len(), 4);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn warm_snapshot_is_taken_at_submission() {
+        let dir = tmp("warm");
+        let _ = std::fs::remove_dir_all(&dir);
+        let sched =
+            Scheduler::open(StateDirs::new(&dir), ServeConfig::default()).unwrap();
+        // Job 1 populates the crowd db.
+        sched.submit(modeled_job(TunerKind::Lhsmdu, 4, 1)).unwrap();
+        sched.run_until_idle(1);
+        // Job 2 with warm=true snapshots job 1's 4 trials.
+        let mut m = modeled_job(TunerKind::Tpe, 5, 2);
+        m.warm = true;
+        let s2 = sched.submit(m).unwrap();
+        assert_eq!(s2.warm_trials.len(), 4);
+        // The snapshot is durable: a reopened scheduler sees it.
+        sched.drain();
+        drop(sched);
+        let re = Scheduler::open(StateDirs::new(&dir), ServeConfig::default()).unwrap();
+        let j2 = re.job(&s2.id).unwrap();
+        assert_eq!(j2.status, JobStatus::Queued);
+        assert_eq!(j2.warm_trials.len(), 4);
+        re.run_until_idle(1);
+        assert_eq!(re.job(&s2.id).unwrap().status, JobStatus::Done);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn failed_jobs_record_their_error() {
+        let dir = tmp("fail");
+        let _ = std::fs::remove_dir_all(&dir);
+        let sched =
+            Scheduler::open(StateDirs::new(&dir), ServeConfig::default()).unwrap();
+        let mut bad = modeled_job(TunerKind::Lhsmdu, 4, 1);
+        bad.dataset = "NotADataset".into();
+        let s = sched.submit(bad).unwrap();
+        sched.run_until_idle(1);
+        let j = sched.job(&s.id).unwrap();
+        assert_eq!(j.status, JobStatus::Failed);
+        assert!(j.error.is_some());
+        // Failed jobs contribute nothing to the crowd.
+        assert!(sched.crowd().is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn drain_refuses_new_jobs() {
+        let dir = tmp("drain");
+        let _ = std::fs::remove_dir_all(&dir);
+        let sched =
+            Scheduler::open(StateDirs::new(&dir), ServeConfig::default()).unwrap();
+        sched.drain();
+        assert!(sched.is_draining());
+        let err = sched.submit(modeled_job(TunerKind::Lhsmdu, 3, 1)).unwrap_err();
+        assert!(err.contains("draining"));
+        // Workers exit promptly under drain.
+        sched.run_until_drained(2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tenant_cap_never_deadlocks_mixed_tenants() {
+        let dir = tmp("tenants");
+        let _ = std::fs::remove_dir_all(&dir);
+        let sched = Scheduler::open(
+            StateDirs::new(&dir),
+            ServeConfig { tenant_cap: 1, slice_batches: 1 },
+        )
+        .unwrap();
+        for (i, tenant) in ["a", "a", "b", "b"].iter().enumerate() {
+            let mut m = modeled_job(TunerKind::Lhsmdu, 3, i as u64);
+            m.tenant = (*tenant).into();
+            sched.submit(m).unwrap();
+        }
+        sched.run_until_idle(4);
+        assert!(sched.jobs().iter().all(|j| j.status == JobStatus::Done));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
