@@ -351,6 +351,39 @@ fn main() {
         );
     }
 
+    // --- problem-family objectives at fixed shapes (stable across the
+    // smoke overrides): one evaluator repeat at each family's reference
+    // configuration, measured end to end. These rows land in
+    // BENCH_kernels.json so CI tracks every family's solve cost, not
+    // just the sap-ls hot path.
+    {
+        use ranntune::objective::TimingMode;
+        let fp = ranntune::data::build_problem("GA", 1200, 32, 42).expect("dataset");
+        for (label, fam_name) in [
+            ("family: ridge_solve 1200x32", "ridge"),
+            ("family: rand_lowrank 1200x32", "rand-lowrank"),
+            ("family: krr_rff 1200x32", "krr-rff"),
+        ] {
+            let fam = ranntune::families::get(fam_name).expect("registered family");
+            let reference = fam.reference(&fp);
+            let cfg = fam.ref_config();
+            add(
+                label,
+                time_fn(1, 3, || {
+                    let mut r = Rng::new(5);
+                    std::hint::black_box(fam.run_repeat(
+                        &fp,
+                        &reference,
+                        &cfg,
+                        TimingMode::Measured,
+                        &mut r,
+                    ));
+                }),
+                0.0,
+            );
+        }
+    }
+
     let rows: Vec<Vec<String>> = raw
         .iter()
         .map(|(name, med, min, gflops)| {
@@ -410,6 +443,7 @@ fn main() {
                 || name.contains("sketch_stream")
                 || name.contains("gemm 4096x256x256")
                 || name.starts_with("SAP solve")
+                || name.starts_with("family:")
         })
         .map(|(name, med, min, gflops)| {
             Json::obj(vec![

@@ -42,7 +42,13 @@ pub struct CampaignReport {
 }
 
 /// Scan a cell's history for silently-clamped `vec_nnz` proposals.
+/// Only meaningful for the `sap-ls` family: the other families
+/// reinterpret `vec_nnz` (target rank, feature count) and never route
+/// it through the sketch constructors' clamp.
 fn clamp_warnings(r: &CellResult) -> Vec<ClampWarning> {
+    if r.cell.problem.family != "sap-ls" {
+        return Vec::new();
+    }
     let (m, n) = (r.cell.problem.m, r.cell.problem.n);
     r.history
         .trials()
@@ -101,6 +107,7 @@ pub fn write_report(
         };
         summary_rows.push(vec![
             r.cell.problem.regime.name().to_string(),
+            r.cell.problem.family.clone(),
             r.cell.problem.id.clone(),
             r.cell.tuner.name().to_string(),
             best.map(|t| format!("{:.5}", t.value)).unwrap_or_else(|| "-".into()),
@@ -140,12 +147,14 @@ pub fn write_report(
         if let Some((tuner, value)) = best {
             winner_rows.push(vec![
                 p.regime.name().to_string(),
+                p.family.clone(),
                 p.id.clone(),
                 tuner.name().to_string(),
                 format!("{value:.5}"),
             ]);
             winners_json.push(Json::obj(vec![
                 ("regime", Json::Str(p.regime.name().into())),
+                ("family", Json::Str(p.family.clone())),
                 ("problem", Json::Str(p.id.clone())),
                 ("tuner", Json::Str(tuner.name().into())),
                 ("best_value_s", Json::Num(value)),
@@ -155,6 +164,7 @@ pub fn write_report(
 
     let summary_headers = [
         "regime",
+        "family",
         "problem",
         "tuner",
         "final_best_s",
@@ -172,7 +182,7 @@ pub fn write_report(
     )
     .map_err(io)?;
 
-    let winner_headers = ["regime", "problem", "winner", "best_value_s"];
+    let winner_headers = ["regime", "family", "problem", "winner", "best_value_s"];
     write_result(
         out_dir,
         "campaign_winners",
@@ -315,5 +325,18 @@ mod tests {
         assert_eq!(w[0].trial, 0);
         assert_eq!(w[0].requested, 100);
         assert_eq!(w[0].effective, 20);
+        // Non-sap-ls families reinterpret vec_nnz: never a clamp warning.
+        let mut h2 = History::new();
+        h2.push(mk(100, 1.0));
+        let ridge = CellResult {
+            cell: Cell {
+                problem: ProblemSpec::new("GA", 400, 20, 1, Regime::LowCoherence)
+                    .with_family("ridge"),
+                tuner: crate::campaign::TunerKind::Lhsmdu,
+            },
+            history: h2,
+            from_checkpoint: false,
+        };
+        assert!(clamp_warnings(&ridge).is_empty());
     }
 }

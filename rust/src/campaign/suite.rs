@@ -8,6 +8,7 @@
 //! a machine with a different core count.
 
 use crate::data::ProblemSpec;
+use crate::families::ProblemFamily;
 use crate::objective::TimingMode;
 use crate::tuners::{GpBoTuner, GridTuner, LhsmduTuner, SourceSample, TlaTuner, TpeTuner, Tuner};
 
@@ -60,14 +61,22 @@ impl TunerKind {
         matches!(self, TunerKind::Tla)
     }
 
-    /// Instantiate the tuner. `source` is only consumed by TLA; pass an
-    /// empty slice for the others.
-    pub fn make(&self, num_pilots: usize, source: Vec<SourceSample>) -> Box<dyn Tuner> {
+    /// Instantiate the tuner for a problem family. `source` is only
+    /// consumed by TLA; pass an empty slice for the others. The family
+    /// supplies the Grid tuner's sweep (the `sap-ls` family returns an
+    /// empty grid, which keeps GridTuner's lazy paper-grid fallback —
+    /// the exact pre-families behaviour).
+    pub fn make(
+        &self,
+        num_pilots: usize,
+        source: Vec<SourceSample>,
+        family: &'static dyn ProblemFamily,
+    ) -> Box<dyn Tuner> {
         match self {
             TunerKind::Lhsmdu => Box::new(LhsmduTuner::new()),
             TunerKind::Tpe => Box::new(TpeTuner::new(num_pilots)),
             TunerKind::GpTune => Box::new(GpBoTuner::new(num_pilots)),
-            TunerKind::Grid => Box::new(GridTuner::new(vec![])),
+            TunerKind::Grid => Box::new(GridTuner::new(family.default_grid())),
             TunerKind::Tla => Box::new(TlaTuner::new(source)),
         }
     }
@@ -276,5 +285,9 @@ mod tests {
         let mut d = base.clone();
         d.timing = TimingMode::Modeled;
         assert_ne!(base.fingerprint(), d.fingerprint());
+        // Family flows into the fingerprint through the prefixed spec id.
+        let mut e = base.clone();
+        e.suite[0] = e.suite[0].clone().with_family("ridge");
+        assert_ne!(base.fingerprint(), e.fingerprint());
     }
 }

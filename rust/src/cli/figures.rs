@@ -117,7 +117,8 @@ impl FigScale {
 }
 
 fn objective_for(problem: Problem, constants: Constants, seed: u64) -> Objective {
-    let task = TuningTask { problem, space: ParamSpace::paper(), constants };
+    let space = constants.family.space();
+    let task = TuningTask { problem, space, constants };
     Objective::new(task, seed)
 }
 

@@ -93,6 +93,8 @@ USAGE: ranntune <command> [--flags]
 COMMANDS
   tune         run one tuning session on one dataset
                --data GA|T5|T3|T1|Musk|CIFAR10|Localization
+               --family sap-ls|ridge|rand-lowrank|krr-rff (problem family:
+               which RandNLA objective the five knobs tune; default sap-ls)
                --tuner lhsmdu|tpe|gptune|tla   --budget N   --m M --n N
                --seed S  --repeats R  --db results/db.json (record history)
                --source-db path (tla: load source samples)
@@ -108,7 +110,7 @@ COMMANDS
                the same command resumes the session from it)
   campaign     sweep a problem suite across a tuner set in one resumable
                run (shards + checkpoint + per-regime report)
-               --suite smoke|synthetic|realworld|streaming|full
+               --suite smoke|synthetic|realworld|streaming|families|full
                --tuners lhsmdu,tpe,gptune[,grid,tla]   --budget N
                --repeats R  --seed S  --out results/campaign
                --eval-threads N (within-cell parallel evaluation)

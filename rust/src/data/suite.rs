@@ -69,6 +69,18 @@ impl Regime {
             _ => None,
         }
     }
+
+    /// Every regime, in declaration order. Kept next to
+    /// [`Regime::parse`] so the exhaustive round-trip test below can
+    /// catch the two drifting apart.
+    pub const ALL: [Regime; 6] = [
+        Regime::LowCoherence,
+        Regime::ModerateCoherence,
+        Regime::HighCoherence,
+        Regime::TallAspect,
+        Regime::RealWorld,
+        Regime::Streaming,
+    ];
 }
 
 /// One reproducible problem in a suite: a named generator family at a
@@ -91,19 +103,43 @@ pub struct ProblemSpec {
     pub data_seed: u64,
     /// Landscape corner this problem stresses.
     pub regime: Regime,
+    /// Problem-family registry name (see [`crate::families`]); defaults
+    /// to `"sap-ls"`, the original SAP least-squares objective.
+    pub family: String,
 }
 
 impl ProblemSpec {
     /// Construct a spec with the conventional `"{dataset}-{m}x{n}-s{seed}"`
-    /// id.
+    /// id and the default `sap-ls` family.
     pub fn new(dataset: &str, m: usize, n: usize, data_seed: u64, regime: Regime) -> ProblemSpec {
         ProblemSpec {
-            id: format!("{dataset}-{m}x{n}-s{data_seed}"),
+            id: Self::make_id(dataset, m, n, data_seed, "sap-ls"),
             dataset: dataset.to_string(),
             m,
             n,
             data_seed,
             regime,
+            family: "sap-ls".to_string(),
+        }
+    }
+
+    /// Retag this spec with a problem family, regenerating the id: ids of
+    /// non-default families carry a `"{family}."` prefix (so e.g. shard
+    /// filenames, cell ids, and crowd-db task keys never collide with the
+    /// same data tuned under a different family), while the default
+    /// family keeps the historical id format.
+    pub fn with_family(mut self, family: &str) -> ProblemSpec {
+        self.family = family.to_string();
+        self.id = Self::make_id(&self.dataset, self.m, self.n, self.data_seed, &self.family);
+        self
+    }
+
+    fn make_id(dataset: &str, m: usize, n: usize, data_seed: u64, family: &str) -> String {
+        let base = format!("{dataset}-{m}x{n}-s{data_seed}");
+        if family == "sap-ls" {
+            base
+        } else {
+            format!("{family}.{base}")
         }
     }
 
@@ -121,6 +157,7 @@ impl ProblemSpec {
         let n = (self.n / f).max(8);
         let m = (self.m / f).max(4 * n);
         ProblemSpec::new(&self.dataset, m, n, self.data_seed, self.regime)
+            .with_family(&self.family)
     }
 }
 
@@ -141,7 +178,8 @@ pub fn build_problem(name: &str, m: usize, n: usize, seed: u64) -> Result<Proble
 }
 
 /// Names of the built-in suites, in documentation order.
-pub const SUITE_NAMES: [&str; 5] = ["smoke", "synthetic", "realworld", "streaming", "full"];
+pub const SUITE_NAMES: [&str; 6] =
+    ["smoke", "synthetic", "realworld", "streaming", "families", "full"];
 
 /// Look up a built-in suite by name.
 ///
@@ -154,6 +192,9 @@ pub const SUITE_NAMES: [&str; 5] = ["smoke", "synthetic", "realworld", "streamin
 ///   so the reference solve and fingerprints run through the streaming
 ///   MatSource/TSQR paths. Sized for `--modeled-time` campaigns (shapes
 ///   are minutes of deterministic work, not wall-clock measurement).
+/// * `families` — one problem per non-default [`crate::families`] family
+///   (ridge, rand-lowrank, krr-rff), sized for `--modeled-time` sweeps;
+///   turns "which tuner wins per workload class" into a campaign run.
 /// * `full` — `synthetic` + `realworld`.
 pub fn builtin_suite(name: &str) -> Option<Vec<ProblemSpec>> {
     use Regime::*;
@@ -182,6 +223,12 @@ pub fn builtin_suite(name: &str) -> Option<Vec<ProblemSpec>> {
             ProblemSpec::new("GA", 1 << 18, 32, 1301, Streaming),
             ProblemSpec::new("T3", 1 << 18, 32, 1302, Streaming),
             ProblemSpec::new("T1", 1 << 19, 24, 1303, Streaming),
+        ]),
+        "families" => Some(vec![
+            ProblemSpec::new("GA", 480, 16, 2101, LowCoherence).with_family("ridge"),
+            ProblemSpec::new("T3", 480, 16, 2102, ModerateCoherence)
+                .with_family("rand-lowrank"),
+            ProblemSpec::new("GA", 480, 16, 2103, LowCoherence).with_family("krr-rff"),
         ]),
         "full" => {
             let mut v = builtin_suite("synthetic").unwrap();
@@ -214,6 +261,66 @@ mod tests {
             assert_eq!(p.n(), spec.n);
         }
         assert!(builtin_suite("nope").is_none());
+    }
+
+    #[test]
+    fn regime_names_round_trip_exhaustively() {
+        // `name()` and `parse()` are maintained by hand in two match
+        // statements; this test forces them (and `ALL`) to stay in sync.
+        // Adding a variant breaks the match below at compile time, which
+        // points here to extend ALL and both matches together.
+        for r in Regime::ALL {
+            match r {
+                Regime::LowCoherence
+                | Regime::ModerateCoherence
+                | Regime::HighCoherence
+                | Regime::TallAspect
+                | Regime::RealWorld
+                | Regime::Streaming => {}
+            }
+            assert_eq!(Regime::parse(r.name()), Some(r), "round-trip failed for {r:?}");
+        }
+        // ALL must enumerate every distinct variant exactly once.
+        let mut names: Vec<&str> = Regime::ALL.iter().map(|r| r.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), Regime::ALL.len(), "duplicate entries in Regime::ALL");
+        assert_eq!(Regime::parse("nope"), None);
+        assert_eq!(Regime::parse("Low-Coherence"), None, "parse is case-sensitive");
+    }
+
+    #[test]
+    fn family_tagging_prefixes_ids_only_for_non_default_families() {
+        let base = ProblemSpec::new("GA", 400, 16, 9, Regime::LowCoherence);
+        assert_eq!(base.family, "sap-ls");
+        assert_eq!(base.id, "GA-400x16-s9", "default family keeps the historical id");
+        let ridge = base.clone().with_family("ridge");
+        assert_eq!(ridge.id, "ridge.GA-400x16-s9");
+        // Re-tagging back to the default restores the historical id.
+        let back = ridge.clone().with_family("sap-ls");
+        assert_eq!(back.id, base.id);
+        // Shrinking preserves the family tag and prefix.
+        let s = ridge.shrunk(2);
+        assert_eq!(s.family, "ridge");
+        assert!(s.id.starts_with("ridge."), "{}", s.id);
+    }
+
+    #[test]
+    fn families_suite_covers_every_non_default_family() {
+        let suite = builtin_suite("families").unwrap();
+        let mut fams: Vec<&str> = suite.iter().map(|s| s.family.as_str()).collect();
+        fams.sort_unstable();
+        assert_eq!(fams, ["krr-rff", "rand-lowrank", "ridge"]);
+        for spec in &suite {
+            assert!(
+                crate::families::get(&spec.family).is_some(),
+                "{}: unknown family {}",
+                spec.id,
+                spec.family
+            );
+            let p = spec.build().unwrap();
+            assert_eq!((p.m(), p.n()), (spec.m, spec.n));
+        }
     }
 
     #[test]

@@ -1,0 +1,293 @@
+//! Kernel ridge regression via random Fourier features (RFF).
+//!
+//! Rahimi–Recht: a shift-invariant kernel k(x, y) = k(x − y) is
+//! approximated by z(x)ᵀz(y) with z built from random frequencies drawn
+//! from the kernel's spectral density. KRR then reduces to a D×D ridge
+//! system (Z ᵀZ + λmI)w = Zᵀb, and both the Gram accumulation and the
+//! prediction pass stream over the design matrix block-by-block, so
+//! m ≫ RAM problems carry over unchanged.
+//!
+//! Knob mapping: the algorithm slot picks the **kernel** (`QrLsqr` →
+//! RBF / Gaussian frequencies, `SvdLsqr` → Laplacian kernel / Cauchy
+//! frequencies, `SvdPgd` → Cauchy kernel / Laplace frequencies); the
+//! sketch slot picks the **feature map** (`Sjlt` → cos-only with a
+//! random phase, `LessUniform` → cos/sin pairs); `sf` sets the
+//! bandwidth `γ = 10^((sf − 5.5)/2.25)`; `nnz` is the feature count D;
+//! `safety` sets `λ = 10^(−(1 + safety))`.
+//!
+//! Quality: ‖ŷ − ŷ_ref‖ / ‖b‖ against a fixed high-feature-count RBF
+//! reference predictor — "how close is this cheap feature map to the
+//! reference fit", the prediction-space analogue of ARFE.
+
+use super::ProblemFamily;
+use crate::data::{for_each_block, Problem};
+use crate::linalg::{axpy, chol_solve, cholesky_jittered, gemm, gemv, gemv_t, norm2, Mat};
+use crate::objective::{ParamSpace, TimingMode};
+use crate::rng::Rng;
+use crate::sap::{SapAlgorithm, SapConfig};
+use crate::sketch::SketchKind;
+use std::time::Instant;
+
+/// Feature count of the fixed reference predictor (deliberately above
+/// the search space's `nnz` ceiling).
+const REF_FEATURES: usize = 160;
+
+/// Seed salt for the reference predictor's frequency draw.
+const REF_SALT: u64 = 0x52ff_5eed_u64;
+
+/// Bandwidth from the `sf` knob: γ spans ~10^{-2}..10^{2} over sf 1..10.
+fn bandwidth_of(cfg: &SapConfig) -> f64 {
+    10f64.powf((cfg.sampling_factor - 5.5) / 2.25)
+}
+
+/// Ridge level from the `safety` knob: λ = 10^{−(1+safety)}.
+fn lambda_of(cfg: &SapConfig) -> f64 {
+    10f64.powi(-(1 + cfg.safety_factor.min(4) as i32))
+}
+
+/// A drawn random-feature map: frequency matrix, optional phases, and
+/// the total feature count D.
+struct FeatureMap {
+    /// n×Dh frequency matrix.
+    w: Mat,
+    /// Per-frequency phases (cos-only map); empty for the paired map.
+    phases: Vec<f64>,
+    /// Paired cos/sin map (D = 2·Dh) vs cos-only (D = Dh).
+    paired: bool,
+    /// Total feature count D.
+    d: usize,
+}
+
+/// Draw the feature map for `cfg` at input dimension `n` from `rng`.
+fn build_map(cfg: &SapConfig, n: usize, rng: &mut Rng) -> FeatureMap {
+    let gamma = bandwidth_of(cfg);
+    let paired = cfg.sketch == SketchKind::LessUniform;
+    let d_req = cfg.vec_nnz.max(2);
+    let (dh, d) = if paired { (d_req / 2, 2 * (d_req / 2)) } else { (d_req, d_req) };
+    let dh = dh.max(1);
+    let d = d.max(2);
+    let w = Mat::from_fn(n, dh, |_, _| match cfg.algorithm {
+        // RBF kernel ⇔ Gaussian spectral density.
+        SapAlgorithm::QrLsqr => gamma * rng.normal(),
+        // Laplacian kernel ⇔ Cauchy spectral density.
+        SapAlgorithm::SvdLsqr => {
+            gamma * (std::f64::consts::PI * (rng.uniform() - 0.5)).tan()
+        }
+        // Cauchy kernel ⇔ Laplace spectral density.
+        SapAlgorithm::SvdPgd => gamma * rng.sign() * -(1.0 - rng.uniform()).ln(),
+    });
+    let phases = if paired {
+        Vec::new()
+    } else {
+        (0..dh).map(|_| rng.uniform() * std::f64::consts::TAU).collect()
+    };
+    FeatureMap { w, phases, paired, d }
+}
+
+/// Featurize one row block: Z_b with √(2/D)-scaled cosine features.
+fn features(map: &FeatureMap, block: &Mat) -> Mat {
+    let t = gemm(block, &map.w);
+    let rb = block.rows();
+    let dh = map.w.cols();
+    let scale = (2.0 / map.d as f64).sqrt();
+    let mut z = Mat::zeros(rb, map.d);
+    if map.paired {
+        for i in 0..rb {
+            for j in 0..dh {
+                let tij = t[(i, j)];
+                z[(i, 2 * j)] = scale * tij.cos();
+                z[(i, 2 * j + 1)] = scale * tij.sin();
+            }
+        }
+    } else {
+        for i in 0..rb {
+            for j in 0..dh {
+                z[(i, j)] = scale * (t[(i, j)] + map.phases[j]).cos();
+            }
+        }
+    }
+    z
+}
+
+/// Two-pass streaming fit-and-predict: pass 1 accumulates the D×D Gram
+/// and Zᵀb block-by-block (ascending row order, so the sum order is a
+/// pure function of the block policy), pass 2 re-featurizes each block
+/// and emits predictions.
+fn fit_predict(problem: &Problem, map: &FeatureMap, lam: f64) -> Vec<f64> {
+    let m = problem.m();
+    let d = map.d;
+    let b = problem.b();
+    let mut g = Mat::zeros(d, d);
+    let mut c = vec![0.0; d];
+    for_each_block(problem.source(), |row0, block| {
+        let z = features(map, block);
+        gemm_tn_acc(&z, &mut g);
+        let zb = gemv_t(&z, &b[row0..row0 + block.rows()]);
+        axpy(1.0, &zb, &mut c);
+    });
+    let ridge = lam * m as f64;
+    for i in 0..d {
+        g[(i, i)] += ridge;
+    }
+    let (l, _jitter) =
+        cholesky_jittered(&g).expect("ridge-shifted RFF Gram must be SPD");
+    let w = chol_solve(&l, &c);
+    let mut yhat = vec![0.0; m];
+    for_each_block(problem.source(), |row0, block| {
+        let z = features(map, block);
+        let yb = gemv(&z, &w);
+        yhat[row0..row0 + block.rows()].copy_from_slice(&yb);
+    });
+    yhat
+}
+
+/// G += ZᵀZ (the packed transpose-free kernel accumulates in place).
+fn gemm_tn_acc(z: &Mat, g: &mut Mat) {
+    crate::linalg::gemm_tn_into(z, z, g);
+}
+
+/// Kernel ridge regression through random Fourier features.
+pub struct KrrRffFamily;
+
+impl ProblemFamily for KrrRffFamily {
+    fn name(&self) -> &'static str {
+        "krr-rff"
+    }
+
+    fn space(&self) -> ParamSpace {
+        ParamSpace { sf: (1.0, 10.0), nnz: (8, 128), safety: (0, 4) }
+    }
+
+    fn ref_config(&self) -> SapConfig {
+        SapConfig {
+            algorithm: SapAlgorithm::QrLsqr,
+            sketch: SketchKind::Sjlt,
+            sampling_factor: 5.5,
+            vec_nnz: 128,
+            safety_factor: 2,
+        }
+    }
+
+    fn dim_names(&self) -> [&'static str; 5] {
+        ["kernel", "feature_map", "bandwidth", "num_features", "lambda_exponent"]
+    }
+
+    /// Reference predictions ŷ_ref (length m) from a fixed protocol:
+    /// RBF kernel, cos-only map, D = [`REF_FEATURES`], γ = 1, λ = 1e-3,
+    /// frequencies seeded from the problem fingerprint — a pure
+    /// function of the problem.
+    fn reference(&self, problem: &Problem) -> Vec<f64> {
+        let ref_cfg = SapConfig {
+            algorithm: SapAlgorithm::QrLsqr,
+            sketch: SketchKind::Sjlt,
+            sampling_factor: 5.5,
+            vec_nnz: REF_FEATURES,
+            safety_factor: 2,
+        };
+        let mut rng = Rng::new(problem.fingerprint() ^ REF_SALT);
+        let map = build_map(&ref_cfg, problem.n(), &mut rng);
+        fit_predict(problem, &map, lambda_of(&ref_cfg))
+    }
+
+    fn run_repeat(
+        &self,
+        problem: &Problem,
+        reference: &[f64],
+        cfg: &SapConfig,
+        timing: TimingMode,
+        rng: &mut Rng,
+    ) -> (f64, f64) {
+        let (m, n) = (problem.m(), problem.n());
+        let lam = lambda_of(cfg);
+        let t0 = Instant::now();
+        let map = build_map(cfg, n, rng);
+        let d = map.d;
+        let yhat = fit_predict(problem, &map, lam);
+        let measured = t0.elapsed().as_secs_f64();
+        let num: f64 =
+            yhat.iter().zip(reference).map(|(y, r)| (y - r) * (y - r)).sum();
+        let bn = norm2(problem.b());
+        let quality = if bn == 0.0 { 0.0 } else { num.sqrt() / bn };
+        let secs = match timing {
+            TimingMode::Measured => measured,
+            TimingMode::Modeled => {
+                let (mf, nf, df) = (m as f64, n as f64, d as f64);
+                let featurize = 2.0 * mf * nf * df;
+                let gram = 2.0 * mf * df * df;
+                let chol = df * df * df / 3.0;
+                let predict = 2.0 * mf * df;
+                (2.0 * featurize + gram + chol + predict) * 1e-9
+            }
+        };
+        (secs, quality)
+    }
+
+    fn default_grid(&self) -> Vec<SapConfig> {
+        let mut grid = Vec::new();
+        for algorithm in SapAlgorithm::ALL {
+            for sketch in SketchKind::ALL {
+                for sampling_factor in [3.0, 5.5, 8.0] {
+                    for vec_nnz in [16usize, 64, 128] {
+                        for safety_factor in [1u32, 3] {
+                            grid.push(SapConfig {
+                                algorithm,
+                                sketch,
+                                sampling_factor,
+                                vec_nnz,
+                                safety_factor,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        grid
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::build_problem;
+
+    #[test]
+    fn reference_is_a_pure_function_of_the_problem() {
+        let p = build_problem("GA", 100, 6, 11).unwrap();
+        let fam = KrrRffFamily;
+        let r1 = fam.reference(&p);
+        let r2 = fam.reference(&p);
+        assert_eq!(r1.len(), 100);
+        for (a, b) in r1.iter().zip(&r2) {
+            assert_eq!(a.to_bits(), b.to_bits(), "reference must be deterministic");
+        }
+    }
+
+    #[test]
+    fn ref_config_tracks_the_reference_predictor() {
+        let p = build_problem("GA", 100, 6, 12).unwrap();
+        let fam = KrrRffFamily;
+        let refs = fam.reference(&p);
+        let mut rng = Rng::new(3);
+        let (secs, quality) =
+            fam.run_repeat(&p, &refs, &fam.ref_config(), TimingMode::Measured, &mut rng);
+        assert!(secs > 0.0);
+        assert!(quality.is_finite() && quality >= 0.0);
+        // Same kernel/bandwidth/λ at a comparable feature count must
+        // land near the reference predictions relative to ‖b‖.
+        assert!(quality < 1.0, "ref-config quality too far off: {quality}");
+    }
+
+    #[test]
+    fn paired_and_phase_maps_have_even_feature_counts() {
+        let mut rng = Rng::new(9);
+        let cfg = SapConfig {
+            sketch: SketchKind::LessUniform,
+            vec_nnz: 33,
+            ..KrrRffFamily.ref_config()
+        };
+        let map = build_map(&cfg, 5, &mut rng);
+        assert!(map.paired);
+        assert_eq!(map.d, 32, "odd D rounds down to a cos/sin pair count");
+        assert_eq!(map.w.shape(), (5, 16));
+    }
+}

@@ -1,0 +1,231 @@
+//! Randomized low-rank approximation: range finder + thin SVD (HMT).
+//!
+//! The Halko–Martinsson–Tropp sketch: draw an n×l test matrix Ω, form
+//! Y = AΩ (optionally with power iterations (AAᵀ)^q·AΩ for spectral-gap
+//! sharpening), orthonormalize Q = qr(Y), project B = QᵀA, take the thin
+//! SVD of the small l×n matrix B, and truncate to rank k.
+//!
+//! Knob mapping: the algorithm slot picks the **power-pass
+//! stabilization** (`QrLsqr` → none, `SvdLsqr` → re-orthonormalize
+//! between passes, `SvdPgd` → column-norm rescaling); the sketch slot
+//! picks the **test matrix** (`Sjlt` → Gaussian, `LessUniform` →
+//! Rademacher); `sf` is the oversampling p = ⌈sf⌉; `nnz` is the target
+//! rank k; `safety` is the power-iteration count q.
+//!
+//! Quality: a fixed-length power-iteration estimate of the spectral
+//! error ‖A − Q_k B_k‖₂, divided by the optimal rank-k error σ_{k+1}(A)
+//! taken from the exact reference spectrum — 1.0 means "as good as the
+//! truncated SVD", the direct analogue of ARFE's "as good as x*".
+
+use super::ProblemFamily;
+use crate::data::Problem;
+use crate::linalg::{
+    axpy, gemm, gemm_tn_into, gemv, gemv_t, norm2, qr_thin, svd_thin, svd_thin_any, Mat,
+};
+use crate::objective::{ParamSpace, TimingMode};
+use crate::rng::Rng;
+use crate::sap::{SapAlgorithm, SapConfig};
+use crate::sketch::SketchKind;
+use std::time::Instant;
+
+/// Power-iteration count for the spectral-error estimate (fixed so the
+/// quality metric is deterministic given the rng stream).
+const SPECTRAL_EST_ITERS: usize = 8;
+
+/// Rescale each column of `y` to unit norm (the cheap `SvdPgd`
+/// stabilization between power passes).
+fn normalize_columns(y: &mut Mat) {
+    let (m, l) = y.shape();
+    for j in 0..l {
+        let mut s = 0.0;
+        for i in 0..m {
+            s += y[(i, j)] * y[(i, j)];
+        }
+        let nv = s.sqrt();
+        if nv > 0.0 {
+            for i in 0..m {
+                y[(i, j)] /= nv;
+            }
+        }
+    }
+}
+
+/// Randomized range-finder + thin-SVD low-rank approximation.
+pub struct LowRankFamily;
+
+impl LowRankFamily {
+    /// Effective (k, p, l, q) for a config at width n.
+    fn knobs(cfg: &SapConfig, n: usize) -> (usize, usize, usize, usize) {
+        let k = cfg.vec_nnz.clamp(1, n.saturating_sub(1).max(1));
+        let p = (cfg.sampling_factor.ceil() as usize).max(1);
+        let l = (k + p).min(n);
+        let q = cfg.safety_factor as usize;
+        (k, p, l, q)
+    }
+}
+
+impl ProblemFamily for LowRankFamily {
+    fn name(&self) -> &'static str {
+        "rand-lowrank"
+    }
+
+    fn space(&self) -> ParamSpace {
+        ParamSpace { sf: (1.0, 10.0), nnz: (2, 16), safety: (0, 4) }
+    }
+
+    fn ref_config(&self) -> SapConfig {
+        SapConfig {
+            algorithm: SapAlgorithm::SvdLsqr,
+            sketch: SketchKind::Sjlt,
+            sampling_factor: 5.0,
+            vec_nnz: 12,
+            safety_factor: 2,
+        }
+    }
+
+    fn dim_names(&self) -> [&'static str; 5] {
+        ["stabilization", "test_matrix", "oversampling", "rank", "power_iters"]
+    }
+
+    /// The exact singular spectrum of A (descending), so
+    /// `reference[k] = σ_{k+1}(A)` is the optimal rank-k spectral error.
+    fn reference(&self, problem: &Problem) -> Vec<f64> {
+        svd_thin(problem.dense()).s
+    }
+
+    fn run_repeat(
+        &self,
+        problem: &Problem,
+        reference: &[f64],
+        cfg: &SapConfig,
+        timing: TimingMode,
+        rng: &mut Rng,
+    ) -> (f64, f64) {
+        let a = problem.dense();
+        let (m, n) = a.shape();
+        let (k, _p, l, q) = Self::knobs(cfg, n);
+        let t0 = Instant::now();
+        let omega = match cfg.sketch {
+            SketchKind::Sjlt => Mat::from_fn(n, l, |_, _| rng.normal()),
+            SketchKind::LessUniform => Mat::from_fn(n, l, |_, _| rng.sign()),
+        };
+        let mut y = gemm(a, &omega);
+        for _ in 0..q {
+            match cfg.algorithm {
+                SapAlgorithm::QrLsqr => {}
+                SapAlgorithm::SvdLsqr => y = qr_thin(&y).form_thin_q(),
+                SapAlgorithm::SvdPgd => normalize_columns(&mut y),
+            }
+            let mut w = Mat::zeros(n, l);
+            gemm_tn_into(a, &y, &mut w);
+            y = gemm(a, &w);
+        }
+        let qm = qr_thin(&y).form_thin_q();
+        let mut bmat = Mat::zeros(l, n);
+        gemm_tn_into(&qm, a, &mut bmat);
+        let f = svd_thin_any(&bmat);
+        // Rank-k truncation: A ≈ (Q·U_k)·(Σ_k·V_kᵀ) = qk · ck.
+        let uk = Mat::from_fn(l, k, |i, j| f.u[(i, j)]);
+        let qk = gemm(&qm, &uk);
+        let ck = Mat::from_fn(k, n, |i, j| f.s[i] * f.v[(j, i)]);
+        let measured = t0.elapsed().as_secs_f64();
+        // Spectral-error estimate for E = A − qk·ck via power iteration
+        // on EᵀE (matrix never formed; all products are gemv chains).
+        let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut sigma_est = 0.0;
+        for _ in 0..SPECTRAL_EST_ITERS {
+            let nv = norm2(&v);
+            if nv == 0.0 {
+                break;
+            }
+            for x in v.iter_mut() {
+                *x /= nv;
+            }
+            let mut u = gemv(a, &v);
+            let qckv = gemv(&qk, &gemv(&ck, &v));
+            axpy(-1.0, &qckv, &mut u);
+            sigma_est = norm2(&u);
+            let mut w = gemv_t(a, &u);
+            let ctqtu = gemv_t(&ck, &gemv_t(&qk, &u));
+            axpy(-1.0, &ctqtu, &mut w);
+            v = w;
+        }
+        let opt = reference.get(k).copied().unwrap_or(0.0);
+        let floor = reference.first().copied().unwrap_or(1.0).abs() * 1e-14;
+        let quality = sigma_est / opt.max(floor).max(f64::MIN_POSITIVE);
+        let secs = match timing {
+            TimingMode::Measured => measured,
+            TimingMode::Modeled => {
+                let (mf, nf, lf) = (m as f64, n as f64, l as f64);
+                let range = 2.0 * mf * nf * lf * (1.0 + 2.0 * q as f64);
+                let ortho = 2.0 * mf * lf * lf;
+                let project = 2.0 * mf * nf * lf;
+                let small_svd = 8.0 * lf * lf * nf;
+                (range + ortho + project + small_svd) * 1e-9
+            }
+        };
+        (secs, quality)
+    }
+
+    fn default_grid(&self) -> Vec<SapConfig> {
+        let mut grid = Vec::new();
+        for algorithm in SapAlgorithm::ALL {
+            for sketch in SketchKind::ALL {
+                for sampling_factor in [2.0, 6.0] {
+                    for vec_nnz in [4usize, 8, 14] {
+                        for safety_factor in [0u32, 2, 4] {
+                            grid.push(SapConfig {
+                                algorithm,
+                                sketch,
+                                sampling_factor,
+                                vec_nnz,
+                                safety_factor,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        grid
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::build_problem;
+
+    #[test]
+    fn near_optimal_for_effectively_lowrank_matrices() {
+        // With l = k + p ≥ n the range finder captures the full column
+        // space, so the truncation error sits within a small factor of
+        // the optimal σ_{k+1}.
+        let p = build_problem("GA", 120, 10, 31).unwrap();
+        let fam = LowRankFamily;
+        let refs = fam.reference(&p);
+        assert_eq!(refs.len(), 10);
+        for w in refs.windows(2) {
+            assert!(w[0] >= w[1], "spectrum must be descending");
+        }
+        let cfg = SapConfig { vec_nnz: 8, ..fam.ref_config() };
+        let mut rng = Rng::new(42);
+        let (secs, quality) =
+            fam.run_repeat(&p, &refs, &cfg, TimingMode::Measured, &mut rng);
+        assert!(secs > 0.0);
+        assert!(quality.is_finite() && quality >= 0.0);
+        assert!(quality < 20.0, "estimate should be near optimal, got {quality}");
+    }
+
+    #[test]
+    fn modeled_time_is_config_pure() {
+        let p = build_problem("GA", 90, 8, 5).unwrap();
+        let fam = LowRankFamily;
+        let refs = fam.reference(&p);
+        let cfg = fam.ref_config();
+        let mut r1 = Rng::new(7);
+        let mut r2 = Rng::new(8);
+        let (s1, _) = fam.run_repeat(&p, &refs, &cfg, TimingMode::Modeled, &mut r1);
+        let (s2, _) = fam.run_repeat(&p, &refs, &cfg, TimingMode::Modeled, &mut r2);
+        assert_eq!(s1.to_bits(), s2.to_bits(), "modeled secs must ignore the rng");
+    }
+}

@@ -1,0 +1,209 @@
+//! Pluggable RandNLA problem families (ROADMAP item 4).
+//!
+//! The paper closes by claiming the surrogate autotuning pipeline applies
+//! "to any kind of RandNLA algorithm". This module makes that claim
+//! concrete: a [`ProblemFamily`] is everything the objective layer needs
+//! to tune one class of randomized algorithm — its parameter space, its
+//! reference solve, and its per-repeat trial evaluation with an
+//! ARFE-analogue quality metric — while `Objective`/`TuningSession`,
+//! every tuner, the campaign runner, and the serving daemon stay fully
+//! generic over it.
+//!
+//! ## The five-knob contract
+//!
+//! Every family reuses [`SapConfig`] as its tuning point and
+//! [`ParamSpace`] as its (bounds-adjusted) search space; each family
+//! *reinterprets* the five knobs (two categorical slots, `sf`, `nnz`,
+//! `safety`) in its own terms — [`ProblemFamily::dim_names`] documents
+//! the mapping. This keeps trial serialization, checkpoints, the crowd
+//! database, and all five tuners (including TLA's six-category
+//! machinery) byte-compatible and meaningful for every family.
+//!
+//! ## Determinism obligations
+//!
+//! * `run_repeat` must draw randomness **only** from the `Rng` handed in
+//!   (derived via `repeat_rng(base_seed, trial, repeat)` upstream), so
+//!   repeats are order-free and parallel evaluation is bitwise equal to
+//!   serial evaluation.
+//! * All dense math must go through the `linalg` kernels, which are
+//!   bit-deterministic across `RANNTUNE_THREADS`; streaming accumulation
+//!   must follow the size-only `MatSource` block policy in ascending row
+//!   order.
+//! * `reference` must be a pure function of the problem (it is memoized
+//!   per `(fingerprint, shape, family)`).
+//! * Modeled timing must be a pure function of the config and the
+//!   problem shape (plus deterministic iteration counts).
+//!
+//! Registered families: [`sap_ls`] (the original SAP least-squares
+//! path, bit-identical to the pre-refactor evaluator), `ridge`
+//! (sketch-and-precondition Tikhonov), `rand-lowrank` (randomized
+//! range-finder + thin SVD), and `krr-rff` (kernel ridge via random
+//! Fourier features).
+
+mod krr_rff;
+mod lowrank;
+mod ridge;
+mod sap_ls;
+
+pub use krr_rff::KrrRffFamily;
+pub use lowrank::LowRankFamily;
+pub use ridge::RidgeFamily;
+pub use sap_ls::SapLsFamily;
+
+use crate::data::Problem;
+use crate::objective::{ParamSpace, TimingMode};
+use crate::rng::Rng;
+use crate::sap::SapConfig;
+
+/// One tunable class of randomized algorithm: the contract between a
+/// workload and the generic objective/tuner/campaign/serve stack.
+///
+/// Implementations are zero-sized statics registered in [`all`]; the
+/// rest of the crate holds them as `&'static dyn ProblemFamily`.
+pub trait ProblemFamily: Send + Sync {
+    /// Stable registry name (`"sap-ls"`, `"ridge"`, `"rand-lowrank"`,
+    /// `"krr-rff"`); appears in problem ids, session fingerprints, job
+    /// manifests and reports.
+    fn name(&self) -> &'static str;
+
+    /// The family's search-space bounds over the shared five knobs.
+    fn space(&self) -> ParamSpace;
+
+    /// The fixed configuration evaluated as trial 0 to establish the
+    /// reference wall-clock and the quality allowance baseline. Must lie
+    /// inside [`ProblemFamily::space`].
+    fn ref_config(&self) -> SapConfig;
+
+    /// What each of the five [`SapConfig`] knobs means for this family,
+    /// in encoding order (algorithm slot, sketch slot, `sf`, `nnz`,
+    /// `safety`).
+    fn dim_names(&self) -> [&'static str; 5];
+
+    /// Compute the family's reference payload for `problem` — the data
+    /// trial evaluation compares against (x* for least squares, the
+    /// exact singular spectrum for low-rank, reference predictions for
+    /// KRR). Must be a pure function of the problem; the result is
+    /// memoized per `(fingerprint, shape, family)`.
+    fn reference(&self, problem: &Problem) -> Vec<f64>;
+
+    /// Run one repeat of one trial: execute the family's randomized
+    /// algorithm at `cfg` and return `(seconds, quality)`, where
+    /// `quality` is the family's ARFE-analogue relative error against
+    /// `reference`. All randomness must come from `rng`; see the module
+    /// docs for the full determinism contract.
+    fn run_repeat(
+        &self,
+        problem: &Problem,
+        reference: &[f64],
+        cfg: &SapConfig,
+        timing: TimingMode,
+        rng: &mut Rng,
+    ) -> (f64, f64);
+
+    /// The grid the `Grid` tuner sweeps for this family. An empty vec
+    /// means "use the paper's SAP grid" (the `sap-ls` behaviour); every
+    /// other family must return a non-empty, in-bounds grid.
+    fn default_grid(&self) -> Vec<SapConfig>;
+}
+
+impl std::fmt::Debug for dyn ProblemFamily {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+static SAP_LS: SapLsFamily = SapLsFamily;
+static RIDGE: RidgeFamily = RidgeFamily;
+static LOWRANK: LowRankFamily = LowRankFamily;
+static KRR_RFF: KrrRffFamily = KrrRffFamily;
+
+/// Every registered family, in registry order (`sap-ls` first).
+pub fn all() -> [&'static dyn ProblemFamily; 4] {
+    [&SAP_LS, &RIDGE, &LOWRANK, &KRR_RFF]
+}
+
+/// Look up a family by its registry [`ProblemFamily::name`].
+pub fn get(name: &str) -> Option<&'static dyn ProblemFamily> {
+    all().into_iter().find(|f| f.name() == name)
+}
+
+/// The default family: the original SAP least-squares objective.
+pub fn sap_ls() -> &'static dyn ProblemFamily {
+    &SAP_LS
+}
+
+/// Comma-separated list of registry names, for CLI error messages.
+pub fn known_names() -> String {
+    all().map(|f| f.name()).join("|")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_are_unique_and_resolvable() {
+        let fams = all();
+        for (i, f) in fams.iter().enumerate() {
+            assert!(get(f.name()).is_some(), "{} must resolve", f.name());
+            for g in &fams[i + 1..] {
+                assert_ne!(f.name(), g.name(), "duplicate family name");
+            }
+        }
+        assert!(get("no-such-family").is_none());
+        assert_eq!(sap_ls().name(), "sap-ls");
+    }
+
+    #[test]
+    fn ref_configs_lie_inside_their_spaces() {
+        for fam in all() {
+            let space = fam.space();
+            let cfg = fam.ref_config();
+            assert!(
+                cfg.sampling_factor >= space.sf.0 && cfg.sampling_factor <= space.sf.1,
+                "{}: ref sf out of bounds",
+                fam.name()
+            );
+            assert!(
+                cfg.vec_nnz >= space.nnz.0 && cfg.vec_nnz <= space.nnz.1,
+                "{}: ref nnz out of bounds",
+                fam.name()
+            );
+            assert!(
+                cfg.safety_factor >= space.safety.0 && cfg.safety_factor <= space.safety.1,
+                "{}: ref safety out of bounds",
+                fam.name()
+            );
+        }
+    }
+
+    #[test]
+    fn default_grids_stay_inside_their_spaces() {
+        for fam in all() {
+            let space = fam.space();
+            let grid = fam.default_grid();
+            if fam.name() == "sap-ls" {
+                assert!(grid.is_empty(), "sap-ls keeps the lazy paper grid");
+                continue;
+            }
+            assert!(!grid.is_empty(), "{}: grid must be non-empty", fam.name());
+            for cfg in &grid {
+                assert!(
+                    cfg.sampling_factor >= space.sf.0 && cfg.sampling_factor <= space.sf.1,
+                    "{}: grid sf out of bounds",
+                    fam.name()
+                );
+                assert!(
+                    cfg.vec_nnz >= space.nnz.0 && cfg.vec_nnz <= space.nnz.1,
+                    "{}: grid nnz out of bounds",
+                    fam.name()
+                );
+                assert!(
+                    cfg.safety_factor <= space.safety.1,
+                    "{}: grid safety out of bounds",
+                    fam.name()
+                );
+            }
+        }
+    }
+}

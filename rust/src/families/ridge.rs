@@ -1,0 +1,244 @@
+//! Sketched ridge (Tikhonov) regression: minimize ‖Ax − b‖² + λ‖x‖².
+//!
+//! The classic augmented-rows reduction: ridge at regularizer λ is the
+//! ordinary least-squares problem over [[A], [√λ·I]] with right-hand
+//! side [b; 0], so the whole SAP machinery (sketch, preconditioner,
+//! LSQR/PGD) applies unchanged to the (m+n)×n stacked system.
+//!
+//! Knob mapping: the algorithm/sketch/`sf`/`nnz` slots keep their SAP
+//! meaning for the inner solve; the `safety` slot becomes the
+//! regularization level, `λ = 10^(safety − 4)` (1e-4 … 1), and the
+//! inner solve runs at the base tolerance. The reference payload holds
+//! one exact solution per λ level, each computed with the out-of-core
+//! TSQR path through [`AugmentedSource`] — the augmented rows never
+//! materialize next to a streamed A.
+
+use std::cell::RefCell;
+
+use super::ProblemFamily;
+use crate::data::{MatSource, Problem};
+use crate::linalg::{lstsq_tsqr, Mat};
+use crate::objective::{modeled_secs, ParamSpace, TimingMode};
+use crate::rng::Rng;
+use crate::sap::{arfe, solve_sap_ws, SapAlgorithm, SapConfig, SapWorkspace};
+use crate::sketch::SketchKind;
+
+thread_local! {
+    static RIDGE_WS: RefCell<SapWorkspace> = RefCell::new(SapWorkspace::new());
+}
+
+/// Number of discrete λ levels (the `safety` knob's 0..=4 range).
+const NUM_LAMBDAS: usize = 5;
+
+/// λ for a config: `10^(safety − 4)`, clamping the knob into 0..=4.
+fn lambda_of(safety: u32) -> f64 {
+    10f64.powi(safety.min(4) as i32 - 4)
+}
+
+/// Row-block view of the (m+n)×n stacked matrix [[A], [√λ·I]]: the
+/// first m rows delegate to the wrapped source, the n tail rows are
+/// `√λ·eⱼ`. Blocks straddling the m boundary are assembled through a
+/// temporary so the inner source always sees full-block reads.
+struct AugmentedSource<'a> {
+    inner: &'a dyn MatSource,
+    lam_sqrt: f64,
+}
+
+impl MatSource for AugmentedSource<'_> {
+    fn rows(&self) -> usize {
+        self.inner.rows() + self.inner.cols()
+    }
+
+    fn cols(&self) -> usize {
+        self.inner.cols()
+    }
+
+    fn block_rows(&self) -> usize {
+        // Same size-only policy as the inner source, evaluated at the
+        // augmented height, so block boundaries stay data-determined.
+        crate::data::default_block_rows(self.rows(), self.cols())
+    }
+
+    fn read_rows_into(&self, row0: usize, out: &mut Mat) {
+        let m = self.inner.rows();
+        let n = self.inner.cols();
+        let r = out.rows();
+        assert!(row0 + r <= m + n, "augmented read out of bounds");
+        let a_rows = r.min(m.saturating_sub(row0));
+        if a_rows == r {
+            self.inner.read_rows_into(row0, out);
+            return;
+        }
+        if a_rows > 0 {
+            let mut tmp = Mat::zeros(a_rows, n);
+            self.inner.read_rows_into(row0, &mut tmp);
+            out.as_mut_slice()[..a_rows * n].copy_from_slice(tmp.as_slice());
+        }
+        for i in a_rows..r {
+            let j = row0 + i - m;
+            let row = out.row_mut(i);
+            row.fill(0.0);
+            row[j] = self.lam_sqrt;
+        }
+    }
+}
+
+/// Sketch-and-precondition Tikhonov regression over augmented rows.
+pub struct RidgeFamily;
+
+impl ProblemFamily for RidgeFamily {
+    fn name(&self) -> &'static str {
+        "ridge"
+    }
+
+    fn space(&self) -> ParamSpace {
+        ParamSpace::paper()
+    }
+
+    fn ref_config(&self) -> SapConfig {
+        SapConfig {
+            algorithm: SapAlgorithm::QrLsqr,
+            sketch: SketchKind::Sjlt,
+            sampling_factor: 5.0,
+            vec_nnz: 50,
+            safety_factor: 0,
+        }
+    }
+
+    fn dim_names(&self) -> [&'static str; 5] {
+        ["SAP_algorithm", "sketch_operator", "sampling_factor", "vec_nnz", "lambda_exponent"]
+    }
+
+    /// Exact ridge solutions x*_λ for all [`NUM_LAMBDAS`] levels,
+    /// concatenated (`reference[s·n .. (s+1)·n]` is level `s`), each via
+    /// TSQR over the streamed augmented system.
+    fn reference(&self, problem: &Problem) -> Vec<f64> {
+        let (m, n) = (problem.m(), problem.n());
+        let mut b_aug = problem.b().to_vec();
+        b_aug.resize(m + n, 0.0);
+        let mut out = Vec::with_capacity(NUM_LAMBDAS * n);
+        for s in 0..NUM_LAMBDAS {
+            let aug =
+                AugmentedSource { inner: problem.source(), lam_sqrt: lambda_of(s as u32).sqrt() };
+            out.extend(lstsq_tsqr(&aug, &b_aug));
+        }
+        out
+    }
+
+    fn run_repeat(
+        &self,
+        problem: &Problem,
+        reference: &[f64],
+        cfg: &SapConfig,
+        timing: TimingMode,
+        rng: &mut Rng,
+    ) -> (f64, f64) {
+        let (m, n) = (problem.m(), problem.n());
+        let s = cfg.safety_factor.min(4) as usize;
+        let x_lam = &reference[s * n..(s + 1) * n];
+        let a = problem.dense();
+        let b = problem.b();
+        let mut aug = Mat::zeros(m + n, n);
+        aug.as_mut_slice()[..m * n].copy_from_slice(a.as_slice());
+        let lam_sqrt = lambda_of(cfg.safety_factor).sqrt();
+        for j in 0..n {
+            aug[(m + j, j)] = lam_sqrt;
+        }
+        let mut b_aug = b.to_vec();
+        b_aug.resize(m + n, 0.0);
+        // The safety slot is spent on λ; the inner SAP solve runs at the
+        // base tolerance 1e-6.
+        let inner = SapConfig { safety_factor: 0, ..*cfg };
+        let sol =
+            RIDGE_WS.with(|ws| solve_sap_ws(&aug, &b_aug, &inner, rng, &mut ws.borrow_mut()));
+        // Quality: ARFE on the *original* system against this λ's exact
+        // ridge solution — solver error, not regularization bias.
+        let err = arfe(a, b, &sol.x, x_lam);
+        let secs = match timing {
+            TimingMode::Measured => sol.stats.total_secs,
+            TimingMode::Modeled => modeled_secs(m + n, n, &inner, sol.stats.iterations),
+        };
+        (secs, err)
+    }
+
+    fn default_grid(&self) -> Vec<SapConfig> {
+        let mut grid = Vec::new();
+        for algorithm in SapAlgorithm::ALL {
+            for sketch in SketchKind::ALL {
+                for sampling_factor in [2.0, 5.0, 8.0] {
+                    for vec_nnz in [4usize, 32] {
+                        for safety_factor in [0u32, 2, 4] {
+                            grid.push(SapConfig {
+                                algorithm,
+                                sketch,
+                                sampling_factor,
+                                vec_nnz,
+                                safety_factor,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        grid
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{build_problem, materialize};
+
+    #[test]
+    fn augmented_source_matches_dense_stacking() {
+        let p = build_problem("GA", 60, 7, 99).unwrap();
+        let (m, n) = (p.m(), p.n());
+        let lam_sqrt = lambda_of(2).sqrt();
+        let aug = AugmentedSource { inner: p.source(), lam_sqrt };
+        let full = materialize(&aug);
+        assert_eq!(full.shape(), (m + n, n));
+        let a = p.dense();
+        for i in 0..m {
+            assert_eq!(full.row(i), a.row(i), "A rows must pass through");
+        }
+        for j in 0..n {
+            for jj in 0..n {
+                let want = if j == jj { lam_sqrt } else { 0.0 };
+                assert_eq!(full[(m + j, jj)], want, "tail row {j}");
+            }
+        }
+        // Straddling reads: a 5-row read across the m boundary equals
+        // the corresponding slice of the materialized stack.
+        let mut out = Mat::zeros(5, n);
+        aug.read_rows_into(m - 2, &mut out);
+        for i in 0..5 {
+            assert_eq!(out.row(i), full.row(m - 2 + i));
+        }
+    }
+
+    #[test]
+    fn reference_levels_solve_the_regularized_normal_equations() {
+        let p = build_problem("GA", 80, 6, 7).unwrap();
+        let n = p.n();
+        let refs = RidgeFamily.reference(&p);
+        assert_eq!(refs.len(), NUM_LAMBDAS * n);
+        let a = p.dense();
+        let b = p.b();
+        for s in 0..NUM_LAMBDAS {
+            let lam = lambda_of(s as u32);
+            let x = &refs[s * n..(s + 1) * n];
+            // residual of (AᵀA + λI)x = Aᵀb
+            let ax = crate::linalg::gemv(a, x);
+            let mut atr = crate::linalg::gemv_t(a, &ax);
+            let atb = crate::linalg::gemv_t(a, b);
+            for j in 0..n {
+                atr[j] += lam * x[j] - atb[j];
+            }
+            let scale = crate::linalg::norm2(&atb).max(1.0);
+            assert!(
+                crate::linalg::norm2(&atr) / scale < 1e-8,
+                "λ level {s}: normal-equation residual too large"
+            );
+        }
+    }
+}

@@ -1,0 +1,77 @@
+//! The original objective: sketch-and-precondition least squares.
+//!
+//! This is the pre-refactor evaluator body moved behind the
+//! [`ProblemFamily`] trait verbatim — same workspace reuse, same solver
+//! call, same ARFE and timing arithmetic — so existing trials stay
+//! bit-identical (pinned by `objective::evaluator` tests).
+
+use std::cell::RefCell;
+
+use super::ProblemFamily;
+use crate::data::Problem;
+use crate::linalg::lstsq_tsqr;
+use crate::objective::{modeled_secs, ParamSpace, TimingMode};
+use crate::rng::Rng;
+use crate::sap::{arfe, solve_sap_ws, SapConfig, SapWorkspace};
+
+thread_local! {
+    /// Per-thread SAP workspace, reused across repeats to keep repeated
+    /// evaluation allocation-free (moved from `objective::evaluator`).
+    static SAP_WS: RefCell<SapWorkspace> = RefCell::new(SapWorkspace::new());
+}
+
+/// SAP least squares: minimize ‖Ax − b‖₂ with the paper's Algorithm 3.1.
+pub struct SapLsFamily;
+
+impl ProblemFamily for SapLsFamily {
+    fn name(&self) -> &'static str {
+        "sap-ls"
+    }
+
+    fn space(&self) -> ParamSpace {
+        ParamSpace::paper()
+    }
+
+    fn ref_config(&self) -> SapConfig {
+        SapConfig::reference()
+    }
+
+    fn dim_names(&self) -> [&'static str; 5] {
+        ["SAP_algorithm", "sketch_operator", "sampling_factor", "vec_nnz", "safety_factor"]
+    }
+
+    /// x* from the deterministic out-of-core TSQR reference solve.
+    fn reference(&self, problem: &Problem) -> Vec<f64> {
+        lstsq_tsqr(problem.source(), problem.b())
+    }
+
+    fn run_repeat(
+        &self,
+        problem: &Problem,
+        reference: &[f64],
+        cfg: &SapConfig,
+        timing: TimingMode,
+        rng: &mut Rng,
+    ) -> (f64, f64) {
+        SAP_WS.with(|ws| {
+            let ws = &mut *ws.borrow_mut();
+            let a = problem.dense();
+            let b = problem.b();
+            let sol = solve_sap_ws(a, b, cfg, rng, ws);
+            let err = arfe(a, b, &sol.x, reference);
+            let secs = match timing {
+                TimingMode::Measured => sol.stats.total_secs,
+                TimingMode::Modeled => {
+                    modeled_secs(problem.m(), problem.n(), cfg, sol.stats.iterations)
+                }
+            };
+            (secs, err)
+        })
+    }
+
+    /// Empty: the `Grid` tuner falls back to its lazy paper grid, the
+    /// exact pre-families behaviour.
+    fn default_grid(&self) -> Vec<SapConfig> {
+        Vec::new()
+    }
+}

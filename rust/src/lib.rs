@@ -32,6 +32,7 @@ pub mod campaign;
 pub mod cli;
 pub mod data;
 pub mod db;
+pub mod families;
 pub mod fsio;
 pub mod gp;
 pub mod json;

@@ -39,6 +39,22 @@ pub fn svd_thin(a: &Mat) -> SvdFactors {
     svd_jacobi(a)
 }
 
+/// Thin SVD of a matrix of **any** aspect ratio.
+///
+/// Tall or square inputs go straight to [`svd_thin`]; wide inputs (m < n)
+/// dispatch through the transpose — Aᵀ = U'·Σ·V'ᵀ implies
+/// A = V'·Σ·U'ᵀ, so the factors come back with U and V swapped. The
+/// result always satisfies A = U·diag(s)·Vᵀ with r = min(m, n) singular
+/// values, U m×r and V n×r.
+pub fn svd_thin_any(a: &Mat) -> SvdFactors {
+    let (m, n) = a.shape();
+    if m >= n {
+        return svd_thin(a);
+    }
+    let f = svd_thin(&a.transpose());
+    SvdFactors { u: f.v, s: f.s, v: f.u }
+}
+
 /// One-sided Jacobi SVD: repeatedly rotate column pairs (i, j) of a
 /// working copy W (initially A) to orthogonalize them, accumulating
 /// rotations into V; at convergence W = U·diag(s) with s the column
@@ -201,6 +217,49 @@ mod tests {
         for &(m, n) in &[(6usize, 4usize), (40, 40), (120, 15), (3, 1)] {
             let a = Mat::from_fn(m, n, |_, _| r.normal());
             check_svd(&a, 1e-9);
+        }
+    }
+
+    #[test]
+    fn svd_any_handles_wide_inputs() {
+        let mut r = Rng::new(7);
+        for &(m, n) in &[(4usize, 9usize), (2, 40), (15, 120), (1, 3)] {
+            let a = Mat::from_fn(m, n, |_, _| r.normal());
+            let f = svd_thin_any(&a);
+            let k = m.min(n);
+            assert_eq!(f.u.shape(), (m, k));
+            assert_eq!(f.v.shape(), (n, k));
+            assert_eq!(f.s.len(), k);
+            // Reconstruction: A = U·diag(s)·Vᵀ.
+            let mut us = f.u.clone();
+            for i in 0..m {
+                for j in 0..k {
+                    us[(i, j)] *= f.s[j];
+                }
+            }
+            let rec = gemm(&us, &f.v.transpose());
+            let mut d = rec.clone();
+            d.axpy(-1.0, &a);
+            assert!(d.max_abs() < 1e-9, "reconstruction {}", d.max_abs());
+            // Orthogonality of both factors, descending values.
+            let utu = gemm(&f.u.transpose(), &f.u);
+            let vtv = gemm(&f.v.transpose(), &f.v);
+            let mut e1 = utu.clone();
+            e1.axpy(-1.0, &Mat::eye(k));
+            let mut e2 = vtv.clone();
+            e2.axpy(-1.0, &Mat::eye(k));
+            assert!(e1.max_abs() < 1e-9, "UᵀU {}", e1.max_abs());
+            assert!(e2.max_abs() < 1e-9, "VᵀV {}", e2.max_abs());
+            for w in f.s.windows(2) {
+                assert!(w[0] >= w[1] - 1e-12);
+            }
+        }
+        // Tall inputs pass through to svd_thin unchanged.
+        let a = Mat::from_fn(12, 5, |_, _| r.normal());
+        let f1 = svd_thin(&a);
+        let f2 = svd_thin_any(&a);
+        for (x, y) in f1.s.iter().zip(&f2.s) {
+            assert_eq!(x.to_bits(), y.to_bits());
         }
     }
 

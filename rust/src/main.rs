@@ -64,10 +64,19 @@ fn cmd_tune(args: &Args) -> i32 {
     let (name, m, n) = (problem.name.clone(), problem.m(), problem.n());
     let budget = args.get_usize("budget", 50);
     let seed = args.get_u64("seed", 0);
+    let family_name = args.get("family").unwrap_or("sap-ls");
+    let Some(family) = ranntune::families::get(family_name) else {
+        eprintln!(
+            "unknown family {family_name:?}; expected one of {}",
+            ranntune::families::known_names()
+        );
+        return 2;
+    };
     let constants = Constants {
         num_repeats: args.get_usize("repeats", 5),
         penalty_factor: args.get_f64("penalty", 2.0),
         allowance_factor: args.get_f64("allowance", 10.0),
+        family,
         ..Constants::default()
     };
     let tuner_name = args.get("tuner").unwrap_or("gptune").to_lowercase();
@@ -75,7 +84,7 @@ fn cmd_tune(args: &Args) -> i32 {
         "lhsmdu" | "random" => Box::new(LhsmduTuner::new()),
         "tpe" => Box::new(TpeTuner::new(constants.num_pilots)),
         "gptune" | "gp" => Box::new(GpBoTuner::new(constants.num_pilots)),
-        "grid" => Box::new(GridTuner::new(vec![])),
+        "grid" => Box::new(GridTuner::new(family.default_grid())),
         "tla" => {
             let source = match args.get("source-db") {
                 Some(path) => {
@@ -113,7 +122,10 @@ fn cmd_tune(args: &Args) -> i32 {
     };
 
     println!("tuning {name} ({m}x{n}) with {} for {budget} evaluations ...", tuner.name());
-    let task = TuningTask { problem, space: ParamSpace::paper(), constants: constants.clone() };
+    if family.name() != "sap-ls" {
+        println!("problem family: {}", family.name());
+    }
+    let task = TuningTask { problem, space: family.space(), constants: constants.clone() };
     let mut obj = Objective::new(task, seed);
     let eval_threads = args.get_usize("eval-threads", 1);
     if eval_threads > 1 {

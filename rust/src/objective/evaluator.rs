@@ -23,23 +23,25 @@
 //! indexed by `(job, repeat)`, so ARFE values, failure flags, and trial
 //! order are bit-identical between the serial and parallel evaluators (and
 //! across any thread count); only the measured wall-clock differs, as it
-//! must. Each worker thread keeps a [`SapWorkspace`] so repeated runs
-//! reuse the LSQR iteration buffers — also bit-neutral.
+//! must. What one repeat *does* is delegated to the task's
+//! [`crate::families::ProblemFamily`]; the `sap-ls` family keeps a
+//! per-thread [`crate::sap::SapWorkspace`] so repeated runs reuse the
+//! LSQR iteration buffers — also bit-neutral.
 
 use super::Constants;
 use crate::data::Problem;
 use crate::rng::Rng;
-use crate::sap::{arfe, solve_sap_ws, SapConfig, SapWorkspace};
-use std::cell::RefCell;
+use crate::sap::SapConfig;
 use std::sync::Mutex;
 
 /// Immutable task state an evaluator needs to measure configurations.
 pub struct EvalContext<'a> {
-    /// The least-squares problem under tuning.
+    /// The problem under tuning.
     pub problem: &'a Problem,
-    /// Pipeline constants (repeats, penalty, timing mode, ...).
+    /// Pipeline constants (repeats, family, penalty, timing mode, ...).
     pub constants: &'a Constants,
-    /// Direct-solver reference solution (the x* in ARFE).
+    /// The family's reference payload (x* for least squares; see
+    /// [`crate::families::ProblemFamily::reference`]).
     pub x_star: &'a [f64],
     /// Root seed of the objective's solver-randomness streams.
     pub base_seed: u64,
@@ -155,42 +157,19 @@ pub fn repeat_rng(base_seed: u64, trial_index: usize, repeat: usize) -> Rng {
     Rng::new(h ^ (h >> 31))
 }
 
-thread_local! {
-    /// Per-thread solver scratch: pool workers (and the serial caller)
-    /// reuse one [`SapWorkspace`] across every repeat they execute.
-    static SAP_WS: RefCell<SapWorkspace> = RefCell::new(SapWorkspace::new());
-}
-
-/// Run one solver repeat on this thread's workspace; returns (wall-clock
-/// seconds, ARFE).
+/// Run one repeat of one trial through the task's
+/// [`crate::families::ProblemFamily`]; returns (wall-clock seconds,
+/// quality). The per-(trial, repeat) RNG is derived here, so families
+/// only ever see a ready-made deterministic stream.
 fn run_repeat(ctx: &EvalContext<'_>, job: &EvalJob, repeat: usize) -> (f64, f64) {
-    SAP_WS.with(|ws| run_repeat_ws(ctx, job, repeat, &mut ws.borrow_mut()))
-}
-
-/// Run one solver repeat; returns (wall-clock seconds, ARFE).
-fn run_repeat_ws(
-    ctx: &EvalContext<'_>,
-    job: &EvalJob,
-    repeat: usize,
-    ws: &mut SapWorkspace,
-) -> (f64, f64) {
     let mut rng = repeat_rng(ctx.base_seed, job.trial_index, repeat);
-    // `total_secs` is measured inside solve_sap, so both evaluators agree
-    // on what "wall clock" means regardless of scheduling overhead here.
-    let a = ctx.problem.dense();
-    let b = ctx.problem.b();
-    let sol = solve_sap_ws(a, b, &job.config, &mut rng, ws);
-    let err = arfe(a, b, &sol.x, ctx.x_star);
-    let secs = match ctx.constants.timing {
-        TimingMode::Measured => sol.stats.total_secs,
-        TimingMode::Modeled => modeled_secs(
-            ctx.problem.m(),
-            ctx.problem.n(),
-            &job.config,
-            sol.stats.iterations,
-        ),
-    };
-    (secs, err)
+    ctx.constants.family.run_repeat(
+        ctx.problem,
+        ctx.x_star,
+        &job.config,
+        ctx.constants.timing,
+        &mut rng,
+    )
 }
 
 /// Reduce per-repeat samples into one [`RawEval`].
@@ -396,6 +375,37 @@ mod tests {
             assert_eq!(par.len(), serial.len());
             for (p, s) in par.iter().zip(serial.iter()) {
                 assert_eq!(p.arfe.to_bits(), s.arfe.to_bits(), "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn family_dispatch_is_bit_identical_to_the_inline_sap_path() {
+        // Pin for the families refactor: routing sap-ls evaluation
+        // through the ProblemFamily trait must reproduce the former
+        // inline evaluator body (solve_sap_ws + arfe + modeled_secs,
+        // seeded by repeat_rng) bit-for-bit.
+        let (problem, mut constants, x_star) = tiny_ctx_parts();
+        constants.timing = TimingMode::Modeled;
+        let ctx = EvalContext {
+            problem: &problem,
+            constants: &constants,
+            x_star: &x_star,
+            base_seed: 37,
+        };
+        for job in &jobs_for(4) {
+            for repeat in 0..2 {
+                let (got_secs, got_err) = run_repeat(&ctx, job, repeat);
+                let mut rng = repeat_rng(37, job.trial_index, repeat);
+                let mut ws = crate::sap::SapWorkspace::new();
+                let a = problem.dense();
+                let b = problem.b();
+                let sol = crate::sap::solve_sap_ws(a, b, &job.config, &mut rng, &mut ws);
+                let want_err = crate::sap::arfe(a, b, &sol.x, &x_star);
+                let want_secs =
+                    modeled_secs(problem.m(), problem.n(), &job.config, sol.stats.iterations);
+                assert_eq!(got_err.to_bits(), want_err.to_bits(), "trial {}", job.trial_index);
+                assert_eq!(got_secs.to_bits(), want_secs.to_bits(), "trial {}", job.trial_index);
             }
         }
     }

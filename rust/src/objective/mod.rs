@@ -4,8 +4,8 @@
 //!   [0,1]-normalized encode/decode (GPTune's convention) and the
 //!   categorical/ordinal split used by TLA.
 //! * [`TuningTask`] — a problem plus its space and constant parameters
-//!   (`num_pilots`, `num_repeats`, `ref_config`, `penalty_factor`,
-//!   `allowance_factor`).
+//!   (`num_pilots`, `num_repeats`, the `family` under tuning,
+//!   `penalty_factor`, `allowance_factor`).
 //! * [`Objective`] — the black-box function under tuning: queues
 //!   configurations (ask), executes them through an [`Evaluator`] (tell),
 //!   averages wall-clock time and ARFE over `num_repeats` solver seeds,
@@ -37,41 +37,48 @@ pub use session::{
 pub use space::*;
 
 use crate::data::Problem;
-use crate::linalg::lstsq_tsqr;
+use crate::families::ProblemFamily;
 use crate::sap::SapConfig;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
-/// Direct-solver reference solution for `problem`, memoized process-wide.
+/// The family's reference payload for `problem`, memoized process-wide.
 ///
 /// Campaign cells and repeated [`TuningSession`]s routinely rebuild an
 /// [`Objective`] for the *same* problem (one per tuner per cell, plus
-/// kill/resume reruns), and each used to re-run the full m×n direct
-/// factorization — the single most expensive deterministic step of the
-/// pipeline. The solve is a pure function of the problem data, so it is
-/// cached keyed by ([`Problem::fingerprint`], m, n); the recorded
-/// wall-clock of the original solve is returned with it so
-/// `direct_secs` stays meaningful (and deterministic) on cache hits.
-fn reference_solution(problem: &Problem) -> (Arc<Vec<f64>>, f64) {
+/// kill/resume reruns), and each used to re-run the full reference
+/// computation — the single most expensive deterministic step of the
+/// pipeline. [`ProblemFamily::reference`] is a pure function of the
+/// problem data, so it is cached keyed by ([`Problem::fingerprint`], m,
+/// n, family name); the recorded wall-clock of the original solve is
+/// returned with it so `direct_secs` stays meaningful (and
+/// deterministic) on cache hits.
+fn reference_solution(
+    problem: &Problem,
+    family: &'static dyn ProblemFamily,
+) -> (Arc<Vec<f64>>, f64) {
     // Each problem key owns a once-cell slot: concurrent first touches
     // (parallel campaign cells on the same problem) block on the slot
-    // instead of each running the O(mn²) solve. The outer mutex is held
-    // only for the slot lookup, so different problems still solve
+    // instead of each running the expensive solve. The outer mutex is
+    // held only for the slot lookup, so different problems still solve
     // concurrently.
     type Slot = Arc<OnceLock<(Arc<Vec<f64>>, f64)>>;
-    static CACHE: OnceLock<Mutex<HashMap<(u64, usize, usize), Slot>>> = OnceLock::new();
+    type Key = (u64, usize, usize, &'static str);
+    static CACHE: OnceLock<Mutex<HashMap<Key, Slot>>> = OnceLock::new();
     let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
-    let key = (problem.fingerprint(), problem.m(), problem.n());
+    let key = (problem.fingerprint(), problem.m(), problem.n(), family.name());
     let slot = cache.lock().unwrap().entry(key).or_default().clone();
     slot.get_or_init(|| {
         let t = Instant::now();
-        // Streams A through the problem's MatSource: TSQR factors row
-        // blocks and combines R up the tree, so the reference solve never
-        // needs the materialized matrix. For in-memory problems the
-        // default block policy yields a single leaf, making this
-        // bit-identical to the former dense `lstsq_qr` path.
-        let x_star = Arc::new(lstsq_tsqr(problem.source(), problem.b()));
+        // For sap-ls this streams A through the problem's MatSource:
+        // TSQR factors row blocks and combines R up the tree, so the
+        // reference solve never needs the materialized matrix (for
+        // in-memory problems the default block policy yields a single
+        // leaf, bit-identical to the former dense `lstsq_qr` path).
+        // Other families compute their own payloads (see
+        // [`ProblemFamily::reference`]).
+        let x_star = Arc::new(family.reference(problem));
         (x_star, t.elapsed().as_secs_f64())
     })
     .clone()
@@ -84,8 +91,10 @@ pub struct Constants {
     pub num_pilots: usize,
     /// Runs (distinct solver seeds) averaged per configuration.
     pub num_repeats: usize,
-    /// The "safe" configuration that defines ARFE_ref.
-    pub ref_config: SapConfig,
+    /// The problem family under tuning (defaults to SAP least squares).
+    /// Supplies the reference solve, the per-repeat evaluation, and the
+    /// "safe" configuration that defines ARFE_ref.
+    pub family: &'static dyn ProblemFamily,
     /// Multiplier applied to failing configurations' wall-clock time.
     pub penalty_factor: f64,
     /// Failure threshold: ARFE > allowance_factor × ARFE_ref ⇒ failure.
@@ -102,7 +111,7 @@ impl Default for Constants {
         Constants {
             num_pilots: 10,
             num_repeats: 5,
-            ref_config: SapConfig::reference(),
+            family: crate::families::sap_ls(),
             penalty_factor: 2.0,
             allowance_factor: 10.0,
             timing: TimingMode::Measured,
@@ -135,8 +144,9 @@ impl TuningTask {
 pub struct Objective {
     /// The task under tuning (tuners read the space through this).
     pub task: TuningTask,
-    /// Direct (QR) least-squares solution — the x* in ARFE. Shared with
-    /// the process-wide memo: equal problems reuse one solve.
+    /// The family's reference payload (x* for least squares; see
+    /// [`ProblemFamily::reference`]). Shared with the process-wide memo:
+    /// equal problems reuse one solve per family.
     x_star: Arc<Vec<f64>>,
     /// Wall-clock seconds of the direct solve (reported in benches; on a
     /// memo hit this is the original solve's recorded time).
@@ -164,7 +174,8 @@ impl Objective {
         seed: u64,
         evaluator: Box<dyn Evaluator>,
     ) -> Objective {
-        let (x_star, direct_secs) = reference_solution(&task.problem);
+        let (x_star, direct_secs) =
+            reference_solution(&task.problem, task.constants.family);
         Objective {
             task,
             x_star,
@@ -238,7 +249,7 @@ impl Objective {
             // Already established — return the recorded trial.
             return self.history.trials()[0].clone();
         }
-        let cfg = self.task.constants.ref_config;
+        let cfg = self.task.constants.family.ref_config();
         self.run_batch(&[cfg], true).pop().expect("one reference trial")
     }
 

@@ -268,7 +268,7 @@ impl<'a> TuningSession<'a> {
     /// identical).
     fn fingerprint(&self) -> String {
         let t = &self.objective.task;
-        format!(
+        let mut s = format!(
             "ranntune-session-v1;tuner={};seed={};problem={}:{}x{};data={:016x};repeats={};\
              timing={:?};penalty={};allowance={}",
             self.tuner.name(),
@@ -281,7 +281,14 @@ impl<'a> TuningSession<'a> {
             t.constants.timing,
             t.constants.penalty_factor,
             t.constants.allowance_factor,
-        )
+        );
+        // Appended only for non-default families, so every pre-families
+        // checkpoint stays resumable byte-for-byte.
+        let family = t.constants.family.name();
+        if family != "sap-ls" {
+            s.push_str(&format!(";family={family}"));
+        }
+        s
     }
 
     /// Check the non-budget stop rules against the recorded history.

@@ -42,6 +42,11 @@ pub struct JobManifest {
     pub data_seed: u64,
     /// Regime tag carried through to reports (not result-relevant).
     pub regime: Regime,
+    /// Problem family this job tunes ([`crate::families::get`] name).
+    /// Part of the problem identity: a non-default family prefixes the
+    /// crowd fingerprint, so e.g. ridge and least-squares trials on the
+    /// same matrix never warm-start each other.
+    pub family: String,
     /// Which tuner to run.
     pub tuner: TunerKind,
     /// Evaluation budget (the reference counts as the first).
@@ -73,6 +78,7 @@ impl JobManifest {
             n,
             data_seed: 1,
             regime: Regime::LowCoherence,
+            family: "sap-ls".into(),
             tuner,
             budget: 20,
             seed: 0,
@@ -88,6 +94,7 @@ impl JobManifest {
     /// data seed, the conventional `"{dataset}-{m}x{n}-s{seed}"` id).
     pub fn problem(&self) -> ProblemSpec {
         ProblemSpec::new(&self.dataset, self.m, self.n, self.data_seed, self.regime)
+            .with_family(&self.family)
     }
 
     /// The problem fingerprint keying this job's trials in the crowd
@@ -105,9 +112,12 @@ impl JobManifest {
         Cell { problem: self.problem(), tuner: self.tuner }.seed(self.seed)
     }
 
-    /// Serialize to the `ranntune-job-v1` wire document.
+    /// Serialize to the `ranntune-job-v1` wire document. The `family`
+    /// key is only emitted for non-default families, so documents (and
+    /// their state files) written before families existed stay
+    /// byte-identical.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("format", Json::Str(JOB_FORMAT.into())),
             ("tenant", Json::Str(self.tenant.clone())),
             ("dataset", Json::Str(self.dataset.clone())),
@@ -123,14 +133,48 @@ impl JobManifest {
             ("warm", Json::Bool(self.warm)),
             ("source_samples", Json::Num(self.source_samples as f64)),
             ("eval_threads", Json::Num(self.eval_threads as f64)),
-        ])
+        ];
+        if self.family != "sap-ls" {
+            pairs.push(("family", Json::Str(self.family.clone())));
+        }
+        Json::obj(pairs)
     }
 
     /// Parse a manifest. Only the problem identity (`dataset`, `m`, `n`)
     /// and `tuner` are required; every other field defaults as in
     /// [`JobManifest::new`]. An unknown `format` tag is refused so a
-    /// future v2 document is never silently half-read.
+    /// future v2 document is never silently half-read, and unknown
+    /// top-level keys are refused so a typoed knob (`"budgit"`) fails
+    /// loudly instead of silently tuning with the default.
     pub fn from_json(v: &Json) -> Result<JobManifest, String> {
+        const KNOWN_KEYS: [&str; 16] = [
+            "format",
+            "tenant",
+            "dataset",
+            "m",
+            "n",
+            "data_seed",
+            "regime",
+            "family",
+            "tuner",
+            "budget",
+            "seed",
+            "repeats",
+            "timing",
+            "warm",
+            "source_samples",
+            "eval_threads",
+        ];
+        if let Json::Obj(map) = v {
+            let unknown: Vec<&str> = map
+                .keys()
+                .map(String::as_str)
+                .filter(|k| !KNOWN_KEYS.contains(k))
+                .collect();
+            if !unknown.is_empty() {
+                return Err(format!("job: unknown manifest keys: {}", unknown.join(", ")));
+            }
+        }
         if let Some(f) = v.get("format").and_then(|x| x.as_str()) {
             if f != JOB_FORMAT {
                 return Err(format!("unsupported job format {f:?} (want {JOB_FORMAT})"));
@@ -154,6 +198,15 @@ impl JobManifest {
         }
         if let Some(r) = v.get("regime").and_then(|x| x.as_str()) {
             job.regime = Regime::parse(r).ok_or_else(|| format!("job: unknown regime {r:?}"))?;
+        }
+        if let Some(f) = v.get("family").and_then(|x| x.as_str()) {
+            if crate::families::get(f).is_none() {
+                return Err(format!(
+                    "job: unknown family {f:?} (want {})",
+                    crate::families::known_names()
+                ));
+            }
+            job.family = f.to_string();
         }
         if let Some(b) = v.get("budget").and_then(|x| x.as_usize()) {
             job.budget = b;
@@ -433,7 +486,35 @@ mod tests {
         assert_eq!(j.tenant, "anon");
         assert_eq!(j.budget, 20);
         assert_eq!(j.timing, TimingMode::Measured);
+        assert_eq!(j.family, "sap-ls");
         assert_eq!(j.problem_id(), "GA-200x10-s1");
+    }
+
+    #[test]
+    fn family_round_trips_and_prefixes_the_problem_id() {
+        // Default family is omitted from the wire document entirely.
+        let m = JobManifest::new("GA", 300, 15, TunerKind::Tpe);
+        assert!(!m.to_json().to_string_pretty().contains("family"));
+        // Non-default families round-trip and prefix the crowd key.
+        let mut r = m.clone();
+        r.family = "ridge".into();
+        let back = JobManifest::from_json(&r.to_json()).unwrap();
+        assert_eq!(back, r);
+        assert_eq!(back.problem_id(), "ridge.GA-300x15-s1");
+        // The family shifts the session seed (different problem identity).
+        assert_ne!(m.session_seed(), r.session_seed());
+    }
+
+    #[test]
+    fn manifest_rejects_unknown_keys_naming_the_offenders() {
+        let doc = Json::parse(
+            r#"{"dataset":"GA","m":200,"n":10,"tuner":"tpe","budgit":9,"warm_start":true}"#,
+        )
+        .unwrap();
+        let err = JobManifest::from_json(&doc).unwrap_err();
+        assert!(err.contains("unknown manifest keys"), "{err}");
+        assert!(err.contains("budgit"), "{err}");
+        assert!(err.contains("warm_start"), "{err}");
     }
 
     #[test]
@@ -445,6 +526,7 @@ mod tests {
             r#"{"dataset":"GA","m":10,"n":10,"tuner":"tpe"}"#,
             r#"{"dataset":"GA","m":200,"n":10,"tuner":"tpe","timing":"warp"}"#,
             r#"{"format":"ranntune-job-v9","dataset":"GA","m":200,"n":10,"tuner":"tpe"}"#,
+            r#"{"dataset":"GA","m":200,"n":10,"tuner":"tpe","family":"poisson"}"#,
         ] {
             assert!(JobManifest::from_json(&Json::parse(bad).unwrap()).is_err(), "{bad}");
         }

@@ -40,8 +40,8 @@ use crate::data::ProblemSpec;
 use crate::db::HistoryDb;
 use crate::json::Json;
 use crate::objective::{
-    Constants, History, Objective, ParallelEvaluator, ParamSpace, SessionOutcome, StopReason,
-    Trial, TuningSession, TuningTask,
+    Constants, History, Objective, ParallelEvaluator, SessionOutcome, StopReason, Trial,
+    TuningSession, TuningTask,
 };
 use crate::tuners::SourceSample;
 use std::collections::{BTreeMap, VecDeque};
@@ -131,19 +131,29 @@ pub fn drive_session(
     warm: &[Trial],
     observer: Option<&mut dyn FnMut(&Trial)>,
 ) -> Result<SessionOutcome, String> {
+    let family = crate::families::get(&spec.problem.family).ok_or_else(|| {
+        format!(
+            "unknown problem family {:?}; expected {}",
+            spec.problem.family,
+            crate::families::known_names()
+        )
+    })?;
     let problem = spec.problem.build()?;
+    // The spec's family wins over whatever Constants carried (SessionSpec
+    // builders default it); everything downstream — reference solve,
+    // per-repeat evaluation, fingerprint — keys off these constants.
+    let constants = Constants { family, ..spec.constants.clone() };
     let source = if spec.tuner.needs_source() {
-        collect_session_source(spec)?
+        collect_session_source(spec, &constants)?
     } else {
         Vec::new()
     };
-    let task =
-        TuningTask { problem, space: ParamSpace::paper(), constants: spec.constants.clone() };
+    let task = TuningTask { problem, space: family.space(), constants: constants.clone() };
     let mut obj = Objective::new(task, spec.session_seed);
     if spec.eval_threads > 1 {
         obj.set_evaluator(Box::new(ParallelEvaluator::new(spec.eval_threads)));
     }
-    let mut tuner = spec.tuner.make(spec.constants.num_pilots, source);
+    let mut tuner = spec.tuner.make(constants.num_pilots, source, family);
     let mut session = TuningSession::new(
         &mut obj,
         tuner.as_mut(),
@@ -170,13 +180,16 @@ pub fn drive_session(
 /// problem: same generator family, m/4 rows (floored at n + 50), shifted
 /// data seed — the paper's §5.3.1 source protocol, fully determined by
 /// the spec (moved verbatim from `campaign::runner`).
-fn collect_session_source(spec: &SessionSpec) -> Result<Vec<SourceSample>, String> {
+fn collect_session_source(
+    spec: &SessionSpec,
+    constants: &Constants,
+) -> Result<Vec<SourceSample>, String> {
     let p = &spec.problem;
     let src_m = (p.m / 4).max(p.n + 50).min(p.m);
     let src_problem = crate::data::build_problem(&p.dataset, src_m, p.n, p.data_seed + 400)?;
     Ok(crate::cli::figures::collect_source(
         src_problem,
-        spec.constants.clone(),
+        constants.clone(),
         spec.source_samples,
         spec.session_seed ^ SOURCE_SEED_SALT,
     ))

@@ -217,82 +217,112 @@ pub(crate) mod statejson {
 #[cfg(test)]
 pub(crate) mod testutil {
     use crate::data::{generate_synthetic, Problem, SyntheticKind};
-    use crate::objective::{Constants, Objective, ParamSpace, TimingMode, TuningTask};
+    use crate::families::ProblemFamily;
+    use crate::objective::{Constants, Objective, TimingMode, TuningTask};
     use crate::rng::Rng;
 
-    /// A small, fast tuning objective for tuner unit tests.
-    pub fn tiny_objective(seed: u64) -> Objective {
+    /// A small, fast tuning objective on the given problem family.
+    pub fn tiny_family_objective(seed: u64, family: &'static dyn ProblemFamily) -> Objective {
         let mut rng = Rng::new(seed);
         let p: Problem = generate_synthetic(SyntheticKind::GA, 300, 15, &mut rng);
         let task = TuningTask {
             problem: p,
-            space: ParamSpace::paper(),
-            constants: Constants { num_repeats: 1, num_pilots: 4, ..Constants::default() },
-        };
-        Objective::new(task, seed)
-    }
-
-    /// Like [`tiny_objective`] but with the deterministic flop-model
-    /// clock, for bit-identity assertions on full histories.
-    pub fn tiny_modeled_objective(seed: u64) -> Objective {
-        let mut rng = Rng::new(seed);
-        let p: Problem = generate_synthetic(SyntheticKind::GA, 300, 15, &mut rng);
-        let task = TuningTask {
-            problem: p,
-            space: ParamSpace::paper(),
+            space: family.space(),
             constants: Constants {
                 num_repeats: 1,
                 num_pilots: 4,
-                timing: TimingMode::Modeled,
+                family,
                 ..Constants::default()
             },
         };
         Objective::new(task, seed)
     }
+
+    /// Like [`tiny_family_objective`] but with the deterministic
+    /// flop-model clock, for bit-identity assertions on full histories.
+    pub fn tiny_family_modeled_objective(
+        seed: u64,
+        family: &'static dyn ProblemFamily,
+    ) -> Objective {
+        let mut rng = Rng::new(seed);
+        let p: Problem = generate_synthetic(SyntheticKind::GA, 300, 15, &mut rng);
+        let task = TuningTask {
+            problem: p,
+            space: family.space(),
+            constants: Constants {
+                num_repeats: 1,
+                num_pilots: 4,
+                timing: TimingMode::Modeled,
+                family,
+                ..Constants::default()
+            },
+        };
+        Objective::new(task, seed)
+    }
+
+    /// A small, fast tuning objective for tuner unit tests (sap-ls).
+    pub fn tiny_objective(seed: u64) -> Objective {
+        tiny_family_objective(seed, crate::families::sap_ls())
+    }
 }
 
 #[cfg(test)]
 mod tests {
-    use super::testutil::{tiny_modeled_objective, tiny_objective};
+    use super::testutil::{
+        tiny_family_modeled_objective, tiny_family_objective, tiny_objective,
+    };
     use super::*;
-    use crate::objective::{History, ParamSpace, TuningSession};
+    use crate::families::ProblemFamily;
+    use crate::objective::{History, TuningSession};
 
     /// All five tuners, freshly constructed (TLA with an empty source —
-    /// the degenerate single-task transfer case).
-    fn all_makers() -> Vec<Box<dyn FnMut() -> Box<dyn Tuner>>> {
+    /// the degenerate single-task transfer case). Grid sweeps the
+    /// family's default grid; for sap-ls that is empty, which keeps
+    /// GridTuner's lazy paper-grid fallback.
+    fn all_makers(
+        family: &'static dyn ProblemFamily,
+    ) -> Vec<Box<dyn FnMut() -> Box<dyn Tuner>>> {
         vec![
             Box::new(|| Box::new(LhsmduTuner::new())),
             Box::new(|| Box::new(TpeTuner::new(4))),
             Box::new(|| Box::new(GpBoTuner::new(4))),
-            Box::new(|| Box::new(GridTuner::new(vec![]))),
+            Box::new(move || Box::new(GridTuner::new(family.default_grid()))),
             Box::new(|| Box::new(TlaTuner::new(vec![]))),
         ]
     }
 
-    /// Contract test run against every tuner: respects the budget, first
-    /// trial is the reference, all trials valid configurations, and the
-    /// ask/tell invariants hold (Done stays Done, remaining = 0 ⇒ Done).
-    fn check_contract(make: &mut dyn FnMut() -> Box<dyn Tuner>) {
+    /// Contract test run against every tuner on one problem family:
+    /// respects the budget, first trial is the reference, all trials lie
+    /// inside the family's parameter space, and the ask/tell invariants
+    /// hold (Done stays Done, remaining = 0 ⇒ Done).
+    fn check_contract(
+        make: &mut dyn FnMut() -> Box<dyn Tuner>,
+        family: &'static dyn ProblemFamily,
+    ) {
         let mut tuner = make();
-        let mut obj = tiny_objective(1);
+        let mut obj = tiny_family_objective(1, family);
         let budget = 8;
         let h = TuningSession::new(&mut obj, tuner.as_mut(), budget, 2)
             .run()
             .unwrap()
             .history;
-        assert_eq!(h.len(), budget, "{} ignored budget", tuner.name());
-        assert!(h.trials()[0].is_reference, "{} must evaluate ref first", tuner.name());
+        let who = format!("{}/{}", family.name(), tuner.name());
+        assert_eq!(h.len(), budget, "{who} ignored budget");
+        assert!(h.trials()[0].is_reference, "{who} must evaluate ref first");
+        let space = family.space();
         for t in h.trials() {
-            assert!((1.0..=10.0).contains(&t.config.sampling_factor));
-            assert!((1..=100).contains(&t.config.vec_nnz));
-            assert!(t.config.safety_factor <= 4);
-            assert!(t.wall_clock > 0.0);
-            assert!(t.value >= t.wall_clock); // penalty only inflates
+            assert!((space.sf.0..=space.sf.1).contains(&t.config.sampling_factor), "{who}");
+            assert!((space.nnz.0..=space.nnz.1).contains(&t.config.vec_nnz), "{who}");
+            assert!(
+                (space.safety.0..=space.safety.1).contains(&t.config.safety_factor),
+                "{who}"
+            );
+            assert!(t.wall_clock > 0.0, "{who}");
+            assert!(t.value >= t.wall_clock, "{who}"); // penalty only inflates
         }
 
         // Invariant: with no budget left, ask must return Done — and must
         // keep returning Done on repeated calls.
-        let space = ParamSpace::paper();
         let ctx = SessionCtx {
             space: &space,
             budget,
@@ -304,33 +334,42 @@ mod tests {
         for _ in 0..3 {
             assert!(
                 tuner.ask(&ctx, &mut rng).is_done(),
-                "{} proposed past an exhausted budget",
-                tuner.name()
+                "{who} proposed past an exhausted budget"
             );
         }
     }
 
     #[test]
-    fn all_tuners_satisfy_contract() {
-        for m in all_makers().iter_mut() {
-            check_contract(m.as_mut());
+    fn all_tuners_satisfy_contract_on_every_family() {
+        for family in crate::families::all() {
+            for m in all_makers(family).iter_mut() {
+                check_contract(m.as_mut(), family);
+            }
         }
     }
 
     #[test]
-    fn budget_zero_and_one_edges_for_every_tuner() {
-        for (i, m) in all_makers().iter_mut().enumerate() {
-            // budget 0: nothing runs, not even the reference.
-            let mut t0 = m();
-            let mut obj0 = tiny_objective(40 + i as u64);
-            let out0 = TuningSession::new(&mut obj0, t0.as_mut(), 0, 1).run().unwrap();
-            assert!(out0.history.is_empty(), "{}: budget 0 evaluated", t0.name());
-            // budget 1: exactly the reference evaluation.
-            let mut t1 = m();
-            let mut obj1 = tiny_objective(40 + i as u64);
-            let out1 = TuningSession::new(&mut obj1, t1.as_mut(), 1, 1).run().unwrap();
-            assert_eq!(out1.history.len(), 1, "{}: budget 1", t1.name());
-            assert!(out1.history.trials()[0].is_reference);
+    fn budget_zero_and_one_edges_for_every_tuner_and_family() {
+        for (fi, family) in crate::families::all().into_iter().enumerate() {
+            for (i, m) in all_makers(family).iter_mut().enumerate() {
+                let seed = 40 + 10 * fi as u64 + i as u64;
+                // budget 0: nothing runs, not even the reference.
+                let mut t0 = m();
+                let mut obj0 = tiny_family_objective(seed, family);
+                let out0 = TuningSession::new(&mut obj0, t0.as_mut(), 0, 1).run().unwrap();
+                assert!(
+                    out0.history.is_empty(),
+                    "{}/{}: budget 0 evaluated",
+                    family.name(),
+                    t0.name()
+                );
+                // budget 1: exactly the reference evaluation.
+                let mut t1 = m();
+                let mut obj1 = tiny_family_objective(seed, family);
+                let out1 = TuningSession::new(&mut obj1, t1.as_mut(), 1, 1).run().unwrap();
+                assert_eq!(out1.history.len(), 1, "{}/{}", family.name(), t1.name());
+                assert!(out1.history.trials()[0].is_reference);
+            }
         }
     }
 
@@ -370,74 +409,85 @@ mod tests {
 
     #[test]
     fn snapshot_restore_mid_session_reproduces_the_tail_bitwise() {
-        // For every tuner: pause a checkpointed session after ~4
-        // evaluations (kill simulation), then resume it with a fresh
+        // For every (family, tuner): pause a checkpointed session after
+        // ~4 evaluations (kill simulation), then resume it with a fresh
         // tuner + objective. The merged history must be bit-identical to
         // an uninterrupted run of the same budget under modeled timing.
-        for (i, m) in all_makers().iter_mut().enumerate() {
-            let seed = 70 + i as u64;
-            // Uninterrupted run to 9.
-            let mut t_full = m();
-            let mut obj_full = tiny_modeled_objective(seed);
-            let full = TuningSession::new(&mut obj_full, t_full.as_mut(), 9, 5)
-                .run()
-                .unwrap()
-                .history;
+        for (fi, family) in crate::families::all().into_iter().enumerate() {
+            for (i, m) in all_makers(family).iter_mut().enumerate() {
+                let seed = 70 + 10 * fi as u64 + i as u64;
+                // Uninterrupted run to 9.
+                let mut t_full = m();
+                let mut obj_full = tiny_family_modeled_objective(seed, family);
+                let full = TuningSession::new(&mut obj_full, t_full.as_mut(), 9, 5)
+                    .run()
+                    .unwrap()
+                    .history;
 
-            // Same budget, paused mid-run after exactly 4 evaluations —
-            // one-shot proposers get their batch split at the quota, and
-            // the remainder rides along in the checkpoint.
-            let dir = std::env::temp_dir()
-                .join(format!("ranntune_snap_{}_{}", i, std::process::id()));
-            let _ = std::fs::remove_dir_all(&dir);
-            let ckpt = dir.join("session.json");
-            let mut t_a = m();
-            let mut obj_a = tiny_modeled_objective(seed);
-            let part = TuningSession::new(&mut obj_a, t_a.as_mut(), 9, 5)
-                .checkpoint_to(&ckpt)
-                .pause_after(4)
-                .run()
-                .unwrap();
-            assert_eq!(part.stop, crate::objective::StopReason::Paused, "{}", t_a.name());
-            assert_eq!(part.history.len(), 4, "{}: quota must be exact", t_a.name());
+                // Same budget, paused mid-run after exactly 4 evaluations
+                // — one-shot proposers get their batch split at the
+                // quota, and the remainder rides in the checkpoint.
+                let dir = std::env::temp_dir().join(format!(
+                    "ranntune_snap_{}_{}_{}",
+                    fi,
+                    i,
+                    std::process::id()
+                ));
+                let _ = std::fs::remove_dir_all(&dir);
+                let ckpt = dir.join("session.json");
+                let who = format!("{}/{}", family.name(), t_full.name());
+                let mut t_a = m();
+                let mut obj_a = tiny_family_modeled_objective(seed, family);
+                let part = TuningSession::new(&mut obj_a, t_a.as_mut(), 9, 5)
+                    .checkpoint_to(&ckpt)
+                    .pause_after(4)
+                    .run()
+                    .unwrap();
+                assert_eq!(part.stop, crate::objective::StopReason::Paused, "{who}");
+                assert_eq!(part.history.len(), 4, "{who}: quota must be exact");
 
-            let mut t_b = m();
-            let mut obj_b = tiny_modeled_objective(seed);
-            let resumed = TuningSession::new(&mut obj_b, t_b.as_mut(), 9, 5)
-                .checkpoint_to(&ckpt)
-                .run()
-                .unwrap();
-            assert!(resumed.resumed, "{}: session did not resume", t_b.name());
-            assert_history_bits_eq(&full, &resumed.history, t_b.name());
-            std::fs::remove_dir_all(&dir).ok();
+                let mut t_b = m();
+                let mut obj_b = tiny_family_modeled_objective(seed, family);
+                let resumed = TuningSession::new(&mut obj_b, t_b.as_mut(), 9, 5)
+                    .checkpoint_to(&ckpt)
+                    .run()
+                    .unwrap();
+                assert!(resumed.resumed, "{who}: session did not resume");
+                assert_history_bits_eq(&full, &resumed.history, &who);
+                std::fs::remove_dir_all(&dir).ok();
+            }
         }
     }
 
     #[test]
     fn all_tuners_are_deterministic_across_eval_threads() {
         // Modeled timing ⇒ the full recorded history (values included) is
-        // a pure function of seeds, for every tuner, regardless of the
-        // evaluation engine. Combined with the CI RANNTUNE_THREADS matrix
-        // this pins the acceptance contract: sessions are deterministic
-        // across both --eval-threads and kernel-pool widths.
+        // a pure function of seeds, for every (family, tuner), regardless
+        // of the evaluation engine. Combined with the CI RANNTUNE_THREADS
+        // matrix this pins the acceptance contract: sessions are
+        // deterministic across both --eval-threads and kernel-pool
+        // widths.
         use crate::objective::ParallelEvaluator;
-        for (i, m) in all_makers().iter_mut().enumerate() {
-            let seed = 90 + i as u64;
-            let mut t_serial = m();
-            let mut obj_serial = tiny_modeled_objective(seed);
-            let serial = TuningSession::new(&mut obj_serial, t_serial.as_mut(), 7, 6)
-                .run()
-                .unwrap()
-                .history;
+        for (fi, family) in crate::families::all().into_iter().enumerate() {
+            for (i, m) in all_makers(family).iter_mut().enumerate() {
+                let seed = 90 + 10 * fi as u64 + i as u64;
+                let mut t_serial = m();
+                let mut obj_serial = tiny_family_modeled_objective(seed, family);
+                let serial = TuningSession::new(&mut obj_serial, t_serial.as_mut(), 7, 6)
+                    .run()
+                    .unwrap()
+                    .history;
 
-            let mut t_par = m();
-            let mut obj_par = tiny_modeled_objective(seed);
-            obj_par.set_evaluator(Box::new(ParallelEvaluator::new(4)));
-            let par = TuningSession::new(&mut obj_par, t_par.as_mut(), 7, 6)
-                .run()
-                .unwrap()
-                .history;
-            assert_history_bits_eq(&serial, &par, t_par.name());
+                let mut t_par = m();
+                let mut obj_par = tiny_family_modeled_objective(seed, family);
+                obj_par.set_evaluator(Box::new(ParallelEvaluator::new(4)));
+                let par = TuningSession::new(&mut obj_par, t_par.as_mut(), 7, 6)
+                    .run()
+                    .unwrap()
+                    .history;
+                let who = format!("{}/{}", family.name(), t_par.name());
+                assert_history_bits_eq(&serial, &par, &who);
+            }
         }
     }
 

@@ -131,6 +131,68 @@ fn mid_cell_killed_campaign_merges_bit_identically() {
 }
 
 #[test]
+fn mid_cell_kill_resume_holds_for_every_problem_family() {
+    // The same trial-granular kill simulation over the `families` suite:
+    // ridge, rand-lowrank, and krr-rff cells must all pause mid-run via
+    // their session checkpoints and resume to a merged DB byte-identical
+    // to an uninterrupted run — the resume contract is family-generic,
+    // not a sap-ls special case.
+    let suite: Vec<ProblemSpec> =
+        builtin_suite("families").unwrap().iter().map(|s| s.shrunk(2)).collect();
+    assert!(suite.iter().all(|s| s.family != "sap-ls"));
+    let mut base = CampaignSpec::new(
+        "family-resume-contract",
+        suite,
+        vec![TunerKind::Lhsmdu, TunerKind::Tpe],
+        4,
+    );
+    base.num_repeats = 1;
+    base.seed = 7;
+    base.timing = TimingMode::Modeled;
+
+    let dir_full = tmp("families_uninterrupted");
+    let dir_kill = tmp("families_killed");
+    let _ = std::fs::remove_dir_all(&dir_full);
+    let _ = std::fs::remove_dir_all(&dir_kill);
+
+    let full = Campaign::new(base.clone(), &dir_full).run().unwrap();
+    assert!(full.finished);
+    let reference_bytes = std::fs::read(&full.merged_db_path).unwrap();
+
+    let mut boxed = base;
+    boxed.max_trials = Some(1);
+    let mut finished = false;
+    let mut paused_families = std::collections::BTreeSet::new();
+    for _ in 0..300 {
+        let campaign = Campaign::new(boxed.clone(), &dir_kill);
+        let out = campaign.run().unwrap();
+        for c in campaign.spec.cells() {
+            if campaign.session_path(&c).exists() {
+                paused_families.insert(c.problem.family.clone());
+            }
+        }
+        if out.finished {
+            finished = true;
+            break;
+        }
+    }
+    assert!(finished, "family-suite trial-quota resume never converged");
+    assert!(
+        !paused_families.is_empty(),
+        "no invocation ever paused a non-sap-ls cell mid-run"
+    );
+    let resumed_bytes = std::fs::read(dir_kill.join("merged.json")).unwrap();
+    assert_eq!(
+        reference_bytes, resumed_bytes,
+        "family-suite mid-cell resume differs from uninterrupted run \
+         (paused families: {paused_families:?})"
+    );
+
+    std::fs::remove_dir_all(&dir_full).ok();
+    std::fs::remove_dir_all(&dir_kill).ok();
+}
+
+#[test]
 fn eval_thread_count_does_not_change_modeled_results() {
     // The within-cell parallel evaluator must not alter any recorded
     // number under modeled timing — the campaign-level statement of the

@@ -249,6 +249,32 @@ fn child_suite() {
         h.push_f64s(&sol.x);
         println!("{PREFIX} solve_sap_packed_2000x96 {:016x}", h.0);
     }
+
+    // --- problem families: each registered family's reference solution
+    // and two evaluator repeats at its reference configuration. The
+    // family objectives run entirely on the pooled kernels above, so
+    // these rows pin the end-to-end per-family determinism contract
+    // (campaign kill/resume byte-identity for every family, not just
+    // sap-ls) across thread counts.
+    {
+        use ranntune::data::build_problem;
+        use ranntune::objective::{repeat_rng, TimingMode};
+        let problem = build_problem("GA", 300, 10, 1234).expect("dataset");
+        for fam in ranntune::families::all() {
+            let reference = fam.reference(&problem);
+            emit_slice(&format!("family_{}_reference", fam.name()), &reference);
+            let cfg = fam.ref_config();
+            let mut h = Fnv::new();
+            for (trial, repeat) in [(1usize, 0usize), (3, 1)] {
+                let mut rng = repeat_rng(77, trial, repeat);
+                let (secs, quality) =
+                    fam.run_repeat(&problem, &reference, &cfg, TimingMode::Modeled, &mut rng);
+                h.push(secs.to_bits());
+                h.push(quality.to_bits());
+            }
+            println!("{PREFIX} family_{}_run {:016x}", fam.name(), h.0);
+        }
+    }
 }
 
 /// Child entry point: a no-op under a normal `cargo test` run; emits the
