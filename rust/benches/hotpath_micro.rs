@@ -221,6 +221,56 @@ fn main() {
         packed_flops,
     );
 
+    // SIMD vs scalar at the dispatched hot paths: the packed GEMM
+    // microkernel, the FWHT butterflies, and the column-reduction GEMV.
+    // Both variants run in one process via the force-scalar override;
+    // the auto row dispatches to whatever the host latched (printed
+    // below so the JSON snapshot is interpretable), and on hosts
+    // without AVX2/NEON both rows time the same scalar code — CI gates
+    // the speedup on x86_64 only and row presence elsewhere.
+    {
+        use ranntune::linalg::{fwht_pow2, gemv_t, simd_backend, simd_force_scalar};
+        println!("simd backend (auto dispatch): {}\n", simd_backend().name());
+        let mut sc = Mat::zeros(pm, pn);
+        let fw_n = 1usize << 16;
+        let fw_src: Vec<f64> = (0..fw_n).map(|_| rng.normal()).collect();
+        let mut fw_buf = vec![0.0f64; fw_n];
+        // One add + one sub per butterfly pair, n/2 pairs × log2(n) layers.
+        let fw_flops = fw_n as f64 * 16.0;
+        let (gt_m, gt_n) = (4096usize, 256usize);
+        let gt_a = Mat::from_fn(gt_m, gt_n, |_, _| rng.normal());
+        let gt_y: Vec<f64> = (0..gt_m).map(|_| rng.normal()).collect();
+        let gt_flops = 2.0 * (gt_m * gt_n) as f64;
+        for (variant, force) in [("simd", false), ("scalar", true)] {
+            simd_force_scalar(force);
+            add(
+                &format!("cmp: gemm 4096x256x256 {variant}"),
+                time_fn(1, 5, || {
+                    gemm_packed_into(&pa, &pb, &mut sc);
+                    std::hint::black_box(&sc);
+                }),
+                packed_flops,
+            );
+            add(
+                &format!("cmp: fwht 65536 {variant}"),
+                time_fn(5, 20, || {
+                    fw_buf.copy_from_slice(&fw_src);
+                    fwht_pow2(&mut fw_buf);
+                    std::hint::black_box(&fw_buf);
+                }),
+                fw_flops,
+            );
+            add(
+                &format!("cmp: gemv_t 4096x256 {variant}"),
+                time_fn(2, 10, || {
+                    std::hint::black_box(gemv_t(&gt_a, &gt_y));
+                }),
+                gt_flops,
+            );
+        }
+        simd_force_scalar(false);
+    }
+
     // GEMV above the threading cutoff (fixed dims so the comparison is
     // stable across RANNTUNE_BENCH_M/N smoke overrides).
     let gv_a = Mat::from_fn(2048, 1024, |_, _| rng.normal());
@@ -431,9 +481,10 @@ fn main() {
     let _ = std::fs::write(dir.join("BENCH_hotpath_micro.json"), snapshot.to_string_pretty());
 
     // Kernel-trajectory snapshot: just the deterministic-kernel rows
-    // (blocked vs unblocked QR, packed vs unblocked GEMM, lstsq, full
-    // SAP solves) that the CI bench-smoke job publishes as
-    // BENCH_kernels.json at the repo root and gates against regression.
+    // (blocked vs unblocked QR, packed vs unblocked GEMM, simd vs
+    // scalar microkernels, lstsq, full SAP solves) that the CI
+    // bench-smoke job publishes as BENCH_kernels.json at the repo root
+    // and gates against regression.
     let kernel_rows: Vec<Json> = raw
         .iter()
         .filter(|(name, ..)| {
@@ -442,6 +493,8 @@ fn main() {
                 || name.contains("tsqr")
                 || name.contains("sketch_stream")
                 || name.contains("gemm 4096x256x256")
+                || name.contains("fwht")
+                || name.contains("gemv_t")
                 || name.starts_with("SAP solve")
                 || name.starts_with("family:")
         })

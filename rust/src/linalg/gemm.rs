@@ -8,9 +8,13 @@
 //! accumulators, KC/MC/NC cache blocking from the size-only policy in
 //! `linalg::block`, A packed into column-major MR-panels and B into
 //! row-major NR-panels through the per-thread [`with_pack_scratch`]
-//! buffers, and masked edge tiles for remainder rows/columns. No SIMD
-//! intrinsics — the microkernel's fixed-shape accumulator arrays are
-//! what the autovectorizer needs to hold the tile in vector registers.
+//! buffers, and masked edge tiles for remainder rows/columns. The
+//! MR×NR microkernel itself lives in `linalg::simd` and is
+//! runtime-dispatched: hand-written AVX2/NEON kernels where the CPU has
+//! them (one vector accumulator per tile row, lanes spanning the NR
+//! columns, mul-then-add only — never FMA), the scalar fixed-shape
+//! accumulator sweep everywhere else, with both paths bit-identical by
+//! construction (`RANNTUNE_SIMD=0` forces the scalar path).
 //!
 //! The pre-packing row-band kernel survives as [`gemm_into_unblocked`] /
 //! [`gemm_tn_into_unblocked`]: it is the conformance reference (packed
@@ -351,8 +355,17 @@ fn pack_b(b: &Mat, pc: usize, kc: usize, jc: usize, nc: usize, bp: &mut [f64]) {
 
 /// Sweep every MR×NR register tile of one packed (`mc` × `nc`) block:
 /// full interior tiles take the unconditional microkernel, remainder
-/// rows/columns take the masked edge kernel. `c` starts at the block's
-/// top-left element and is indexed with the full row stride `ldc`.
+/// rows/columns take the masked edge kernel (both runtime-dispatched in
+/// `linalg::simd`; the vector and scalar variants are bit-identical).
+/// `c` starts at the block's top-left element and is indexed with the
+/// full row stride `ldc`.
+///
+/// The packed panels are consumed here under the 64-byte alignment
+/// [`with_pack_scratch`] promises — every MR-panel offset is a 64-byte
+/// multiple and every NR-panel offset a 32-byte multiple, which the
+/// AVX2 microkernel's aligned B loads rely on. A misaligned panel would
+/// be a silent perf cliff at best and a vector fault at worst, so it is
+/// asserted loudly per macro block in debug builds.
 #[allow(clippy::too_many_arguments)]
 fn macro_kernel(
     ap: &[f64],
@@ -363,6 +376,8 @@ fn macro_kernel(
     c: &mut [f64],
     ldc: usize,
 ) {
+    debug_assert_eq!(ap.as_ptr() as usize % 64, 0, "packed A panels must be 64B-aligned");
+    debug_assert_eq!(bp.as_ptr() as usize % 64, 0, "packed B panels must be 64B-aligned");
     let jr_panels = nc.div_ceil(GEMM_NR);
     let ir_panels = mc.div_ceil(GEMM_MR);
     for (jr, bpanel) in bp.chunks_exact(kc * GEMM_NR).take(jr_panels).enumerate() {
@@ -373,73 +388,10 @@ fn macro_kernel(
             let mr = GEMM_MR.min(mc - i0);
             let ct = &mut c[i0 * ldc + j0..];
             if mr == GEMM_MR && nr == GEMM_NR {
-                kernel_full(kc, apanel, bpanel, ct, ldc);
+                super::simd::kernel_full(kc, apanel, bpanel, ct, ldc);
             } else {
-                kernel_edge(kc, apanel, bpanel, ct, ldc, mr, nr);
+                super::simd::kernel_edge(kc, apanel, bpanel, ct, ldc, mr, nr);
             }
-        }
-    }
-}
-
-/// The MR×NR microkernel: load the C tile into the unrolled accumulator
-/// array, stream the two packed panels adding `a·b` terms for k
-/// ascending, store the tile back. Loading C *first* (rather than
-/// summing into fresh accumulators and adding at the end) is what keeps
-/// the per-element operation sequence identical to the unpacked sweep —
-/// `((c + p₀) + p₁) + …` — and therefore bit-exact against it.
-#[inline(always)]
-fn kernel_full(kc: usize, apanel: &[f64], bpanel: &[f64], c: &mut [f64], ldc: usize) {
-    let mut acc = [[0.0f64; GEMM_NR]; GEMM_MR];
-    for (i, row) in acc.iter_mut().enumerate() {
-        row.copy_from_slice(&c[i * ldc..i * ldc + GEMM_NR]);
-    }
-    for (av, bv) in apanel.chunks_exact(GEMM_MR).zip(bpanel.chunks_exact(GEMM_NR)).take(kc) {
-        let av: &[f64; GEMM_MR] = av.try_into().expect("MR panel chunk");
-        let bv: &[f64; GEMM_NR] = bv.try_into().expect("NR panel chunk");
-        for (row, &ai) in acc.iter_mut().zip(av.iter()) {
-            for (cj, &bj) in row.iter_mut().zip(bv.iter()) {
-                *cj += ai * bj;
-            }
-        }
-    }
-    for (i, row) in acc.iter().enumerate() {
-        c[i * ldc..i * ldc + GEMM_NR].copy_from_slice(row);
-    }
-}
-
-/// Masked microkernel for remainder tiles: only the `mr`×`nr` valid
-/// region of C is loaded and stored; the accumulate sweep still runs
-/// the full padded MR×NR shape (padding lanes multiply packed zeros and
-/// are discarded), so valid elements see exactly the same k-ascending
-/// operation sequence as [`kernel_full`].
-#[allow(clippy::too_many_arguments)]
-fn kernel_edge(
-    kc: usize,
-    apanel: &[f64],
-    bpanel: &[f64],
-    c: &mut [f64],
-    ldc: usize,
-    mr: usize,
-    nr: usize,
-) {
-    let mut acc = [[0.0f64; GEMM_NR]; GEMM_MR];
-    for (i, row) in acc.iter_mut().enumerate().take(mr) {
-        for (j, cj) in row.iter_mut().enumerate().take(nr) {
-            *cj = c[i * ldc + j];
-        }
-    }
-    for (av, bv) in apanel.chunks_exact(GEMM_MR).zip(bpanel.chunks_exact(GEMM_NR)).take(kc) {
-        let av: &[f64; GEMM_MR] = av.try_into().expect("MR panel chunk");
-        let bv: &[f64; GEMM_NR] = bv.try_into().expect("NR panel chunk");
-        for (row, &ai) in acc.iter_mut().zip(av.iter()) {
-            for (cj, &bj) in row.iter_mut().zip(bv.iter()) {
-                *cj += ai * bj;
-            }
-        }
-    }
-    for (i, row) in acc.iter().enumerate().take(mr) {
-        for (j, &cj) in row.iter().enumerate().take(nr) {
-            c[i * ldc + j] = cj;
         }
     }
 }

@@ -143,19 +143,17 @@ impl Mat {
         self.data.iter().fold(0.0f64, |a, &x| a.max(x.abs()))
     }
 
-    /// self += alpha * other (same shape).
+    /// self += alpha * other (same shape). Rides the dispatched
+    /// [`axpy`] primitive over the flat storage.
     pub fn axpy(&mut self, alpha: f64, other: &Mat) {
         assert_eq!(self.shape(), other.shape());
-        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
-            *a += alpha * b;
-        }
+        axpy(alpha, &other.data, &mut self.data);
     }
 
-    /// Scale every entry in place.
+    /// Scale every entry in place (dispatched [`scal`] over the flat
+    /// storage).
     pub fn scale(&mut self, alpha: f64) {
-        for a in self.data.iter_mut() {
-            *a *= alpha;
-        }
+        scal(alpha, &mut self.data);
     }
 }
 
@@ -198,28 +196,16 @@ impl fmt::Debug for Mat {
 // ---- free-standing vector helpers (used throughout the solvers) ----
 
 /// Dot product.
+///
+/// 4-way unrolled accumulation with the fixed `(s0+s1)+(s2+s3)` final
+/// combine: keeps the FP pipes busy and gives a deterministic summation
+/// order. Runtime-dispatched in `linalg::simd` — the AVX2/NEON variants
+/// map lane *l* to unroll accumulator *s_l* and reproduce the scalar
+/// bits exactly.
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    // 4-way unrolled accumulation: keeps the FP pipes busy and gives a
-    // deterministic summation order.
-    let n = a.len();
-    let mut s0 = 0.0;
-    let mut s1 = 0.0;
-    let mut s2 = 0.0;
-    let mut s3 = 0.0;
-    let chunks = n / 4;
-    for c in 0..chunks {
-        let i = c * 4;
-        s0 += a[i] * b[i];
-        s1 += a[i + 1] * b[i + 1];
-        s2 += a[i + 2] * b[i + 2];
-        s3 += a[i + 3] * b[i + 3];
-    }
-    for i in chunks * 4..n {
-        s0 += a[i] * b[i];
-    }
-    (s0 + s1) + (s2 + s3)
+    super::simd::dot(a, b)
 }
 
 /// Euclidean norm.
@@ -228,21 +214,18 @@ pub fn norm2(a: &[f64]) -> f64 {
     dot(a, a).sqrt()
 }
 
-/// y += alpha * x.
+/// y += alpha * x (runtime-dispatched; per-element mul-then-add in
+/// every backend, so all paths are bit-identical).
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x.iter()) {
-        *yi += alpha * xi;
-    }
+    super::simd::axpy(alpha, x, y)
 }
 
-/// x *= alpha.
+/// x *= alpha (runtime-dispatched; per-element multiply).
 #[inline]
 pub fn scal(alpha: f64, x: &mut [f64]) {
-    for xi in x.iter_mut() {
-        *xi *= alpha;
-    }
+    super::simd::scal(alpha, x)
 }
 
 #[cfg(test)]

@@ -35,6 +35,10 @@
 //!   solves.
 //! * [`solve_upper`]/[`solve_lower`] — triangular solves (vector and
 //!   multiple-RHS variants).
+//! * [`simd_backend`] — the runtime-dispatched SIMD layer (AVX2/NEON
+//!   via `core::arch`, scalar elsewhere) under the GEMM microkernel,
+//!   the FWHT, and the level-1 primitives; bit-identical to the scalar
+//!   kernels by construction (`RANNTUNE_SIMD=0` forces scalar).
 
 mod block;
 mod chol;
@@ -42,6 +46,7 @@ mod gemm;
 mod mat;
 mod pool;
 mod qr;
+mod simd;
 mod solve;
 mod svd;
 
@@ -51,5 +56,9 @@ pub use gemm::*;
 pub use mat::*;
 pub use pool::*;
 pub use qr::*;
+// `simd` exports its public dispatch surface by name (the kernel-level
+// scalar/vector variants stay module-internal so they can share names
+// with the `mat` primitives they back).
+pub use simd::{fwht_pow2, simd_backend, simd_force_scalar, SimdBackend};
 pub use solve::*;
 pub use svd::*;

@@ -23,6 +23,13 @@
 //!   B NR-panels), latched at the blocking high-water size so packing
 //!   allocates nothing per call.
 //!
+//! With `RANNTUNE_PIN=1` (default off) each worker additionally pins
+//! itself to one CPU at spawn via a pure-std `sched_setaffinity`
+//! binding, so the packed panels and per-thread scratch stay resident
+//! in one core's L2 instead of migrating mid-macrokernel. Pinning is
+//! purely a locality hint: it changes no task assignment and no
+//! arithmetic, hence no bits.
+//!
 //! ## Nesting and contention
 //!
 //! The pool is deliberately single-job: one `run` call owns the workers
@@ -91,6 +98,40 @@ pub fn pool() -> &'static Pool {
     POOL.get_or_init(|| Pool::new(num_threads()))
 }
 
+/// Whether pool workers pin themselves to one CPU each (`RANNTUNE_PIN=1`,
+/// latched once per process; default off). Pinning stops the packed GEMM
+/// panels from migrating between L2 caches mid-macrokernel, which is a
+/// pure cache-locality knob: task assignment and arithmetic are
+/// unaffected, so it can never change a result bit.
+fn pin_workers() -> bool {
+    static P: OnceLock<bool> = OnceLock::new();
+    *P.get_or_init(|| std::env::var("RANNTUNE_PIN").map(|v| v == "1").unwrap_or(false))
+}
+
+/// Best-effort: pin the calling thread to `cpu` (modulo the machine
+/// width). Pure-std `extern "C"` binding to `sched_setaffinity` — the
+/// same idiom as the daemon's `signal()` binding — passing pid 0 ("this
+/// thread") and a glibc/musl-compatible 1024-bit CPU mask. Failure
+/// (exotic cgroup masks, offline CPUs) leaves the thread unpinned,
+/// which is always correct.
+#[cfg(target_os = "linux")]
+fn pin_to_cpu(cpu: usize) {
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+    let width = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let cpu = cpu % width.max(1);
+    // cpu_set_t is a fixed 1024-bit (128-byte) mask on Linux.
+    let mut mask = [0u64; 16];
+    mask[(cpu / 64) % mask.len()] = 1u64 << (cpu % 64);
+    let _rc = unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) };
+}
+
+/// No-op off Linux: `sched_setaffinity` is Linux-specific and pinning
+/// is a best-effort performance hint everywhere.
+#[cfg(not(target_os = "linux"))]
+fn pin_to_cpu(_cpu: usize) {}
+
 /// A task-function reference whose lifetime has been erased for the
 /// worker threads; only ever dereferenced while the owning
 /// [`Pool::run_capped`] call is still on the stack.
@@ -151,7 +192,14 @@ impl Pool {
             let shared = Arc::clone(&shared);
             std::thread::Builder::new()
                 .name(format!("ranntune-pool-{i}"))
-                .spawn(move || worker_loop(shared))
+                .spawn(move || {
+                    // Worker i takes CPU i+1, leaving CPU 0 for the
+                    // (unpinned) submitting thread.
+                    if pin_workers() {
+                        pin_to_cpu(i + 1);
+                    }
+                    worker_loop(shared)
+                })
                 .expect("spawn pool worker");
         }
         Pool { shared, busy: AtomicBool::new(false), size, workers }
@@ -369,6 +417,12 @@ fn aligned_slice(buf: &mut Vec<f64>, len: usize) -> &mut [f64] {
 /// pack buffers (`a_len` elements for the packed-A MR-panels, `b_len`
 /// for the packed-B NR-panels).
 ///
+/// The 64-byte alignment is a hard promise on **every** path, including
+/// the reentrancy fallback: the AVX2 microkernel reads the packed B
+/// panels with aligned vector loads (and `macro_kernel` debug-asserts
+/// the base alignment), so an unaligned buffer would fault rather than
+/// merely run slow.
+///
 /// Unlike [`with_scratch`] the contents are **not** zeroed — the packing
 /// routines overwrite every element of the region they use (including
 /// edge-tile zero padding), so re-clearing `KC·MC + KC·NC` doubles per
@@ -390,7 +444,16 @@ pub fn with_pack_scratch<R>(
             let (a_buf, b_buf) = &mut *bufs;
             f(aligned_slice(a_buf, a_len), aligned_slice(b_buf, b_len))
         }
-        Err(_) => f(&mut vec![0.0; a_len], &mut vec![0.0; b_len]),
+        Err(_) => {
+            // Fresh fallback buffers must honour the same alignment
+            // promise as the latched pair — a plain `vec![0.0; len]`
+            // is only 8-byte-aligned and would trip the AVX2 kernel's
+            // aligned panel loads.
+            let (mut a_buf, mut b_buf) = (Vec::new(), Vec::new());
+            let a = aligned_slice(&mut a_buf, a_len);
+            // Split borrows: each slice views its own Vec.
+            f(a, aligned_slice(&mut b_buf, b_len))
+        }
     })
 }
 

@@ -1,0 +1,777 @@
+//! Runtime-dispatched SIMD kernels for the dense hot paths — bitwise
+//! identical to the scalar reference kernels by construction.
+//!
+//! The crate's kernels (packed GEMM microkernel, FWHT butterflies,
+//! `dot`/`axpy`/`scal` level-1 primitives) are all written as scalar
+//! Rust with fixed accumulation orders. This module adds hand-written
+//! vector versions — AVX2 on x86_64, NEON on aarch64, both via
+//! `core::arch` so the pure-std build contract holds — and a per-process
+//! dispatch latch that picks the widest available backend at first use.
+//!
+//! ## The bit-identity contract
+//!
+//! Every vector kernel here produces **exactly the bits** of its scalar
+//! reference, for every input including signed zeros, NaNs and
+//! infinities. That is possible because vectorization only ever runs
+//! *across independent output elements*, never within one element's
+//! reduction:
+//!
+//! * GEMM microkernel: one 4-lane vector per register-tile row, lanes
+//!   spanning the NR=4 C columns. Each C element keeps its own lane and
+//!   its own k-ascending `c += a·b` sequence; lanes never mix.
+//! * FWHT: a layer's butterfly pairs `(x+y, x−y)` are disjoint; lanes
+//!   span four (AVX2) or two (NEON) adjacent pairs of the same layer.
+//! * `axpy`/`scal`: outputs are per-element functions of the inputs.
+//! * `dot`: the scalar reference is 4-way unrolled with independent
+//!   accumulators `s0..s3` combined as `(s0+s1)+(s2+s3)`; the vector
+//!   version assigns lane *l* to accumulator *s_l* and performs the
+//!   identical final combine, so even this reduction is order-preserving.
+//!
+//! The second half of the contract is **mul-then-add only — no FMA**. A
+//! fused multiply-add rounds once where `mul` + `add` round twice, so a
+//! single FMA would fork the low-order bits between the paths. Every
+//! kernel below issues separate multiply and add instructions
+//! (`_mm256_mul_pd`/`_mm256_add_pd`, `vmulq_f64`/`vaddq_f64`).
+//!
+//! Because of this, the packed-vs-unblocked GEMM conformance battery and
+//! the cross-thread-count determinism fingerprints carry over verbatim
+//! as SIMD-vs-scalar oracles: `tests/gemm_conformance.rs` sweeps both
+//! paths at every edge-tile shape and `tests/kernel_determinism.rs`
+//! re-executes the fingerprint battery over
+//! `RANNTUNE_SIMD∈{0,1} × RANNTUNE_THREADS∈{1,8}`.
+//!
+//! ## Dispatch
+//!
+//! [`simd_backend`] latches once per process: `RANNTUNE_SIMD=0` forces
+//! [`SimdBackend::Scalar`], otherwise `is_x86_feature_detected!("avx2")`
+//! (cached in a `OnceLock`) picks AVX2 on x86_64 and NEON is assumed on
+//! aarch64 (baseline feature of the architecture). On every other
+//! architecture the scalar kernels are the only path.
+//! [`simd_force_scalar`] is the in-process A/B switch used by the
+//! conformance tests and the `cmp:` bench rows; production code uses
+//! only the env knob.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+use super::{GEMM_MR, GEMM_NR};
+
+/// Which vector backend the dense kernels dispatch to. The variant set
+/// is architecture-independent (so callers can always name them); the
+/// dispatch latch only ever selects a variant the running CPU supports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdBackend {
+    /// Portable scalar kernels — always available, and the bit
+    /// reference the vector paths must reproduce exactly.
+    Scalar,
+    /// 256-bit AVX2 kernels (x86_64, runtime-detected).
+    Avx2,
+    /// 128-bit NEON kernels (aarch64 baseline).
+    Neon,
+}
+
+impl SimdBackend {
+    /// Short lowercase name, used in bench row labels and logs.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdBackend::Scalar => "scalar",
+            SimdBackend::Avx2 => "avx2",
+            SimdBackend::Neon => "neon",
+        }
+    }
+}
+
+/// In-process A/B override: when set, [`simd_backend`] reports
+/// [`SimdBackend::Scalar`] regardless of the latched detection result.
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+/// The latched detection result: `RANNTUNE_SIMD=0` forces scalar for
+/// the process lifetime; otherwise the widest backend the CPU supports.
+/// Env + CPUID are consulted exactly once (same latch-once contract as
+/// `RANNTUNE_THREADS` and `RANNTUNE_GEMM_KC`).
+fn detected_backend() -> SimdBackend {
+    static B: OnceLock<SimdBackend> = OnceLock::new();
+    *B.get_or_init(|| {
+        if std::env::var("RANNTUNE_SIMD").is_ok_and(|v| v == "0") {
+            return SimdBackend::Scalar;
+        }
+        detect()
+    })
+}
+
+/// Raw capability probe (no env, no cache) — what the CPU can run.
+fn detect() -> SimdBackend {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return SimdBackend::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        return SimdBackend::Neon;
+    }
+    #[allow(unreachable_code)]
+    SimdBackend::Scalar
+}
+
+/// The backend the dense kernels dispatch to on this call.
+///
+/// Latched once per process from `RANNTUNE_SIMD` (`0` forces scalar)
+/// and runtime feature detection; [`simd_force_scalar`] can override it
+/// to scalar at run time for A/B comparisons. Both paths produce
+/// identical bits (see the module docs), so flipping the override
+/// between kernel calls can never change a result — only its speed.
+pub fn simd_backend() -> SimdBackend {
+    if FORCE_SCALAR.load(Ordering::Relaxed) {
+        return SimdBackend::Scalar;
+    }
+    detected_backend()
+}
+
+/// Force (`true`) or stop forcing (`false`) the scalar kernels,
+/// overriding the latched dispatch. This is the in-process half of the
+/// A/B story — `benches/hotpath_micro.rs` times `cmp:` simd/scalar row
+/// pairs with it and `tests/gemm_conformance.rs` sweeps both paths for
+/// exact bit equality. It takes effect on subsequent kernel calls (it
+/// is not synchronized with kernels already in flight) and it cannot
+/// enable a backend the CPU lacks: with `RANNTUNE_SIMD=0` or on a
+/// non-AVX2 x86_64 host, both settings run scalar.
+pub fn simd_force_scalar(on: bool) {
+    FORCE_SCALAR.store(on, Ordering::Relaxed);
+}
+
+// ---- level-1 primitives (dispatched) ---------------------------------
+
+/// Dot product — dispatch target of [`crate::linalg::dot`].
+pub(crate) fn dot(a: &[f64], b: &[f64]) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    if simd_backend() == SimdBackend::Avx2 {
+        return unsafe { avx2::dot(a, b) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if simd_backend() == SimdBackend::Neon {
+        return unsafe { neon::dot(a, b) };
+    }
+    dot_scalar(a, b)
+}
+
+/// Scalar dot reference: 4-way unrolled with independent accumulators
+/// and the fixed `(s0+s1)+(s2+s3)` combine the vector lanes reproduce.
+pub(crate) fn dot_scalar(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len();
+    let mut s0 = 0.0;
+    let mut s1 = 0.0;
+    let mut s2 = 0.0;
+    let mut s3 = 0.0;
+    let chunks = n / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    for i in chunks * 4..n {
+        s0 += a[i] * b[i];
+    }
+    (s0 + s1) + (s2 + s3)
+}
+
+/// y += alpha·x — dispatch target of [`crate::linalg::axpy`].
+pub(crate) fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    #[cfg(target_arch = "x86_64")]
+    if simd_backend() == SimdBackend::Avx2 {
+        unsafe { avx2::axpy(alpha, x, y) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if simd_backend() == SimdBackend::Neon {
+        unsafe { neon::axpy(alpha, x, y) };
+        return;
+    }
+    axpy_scalar(alpha, x, y)
+}
+
+/// Scalar axpy reference: independent per-element `y += alpha·x`, one
+/// multiply then one add per element (never fused).
+pub(crate) fn axpy_scalar(alpha: f64, x: &[f64], y: &mut [f64]) {
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * xi;
+    }
+}
+
+/// x *= alpha — dispatch target of [`crate::linalg::scal`].
+pub(crate) fn scal(alpha: f64, x: &mut [f64]) {
+    #[cfg(target_arch = "x86_64")]
+    if simd_backend() == SimdBackend::Avx2 {
+        unsafe { avx2::scal(alpha, x) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if simd_backend() == SimdBackend::Neon {
+        unsafe { neon::scal(alpha, x) };
+        return;
+    }
+    scal_scalar(alpha, x)
+}
+
+/// Scalar scal reference: independent per-element multiply.
+pub(crate) fn scal_scalar(alpha: f64, x: &mut [f64]) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+// ---- FWHT ------------------------------------------------------------
+
+/// In-place fast Walsh–Hadamard transform (unnormalized) on a
+/// power-of-two-length buffer — the SRHT hot loop, dispatched here so
+/// each butterfly layer runs vectorized across its independent pairs.
+///
+/// Layer `h` maps disjoint pairs `(buf[i], buf[i+h])` to
+/// `(x+y, x−y)`; the vector paths process 4 (AVX2) / 2 (NEON) adjacent
+/// pairs per instruction once `h` reaches the lane width, and the first
+/// narrow layers stay scalar — so every pair sees exactly one add and
+/// one sub in the scalar order and the transform is bit-identical
+/// across all backends.
+pub fn fwht_pow2(buf: &mut [f64]) {
+    let n = buf.len();
+    debug_assert!(n.is_power_of_two(), "FWHT needs a power-of-two length");
+    let mut h = 1;
+    while h < n {
+        fwht_layer(buf, h);
+        h *= 2;
+    }
+}
+
+/// One butterfly layer of the FWHT at half-stride `h` (dispatched).
+fn fwht_layer(buf: &mut [f64], h: usize) {
+    #[cfg(target_arch = "x86_64")]
+    if h >= 4 && simd_backend() == SimdBackend::Avx2 {
+        unsafe { avx2::fwht_layer(buf, h) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if h >= 2 && simd_backend() == SimdBackend::Neon {
+        unsafe { neon::fwht_layer(buf, h) };
+        return;
+    }
+    fwht_layer_scalar(buf, h);
+}
+
+/// Scalar butterfly layer — the bit reference for the vector layers.
+fn fwht_layer_scalar(buf: &mut [f64], h: usize) {
+    let n = buf.len();
+    for block in (0..n).step_by(2 * h) {
+        for i in block..block + h {
+            let (x, y) = (buf[i], buf[i + h]);
+            buf[i] = x + y;
+            buf[i + h] = x - y;
+        }
+    }
+}
+
+// ---- GEMM microkernels (dispatched) ----------------------------------
+
+/// The full MR×NR GEMM microkernel: load the C tile, stream the packed
+/// panels adding `a·b` terms for k ascending, store the tile back.
+/// Dispatches to the backend kernel; all backends hold one C-row in
+/// vector lanes spanning the NR columns, so every element's operation
+/// sequence `((c + p₀) + p₁) + …` matches the scalar reference exactly.
+pub(crate) fn kernel_full(kc: usize, apanel: &[f64], bpanel: &[f64], c: &mut [f64], ldc: usize) {
+    #[cfg(target_arch = "x86_64")]
+    if simd_backend() == SimdBackend::Avx2 {
+        unsafe { avx2::kernel_full(kc, apanel, bpanel, c, ldc) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if simd_backend() == SimdBackend::Neon {
+        unsafe { neon::kernel_full(kc, apanel, bpanel, c, ldc) };
+        return;
+    }
+    kernel_full_scalar(kc, apanel, bpanel, c, ldc)
+}
+
+/// Masked MR×NR microkernel for remainder tiles: only the `mr`×`nr`
+/// valid region of C is loaded/stored while the accumulate sweep runs
+/// the full padded shape (padding lanes multiply packed zeros and are
+/// discarded). The vector backends reuse their full kernel on a
+/// contiguous padded stack tile — the load/sweep/store sequence per
+/// valid element is identical to the scalar masked kernel.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn kernel_edge(
+    kc: usize,
+    apanel: &[f64],
+    bpanel: &[f64],
+    c: &mut [f64],
+    ldc: usize,
+    mr: usize,
+    nr: usize,
+) {
+    if simd_backend() == SimdBackend::Scalar {
+        kernel_edge_scalar(kc, apanel, bpanel, c, ldc, mr, nr);
+        return;
+    }
+    let mut tile = [0.0f64; GEMM_MR * GEMM_NR];
+    for i in 0..mr {
+        for j in 0..nr {
+            tile[i * GEMM_NR + j] = c[i * ldc + j];
+        }
+    }
+    kernel_full(kc, apanel, bpanel, &mut tile, GEMM_NR);
+    for i in 0..mr {
+        for j in 0..nr {
+            c[i * ldc + j] = tile[i * GEMM_NR + j];
+        }
+    }
+}
+
+/// Scalar full microkernel — the bit reference (and the Rust
+/// autovectorizer's favourite shape: fixed unrolled accumulators).
+#[inline(always)]
+pub(crate) fn kernel_full_scalar(
+    kc: usize,
+    apanel: &[f64],
+    bpanel: &[f64],
+    c: &mut [f64],
+    ldc: usize,
+) {
+    let mut acc = [[0.0f64; GEMM_NR]; GEMM_MR];
+    for (i, row) in acc.iter_mut().enumerate() {
+        row.copy_from_slice(&c[i * ldc..i * ldc + GEMM_NR]);
+    }
+    for (av, bv) in apanel.chunks_exact(GEMM_MR).zip(bpanel.chunks_exact(GEMM_NR)).take(kc) {
+        let av: &[f64; GEMM_MR] = av.try_into().expect("MR panel chunk");
+        let bv: &[f64; GEMM_NR] = bv.try_into().expect("NR panel chunk");
+        for (row, &ai) in acc.iter_mut().zip(av.iter()) {
+            for (cj, &bj) in row.iter_mut().zip(bv.iter()) {
+                *cj += ai * bj;
+            }
+        }
+    }
+    for (i, row) in acc.iter().enumerate() {
+        c[i * ldc..i * ldc + GEMM_NR].copy_from_slice(row);
+    }
+}
+
+/// Scalar masked microkernel — the bit reference for edge tiles.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn kernel_edge_scalar(
+    kc: usize,
+    apanel: &[f64],
+    bpanel: &[f64],
+    c: &mut [f64],
+    ldc: usize,
+    mr: usize,
+    nr: usize,
+) {
+    let mut acc = [[0.0f64; GEMM_NR]; GEMM_MR];
+    for (i, row) in acc.iter_mut().enumerate().take(mr) {
+        for (j, cj) in row.iter_mut().enumerate().take(nr) {
+            *cj = c[i * ldc + j];
+        }
+    }
+    for (av, bv) in apanel.chunks_exact(GEMM_MR).zip(bpanel.chunks_exact(GEMM_NR)).take(kc) {
+        let av: &[f64; GEMM_MR] = av.try_into().expect("MR panel chunk");
+        let bv: &[f64; GEMM_NR] = bv.try_into().expect("NR panel chunk");
+        for (row, &ai) in acc.iter_mut().zip(av.iter()) {
+            for (cj, &bj) in row.iter_mut().zip(bv.iter()) {
+                *cj += ai * bj;
+            }
+        }
+    }
+    for (i, row) in acc.iter().enumerate().take(mr) {
+        for (j, &cj) in row.iter().enumerate().take(nr) {
+            c[i * ldc + j] = cj;
+        }
+    }
+}
+
+// ---- AVX2 backend ----------------------------------------------------
+
+/// 256-bit AVX2 kernels. Every function is `unsafe` with the contract
+/// "AVX2 was detected on this CPU" — upheld by the dispatchers above,
+/// which only take these branches when [`simd_backend`] latched
+/// [`SimdBackend::Avx2`]. No FMA is ever issued (see the module docs).
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{GEMM_MR, GEMM_NR};
+    use core::arch::x86_64::{
+        _mm256_add_pd, _mm256_load_pd, _mm256_loadu_pd, _mm256_mul_pd, _mm256_set1_pd,
+        _mm256_setzero_pd, _mm256_storeu_pd, _mm256_sub_pd,
+    };
+
+    /// Lane *l* of the accumulator vector is the scalar reference's
+    /// unroll accumulator `s_l`; the tail folds into lane 0 and the
+    /// final combine is the scalar's `(s0+s1)+(s2+s3)`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len();
+        let chunks = n / 4;
+        unsafe {
+            let ap = a.as_ptr();
+            let bp = b.as_ptr();
+            let mut acc = _mm256_setzero_pd();
+            for c in 0..chunks {
+                let av = _mm256_loadu_pd(ap.add(c * 4));
+                let bv = _mm256_loadu_pd(bp.add(c * 4));
+                acc = _mm256_add_pd(acc, _mm256_mul_pd(av, bv));
+            }
+            let mut lanes = [0.0f64; 4];
+            _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+            let [mut s0, s1, s2, s3] = lanes;
+            for i in chunks * 4..n {
+                s0 += a[i] * b[i];
+            }
+            (s0 + s1) + (s2 + s3)
+        }
+    }
+
+    /// Independent per-element `y += alpha·x`, four elements per vector,
+    /// scalar tail; multiply and add stay separate instructions.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+        let n = y.len();
+        let chunks = n / 4;
+        unsafe {
+            let al = _mm256_set1_pd(alpha);
+            let xp = x.as_ptr();
+            let yp = y.as_mut_ptr();
+            for c in 0..chunks {
+                let i = c * 4;
+                let xv = _mm256_loadu_pd(xp.add(i));
+                let yv = _mm256_loadu_pd(yp.add(i));
+                _mm256_storeu_pd(yp.add(i), _mm256_add_pd(yv, _mm256_mul_pd(al, xv)));
+            }
+            for i in chunks * 4..n {
+                *yp.add(i) += alpha * *xp.add(i);
+            }
+        }
+    }
+
+    /// Independent per-element `x *= alpha`, scalar tail.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn scal(alpha: f64, x: &mut [f64]) {
+        let n = x.len();
+        let chunks = n / 4;
+        unsafe {
+            let al = _mm256_set1_pd(alpha);
+            let xp = x.as_mut_ptr();
+            for c in 0..chunks {
+                let i = c * 4;
+                let xv = _mm256_loadu_pd(xp.add(i));
+                _mm256_storeu_pd(xp.add(i), _mm256_mul_pd(xv, al));
+            }
+            for i in chunks * 4..n {
+                *xp.add(i) *= alpha;
+            }
+        }
+    }
+
+    /// One FWHT butterfly layer, four adjacent pairs per vector; only
+    /// called with `h >= 4` so a layer's pair strips tile evenly.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn fwht_layer(buf: &mut [f64], h: usize) {
+        debug_assert!(h >= 4 && h.is_power_of_two());
+        let n = buf.len();
+        unsafe {
+            let p = buf.as_mut_ptr();
+            for block in (0..n).step_by(2 * h) {
+                for i in (block..block + h).step_by(4) {
+                    let x = _mm256_loadu_pd(p.add(i));
+                    let y = _mm256_loadu_pd(p.add(i + h));
+                    _mm256_storeu_pd(p.add(i), _mm256_add_pd(x, y));
+                    _mm256_storeu_pd(p.add(i + h), _mm256_sub_pd(x, y));
+                }
+            }
+        }
+    }
+
+    /// Full 8×4 microkernel: one 4-lane accumulator per tile row, lanes
+    /// spanning the NR=4 columns. B-panel rows are read with *aligned*
+    /// loads — `with_pack_scratch` hands out 64-byte-aligned panels and
+    /// every NR-panel offset is a 32-byte multiple, so a misaligned
+    /// panel faults loudly here instead of silently decaying throughput.
+    /// C rows live at arbitrary offsets (`ldc` is the matrix stride) and
+    /// use unaligned loads/stores.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn kernel_full(
+        kc: usize,
+        apanel: &[f64],
+        bpanel: &[f64],
+        c: &mut [f64],
+        ldc: usize,
+    ) {
+        debug_assert_eq!(bpanel.as_ptr() as usize % 32, 0, "B panel must be 32B-aligned");
+        debug_assert!(apanel.len() >= kc * GEMM_MR && bpanel.len() >= kc * GEMM_NR);
+        unsafe {
+            let mut acc = [_mm256_setzero_pd(); GEMM_MR];
+            for (i, a) in acc.iter_mut().enumerate() {
+                *a = _mm256_loadu_pd(c.as_ptr().add(i * ldc));
+            }
+            let ap = apanel.as_ptr();
+            let bp = bpanel.as_ptr();
+            for p in 0..kc {
+                let av = ap.add(p * GEMM_MR);
+                let bv = _mm256_load_pd(bp.add(p * GEMM_NR));
+                for (i, a) in acc.iter_mut().enumerate() {
+                    let ai = _mm256_set1_pd(*av.add(i));
+                    *a = _mm256_add_pd(*a, _mm256_mul_pd(ai, bv));
+                }
+            }
+            for (i, a) in acc.iter().enumerate() {
+                _mm256_storeu_pd(c.as_mut_ptr().add(i * ldc), *a);
+            }
+        }
+    }
+}
+
+// ---- NEON backend ----------------------------------------------------
+
+/// 128-bit NEON kernels (aarch64). NEON is a baseline feature of the
+/// architecture, so the only `unsafe` obligation is the raw-pointer
+/// loads/stores. Lane policy mirrors AVX2 with half the width: two
+/// 2-lane vectors cover what one 4-lane vector covers on x86_64, with
+/// the same element-to-lane assignment — so the bit argument in the
+/// module docs applies unchanged. No `vfmaq_f64` is ever issued.
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{GEMM_MR, GEMM_NR};
+    use core::arch::aarch64::{
+        vaddq_f64, vdupq_n_f64, vgetq_lane_f64, vld1q_f64, vmulq_f64, vst1q_f64, vsubq_f64,
+    };
+
+    /// Accumulator pair (s0,s1)/(s2,s3) matching the scalar 4-way
+    /// unroll; tail folds into s0 and the combine is `(s0+s1)+(s2+s3)`.
+    pub(super) unsafe fn dot(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len();
+        let chunks = n / 4;
+        unsafe {
+            let ap = a.as_ptr();
+            let bp = b.as_ptr();
+            let mut acc01 = vdupq_n_f64(0.0);
+            let mut acc23 = vdupq_n_f64(0.0);
+            for c in 0..chunks {
+                let i = c * 4;
+                acc01 = vaddq_f64(acc01, vmulq_f64(vld1q_f64(ap.add(i)), vld1q_f64(bp.add(i))));
+                let a23 = vld1q_f64(ap.add(i + 2));
+                let b23 = vld1q_f64(bp.add(i + 2));
+                acc23 = vaddq_f64(acc23, vmulq_f64(a23, b23));
+            }
+            let mut s0 = vgetq_lane_f64::<0>(acc01);
+            let s1 = vgetq_lane_f64::<1>(acc01);
+            let s2 = vgetq_lane_f64::<0>(acc23);
+            let s3 = vgetq_lane_f64::<1>(acc23);
+            for i in chunks * 4..n {
+                s0 += a[i] * b[i];
+            }
+            (s0 + s1) + (s2 + s3)
+        }
+    }
+
+    /// Independent per-element `y += alpha·x`, two per vector.
+    pub(super) unsafe fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+        let n = y.len();
+        let chunks = n / 2;
+        unsafe {
+            let al = vdupq_n_f64(alpha);
+            let xp = x.as_ptr();
+            let yp = y.as_mut_ptr();
+            for c in 0..chunks {
+                let i = c * 2;
+                let xv = vld1q_f64(xp.add(i));
+                let yv = vld1q_f64(yp.add(i));
+                vst1q_f64(yp.add(i), vaddq_f64(yv, vmulq_f64(al, xv)));
+            }
+            for i in chunks * 2..n {
+                *yp.add(i) += alpha * *xp.add(i);
+            }
+        }
+    }
+
+    /// Independent per-element `x *= alpha`, two per vector.
+    pub(super) unsafe fn scal(alpha: f64, x: &mut [f64]) {
+        let n = x.len();
+        let chunks = n / 2;
+        unsafe {
+            let al = vdupq_n_f64(alpha);
+            let xp = x.as_mut_ptr();
+            for c in 0..chunks {
+                let i = c * 2;
+                vst1q_f64(xp.add(i), vmulq_f64(vld1q_f64(xp.add(i)), al));
+            }
+            for i in chunks * 2..n {
+                *xp.add(i) *= alpha;
+            }
+        }
+    }
+
+    /// One FWHT butterfly layer, two adjacent pairs per vector; only
+    /// called with `h >= 2` so a layer's pair strips tile evenly.
+    pub(super) unsafe fn fwht_layer(buf: &mut [f64], h: usize) {
+        debug_assert!(h >= 2 && h.is_power_of_two());
+        let n = buf.len();
+        unsafe {
+            let p = buf.as_mut_ptr();
+            for block in (0..n).step_by(2 * h) {
+                for i in (block..block + h).step_by(2) {
+                    let x = vld1q_f64(p.add(i));
+                    let y = vld1q_f64(p.add(i + h));
+                    vst1q_f64(p.add(i), vaddq_f64(x, y));
+                    vst1q_f64(p.add(i + h), vsubq_f64(x, y));
+                }
+            }
+        }
+    }
+
+    /// Full 8×4 microkernel: two 2-lane accumulators per tile row
+    /// (columns 0–1 and 2–3), same element-to-lane map as AVX2.
+    pub(super) unsafe fn kernel_full(
+        kc: usize,
+        apanel: &[f64],
+        bpanel: &[f64],
+        c: &mut [f64],
+        ldc: usize,
+    ) {
+        debug_assert!(apanel.len() >= kc * GEMM_MR && bpanel.len() >= kc * GEMM_NR);
+        unsafe {
+            let mut lo = [vdupq_n_f64(0.0); GEMM_MR];
+            let mut hi = [vdupq_n_f64(0.0); GEMM_MR];
+            for i in 0..GEMM_MR {
+                lo[i] = vld1q_f64(c.as_ptr().add(i * ldc));
+                hi[i] = vld1q_f64(c.as_ptr().add(i * ldc + 2));
+            }
+            let ap = apanel.as_ptr();
+            let bp = bpanel.as_ptr();
+            for p in 0..kc {
+                let av = ap.add(p * GEMM_MR);
+                let b_lo = vld1q_f64(bp.add(p * GEMM_NR));
+                let b_hi = vld1q_f64(bp.add(p * GEMM_NR + 2));
+                for i in 0..GEMM_MR {
+                    let ai = vdupq_n_f64(*av.add(i));
+                    lo[i] = vaddq_f64(lo[i], vmulq_f64(ai, b_lo));
+                    hi[i] = vaddq_f64(hi[i], vmulq_f64(ai, b_hi));
+                }
+            }
+            for i in 0..GEMM_MR {
+                vst1q_f64(c.as_mut_ptr().add(i * ldc), lo[i]);
+                vst1q_f64(c.as_mut_ptr().add(i * ldc + 2), hi[i]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// Restore auto dispatch even if the test body panics.
+    struct ForceGuard;
+    impl Drop for ForceGuard {
+        fn drop(&mut self) {
+            simd_force_scalar(false);
+        }
+    }
+
+    fn fill(r: &mut Rng, n: usize) -> Vec<f64> {
+        // Random normals with signed zeros salted in: the bit contract
+        // must hold for -0.0 (x + -0.0 and x - 0.0 are sign-sensitive).
+        (0..n)
+            .map(|i| match i % 17 {
+                3 => 0.0,
+                11 => -0.0,
+                _ => r.normal(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn backend_latch_is_stable_and_named() {
+        let b = simd_backend();
+        assert_eq!(b, simd_backend(), "latched backend must not flap");
+        assert!(!b.name().is_empty());
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        assert_eq!(b, SimdBackend::Scalar);
+    }
+
+    #[test]
+    fn force_scalar_overrides_and_restores() {
+        let _guard = ForceGuard;
+        simd_force_scalar(true);
+        assert_eq!(simd_backend(), SimdBackend::Scalar);
+        simd_force_scalar(false);
+        assert_eq!(simd_backend(), detected_backend());
+    }
+
+    #[test]
+    fn level1_primitives_match_scalar_bitwise() {
+        let mut r = Rng::new(0x51_3d);
+        for n in [0usize, 1, 3, 4, 7, 8, 63, 64, 255, 1000] {
+            let a = fill(&mut r, n);
+            let b = fill(&mut r, n);
+            assert_eq!(dot(&a, &b).to_bits(), dot_scalar(&a, &b).to_bits(), "dot n={n}");
+            let alpha = r.normal();
+            let mut y = fill(&mut r, n);
+            let mut y_ref = y.clone();
+            axpy(alpha, &a, &mut y);
+            axpy_scalar(alpha, &a, &mut y_ref);
+            let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&y), bits(&y_ref), "axpy n={n}");
+            let mut x = a.clone();
+            let mut x_ref = a.clone();
+            scal(alpha, &mut x);
+            scal_scalar(alpha, &mut x_ref);
+            assert_eq!(bits(&x), bits(&x_ref), "scal n={n}");
+        }
+    }
+
+    #[test]
+    fn fwht_matches_scalar_bitwise() {
+        let mut r = Rng::new(0xf_417);
+        for n in [1usize, 2, 4, 8, 16, 64, 256, 4096] {
+            let orig = fill(&mut r, n);
+            let mut v = orig.clone();
+            fwht_pow2(&mut v);
+            let mut v_ref = orig.clone();
+            let mut h = 1;
+            while h < n {
+                fwht_layer_scalar(&mut v_ref, h);
+                h *= 2;
+            }
+            let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&v), bits(&v_ref), "fwht n={n}");
+        }
+    }
+
+    #[test]
+    fn microkernels_match_scalar_bitwise() {
+        // Panels through with_pack_scratch so the vector path's aligned
+        // B loads see the alignment the real packing path provides.
+        let mut r = Rng::new(0x8_b4);
+        for kc in [1usize, 2, 5, 16, 33] {
+            let a_src = fill(&mut r, kc * GEMM_MR);
+            let b_src = fill(&mut r, kc * GEMM_NR);
+            super::super::with_pack_scratch(kc * GEMM_MR, kc * GEMM_NR, |ap, bp| {
+                ap.copy_from_slice(&a_src);
+                bp.copy_from_slice(&b_src);
+                let ldc = GEMM_NR + 3; // non-trivial row stride
+                let c0 = fill(&mut r, GEMM_MR * ldc);
+                let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                let mut c = c0.clone();
+                let mut c_ref = c0.clone();
+                kernel_full(kc, ap, bp, &mut c, ldc);
+                kernel_full_scalar(kc, ap, bp, &mut c_ref, ldc);
+                assert_eq!(bits(&c), bits(&c_ref), "kernel_full kc={kc}");
+                for (mr, nr) in [(1, 1), (3, 2), (GEMM_MR - 1, GEMM_NR), (GEMM_MR, 1)] {
+                    let mut c = c0.clone();
+                    let mut c_ref = c0.clone();
+                    kernel_edge(kc, ap, bp, &mut c, ldc, mr, nr);
+                    kernel_edge_scalar(kc, ap, bp, &mut c_ref, ldc, mr, nr);
+                    assert_eq!(bits(&c), bits(&c_ref), "kernel_edge kc={kc} {mr}x{nr}");
+                }
+            });
+        }
+    }
+}

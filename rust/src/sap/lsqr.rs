@@ -11,6 +11,13 @@
 //! √(Σ αₖ² + βₖ²) — nondecreasing across iterations, exactly as the paper
 //! describes — and ‖(AM)ᵀr‖, ‖r‖ come from the bidiagonalization
 //! recurrences (φ̄·|ρ̄| and φ̄ respectively), so the check costs O(1).
+//!
+//! Every vector operation here (`gemv_into`/`gemv_t_into` products,
+//! `axpy`/`scal`/`norm2` updates) flows through the runtime-dispatched
+//! SIMD primitives in `linalg::simd`, which are bit-identical to the
+//! scalar kernels — so LSQR's iterate sequence, iteration count, and
+//! termination value are reproducible across `RANNTUNE_SIMD` settings
+//! and CPU generations.
 
 use crate::linalg::{axpy, gemv_into, gemv_t_into, norm2, scal, Mat};
 use crate::sap::Preconditioner;

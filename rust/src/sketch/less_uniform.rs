@@ -1,4 +1,8 @@
 //! LessUniform: data-oblivious LESS embedding (row-sparse).
+//!
+//! Each output row is a k-term `crate::linalg::axpy` gather of rows of
+//! A, so the apply rides the runtime-dispatched SIMD primitives
+//! (AVX2/NEON where available, bit-identical to scalar) for free.
 
 use super::SketchOp;
 use crate::linalg::Mat;

@@ -1,4 +1,8 @@
 //! SJLT: Sparse Johnson–Lindenstrauss Transform (column-sparse).
+//!
+//! The apply's inner loop is `crate::linalg::axpy` over rows of A, so it
+//! rides the runtime-dispatched SIMD primitives (AVX2/NEON where
+//! available, bit-identical to scalar) without any code of its own.
 
 use super::SketchOp;
 use crate::linalg::Mat;

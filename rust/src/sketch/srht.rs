@@ -52,20 +52,15 @@ impl Srht {
     }
 
     /// In-place fast Walsh–Hadamard transform (unnormalized).
+    ///
+    /// Delegates to the runtime-dispatched
+    /// [`crate::linalg::fwht_pow2`]: each butterfly layer runs
+    /// vectorized across its independent `(x+y, x−y)` pairs on
+    /// AVX2/NEON hosts and scalar elsewhere, with all backends
+    /// bit-identical (so SRHT sketches are reproducible across machines
+    /// and `RANNTUNE_SIMD` settings).
     fn fwht(buf: &mut [f64]) {
-        let n = buf.len();
-        debug_assert!(n.is_power_of_two());
-        let mut h = 1;
-        while h < n {
-            for block in (0..n).step_by(2 * h) {
-                for i in block..block + h {
-                    let (x, y) = (buf[i], buf[i + h]);
-                    buf[i] = x + y;
-                    buf[i + h] = x - y;
-                }
-            }
-            h *= 2;
-        }
+        crate::linalg::fwht_pow2(buf);
     }
 
     /// Scale so that E[SᵀS] = I: entries of H are ±1, so the subsampled

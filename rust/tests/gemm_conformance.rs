@@ -16,9 +16,20 @@
 
 use ranntune::linalg::{
     axpy, gemm_into, gemm_into_unblocked, gemm_packed_into, gemm_tn_into_unblocked,
-    gemm_tn_packed_into, gemv_t, Mat, GEMM_KC_DEFAULT, GEMM_MC, GEMM_MR, GEMM_NR, GEMV_T_CHUNK,
+    gemm_tn_packed_into, gemv_t, simd_backend, simd_force_scalar, Mat, GEMM_KC_DEFAULT, GEMM_MC,
+    GEMM_MR, GEMM_NR, GEMV_T_CHUNK,
 };
 use ranntune::rng::Rng;
+
+/// Restore auto SIMD dispatch even if a sweep assertion panics, so a
+/// failure in the SIMD sweep cannot leak a forced-scalar state into
+/// sibling tests of this binary.
+struct SimdGuard;
+impl Drop for SimdGuard {
+    fn drop(&mut self) {
+        simd_force_scalar(false);
+    }
+}
 
 /// Exact bit equality (f64 `==` would conflate -0.0 with +0.0 and is
 /// exactly the kind of discrepancy the zero-handling rules must not
@@ -107,6 +118,68 @@ fn cache_block_boundary_sweep() {
     check_shape(GEMM_MC + 3, GEMM_KC_DEFAULT + 1, GEMM_NR + 1, &mut r);
     check_shape(GEMM_MR + 1, GEMM_KC_DEFAULT - 1, GEMM_MC + 3, &mut r);
     check_shape(GEMM_KC_DEFAULT + 1, GEMM_MC + 3, GEMM_MR + 1, &mut r);
+}
+
+/// Run one (m, k, n) through the packed kernels twice — once with the
+/// dispatch override forcing the scalar microkernels, once under auto
+/// dispatch — and demand exact bit equality, for gemm and gemm_tn,
+/// from a zero C and accumulating into a random non-zero C.
+fn check_simd_vs_scalar_shape(m: usize, k: usize, n: usize, r: &mut Rng) {
+    // Signed zeros salted in: -0.0 + 0.0 = +0.0, so any path divergence
+    // in zero handling (a lane that skips, reorders, or renormalizes)
+    // changes bits here even where values agree.
+    let salt = |r: &mut Rng, i: usize, j: usize| match (i + 2 * j) % 7 {
+        0 => 0.0,
+        3 => -0.0,
+        _ => r.normal(),
+    };
+    let a = Mat::from_fn(m, k, |i, j| salt(r, i, j));
+    let b = Mat::from_fn(k, n, |i, j| salt(r, i, j));
+    let at = Mat::from_fn(k, m, |i, j| a[(j, i)]);
+    let seed = Mat::from_fn(m, n, |_, _| r.normal());
+    type Kernel = fn(&Mat, &Mat, &mut Mat);
+    let cases: [(&str, &Mat, Kernel); 2] = [
+        ("gemm", &a, gemm_packed_into as Kernel),
+        ("gemm_tn", &at, gemm_tn_packed_into as Kernel),
+    ];
+    for (what, lhs, kernel) in cases {
+        for (mode, start) in [("zero C", Mat::zeros(m, n)), ("accumulate", seed.clone())] {
+            simd_force_scalar(true);
+            let mut c_scalar = start.clone();
+            kernel(lhs, &b, &mut c_scalar);
+            simd_force_scalar(false);
+            let mut c_simd = start;
+            kernel(lhs, &b, &mut c_simd);
+            let label = format!("{what} simd-vs-scalar ({mode})");
+            assert_bits_eq(&c_simd, &c_scalar, &label, m, k, n);
+        }
+    }
+}
+
+#[test]
+fn simd_vs_scalar_register_tile_sweep() {
+    // The SIMD half of the conformance claim: the dispatched vector
+    // microkernels must reproduce the scalar kernels bit for bit across
+    // the full edge-tile cross product. On hosts without AVX2/NEON both
+    // runs take the scalar path and the sweep degenerates to a
+    // self-comparison — the determinism matrix in CI covers the env
+    // knob there.
+    let _guard = SimdGuard;
+    let small = [1, GEMM_NR - 1, GEMM_NR + 1, GEMM_MR - 1, GEMM_MR, GEMM_MR + 1];
+    let mut r = Rng::new(0x51_3d5e);
+    for &m in &small {
+        for &k in &small {
+            for &n in &small {
+                check_simd_vs_scalar_shape(m, k, n, &mut r);
+            }
+        }
+    }
+    // A shape that exercises full tiles, both edge kinds, and a KC
+    // boundary in one product (plus the threaded band split).
+    check_simd_vs_scalar_shape(GEMM_MC + 3, GEMM_KC_DEFAULT + 1, GEMM_NR + 1, &mut r);
+    // The latched backend is whatever the host provides; the sweep is
+    // meaningful either way, but record which comparison actually ran.
+    eprintln!("simd_vs_scalar sweep ran against backend: {}", simd_backend().name());
 }
 
 #[test]

@@ -14,6 +14,14 @@
 //! `RANNTUNE_THREADS ∈ {1, 2, 8}`, each child prints an FNV fingerprint
 //! of every kernel's raw result bits, and the parent asserts all three
 //! transcripts are identical.
+//!
+//! The same re-exec machinery enforces the SIMD bit-identity claim: the
+//! dispatch latch (`RANNTUNE_SIMD`) is also read once per process, so a
+//! second parent test runs the full
+//! `RANNTUNE_SIMD ∈ {0, 1} × RANNTUNE_THREADS ∈ {1, 8}` matrix and
+//! requires all four fingerprint sets identical — the vector
+//! microkernels must be indistinguishable from scalar all the way
+//! through solve_sap, TSQR, and the family objectives.
 
 use std::collections::BTreeMap;
 use std::process::Command;
@@ -287,17 +295,20 @@ fn child_emit() {
     child_suite();
 }
 
-fn run_child(threads: &str) -> BTreeMap<String, String> {
+/// Spawn the fingerprint child with the given `RANNTUNE_THREADS` and
+/// `RANNTUNE_SIMD` values (both latched per process, hence re-exec).
+fn run_child_env(threads: &str, simd: &str) -> BTreeMap<String, String> {
     let exe = std::env::current_exe().expect("current_exe");
     let out = Command::new(&exe)
         .args(["child_emit", "--exact", "--nocapture", "--test-threads", "1"])
         .env(CHILD_ENV, "1")
         .env("RANNTUNE_THREADS", threads)
+        .env("RANNTUNE_SIMD", simd)
         .output()
         .expect("spawn determinism child");
     assert!(
         out.status.success(),
-        "child (RANNTUNE_THREADS={threads}) failed:\n{}\n{}",
+        "child (RANNTUNE_THREADS={threads} RANNTUNE_SIMD={simd}) failed:\n{}\n{}",
         String::from_utf8_lossy(&out.stdout),
         String::from_utf8_lossy(&out.stderr)
     );
@@ -310,8 +321,17 @@ fn run_child(threads: &str) -> BTreeMap<String, String> {
             map.insert(name, hash);
         }
     }
-    assert!(!map.is_empty(), "child (RANNTUNE_THREADS={threads}) emitted no fingerprints");
+    assert!(
+        !map.is_empty(),
+        "child (RANNTUNE_THREADS={threads} RANNTUNE_SIMD={simd}) emitted no fingerprints"
+    );
     map
+}
+
+fn run_child(threads: &str) -> BTreeMap<String, String> {
+    // Auto SIMD dispatch ("1" means "not forced off"): the historical
+    // thread-count matrix runs whatever backend the host CPU provides.
+    run_child_env(threads, "1")
 }
 
 #[test]
@@ -331,6 +351,36 @@ fn kernels_bit_identical_across_thread_counts() {
             assert_eq!(
                 hash, &other[name],
                 "{name}: bits differ between RANNTUNE_THREADS=1 and {threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn kernels_bit_identical_across_simd_thread_matrix() {
+    // The SIMD half of the bit-identity claim, enforced end-to-end
+    // (through solve_sap, TSQR, and the family objectives): the full
+    // `RANNTUNE_SIMD ∈ {0, 1} × RANNTUNE_THREADS ∈ {1, 8}` matrix must
+    // produce four identical fingerprint sets. SIMD=0 forces the scalar
+    // kernels; SIMD=1 latches the widest backend the host CPU has, so
+    // on AVX2/NEON hosts this compares genuinely different machine code
+    // (and on scalar-only hosts it degenerates to the thread matrix).
+    if std::env::var(CHILD_ENV).is_ok() {
+        return; // never recurse from a child
+    }
+    let baseline = run_child_env("1", "1");
+    for (threads, simd) in [("8", "1"), ("1", "0"), ("8", "0")] {
+        let other = run_child_env(threads, simd);
+        assert_eq!(
+            baseline.keys().collect::<Vec<_>>(),
+            other.keys().collect::<Vec<_>>(),
+            "fingerprint sets differ at RANNTUNE_THREADS={threads} RANNTUNE_SIMD={simd}"
+        );
+        for (name, hash) in &baseline {
+            assert_eq!(
+                hash, &other[name],
+                "{name}: bits differ between (threads=1, simd=1) and \
+                 (threads={threads}, simd={simd})"
             );
         }
     }
